@@ -1,0 +1,77 @@
+//! Fig 4 — benchmark score (PFLOPS) over time, 2→16 nodes.
+//!
+//! Regenerates the paper's hourly score series per machine scale and
+//! checks the two claims: the score is stable after warm-up, and it
+//! scales linearly with the number of machines. Absolute values are
+//! modelled-V100 analytical FLOPS — the *shape* is the reproduction
+//! target (see DESIGN.md §2).
+
+use aiperf::config::BenchmarkConfig;
+use aiperf::coordinator::run_benchmark;
+use aiperf::util::stats::{mean, r_squared, stddev};
+
+fn main() {
+    println!("== Fig 4: score (PFLOPS) over time, hourly sampling ==\n");
+    let scales = [2u64, 4, 8, 16];
+    let mut xs = Vec::new();
+    let mut stable_scores = Vec::new();
+
+    print!("{:>5}", "hour");
+    for n in scales {
+        print!("{:>12}", format!("{n} nodes"));
+    }
+    println!();
+
+    let mut series = Vec::new();
+    for &nodes in &scales {
+        let t0 = std::time::Instant::now();
+        let r = run_benchmark(&BenchmarkConfig {
+            nodes,
+            duration_s: 12.0 * 3600.0,
+            seed: 0,
+            ..BenchmarkConfig::default()
+        });
+        eprintln!("[bench] {} nodes simulated in {:?}", nodes, t0.elapsed());
+        xs.push(nodes as f64);
+        stable_scores.push(r.score_flops);
+        series.push(r.score_series.clone());
+    }
+
+    for h in 0..12 {
+        print!("{:>5}", h + 1);
+        for s in &series {
+            print!("{:>12.4}", s[h].flops / 1e15);
+        }
+        println!();
+    }
+
+    println!("\nstable-window (6–12 h) average score:");
+    for (n, s) in scales.iter().zip(&stable_scores) {
+        println!("  {n:>2} nodes ({:>3} GPUs): {:.4} PFLOPS", n * 8, s / 1e15);
+    }
+
+    // Claim 1: stability — hourly variation in the stable window < 5 %.
+    for (n, s) in scales.iter().zip(&series) {
+        let window: Vec<f64> = s.iter().filter(|p| p.t >= 6.0 * 3600.0).map(|p| p.flops).collect();
+        let cv = stddev(&window) / mean(&window);
+        println!("  {n:>2} nodes: stable-window CV = {:.3} %", cv * 100.0);
+        assert!(cv < 0.05, "score unstable at {n} nodes (CV={cv})");
+    }
+
+    // Claim 2: linear scaling.
+    let r2 = r_squared(&xs, &stable_scores);
+    let per_node: Vec<f64> = stable_scores
+        .iter()
+        .zip(&xs)
+        .map(|(s, n)| s / n)
+        .collect();
+    println!(
+        "\nlinearity: R² = {r2:.5}; per-node score spread = {:.2} %",
+        (per_node.iter().cloned().fold(f64::MIN, f64::max)
+            / per_node.iter().cloned().fold(f64::MAX, f64::min)
+            - 1.0)
+            * 100.0
+    );
+    assert!(r2 > 0.99, "Fig 4 linear-scaling claim violated (R²={r2})");
+    println!("\nfig4 OK — score stable and linear in machine scale");
+}

@@ -1,0 +1,125 @@
+//! Hot-path microbenchmarks — the L3 perf harness (EXPERIMENTS.md §Perf).
+//!
+//! Hand-rolled (criterion is not vendored): each case warms up, runs for a
+//! fixed iteration budget, and reports ns/op with min/mean. Cases cover
+//! every L3 component on the benchmark's critical path:
+//!
+//! * analytical FLOPs counting per architecture (runs once per trial);
+//! * architecture lowering (dominates FLOPs counting);
+//! * random-legal-morph proposal (the CPU search loop);
+//! * TPE suggest at a realistic history size (per trial, round ≥ 5);
+//! * event-queue throughput (the DES core);
+//! * full 16-node/12-h simulated benchmark wall time (end-to-end).
+
+use std::time::Instant;
+
+use aiperf::config::BenchmarkConfig;
+use aiperf::coordinator::run_benchmark;
+use aiperf::flops::{graph_ops_per_image, OpWeights};
+use aiperf::hpo::{aiperf_space, Optimizer, Tpe};
+use aiperf::nas::graph::Architecture;
+use aiperf::nas::morphism::{random_legal_morph, MorphLimits};
+use aiperf::sim::engine::EventQueue;
+use aiperf::util::rng::derive;
+
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
+    // Warm-up.
+    for _ in 0..iters.min(16) {
+        f();
+    }
+    let mut best = f64::MAX;
+    let mut total = 0.0;
+    const SAMPLES: u64 = 5;
+    for _ in 0..SAMPLES {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        best = best.min(per);
+        total += per;
+    }
+    let mean = total / SAMPLES as f64;
+    println!(
+        "{name:<44} {:>12.0} ns/op (best {:>12.0})",
+        mean * 1e9,
+        best * 1e9
+    );
+    mean
+}
+
+fn main() {
+    println!("== hotpath microbenchmarks ==\n");
+    let w = OpWeights::default();
+    let arch = Architecture::initial_imagenet();
+    let layers = arch.lower();
+
+    let t_count = bench("flops: graph_ops_per_image (ResNet-50-class)", 2000, || {
+        std::hint::black_box(graph_ops_per_image(&layers, &w));
+    });
+    let t_lower = bench("nas: Architecture::lower", 2000, || {
+        std::hint::black_box(arch.lower());
+    });
+    let t_lower_count = bench("nas+flops: lower + count (per-trial cost)", 2000, || {
+        std::hint::black_box(graph_ops_per_image(&arch.lower(), &w));
+    });
+    // §Perf/L3: the master's original per-trial cost was three separate
+    // lowering passes (ops + params + activations); stats() fuses them.
+    let t_three = bench("nas: 3x lower (pre-optimization per-trial)", 2000, || {
+        std::hint::black_box(graph_ops_per_image(&arch.lower(), &w));
+        std::hint::black_box(arch.params());
+        std::hint::black_box(arch.activation_elems());
+    });
+    let t_stats = bench("nas: stats() single pass (post-optimization)", 2000, || {
+        std::hint::black_box(arch.stats(&w));
+    });
+    assert!(t_stats < t_three, "stats() must beat the 3-pass baseline");
+
+    let limits = MorphLimits::default();
+    let mut rng = derive(0, "hotpath", 0);
+    let t_morph = bench("nas: random_legal_morph proposal", 500, || {
+        std::hint::black_box(random_legal_morph(&arch, &limits, &mut rng, 16));
+    });
+
+    let mut tpe = Tpe::new(aiperf_space());
+    let mut hrng = derive(0, "hotpath-tpe", 0);
+    for i in 0..64 {
+        let c = tpe.suggest(&mut hrng);
+        let l = (i as f64 / 64.0 - 0.45).abs();
+        tpe.observe(c, l);
+    }
+    let t_tpe = bench("hpo: TPE suggest (64-point history)", 500, || {
+        std::hint::black_box(tpe.suggest(&mut hrng));
+    });
+
+    let t_events = bench("sim: event queue schedule+pop (x1000)", 200, || {
+        let mut q = EventQueue::new();
+        for i in 0..1000u64 {
+            q.schedule(i as f64 * 0.5, i);
+        }
+        while q.pop().is_some() {}
+    });
+
+    let t0 = Instant::now();
+    let r = run_benchmark(&BenchmarkConfig {
+        nodes: 16,
+        duration_s: 12.0 * 3600.0,
+        seed: 0,
+        ..BenchmarkConfig::default()
+    });
+    let t_e2e = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {:>12.3} s  ({} archs, {} score samples)",
+        "e2e: 16-node / 12-h simulated benchmark", t_e2e, r.architectures_evaluated,
+        r.score_series.len()
+    );
+
+    // Perf targets (EXPERIMENTS.md §Perf): the coordinator must never be
+    // the bottleneck — per-trial decision cost ≪ 1 ms, full sim ≪ 10 s.
+    assert!(t_lower_count < 1e-3, "per-trial FLOPs count above 1 ms");
+    assert!(t_morph < 1e-3, "morph proposal above 1 ms");
+    assert!(t_tpe < 5e-3, "TPE suggest above 5 ms");
+    assert!(t_e2e < 10.0, "16-node sim above 10 s");
+    let _ = (t_count, t_lower, t_events);
+    println!("\nhotpath OK — all L3 targets met");
+}

@@ -1,0 +1,67 @@
+//! Table 8 — per-epoch operation counts of ResNet-50/ImageNet with three
+//! measurement approaches: tf.profiler (FP only), nvprof (kernel replay,
+//! modelled — DESIGN.md §2), and the analytical method (batch size 1).
+
+use aiperf::flops::nvprof_model::NvprofModel;
+use aiperf::flops::resnet50::resnet50_imagenet;
+use aiperf::flops::tf_profiler::profile_epoch;
+use aiperf::flops::{graph_ops_per_image, OpWeights};
+
+fn main() {
+    println!("== Table 8: FLOPs comparison, ResNet-50/ImageNet per epoch ==\n");
+    let w = OpWeights::default();
+    let net = resnet50_imagenet();
+    let g = graph_ops_per_image(&net, &w);
+    const TRAIN: u64 = 1_281_167;
+    const VAL: u64 = 50_000;
+
+    let (tf_fp_train, tf_fp_val) = profile_epoch(&net, &w, TRAIN, VAL);
+    let nv = NvprofModel::default();
+    let (nv_fp, nv_bp, nv_val) = nv.table8_epoch(&net, &w, TRAIN, VAL);
+    let an_fp = g.fp as f64 * TRAIN as f64;
+    let an_bp = g.bp as f64 * TRAIN as f64;
+    let an_val = g.fp as f64 * VAL as f64;
+
+    println!(
+        "{:<28} {:>12} {:>12} {:>12}   paper(analytical)",
+        "procedure", "tf.profiler", "nvprof", "analytical"
+    );
+    let row = |name: &str, tf: Option<f64>, nv: f64, an: f64, paper: f64| {
+        println!(
+            "{:<28} {:>12} {:>12.3e} {:>12.3e}   {:.2e}",
+            name,
+            tf.map(|v| format!("{v:.3e}")).unwrap_or_else(|| "-".into()),
+            nv,
+            an,
+            paper
+        );
+    };
+    row("FP (training)", Some(tf_fp_train), nv_fp, an_fp, 1.00e16);
+    row("BP (training)", None, nv_bp, an_bp, 1.95e16);
+    println!(
+        "{:<28} {:>12} {:>12.4} {:>12.4}   1.9533",
+        "BP / FP (training)",
+        "-",
+        nv_bp / nv_fp,
+        an_bp / an_fp
+    );
+    row("Total (training)", None, nv_fp + nv_bp, an_fp + an_bp, 2.95e16);
+    row("FP (validation)", Some(tf_fp_val), nv_val, an_val, 3.90e14);
+    row(
+        "Total (train+val)",
+        None,
+        nv_fp + nv_bp + nv_val,
+        an_fp + an_bp + an_val,
+        2.99e16,
+    );
+
+    // Shape assertions (±3 %): the three approaches agree on FP; nvprof
+    // exceeds analytical (library overhead); tf.profiler undercounts.
+    assert!((an_fp - 1.00e16).abs() / 1.00e16 < 0.03);
+    assert!((an_bp - 1.95e16).abs() / 1.95e16 < 0.03);
+    assert!((tf_fp_train - 9.97e15).abs() / 9.97e15 < 0.03);
+    assert!((nv_fp - 1.02e16).abs() / 1.02e16 < 0.03);
+    assert!((nv_bp - 2.10e16).abs() / 2.10e16 < 0.03);
+    assert!(tf_fp_train < an_fp && an_fp < nv_fp, "ordering violated");
+    println!("\ntable8 OK — tf.profiler < analytical < nvprof, all within 3 %");
+}

@@ -1,0 +1,76 @@
+//! HPO method comparison — the paper's Appendix A selection study (Fig 7b).
+//!
+//! Reruns the experiment that made AIPerf fix TPE as its HPO method: four
+//! optimizers (TPE, random, grid, evolutionary) each tune (dropout, kernel)
+//! against the accuracy surrogate's CIFAR10-scale objective under the same
+//! trial budget; the best validation accuracy per method is reported. The
+//! paper finds "the TPE method results in slightly better accuracy".
+
+use aiperf::hpo::{
+    aiperf_space, Evolutionary, GridSearch, Optimizer, RandomSearch, Tpe,
+};
+use aiperf::sim::accuracy::{AccuracySurrogate, HpPoint};
+use aiperf::util::rng::derive;
+
+/// The paper's toy setup: one GPU, 48 h, CIFAR10 — here the surrogate's
+/// converged accuracy of a fixed CIFAR-scale architecture (≈1 M params)
+/// under the candidate hyperparameters.
+fn objective(sur: &AccuracySurrogate, cfg: &[f64]) -> f64 {
+    let hp = HpPoint {
+        dropout: cfg[0],
+        kernel: cfg[1],
+    };
+    // 60-epoch training (Appendix A's warm-up cap), fixed architecture.
+    1.0 - sur.accuracy(1, 1_000_000, &hp, 60)
+}
+
+fn run(name: &str, opt: &mut dyn Optimizer, trials: usize, seed: u64) -> f64 {
+    let sur = AccuracySurrogate {
+        seed: 7,
+        ..AccuracySurrogate::default()
+    };
+    let mut rng = derive(seed, name, 0);
+    for _ in 0..trials {
+        let cfg = opt.suggest(&mut rng);
+        let loss = objective(&sur, &cfg);
+        opt.observe(cfg, loss);
+    }
+    1.0 - opt.best().map(|o| o.loss).unwrap_or(1.0)
+}
+
+fn main() {
+    let trials = 32; // ≈ one 48-hour single-GPU budget at 90 min/trial
+    let repeats = 8;
+    println!("HPO method comparison (Fig 7b): {trials} trials × {repeats} seeds\n");
+
+    let mut means = Vec::new();
+    for name in ["TPE", "random", "grid", "evolutionary"] {
+        let mut accs = Vec::new();
+        for seed in 0..repeats {
+            let mut opt: Box<dyn Optimizer> = match name {
+                "TPE" => Box::new(Tpe::new(aiperf_space())),
+                "random" => Box::new(RandomSearch::new(aiperf_space())),
+                "grid" => Box::new(GridSearch::new(aiperf_space(), 6)),
+                _ => Box::new(Evolutionary::new(aiperf_space())),
+            };
+            accs.push(run(name, opt.as_mut(), trials, seed));
+        }
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        let best = accs.iter().cloned().fold(f64::MIN, f64::max);
+        println!("{name:>14}: mean best-accuracy {mean:.4}  (max {best:.4})");
+        means.push((name, mean));
+    }
+
+    let tpe = means.iter().find(|(n, _)| *n == "TPE").unwrap().1;
+    let others_max = means
+        .iter()
+        .filter(|(n, _)| *n != "TPE")
+        .map(|(_, m)| *m)
+        .fold(f64::MIN, f64::max);
+    println!("\nTPE {tpe:.4} vs best-other {others_max:.4}");
+    assert!(
+        tpe >= others_max - 0.002,
+        "TPE not competitive — Fig 7b shape violated"
+    );
+    println!("hpo_compare OK — TPE wins (or ties), as the paper reports");
+}

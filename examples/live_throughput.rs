@@ -1,0 +1,46 @@
+//! Live train-step throughput probe (EXPERIMENTS.md §Perf/L2).
+//!
+//! Measures steps/s of the real PJRT training loop per compiled variant —
+//! the number the §Perf log tracks across L2 lowering changes (e.g. the
+//! reverted donate_argnums experiment).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example live_throughput
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let m = aiperf::runtime::Manifest::load("artifacts")?;
+    let mut rt = aiperf::runtime::Runtime::cpu()?;
+    for name in ["d2w8k3i16b32", "d4w16k3i16b32"] {
+        if m.variant(name).is_none() {
+            eprintln!("variant {name} not in manifest; skipping");
+            continue;
+        }
+        let mut t = aiperf::runtime::Trainer::new(&mut rt, &m, name)?;
+        let v = t.variant.clone();
+        let d = aiperf::data::SyntheticDataset::new(
+            0,
+            v.image as usize,
+            v.channels as usize,
+            v.num_classes as usize,
+        );
+        let (xs, ys) = d.batch(0, v.batch as usize);
+        // Warm-up (first steps include compile/alloc effects).
+        for _ in 0..5 {
+            t.train_step(&xs, &ys, 0.05)?;
+        }
+        let n = 60;
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            t.train_step(&xs, &ys, 0.05)?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{name}: {:.2} steps/s ({:.2} ms/step, batch {})",
+            n as f64 / dt,
+            dt / n as f64 * 1e3,
+            v.batch
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: run a small simulated AIPerf benchmark and read the report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the two-node, two-hour version of the paper's evaluation
+//! protocol (§5): slave nodes search architectures by network morphism,
+//! train them (modelled V100 cluster), and the toolkit reports the FLOPS
+//! score, the achieved error, and the regulated score.
+
+use aiperf::config::BenchmarkConfig;
+use aiperf::coordinator::run_benchmark;
+
+fn main() {
+    let cfg = BenchmarkConfig {
+        nodes: 2,
+        duration_s: 2.0 * 3600.0,
+        seed: 42,
+        ..BenchmarkConfig::default()
+    };
+    println!(
+        "AIPerf quickstart: {} nodes × {} GPUs, {:.0} h budget",
+        cfg.nodes,
+        cfg.node.gpus_per_node,
+        cfg.duration_s / 3600.0
+    );
+
+    let report = run_benchmark(&cfg);
+
+    println!("\n== result ==\n{}", report.summary());
+    println!("\nhourly samples:");
+    for s in &report.score_series {
+        println!(
+            "  t={:>4.1}h  score={:.4} PFLOPS  best_error={:.3}  regulated={:.4} PFLOPS",
+            s.t / 3600.0,
+            s.flops / 1e15,
+            s.best_error,
+            s.regulated / 1e15
+        );
+    }
+    println!("\ntelemetry (last sample):");
+    if let Some(t) = report.telemetry.last() {
+        println!(
+            "  gpu {:.1}%±{:.1}  gpu-mem {:.1}%  cpu {:.1}%  host-mem {:.1}%",
+            t.gpu_util_mean * 100.0,
+            t.gpu_util_std * 100.0,
+            t.gpu_mem_mean * 100.0,
+            t.cpu_util_mean * 100.0,
+            t.host_mem_mean * 100.0
+        );
+    }
+    println!(
+        "\nNFS traffic: {:.1} MB read, {:.1} MB written",
+        report.nfs_bytes_read as f64 / 1e6,
+        report.nfs_bytes_written as f64 / 1e6
+    );
+}

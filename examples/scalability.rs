@@ -1,0 +1,71 @@
+//! Scalability sweep — the paper's §5.2 evaluation (Figs 4/5/6).
+//!
+//! Runs the full 12-hour benchmark at 2/4/8/16 slave nodes (8 GPUs each)
+//! and reports, per scale: the stable-window score, the achieved error,
+//! the regulated score, and the architectures-searched count. Asserts the
+//! paper's headline shape claims:
+//!
+//! * score scales linearly with nodes (R² > 0.99);
+//! * regulated score scales linearly;
+//! * every scale meets the 35 % error-validity requirement;
+//! * architectures searched ≈ paper's cadence (96 at 16 nodes / 12 h).
+
+use aiperf::config::BenchmarkConfig;
+use aiperf::coordinator::run_benchmark;
+use aiperf::util::stats::r_squared;
+
+fn main() {
+    let scales = [2u64, 4, 8, 16];
+    println!("AIPerf scalability sweep: 12 h at {scales:?} nodes × 8 GPUs\n");
+    println!(
+        "{:>6} {:>6} {:>14} {:>12} {:>16} {:>8}",
+        "nodes", "gpus", "score PFLOPS", "error %", "regulated PFLOPS", "archs"
+    );
+
+    let mut xs = Vec::new();
+    let mut scores = Vec::new();
+    let mut regulated = Vec::new();
+    let mut archs_at_16 = 0;
+    for &nodes in &scales {
+        let cfg = BenchmarkConfig {
+            nodes,
+            duration_s: 12.0 * 3600.0,
+            seed: 0,
+            ..BenchmarkConfig::default()
+        };
+        let r = run_benchmark(&cfg);
+        println!(
+            "{:>6} {:>6} {:>14.4} {:>12.1} {:>16.4} {:>8}",
+            nodes,
+            nodes * 8,
+            r.score_flops / 1e15,
+            r.final_error * 100.0,
+            r.regulated_score / 1e15,
+            r.architectures_evaluated
+        );
+        assert!(
+            r.final_error < 0.35,
+            "validity: error {:.3} exceeds 35 % at {nodes} nodes",
+            r.final_error
+        );
+        xs.push(nodes as f64);
+        scores.push(r.score_flops);
+        regulated.push(r.regulated_score);
+        if nodes == 16 {
+            archs_at_16 = r.architectures_evaluated;
+        }
+    }
+
+    let r2_score = r_squared(&xs, &scores);
+    let r2_reg = r_squared(&xs, &regulated);
+    println!("\nlinearity: score R²={r2_score:.5}  regulated R²={r2_reg:.5}");
+    assert!(r2_score > 0.99, "score not linear in nodes (R²={r2_score})");
+    assert!(r2_reg > 0.95, "regulated score not linear (R²={r2_reg})");
+
+    println!("architectures at 16 nodes / 12 h: {archs_at_16} (paper: 96)");
+    assert!(
+        (48..=192).contains(&archs_at_16),
+        "search cadence far from the paper's 96"
+    );
+    println!("\nscalability sweep OK — Fig 4/5/6 shape claims hold");
+}

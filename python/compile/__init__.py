@@ -1,0 +1,7 @@
+"""Build-time Python for the AIPerf reproduction.
+
+Layers 1 (Pallas kernels) and 2 (JAX model family) live here together with
+the AOT lowering pipeline. Nothing in this package is imported at runtime:
+`make artifacts` runs it once, emits artifacts/*.hlo.txt + manifest.json,
+and the rust binary is self-contained afterwards.
+"""

@@ -1,0 +1,152 @@
+"""AOT lowering pipeline: JAX (L2, calling L1 Pallas) → artifacts/*.hlo.txt.
+
+Runs once at build time (`make artifacts`); the rust runtime
+(rust/src/runtime/) loads the HLO text via `HloModuleProto::from_text_file`
+and executes it on the PJRT CPU client. Python is never on the request path.
+
+Interchange format is **HLO text**, NOT `.serialize()` / serialized
+HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/).
+
+Per architecture variant (the compiled grid of DESIGN.md §3) we emit:
+
+  init_<v>.hlo.txt        ()                      -> (params...,)
+  train_<v>.hlo.txt       (params…, moms…, x, y, lr) -> (params…, moms…, loss)
+  eval_<v>.hlo.txt        (params…, x, y)         -> (loss, accuracy)
+
+plus a single artifacts/manifest.json describing the parameter ABI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    ModelSpec,
+    eval_step,
+    init_params,
+    param_layout,
+    train_step,
+)
+
+DEFAULT_GRID = [
+    ModelSpec(depth=d, width=w)
+    for d in (2, 3, 4)
+    for w in (8, 16)
+]
+QUICK_GRID = [ModelSpec(depth=2, width=8)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_train(spec: ModelSpec, n: int):
+    """train_step with a flat (params…, moms…, x, y, lr) signature."""
+
+    def fn(*args):
+        params = list(args[:n])
+        moms = list(args[n : 2 * n])
+        x, y, lr = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+        new_p, new_m, loss = train_step(spec, params, moms, x, y, lr)
+        return tuple(new_p) + tuple(new_m) + (loss,)
+
+    return fn
+
+
+def _flat_eval(spec: ModelSpec, n: int):
+    def fn(*args):
+        params = list(args[:n])
+        x, y = args[n], args[n + 1]
+        return eval_step(spec, params, x, y)
+
+    return fn
+
+
+def lower_variant(spec: ModelSpec, out_dir: str, seed: int) -> dict:
+    """Lower init/train/eval for one variant; return its manifest entry."""
+    layout = param_layout(spec)
+    n = len(layout)
+    p_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in layout]
+    x_spec = jax.ShapeDtypeStruct(
+        (spec.batch, spec.image, spec.image, spec.channels), jnp.float32
+    )
+    y_spec = jax.ShapeDtypeStruct((spec.batch,), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    files = {}
+    jobs = {
+        "init": (lambda: tuple(init_params(spec, seed)), []),
+        "train": (_flat_train(spec, n), p_specs + p_specs + [x_spec, y_spec, lr_spec]),
+        "eval": (_flat_eval(spec, n), p_specs + [x_spec, y_spec]),
+    }
+    for kind, (fn, in_specs) in jobs.items():
+        # Perf note (EXPERIMENTS.md §Perf/L2): donate_argnums on the
+        # param/momentum inputs was tried and REVERTED — input-output
+        # aliasing does not survive the HLO-text interchange (the 0.5.1
+        # text parser drops alias metadata) and the donated lowering
+        # measured 5-10 % slower through the rust runtime.
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{kind}_{spec.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[kind] = fname
+        print(f"  {fname}: {len(text)} chars")
+
+    return {
+        "name": spec.name,
+        "depth": spec.depth,
+        "width": spec.width,
+        "kernel": spec.kernel,
+        "image": spec.image,
+        "channels": spec.channels,
+        "num_classes": spec.num_classes,
+        "batch": spec.batch,
+        "seed": seed,
+        "params": [
+            {"name": name, "shape": list(shape)} for name, shape in layout
+        ],
+        "files": files,
+    }
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--quick", action="store_true", help="single-variant grid")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    grid = QUICK_GRID if args.quick else DEFAULT_GRID
+    entries = []
+    for spec in grid:
+        print(f"lowering {spec.name} …")
+        entries.append(lower_variant(spec, args.out, args.seed))
+
+    manifest = {
+        "schema": 1,
+        "default_variant": entries[0]["name"],
+        "variants": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out}/manifest.json ({len(entries)} variants)")
+
+
+if __name__ == "__main__":
+    main()

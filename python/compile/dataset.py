@@ -1,0 +1,74 @@
+"""Synthetic image corpus — the ImageNet stand-in (DESIGN.md §2).
+
+The paper fixes ImageNet (1.28 M 224×224 RGB images) as the dataset; that is
+a data gate here, so the real-training path uses a *procedurally generated*
+classification corpus with a learnable class structure: each class is a
+random smooth template (low-frequency Fourier mixture per channel) and every
+sample is its template plus i.i.d. noise. A small CNN separates the classes
+in a few hundred steps, which is exactly what `examples/train_e2e.rs` needs
+to prove the three layers compose.
+
+Determinism: the generator is a counter-based hash (splitmix64) over
+(seed, class, index, pixel) — the SAME function is implemented in
+rust/src/data/synthetic.rs so both sides can materialize identical batches
+without shipping arrays through files.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MASK = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & _MASK
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+    return z ^ (z >> 31)
+
+
+def _unit(h: int) -> float:
+    """Map a 64-bit hash to [0, 1)."""
+    return (h >> 11) / float(1 << 53)
+
+
+def class_template(seed: int, cls: int, image: int, channels: int) -> np.ndarray:
+    """Smooth per-class template: sum of 4 low-frequency plane waves/channel."""
+    tpl = np.zeros((image, image, channels), np.float32)
+    yy, xx = np.mgrid[0:image, 0:image].astype(np.float32) / image
+    for c in range(channels):
+        for k in range(4):
+            h = _splitmix64(seed * 1_000_003 + cls * 10_007 + c * 101 + k)
+            fx = 1 + (h & 3)
+            fy = 1 + ((h >> 2) & 3)
+            phase = _unit(_splitmix64(h)) * 2 * np.pi
+            amp = 0.5 + _unit(_splitmix64(h ^ 0xABCDEF)) * 0.5
+            tpl[:, :, c] += amp * np.sin(
+                2 * np.pi * (fx * xx + fy * yy) + phase
+            ).astype(np.float32)
+    return tpl / 4.0
+
+
+def make_batch(seed: int, start_index: int, batch: int, image: int,
+               channels: int, num_classes: int, noise: float = 0.35
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic (x, y) batch; index space is the virtual dataset."""
+    xs = np.empty((batch, image, image, channels), np.float32)
+    ys = np.empty((batch,), np.int32)
+    templates = [
+        class_template(seed, c, image, channels) for c in range(num_classes)
+    ]
+    for i in range(batch):
+        idx = start_index + i
+        cls = _splitmix64(seed ^ (idx * 2 + 1)) % num_classes
+        ys[i] = cls
+        # Noise from the same counter hash, one draw per pixel.
+        n = np.empty((image, image, channels), np.float32)
+        flat = n.reshape(-1)
+        base = _splitmix64(seed * 31 + idx)
+        for j in range(flat.size):
+            flat[j] = _unit(_splitmix64(base + j)) * 2.0 - 1.0
+        xs[i] = templates[cls] + noise * n
+    return xs, ys

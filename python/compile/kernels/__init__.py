@@ -1,0 +1,6 @@
+"""L1 — Pallas kernels for AIPerf's compute ops (conv2d + max-pool)."""
+
+from compile.kernels.conv2d import conv2d, mxu_utilization_estimate, vmem_bytes
+from compile.kernels.maxpool import maxpool2x2
+
+__all__ = ["conv2d", "maxpool2x2", "vmem_bytes", "mxu_utilization_estimate"]

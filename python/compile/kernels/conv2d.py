@@ -1,0 +1,192 @@
+"""L1 — Pallas conv2d kernel (the benchmark's compute hot-spot).
+
+AIPerf's workload is dominated by convolutions (Table 4: 7.71e9 of 7.81e9
+FP ops in ResNet-50 are conv MACCs). The paper runs them through cuDNN on
+V100; here the kernel is rethought for a TPU-style memory hierarchy:
+
+* **im2col → matmul**: instead of CUDA per-thread accumulation, each grid
+  step assembles an ``(H·W, K·K·Ci)`` patch matrix in VMEM and contracts it
+  against a ``(K·K·Ci, Co_tile)`` weight tile — the MXU-friendly shape.
+* **BlockSpec schedule**: the grid is ``(batch, Co_tiles)``; BlockSpec
+  expresses the HBM→VMEM movement the paper delegated to cuDNN's implicit
+  GEMM. Each step touches one padded image block and one weight tile, so
+  VMEM residency is ``(H+K-1)(W+K-1)Ci + K²Ci·Co_t + H·W·Co_t`` floats.
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+  under the rust runtime. Real-TPU numbers are estimated analytically in
+  EXPERIMENTS.md §Perf.
+
+Autodiff: interpret-mode ``pallas_call`` has no reverse-mode rule, so
+``conv2d`` carries a ``jax.custom_vjp`` implementing the paper's Equation 2:
+
+    ∂L/∂X = FullConvolution(flipped F, ∂L/∂O)   — routed through the SAME
+                                                  Pallas kernel (swapped
+                                                  padding, transposed filter)
+    ∂L/∂F = Convolution(X, ∂L/∂O)               — the im2col-transpose
+                                                  matmul, in plain jnp
+
+Only stride-1 conv is provided; the model family downsamples with pooling
+(AIPerf's morphism adds conv-BN-ReLU blocks, never strided convs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _same_padding(kh: int, kw: int) -> Tuple[int, int, int, int]:
+    """(top, bottom, left, right) for SAME stride-1 conv."""
+    return (kh - 1) // 2, kh // 2, (kw - 1) // 2, kw // 2
+
+
+def _conv2d_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int):
+    """One grid step: one padded image × one output-channel tile.
+
+    x_ref: (1, H+kh-1, W+kw-1, Ci) padded input block in VMEM
+    w_ref: (kh*kw*Ci, Co_t)        weight tile in VMEM
+    o_ref: (1, H, W, Co_t)         output block
+    """
+    _, hp, wp, ci = x_ref.shape
+    h = hp - kh + 1
+    w = wp - kw + 1
+    x = x_ref[0]
+    # im2col: K·K statically-sliced shifted views, concatenated on the
+    # channel axis. Static slices keep the kernel free of gather ops so the
+    # whole body lowers to reshapes + one dot.
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[i : i + h, j : j + w, :])
+    patches = jnp.concatenate(cols, axis=-1).reshape(h * w, kh * kw * ci)
+    # MXU-shaped contraction: (H·W, K²Ci) × (K²Ci, Co_t).
+    out = jnp.dot(patches, w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[0] = out.reshape(h, w, -1).astype(o_ref.dtype)
+
+
+def _conv2d_pallas(x: jax.Array, w2: jax.Array, *, kh: int, kw: int,
+                   pad: Tuple[int, int, int, int], co_tile: int) -> jax.Array:
+    """Raw Pallas conv: explicit padding, pre-flattened (K²Ci, Co) filter."""
+    b, h, width, ci = x.shape
+    co = w2.shape[1]
+    pt, pb, pl_, pr = pad
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    ho = h + pt + pb - kh + 1
+    wo = width + pl_ + pr - kw + 1
+    grid = (b, co // co_tile)
+    return pl.pallas_call(
+        functools.partial(_conv2d_kernel, kh=kh, kw=kw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ho + kh - 1, wo + kw - 1, ci), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((kh * kw * ci, co_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, co_tile), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, co), x.dtype),
+        interpret=True,
+    )(xp, w2)
+
+
+def _pick_co_tile(co: int) -> int:
+    """Largest divisor of Co that is ≤ 128 (the MXU lane width)."""
+    if co <= 128:
+        return co
+    for t in range(128, 0, -1):
+        if co % t == 0:
+            return t
+    return 1
+
+
+@jax.custom_vjp
+def conv2d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """SAME, stride-1 2-D convolution via the Pallas kernel.
+
+    Args:
+      x: (B, H, W, Ci) input, NHWC.
+      w: (KH, KW, Ci, Co) filter, HWIO.
+
+    Returns:
+      (B, H, W, Co) output in x.dtype. Differentiable in both arguments
+      (custom VJP, see module docstring).
+    """
+    return _conv2d_fwd_impl(x, w)
+
+
+def _conv2d_fwd_impl(x: jax.Array, w: jax.Array) -> jax.Array:
+    b, h, width, ci = x.shape
+    kh, kw, wci, co = w.shape
+    if wci != ci:
+        raise ValueError(f"channel mismatch: input Ci={ci}, filter Ci={wci}")
+    return _conv2d_pallas(
+        x, w.reshape(kh * kw * ci, co), kh=kh, kw=kw,
+        pad=_same_padding(kh, kw), co_tile=_pick_co_tile(co),
+    )
+
+
+def _conv2d_fwd(x, w):
+    return _conv2d_fwd_impl(x, w), (x, w)
+
+
+def _conv2d_bwd(res, g):
+    """Equation 2 of the paper (backpropagation through a convolution)."""
+    x, w = res
+    kh, kw, ci, co = w.shape
+    b, h, width, _ = x.shape
+    pt, pb, pl_, pr = _same_padding(kh, kw)
+
+    # ∂L/∂X = FullConv(flipped F, g): spatially flip, swap Ci/Co, and swap
+    # the padding asymmetry (for odd K this is plain SAME; even K needs the
+    # mirror). Routed through the same Pallas kernel.
+    w_flip = w[::-1, ::-1].transpose(0, 1, 3, 2)  # (KH, KW, Co, Ci)
+    dx = _conv2d_pallas(
+        g, w_flip.reshape(kh * kw * co, ci), kh=kh, kw=kw,
+        pad=(kh - 1 - pt, kh - 1 - pb, kw - 1 - pl_, kw - 1 - pr),
+        co_tile=_pick_co_tile(ci),
+    )
+
+    # ∂L/∂F = Conv(X, g): im2col of the padded input, contracted against the
+    # incoming gradient — one (K²Ci, B·H·W) × (B·H·W, Co) matmul.
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(xp[:, i : i + h, j : j + width, :])
+    patches = jnp.concatenate(cols, axis=-1).reshape(b * h * width, kh * kw * ci)
+    g2 = g.reshape(b * h * width, co)
+    dw = (patches.astype(jnp.float32).T @ g2.astype(jnp.float32)).reshape(
+        kh, kw, ci, co
+    )
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+def vmem_bytes(h: int, w: int, ci: int, co_tile: int, kh: int, kw: int,
+               dtype_bytes: int = 4) -> int:
+    """Analytical VMEM residency of one grid step (see module docstring).
+
+    Used by EXPERIMENTS.md §Perf to check the schedule fits a 16 MiB VMEM.
+    """
+    x_blk = (h + kh - 1) * (w + kw - 1) * ci
+    w_blk = kh * kw * ci * co_tile
+    o_blk = h * w * co_tile
+    patches = h * w * kh * kw * ci  # im2col scratch
+    return (x_blk + w_blk + o_blk + patches) * dtype_bytes
+
+
+def mxu_utilization_estimate(h: int, w: int, ci: int, co_tile: int,
+                             kh: int, kw: int) -> float:
+    """Fraction of MXU 128×128×128 tiles doing useful work for the inner dot.
+
+    The contraction is (H·W, K²Ci) × (K²Ci, Co_t): each dim is padded up to
+    a multiple of the systolic array edge; utilization is the ratio of real
+    to padded volume. Purely analytical — interpret mode gives no TPU clock.
+    """
+    m, k, n = h * w, kh * kw * ci, co_tile
+    pad = lambda d: ((d + 127) // 128) * 128
+    return (m * k * n) / (pad(m) * pad(k) * pad(n))

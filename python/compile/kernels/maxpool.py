@@ -1,0 +1,71 @@
+"""L1 — Pallas 2×2/2 max-pooling kernel.
+
+The second compute op of AIPerf's model family (every stage boundary pools
+— Table 2's max-pooling row). Rethought for the TPU memory hierarchy like
+the conv kernel: the grid is (batch,), each step loads one feature map
+block into VMEM and reduces four strided views with vectorized maxima —
+no gather, no window primitive, so interpret mode lowers to plain HLO.
+
+Autodiff: interpret-mode ``pallas_call`` has no reverse rule, so the
+public op carries a ``custom_vjp``; the backward pass routes the incoming
+gradient to each window's argmax via an equality mask (ties broadcast the
+gradient to every maximal element — measure-zero for continuous inputs,
+validated against the lax oracle by hypothesis in
+python/tests/test_maxpool.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    """One grid step: pool one image block.
+
+    x_ref: (1, H, W, C) with H, W even; o_ref: (1, H/2, W/2, C).
+    """
+    x = x_ref[0]
+    a = x[0::2, 0::2, :]
+    b = x[0::2, 1::2, :]
+    c = x[1::2, 0::2, :]
+    d = x[1::2, 1::2, :]
+    o_ref[0] = jnp.maximum(jnp.maximum(a, b), jnp.maximum(c, d))
+
+
+def _maxpool_impl(x: jax.Array) -> jax.Array:
+    bsz, h, w, c = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2x2 needs even spatial dims, got {h}x{w}")
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h // 2, w // 2, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+@jax.custom_vjp
+def maxpool2x2(x: jax.Array) -> jax.Array:
+    """2×2 stride-2 max pooling over NHWC input (even H and W)."""
+    return _maxpool_impl(x)
+
+
+def _fwd(x):
+    y = _maxpool_impl(x)
+    return y, (x, y)
+
+
+def _bwd(res, g):
+    x, y = res
+    # Route gradient to window maxima: upsample y and g back to the input
+    # grid and mask where x attains the window max.
+    up = lambda t: jnp.repeat(jnp.repeat(t, 2, axis=1), 2, axis=2)
+    mask = (x == up(y)).astype(g.dtype)
+    return (up(g) * mask,)
+
+
+maxpool2x2.defvjp(_fwd, _bwd)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with stock jax/lax ops only. pytest (python/tests/test_kernel.py) asserts
+allclose between kernel and oracle across hypothesis-generated shapes and
+dtypes — this is the L1 correctness signal gating `make artifacts`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """SAME, stride-1 NHWC/HWIO convolution via lax.conv_general_dilated."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(x.dtype)
+
+
+def conv2d_naive(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Second, independent oracle: explicit im2col in plain jnp.
+
+    Slower but structurally unrelated to both the Pallas kernel's pallas_call
+    machinery and XLA's conv lowering — guards against a shared-bug false
+    pass between conv2d() above and the kernel.
+    """
+    b, h, width, ci = x.shape
+    kh, kw, _, co = w.shape
+    ph0, ph1 = (kh - 1) // 2, kh // 2
+    pw0, pw1 = (kw - 1) // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(xp[:, i : i + h, j : j + width, :])
+    patches = jnp.concatenate(cols, axis=-1).reshape(b * h * width, kh * kw * ci)
+    out = patches.astype(jnp.float32) @ w.reshape(kh * kw * ci, co).astype(jnp.float32)
+    return out.reshape(b, h, width, co).astype(x.dtype)
+
+
+def maxpool2x2(x: jax.Array) -> jax.Array:
+    """2x2/2 max pooling via lax.reduce_window (oracle for the kernel)."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ).astype(x.dtype)

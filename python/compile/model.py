@@ -1,0 +1,206 @@
+"""L2 — JAX model family + training step for the AIPerf workload.
+
+AIPerf's NAS (network morphism) explores ResNet-style CNNs: every morph step
+adds a *block* (conv + batch-norm + activation together, §4.1). This module
+defines the statically-shaped family those architectures are projected onto
+for real training, and the fused train/eval steps that `aot.py` lowers to
+HLO text for the rust runtime.
+
+Conventions shared with the rust side (rust/src/runtime/artifact.rs):
+
+* parameters are a FLAT, ORDERED list of f32 arrays (manifest.json records
+  name + shape per slot);
+* train_step(*params, *momenta, x, y, lr) -> (*params', *momenta', loss);
+* eval_step(*params, x, y) -> (loss, accuracy);
+* init is lowered with NO inputs — the PRNG seed is baked at trace time, so
+  the artifact is a pure constant producer.
+
+The optimizer is SGD + momentum with decoupled weight decay (Table 5:
+mom=0.9, decay=1e-4), loss is categorical cross-entropy. Dropout is omitted
+from the compiled family (it needs a runtime PRNG stream); the dropout-rate
+hyperparameter is exercised by the L3 accuracy surrogate instead —
+documented in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv2d, maxpool2x2
+
+Params = List[jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A point in the compiled-architecture grid (DESIGN.md §3).
+
+    depth:   number of residual conv-BN-ReLU blocks after the stem
+    width:   channel count of every block
+    kernel:  conv kernel edge (K×K)
+    image:   input spatial edge (square images)
+    channels: input channels
+    num_classes: classifier width
+    batch:   per-device batch size baked into the artifact
+    """
+
+    depth: int = 3
+    width: int = 16
+    kernel: int = 3
+    image: int = 16
+    channels: int = 3
+    num_classes: int = 10
+    batch: int = 32
+
+    @property
+    def name(self) -> str:
+        return f"d{self.depth}w{self.width}k{self.kernel}i{self.image}b{self.batch}"
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (He et al. 2015, Table 5 "Initial weight")
+# ---------------------------------------------------------------------------
+
+
+def param_layout(spec: ModelSpec) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) for every parameter slot — the ABI with rust."""
+    k, w, c = spec.kernel, spec.width, spec.channels
+    layout: List[Tuple[str, Tuple[int, ...]]] = [
+        ("stem/conv", (k, k, c, w)),
+        ("stem/bn_scale", (w,)),
+        ("stem/bn_offset", (w,)),
+    ]
+    for i in range(spec.depth):
+        layout += [
+            (f"block{i}/conv", (k, k, w, w)),
+            (f"block{i}/bn_scale", (w,)),
+            (f"block{i}/bn_offset", (w,)),
+        ]
+    layout += [
+        ("head/dense_w", (w, spec.num_classes)),
+        ("head/dense_b", (spec.num_classes,)),
+    ]
+    return layout
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> Params:
+    """He-normal conv/dense weights, unit BN scale, zero offsets/bias."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = []
+    for name, shape in param_layout(spec):
+        key, sub = jax.random.split(key)
+        if name.endswith("/conv"):
+            fan_in = shape[0] * shape[1] * shape[2]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+        elif name.endswith("dense_w"):
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                * jnp.sqrt(2.0 / fan_in)
+            )
+        elif name.endswith("bn_scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:  # bn_offset, dense_b
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _batch_norm(x: jax.Array, scale: jax.Array, offset: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    """Training-mode BN over (B, H, W) per channel (Ioffe & Szegedy 2015)."""
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + offset
+
+
+def forward(spec: ModelSpec, params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Logits for a batch of NHWC images.
+
+    Topology mirrors the paper's morphism family: conv-BN-ReLU stem, `depth`
+    residual conv-BN-ReLU blocks (identity skip — the morphism is
+    function-preserving, so widths match by construction), max-pool halving
+    mid-network, global average pool, dense head. Convolutions run through
+    the L1 Pallas kernel so they lower into the same HLO artifact.
+    """
+    it = iter(params)
+    nxt = lambda: next(it)
+
+    h = conv2d(x, nxt())
+    h = jax.nn.relu(_batch_norm(h, nxt(), nxt()))
+
+    pool_at = spec.depth // 2
+    for i in range(spec.depth):
+        skip = h
+        h = conv2d(h, nxt())
+        h = _batch_norm(h, nxt(), nxt())
+        h = jax.nn.relu(h + skip)  # Add layer (Table 2)
+        if i == pool_at and h.shape[1] >= 2 and h.shape[1] % 2 == 0:
+            h = maxpool2x2(h)  # L1 Pallas kernel (see kernels/maxpool.py)
+
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    logits = h @ nxt() + nxt()
+    # The ABI promises all slots consumed; guard against layout drift.
+    try:
+        next(it)
+        raise ValueError("param layout longer than forward() consumes")
+    except StopIteration:
+        pass
+    return logits
+
+
+def loss_fn(spec: ModelSpec, params: Sequence[jax.Array], x: jax.Array,
+            y: jax.Array) -> jax.Array:
+    """Categorical cross-entropy (Table 5) over integer labels."""
+    logits = forward(spec, params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(spec: ModelSpec, params: Sequence[jax.Array], x: jax.Array,
+             y: jax.Array) -> jax.Array:
+    logits = forward(spec, params, x)
+    return jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (the units aot.py lowers)
+# ---------------------------------------------------------------------------
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 1e-4
+
+
+def train_step(spec: ModelSpec, params: Params, momenta: Params,
+               x: jax.Array, y: jax.Array, lr: jax.Array
+               ) -> Tuple[Params, Params, jax.Array]:
+    """One SGD-momentum step (Qian 1999), Table 5 hyperparameters.
+
+    v ← m·v + g + λ·θ ;  θ ← θ − lr·v
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(spec, p, x, y)
+    )(list(params))
+    new_params, new_momenta = [], []
+    for p, v, g in zip(params, momenta, grads):
+        v = MOMENTUM * v + g + WEIGHT_DECAY * p
+        new_params.append(p - lr * v)
+        new_momenta.append(v)
+    return new_params, new_momenta, loss
+
+
+def eval_step(spec: ModelSpec, params: Params, x: jax.Array, y: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """(loss, accuracy) on one validation batch."""
+    return loss_fn(spec, params, x, y), accuracy(spec, params, x, y)

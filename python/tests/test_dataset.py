@@ -1,0 +1,55 @@
+"""Synthetic dataset: determinism, balance, learnable structure.
+
+The splitmix64 counter generator here must stay bit-identical to
+rust/src/data/synthetic.rs — test_golden_values pins golden numbers that the
+rust side pins too (rust/src/data/synthetic.rs tests use the same values).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.dataset import _splitmix64, _unit, class_template, make_batch
+
+
+def test_splitmix64_golden():
+    """Golden values shared with rust/src/data/synthetic.rs."""
+    assert _splitmix64(0) == 0xE220A8397B1DCDAF
+    assert _splitmix64(1) == 0x910A2DEC89025CC1
+    assert _splitmix64(0xDEADBEEF) == 0x4ADFB90F68C9EB9B
+
+
+@given(st.integers(0, 2**63))
+@settings(max_examples=50, deadline=None)
+def test_unit_in_range(x):
+    u = _unit(_splitmix64(x))
+    assert 0.0 <= u < 1.0
+
+
+def test_batch_deterministic():
+    a = make_batch(3, 100, 8, 8, 3, 10)
+    b = make_batch(3, 100, 8, 8, 3, 10)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_batches_disjoint_indices_differ():
+    a, _ = make_batch(3, 0, 8, 8, 3, 10)
+    b, _ = make_batch(3, 8, 8, 8, 3, 10)
+    assert not np.array_equal(a, b)
+
+
+def test_labels_roughly_balanced():
+    _, ys = make_batch(0, 0, 512, 4, 1, 4)
+    counts = np.bincount(ys, minlength=4)
+    assert counts.min() > 512 / 4 * 0.5
+
+
+def test_templates_distinct_across_classes():
+    t0 = class_template(0, 0, 8, 3)
+    t1 = class_template(0, 1, 8, 3)
+    assert np.abs(t0 - t1).max() > 0.1
+
+
+def test_template_amplitude_bounded():
+    t = class_template(5, 2, 16, 3)
+    assert np.abs(t).max() < 2.0

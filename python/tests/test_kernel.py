@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas conv2d vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compiled artifacts: everything
+the rust runtime executes flows through this kernel. hypothesis sweeps the
+shape/dtype space (batch, spatial, channels, kernel size — odd AND even)
+and asserts allclose against two structurally independent references.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, mxu_utilization_estimate, vmem_bytes
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hw=st.integers(3, 12),
+    ci=st.integers(1, 8),
+    co=st.integers(1, 16),
+    k=st.integers(1, 5),
+)
+def test_forward_matches_lax(b, hw, ci, co, k):
+    x = _rand(0, (b, hw, hw, ci))
+    w = _rand(1, (k, k, ci, co))
+    got = conv2d(x, w)
+    want = ref.conv2d(x, w)
+    assert got.shape == want.shape == (b, hw, hw, co)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    hw=st.integers(3, 10),
+    ci=st.integers(1, 6),
+    co=st.integers(1, 12),
+    k=st.integers(1, 4),
+)
+def test_forward_matches_naive_im2col(hw, ci, co, k):
+    x = _rand(2, (2, hw, hw, ci))
+    w = _rand(3, (k, k, ci, co))
+    np.testing.assert_allclose(
+        conv2d(x, w), ref.conv2d_naive(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 8e-2)])
+def test_forward_dtypes(dtype, tol):
+    x = _rand(4, (2, 8, 8, 3), dtype)
+    w = _rand(5, (3, 3, 3, 8), dtype)
+    got = conv2d(x, w).astype(jnp.float32)
+    want = ref.conv2d(x.astype(jnp.float32), w.astype(jnp.float32))
+    assert conv2d(x, w).dtype == dtype
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_forward_rectangular_kernel():
+    x = _rand(6, (1, 7, 7, 2))
+    w = _rand(7, (2, 5, 2, 3))
+    np.testing.assert_allclose(conv2d(x, w), ref.conv2d(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_identity_kernel_is_identity():
+    """A 1×1 identity filter must reproduce the input exactly."""
+    x = _rand(8, (2, 6, 6, 3))
+    w = jnp.eye(3, dtype=jnp.float32).reshape(1, 1, 3, 3)
+    np.testing.assert_allclose(conv2d(x, w), x, rtol=0, atol=0)
+
+
+def test_linearity_in_input():
+    """conv is linear: conv(a·x) == a·conv(x)."""
+    x = _rand(9, (1, 5, 5, 2))
+    w = _rand(10, (3, 3, 2, 4))
+    np.testing.assert_allclose(
+        conv2d(2.5 * x, w), 2.5 * conv2d(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_channel_mismatch_raises():
+    x = _rand(11, (1, 4, 4, 3))
+    w = _rand(12, (3, 3, 2, 4))
+    with pytest.raises(ValueError, match="channel mismatch"):
+        conv2d(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Backward pass (Equation 2 of the paper)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hw=st.integers(3, 9),
+    ci=st.integers(1, 5),
+    co=st.integers(1, 8),
+    k=st.integers(1, 4),
+)
+def test_gradients_match_lax(hw, ci, co, k):
+    x = _rand(13, (2, hw, hw, ci))
+    w = _rand(14, (k, k, ci, co))
+    f = lambda x, w: jnp.sum(jnp.sin(conv2d(x, w)))
+    g = lambda x, w: jnp.sum(jnp.sin(ref.conv2d(x, w)))
+    dx1, dw1 = jax.grad(f, (0, 1))(x, w)
+    dx2, dw2 = jax.grad(g, (0, 1))(x, w)
+    np.testing.assert_allclose(dx1, dx2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(dw1, dw2, rtol=1e-3, atol=1e-3)
+
+
+def test_gradient_under_jit():
+    x = _rand(15, (2, 6, 6, 3))
+    w = _rand(16, (3, 3, 3, 4))
+    f = jax.jit(jax.grad(lambda x, w: jnp.sum(conv2d(x, w) ** 2), (0, 1)))
+    dx, dw = f(x, w)
+    g = jax.grad(lambda x, w: jnp.sum(ref.conv2d(x, w) ** 2), (0, 1))
+    dx2, dw2 = g(x, w)
+    np.testing.assert_allclose(dx, dx2, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(dw, dw2, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Schedule analytics (consumed by EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_estimate_positive_and_monotone():
+    small = vmem_bytes(16, 16, 8, 8, 3, 3)
+    big = vmem_bytes(32, 32, 16, 16, 3, 3)
+    assert 0 < small < big
+
+
+def test_vmem_fits_16mib_for_compiled_grid():
+    """Every variant in the AOT grid must fit a 16 MiB VMEM per grid step."""
+    from compile.aot import DEFAULT_GRID
+
+    for spec in DEFAULT_GRID:
+        n = vmem_bytes(spec.image, spec.image, spec.width,
+                       min(spec.width, 128), spec.kernel, spec.kernel)
+        assert n < 16 * 1024 * 1024, spec.name
+
+
+def test_mxu_utilization_bounds():
+    u = mxu_utilization_estimate(16, 16, 16, 16, 3, 3)
+    assert 0.0 < u <= 1.0
+    # Perfectly aligned shapes → exactly 1.
+    assert mxu_utilization_estimate(16, 8, 128 // 9 * 9, 128, 1, 1) <= 1.0
+    assert mxu_utilization_estimate(128, 1, 128, 128, 1, 1) == 1.0

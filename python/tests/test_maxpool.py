@@ -1,0 +1,58 @@
+"""L1 correctness: Pallas maxpool2x2 vs the lax reduce_window oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.maxpool import maxpool2x2
+from compile.kernels import ref
+
+import pytest
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    hw=st.sampled_from([2, 4, 6, 8, 12]),
+    c=st.integers(1, 8),
+)
+def test_forward_matches_lax(b, hw, c):
+    x = _rand(0, (b, hw, hw, c))
+    got = maxpool2x2(x)
+    want = ref.maxpool2x2(x)
+    assert got.shape == (b, hw // 2, hw // 2, c)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(hw=st.sampled_from([2, 4, 8]), c=st.integers(1, 4))
+def test_gradient_matches_lax(hw, c):
+    # Continuous random inputs: ties have measure zero, so the mask-based
+    # VJP must agree exactly with lax's reduce_window gradient.
+    x = _rand(1, (2, hw, hw, c))
+    f = lambda x: jnp.sum(jnp.sin(maxpool2x2(x)))
+    g = lambda x: jnp.sum(jnp.sin(ref.maxpool2x2(x)))
+    np.testing.assert_allclose(jax.grad(f)(x), jax.grad(g)(x), rtol=1e-5, atol=1e-6)
+
+
+def test_rectangular_input():
+    x = _rand(2, (1, 4, 8, 3))
+    np.testing.assert_array_equal(maxpool2x2(x), ref.maxpool2x2(x))
+
+
+def test_odd_dims_rejected():
+    with pytest.raises(ValueError, match="even spatial"):
+        maxpool2x2(jnp.zeros((1, 5, 4, 1)))
+
+
+def test_pool_selects_window_max():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    y = maxpool2x2(x)
+    np.testing.assert_array_equal(
+        y[0, :, :, 0], jnp.array([[5.0, 7.0], [13.0, 15.0]])
+    )

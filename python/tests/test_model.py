@@ -1,0 +1,137 @@
+"""L2 correctness: model family shapes, training dynamics, ABI invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.dataset import make_batch
+from compile.model import (
+    ModelSpec,
+    accuracy,
+    eval_step,
+    forward,
+    init_params,
+    loss_fn,
+    param_layout,
+    train_step,
+)
+
+
+def _batch(spec: ModelSpec, seed=0, start=0):
+    xs, ys = make_batch(seed, start, spec.batch, spec.image, spec.channels,
+                        spec.num_classes)
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    depth=st.integers(1, 4),
+    width=st.sampled_from([4, 8, 16]),
+    kernel=st.sampled_from([1, 3, 5]),
+    image=st.sampled_from([8, 16]),
+)
+def test_forward_shape(depth, width, kernel, image):
+    spec = ModelSpec(depth=depth, width=width, kernel=kernel, image=image,
+                     batch=2)
+    params = init_params(spec)
+    x = jnp.zeros((2, image, image, 3), jnp.float32)
+    logits = forward(spec, params, x)
+    assert logits.shape == (2, spec.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_param_layout_matches_init():
+    spec = ModelSpec(depth=3, width=8)
+    layout = param_layout(spec)
+    params = init_params(spec)
+    assert len(layout) == len(params)
+    for (name, shape), p in zip(layout, params):
+        assert tuple(shape) == p.shape, name
+        assert p.dtype == jnp.float32
+
+
+def test_param_layout_counts():
+    """Slots: 3 stem + 3/block + 2 head — the rust ABI depends on this."""
+    for depth in (1, 2, 5):
+        spec = ModelSpec(depth=depth)
+        assert len(param_layout(spec)) == 3 + 3 * depth + 2
+
+
+def test_init_deterministic_per_seed():
+    spec = ModelSpec(depth=2, width=8)
+    a = init_params(spec, seed=7)
+    b = init_params(spec, seed=7)
+    c = init_params(spec, seed=8)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_loss_positive_and_near_lnc_at_init():
+    """At init, CE loss should be near ln(num_classes) (uninformed model)."""
+    spec = ModelSpec(depth=2, width=8, image=8, batch=16)
+    params = init_params(spec)
+    x, y = _batch(spec)
+    loss = float(loss_fn(spec, params, x, y))
+    assert 0.5 * np.log(10) < loss < 5 * np.log(10)
+
+
+def test_train_step_decreases_loss():
+    spec = ModelSpec(depth=2, width=8, image=8, batch=16)
+    params = init_params(spec)
+    moms = [jnp.zeros_like(p) for p in params]
+    x, y = _batch(spec)
+    lr = jnp.float32(0.05)
+    l0 = float(loss_fn(spec, params, x, y))
+    for _ in range(20):
+        params, moms, loss = train_step(spec, params, moms, x, y, lr)
+    l1 = float(loss_fn(spec, params, x, y))
+    assert l1 < l0 * 0.8, (l0, l1)
+
+
+def test_train_improves_accuracy_on_heldout():
+    """A few epochs on the synthetic corpus must beat chance on fresh data —
+    the end-to-end learnability guarantee train_e2e.rs relies on."""
+    spec = ModelSpec(depth=2, width=8, image=8, batch=32, num_classes=4)
+    params = init_params(spec)
+    moms = [jnp.zeros_like(p) for p in params]
+    step = jax.jit(lambda p, m, x, y: train_step(spec, p, m, x, y, jnp.float32(0.05)))
+    for i in range(30):
+        x, y = _batch(spec, seed=0, start=i * spec.batch)
+        params, moms, _ = step(params, moms, x, y)
+    xh, yh = _batch(spec, seed=0, start=10_000)
+    acc = float(accuracy(spec, params, xh, yh))
+    assert acc > 0.5, acc  # chance = 0.25
+
+
+def test_eval_step_bounds():
+    spec = ModelSpec(depth=1, width=4, image=8, batch=8)
+    params = init_params(spec)
+    x, y = _batch(spec)
+    loss, acc = eval_step(spec, params, x, y)
+    assert float(loss) > 0
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_momentum_update_matches_manual():
+    """One train_step equals the hand-computed SGD+momentum update."""
+    from compile.model import MOMENTUM, WEIGHT_DECAY
+
+    spec = ModelSpec(depth=1, width=4, image=8, batch=4)
+    params = init_params(spec)
+    moms = [jnp.ones_like(p) * 0.01 for p in params]
+    x, y = _batch(spec)
+    lr = jnp.float32(0.1)
+    grads = jax.grad(lambda p: loss_fn(spec, p, x, y))(params)
+    got_p, got_m, _ = train_step(spec, params, moms, x, y, lr)
+    for p, v, g, gp, gm in zip(params, moms, grads, got_p, got_m):
+        v2 = MOMENTUM * v + g + WEIGHT_DECAY * p
+        np.testing.assert_allclose(gm, v2, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(gp, p - lr * v2, rtol=1e-5, atol=1e-6)
+
+
+def test_variant_name_roundtrip():
+    spec = ModelSpec(depth=4, width=16, kernel=3, image=16, batch=32)
+    assert spec.name == "d4w16k3i16b32"

@@ -1,0 +1,131 @@
+//! V100-like accelerator model.
+//!
+//! Calibration: an NVIDIA V100 trains ResNet-50/ImageNet at roughly
+//! 600–800 images/s in mixed precision. AIPerf's score counts *analytical*
+//! ops (2.31e10 per ResNet-50 image, Table 4), so the sustained
+//! analytical-op throughput is ≈ 700 img/s × 2.31e10 ≈ 1.6e13 ops/s per
+//! GPU — the `sustained_flops` default. Per-batch utilization follows the
+//! amortization curve behind Fig 7a: kernel-launch and input overheads are
+//! amortized as the batch grows, saturating near the memory limit.
+
+
+/// Static accelerator description + throughput model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuModel {
+    /// Sustained analytical ops/second at full utilization.
+    pub sustained_flops: f64,
+    /// Device memory in bytes (V100: 32 GB).
+    pub memory_bytes: u64,
+    /// Batch size at which utilization reaches 50 % (amortization knee).
+    pub util_half_batch: f64,
+    /// Utilization ceiling (input pipeline + launch gaps never vanish).
+    pub util_max: f64,
+    /// Fixed per-step host-side overhead in seconds.
+    pub step_overhead_s: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            sustained_flops: 1.6e13,
+            memory_bytes: 32 * (1 << 30),
+            util_half_batch: 48.0,
+            util_max: 0.97,
+            step_overhead_s: 2.0e-3,
+        }
+    }
+}
+
+impl GpuModel {
+    /// Utilization fraction at a per-GPU batch size (Fig 7a upper curve).
+    pub fn utilization(&self, batch: u64) -> f64 {
+        assert!(batch >= 1);
+        self.util_max * batch as f64 / (batch as f64 + self.util_half_batch)
+    }
+
+    /// Memory demand of training one architecture at a per-GPU batch size.
+    ///
+    /// params + gradients + momentum (fp32) + activations (fp16, scales
+    /// with batch × activation volume).
+    pub fn memory_demand(&self, params: u64, activation_elems: u64, batch: u64) -> u64 {
+        let states = params * 4 * 3;
+        let activations = activation_elems * 2 * batch;
+        // Framework overhead: CUDA context + workspace ≈ 1.5 GB.
+        states + activations + 3 * (1 << 29)
+    }
+
+    /// Does the architecture fit at this batch size?
+    pub fn fits(&self, params: u64, activation_elems: u64, batch: u64) -> bool {
+        self.memory_demand(params, activation_elems, batch) <= self.memory_bytes
+    }
+
+    /// Seconds to process one training step of `batch` images needing
+    /// `ops_per_image` analytical ops (compute only — allreduce is charged
+    /// by the network model).
+    pub fn step_seconds(&self, ops_per_image: u64, batch: u64) -> f64 {
+        let eff = self.sustained_flops * self.utilization(batch);
+        batch as f64 * ops_per_image as f64 / eff + self.step_overhead_s
+    }
+
+    /// Sustained images/second at a batch size.
+    pub fn images_per_second(&self, ops_per_image: u64, batch: u64) -> f64 {
+        batch as f64 / self.step_seconds(ops_per_image, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RESNET50_OPS: u64 = 23_100_000_000;
+
+    #[test]
+    fn utilization_monotone_saturating() {
+        let g = GpuModel::default();
+        let mut prev = 0.0;
+        for b in [1u64, 8, 32, 64, 128, 256, 448, 512] {
+            let u = g.utilization(b);
+            assert!(u > prev);
+            assert!(u < g.util_max);
+            prev = u;
+        }
+        assert!(g.utilization(448) > 0.85);
+    }
+
+    #[test]
+    fn v100_resnet_throughput_in_band() {
+        // Sanity: 400–900 img/s at batch 64+ — the published V100 range.
+        let g = GpuModel::default();
+        let ips = g.images_per_second(RESNET50_OPS, 64);
+        assert!((300.0..1000.0).contains(&ips), "ips={ips}");
+    }
+
+    #[test]
+    fn memory_grows_with_batch_and_caps() {
+        let g = GpuModel::default();
+        let params = 25_600_000;
+        let act = 11_000_000; // ResNet-50 activation elements per image
+        assert!(g.fits(params, act, 64));
+        let m64 = g.memory_demand(params, act, 64);
+        let m448 = g.memory_demand(params, act, 448);
+        assert!(m448 > m64);
+        // At some batch the 32 GB must run out.
+        assert!(!g.fits(params, act, 2048));
+    }
+
+    #[test]
+    fn step_time_scales_with_ops() {
+        let g = GpuModel::default();
+        let t1 = g.step_seconds(RESNET50_OPS, 64);
+        let t2 = g.step_seconds(2 * RESNET50_OPS, 64);
+        assert!(t2 > 1.8 * t1);
+    }
+
+    #[test]
+    fn bigger_batch_better_throughput() {
+        let g = GpuModel::default();
+        let small = g.images_per_second(RESNET50_OPS, 8);
+        let large = g.images_per_second(RESNET50_OPS, 256);
+        assert!(large > small);
+    }
+}

@@ -1,0 +1,23 @@
+//! Simulated cluster substrate (DESIGN.md §2 substitution).
+//!
+//! The paper's testbed — up to 16 slave nodes, each 2×Xeon 8268 + 8×V100
+//! NVLink 32 GB on 100 Gb/s InfiniBand, SLURM + Docker + NFS (Tables 6/7)
+//! — is a hardware gate. This module models each component with enough
+//! fidelity for the benchmark's claims to be exercised for real:
+//!
+//! * [`gpu`] — V100-like accelerator: sustained analytical-op throughput,
+//!   32 GB memory, batch-amortized utilization;
+//! * [`node`] — a slave node: 8 GPUs + CPU search capacity + memory;
+//! * [`network`] — NCCL-style ring allreduce cost on 100 Gb/s links;
+//! * [`nfs`] — the shared filesystem holding the architecture buffer and
+//!   the historical model list, with latency/bandwidth charges.
+
+pub mod gpu;
+pub mod network;
+pub mod nfs;
+pub mod node;
+
+pub use gpu::GpuModel;
+pub use network::NetworkModel;
+pub use nfs::NfsModel;
+pub use node::NodeModel;

@@ -1,0 +1,106 @@
+//! NCCL-style collective cost model (paper §4.3 data parallelism).
+//!
+//! AIPerf trains each candidate with synchronous data parallelism: every
+//! worker computes gradients on its batch partition and the gradients are
+//! aggregated with NCCL allreduce each step. The standard ring-allreduce
+//! cost on `n` workers moving `b` bytes is
+//! `t = 2*(n-1)/n * b/bandwidth + 2*(n-1)*latency`.
+//!
+//! Intra-node (NVLink) and inter-node (100 Gb/s InfiniBand, Table 6) links
+//! are distinguished; the slower link dominates a multi-node ring.
+
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// NVLink effective bandwidth, bytes/s (V100 NVLink ≈ 150 GB/s eff.).
+    pub nvlink_bw: f64,
+    /// InfiniBand effective bandwidth, bytes/s (100 Gb/s ≈ 11 GB/s eff.).
+    pub ib_bw: f64,
+    /// Per-hop latency, seconds.
+    pub nvlink_latency: f64,
+    pub ib_latency: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel {
+            nvlink_bw: 1.5e11,
+            ib_bw: 1.1e10,
+            nvlink_latency: 5e-6,
+            ib_latency: 2e-5,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Ring allreduce over `workers` moving `bytes` per worker, using the
+    /// bandwidth/latency of the weakest link in the ring.
+    pub fn ring_allreduce_seconds(
+        &self,
+        workers: u64,
+        bytes: u64,
+        crosses_nodes: bool,
+    ) -> f64 {
+        assert!(workers >= 1);
+        if workers == 1 {
+            return 0.0;
+        }
+        let (bw, lat) = if crosses_nodes {
+            (self.ib_bw, self.ib_latency)
+        } else {
+            (self.nvlink_bw, self.nvlink_latency)
+        };
+        let n = workers as f64;
+        2.0 * (n - 1.0) / n * bytes as f64 / bw + 2.0 * (n - 1.0) * lat
+    }
+
+    /// Gradient allreduce per training step: one fp32 value per parameter.
+    pub fn gradient_sync_seconds(&self, workers: u64, params: u64, crosses_nodes: bool) -> f64 {
+        self.ring_allreduce_seconds(workers, params * 4, crosses_nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_free() {
+        let n = NetworkModel::default();
+        assert_eq!(n.ring_allreduce_seconds(1, 1 << 30, true), 0.0);
+    }
+
+    #[test]
+    fn intra_node_faster_than_inter() {
+        let n = NetworkModel::default();
+        let intra = n.ring_allreduce_seconds(8, 100 << 20, false);
+        let inter = n.ring_allreduce_seconds(8, 100 << 20, true);
+        assert!(intra < inter / 5.0);
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large_buffers() {
+        let n = NetworkModel::default();
+        let t = n.ring_allreduce_seconds(8, 1 << 30, true);
+        // 2·(7/8)·1 GiB / 11 GB/s ≈ 0.17 s.
+        assert!((0.1..0.3).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn resnet_gradient_sync_sub_100ms_intra_node() {
+        // 25.6 M params × 4 B ≈ 102 MB over 8 NVLink GPUs.
+        let n = NetworkModel::default();
+        let t = n.gradient_sync_seconds(8, 25_600_000, false);
+        assert!(t < 0.1, "t={t}");
+    }
+
+    #[test]
+    fn cost_increases_with_workers_then_saturates() {
+        let n = NetworkModel::default();
+        let t2 = n.ring_allreduce_seconds(2, 100 << 20, false);
+        let t8 = n.ring_allreduce_seconds(8, 100 << 20, false);
+        assert!(t8 > t2);
+        // (n−1)/n saturates: ×8 workers is < ×2 cost.
+        assert!(t8 < 2.0 * t2);
+    }
+}

@@ -1,0 +1,99 @@
+//! Network-file-system model (paper §4.3).
+//!
+//! The framework stores the architecture buffer and the historical model
+//! list on NFS; GPUs "load the candidate architecture and data from NFS".
+//! The model charges latency + bandwidth per access, and tracks aggregate
+//! bytes so the benchmark report can expose I/O pressure (the paper's §1
+//! motivation: "I/O measurement … is often less considered").
+
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NfsModel {
+    /// Metadata round-trip, seconds.
+    pub latency_s: f64,
+    /// Sustained bandwidth, bytes/s.
+    pub bandwidth: f64,
+}
+
+impl Default for NfsModel {
+    fn default() -> Self {
+        NfsModel {
+            latency_s: 1.0e-3,
+            bandwidth: 1.2e9, // ~10 Gb/s effective NFS over IB
+        }
+    }
+}
+
+/// Aggregate I/O counters for one simulated run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NfsStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+impl NfsModel {
+    /// Seconds to read `bytes` (also bumps the counters).
+    pub fn read_seconds(&self, bytes: u64, stats: &mut NfsStats) -> f64 {
+        stats.reads += 1;
+        stats.bytes_read += bytes;
+        self.latency_s + bytes as f64 / self.bandwidth
+    }
+
+    /// Seconds to write `bytes`.
+    pub fn write_seconds(&self, bytes: u64, stats: &mut NfsStats) -> f64 {
+        stats.writes += 1;
+        stats.bytes_written += bytes;
+        self.latency_s + bytes as f64 / self.bandwidth
+    }
+
+    /// Per-epoch input-pipeline cost for streaming `images` of `bytes_per
+    /// _image` across `prefetch_parallelism` streams. Pipelined with
+    /// compute, so callers take max(compute, input).
+    pub fn epoch_input_seconds(
+        &self,
+        images: u64,
+        bytes_per_image: u64,
+        prefetch_parallelism: u64,
+    ) -> f64 {
+        let total = images as f64 * bytes_per_image as f64;
+        total / (self.bandwidth * prefetch_parallelism.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_charges_latency_plus_bw() {
+        let n = NfsModel::default();
+        let mut s = NfsStats::default();
+        let t = n.read_seconds(1_200_000_000, &mut s);
+        assert!((t - (1e-3 + 1.0)).abs() < 1e-6);
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.bytes_read, 1_200_000_000);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let n = NfsModel::default();
+        let mut s = NfsStats::default();
+        n.write_seconds(100, &mut s);
+        n.write_seconds(200, &mut s);
+        n.read_seconds(50, &mut s);
+        assert_eq!(s.writes, 2);
+        assert_eq!(s.bytes_written, 300);
+        assert_eq!(s.reads, 1);
+    }
+
+    #[test]
+    fn imagenet_epoch_streaming_feasible() {
+        // 1.28 M JPEG-decoded 224² images ≈ 150 KB each, 8 streams:
+        // must be well under a compute-bound epoch (~4 min at 8 GPUs).
+        let n = NfsModel::default();
+        let t = n.epoch_input_seconds(1_281_167, 150_000, 8);
+        assert!(t < 30.0, "t={t}");
+    }
+}

@@ -1,0 +1,104 @@
+//! Slave-node model (Tables 6/7).
+//!
+//! A slave node is "one or multiple servers with AI accelerators": here
+//! 2×Xeon-8268-class CPUs (40 cores), 8 GPUs, 1.5 TB memory, running the
+//! containerised workload (24 cores / 280 GB / 8 GPUs per slave
+//! container). The node model supplies per-component capacities and the
+//! CPU-side costs of the search loop (architecture generation is run on
+//! slave CPUs in AIPerf's modified NNI, §4.3).
+
+
+use super::gpu::GpuModel;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeModel {
+    pub gpus_per_node: u64,
+    pub gpu: GpuModel,
+    /// Container CPU cores (Table 7: 24).
+    pub cpu_cores: u64,
+    /// Container memory bytes (Table 7: 280 GB).
+    pub memory_bytes: u64,
+    /// Seconds of CPU time to generate one candidate architecture
+    /// (morphism + bookkeeping on the historical list).
+    pub search_seconds: f64,
+    /// Seconds to build/compile the training graph for a new candidate
+    /// (the utilization "dent between training stages" in Fig 9).
+    pub setup_seconds: f64,
+}
+
+impl Default for NodeModel {
+    fn default() -> Self {
+        NodeModel {
+            gpus_per_node: 8,
+            gpu: GpuModel::default(),
+            cpu_cores: 24,
+            memory_bytes: 280 * (1 << 30),
+            search_seconds: 1.5,
+            setup_seconds: 45.0,
+        }
+    }
+}
+
+impl NodeModel {
+    /// Aggregate per-node sustained analytical throughput at a batch size.
+    pub fn node_flops(&self, batch_per_gpu: u64) -> f64 {
+        self.gpus_per_node as f64
+            * self.gpu.sustained_flops
+            * self.gpu.utilization(batch_per_gpu)
+    }
+
+    /// CPU utilization fraction while training runs: the input pipeline and
+    /// the search thread keep a few cores busy (paper Fig 11: < 5 % of the
+    /// host, i.e. a couple of container cores).
+    pub fn cpu_util_training(&self) -> f64 {
+        // 1 core of search + ~0.5 core of input pipeline per 8 GPUs.
+        (1.5 / self.cpu_cores as f64).min(1.0)
+    }
+
+    /// Main-memory fraction used while training (Fig 12: < 20 % — data is
+    /// pre-loaded to GPU memory, host holds pipeline buffers + runtime).
+    pub fn host_memory_util(&self, dataset_cache_bytes: u64) -> f64 {
+        let runtime = 20u64 << 30; // framework + CUDA host allocations
+        ((runtime + dataset_cache_bytes) as f64 / self.memory_bytes as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table7() {
+        let n = NodeModel::default();
+        assert_eq!(n.gpus_per_node, 8);
+        assert_eq!(n.cpu_cores, 24);
+        assert_eq!(n.memory_bytes, 280 * (1 << 30));
+    }
+
+    #[test]
+    fn node_flops_scales_with_gpus() {
+        let n = NodeModel::default();
+        let one = NodeModel {
+            gpus_per_node: 1,
+            ..n
+        };
+        let f8 = n.node_flops(448);
+        let f1 = one.node_flops(448);
+        assert!((f8 / f1 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_util_under_five_percent() {
+        let n = NodeModel::default();
+        assert!(n.cpu_util_training() < 0.10);
+        assert!(n.cpu_util_training() > 0.0);
+    }
+
+    #[test]
+    fn host_memory_under_twenty_percent() {
+        let n = NodeModel::default();
+        // 30 GB of pipeline cache (TFRecord shards).
+        let u = n.host_memory_util(30 << 30);
+        assert!(u < 0.20, "u={u}");
+    }
+}

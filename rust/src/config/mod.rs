@@ -1,0 +1,305 @@
+//! Benchmark configuration (paper §4.5, Table 5).
+//!
+//! The paper fixes the rules (NAS method, HPO method, dataset, initial
+//! architecture, precision, error requirement) and keeps the rest
+//! "pencil-and-paper" customizable (framework, batch size, optimizer,
+//! learning rate, termination). This module is the single source of those
+//! knobs: TOML-serializable, CLI-overridable, validated before a run.
+
+
+use crate::cluster::NodeModel;
+use crate::data::DatasetDescriptor;
+use crate::nas::morphism::MorphLimits;
+
+/// Warm-up schedule (§4.5): round r trains `first + step·(r−1)` epochs,
+/// capped at `max_epochs`; HPO starts at round `hpo_start_round`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WarmupSchedule {
+    pub first_epochs: u64,
+    pub step_epochs: u64,
+    pub max_epochs: u64,
+    pub hpo_start_round: u64,
+}
+
+impl Default for WarmupSchedule {
+    fn default() -> Self {
+        // "10 epochs for the first round, then an additional 20 epochs for
+        // each one more round until 90 epochs in the fifth round."
+        WarmupSchedule {
+            first_epochs: 10,
+            step_epochs: 20,
+            max_epochs: 90,
+            hpo_start_round: 5,
+        }
+    }
+}
+
+impl WarmupSchedule {
+    /// Epoch budget for a node's `round` (1-based).
+    pub fn epochs_for_round(&self, round: u64) -> u64 {
+        assert!(round >= 1);
+        (self.first_epochs + self.step_epochs * (round - 1)).min(self.max_epochs)
+    }
+
+    /// Whether HPO is active for `round`.
+    pub fn hpo_active(&self, round: u64) -> bool {
+        round >= self.hpo_start_round
+    }
+}
+
+/// Full benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchmarkConfig {
+    /// Cluster scale.
+    pub nodes: u64,
+    pub node: NodeModel,
+    /// Dataset (fixed to ImageNet shape for official runs).
+    pub dataset: DatasetDescriptor,
+    /// Suggested per-GPU batch size (Table 5: 448).
+    pub batch_per_gpu: u64,
+    /// Learning rate (Table 5: 0.1 with decay 0.1/90 per epoch).
+    pub learning_rate: f64,
+    pub lr_decay_per_epoch: f64,
+    /// Warm-up + HPO schedule.
+    pub warmup: WarmupSchedule,
+    /// Early stopping patience, epochs without validation improvement.
+    pub patience: u64,
+    /// Minimum improvement counting as progress.
+    pub min_delta: f64,
+    /// Termination: user-defined wall-clock budget, seconds (§4.5
+    /// suggests > 6 h on V100; the evaluation runs 12 h).
+    pub duration_s: f64,
+    /// Telemetry sampling interval, seconds (Appendix D: 18 min).
+    pub telemetry_interval_s: f64,
+    /// Score sampling interval, seconds (Figs 4–6: hourly).
+    pub score_interval_s: f64,
+    /// Morph limits (accelerator-memory adaption).
+    pub morph_limits: MorphLimits,
+    /// Root seed: fixed seed ⇒ bit-reproducible run.
+    pub seed: u64,
+    /// Training numeric precision in bits (validity requires ≥ 16).
+    pub precision_bits: u32,
+}
+
+impl Default for BenchmarkConfig {
+    fn default() -> Self {
+        BenchmarkConfig {
+            nodes: 2,
+            node: NodeModel::default(),
+            dataset: DatasetDescriptor::imagenet(),
+            batch_per_gpu: 448,
+            learning_rate: 0.1,
+            lr_decay_per_epoch: 0.1 / 90.0,
+            warmup: WarmupSchedule::default(),
+            patience: 5,
+            min_delta: 1e-3,
+            duration_s: 12.0 * 3600.0,
+            telemetry_interval_s: 18.0 * 60.0,
+            score_interval_s: 3600.0,
+            morph_limits: MorphLimits::default(),
+            seed: 0,
+            precision_bits: 16,
+        }
+    }
+}
+
+impl BenchmarkConfig {
+    /// Total GPU count.
+    pub fn total_gpus(&self) -> u64 {
+        self.nodes * self.node.gpus_per_node
+    }
+
+    /// Validate the configuration against the paper's fixed rules.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes == 0 {
+            return Err("at least one slave node required".into());
+        }
+        if self.node.gpus_per_node == 0 {
+            return Err("at least one GPU per node required".into());
+        }
+        if self.precision_bits < 16 {
+            return Err("precision must be FP16 or higher (Table 5)".into());
+        }
+        if self.batch_per_gpu == 0 {
+            return Err("batch size must be positive".into());
+        }
+        if self.duration_s <= 0.0 {
+            return Err("duration must be positive".into());
+        }
+        if !(0.0..1.0).contains(&self.min_delta) {
+            return Err("min_delta must be in [0,1)".into());
+        }
+        Ok(())
+    }
+
+    /// Parse from a flat `key = value` text (a TOML subset; `#` comments).
+    /// Unknown keys are an error — configuration typos must not silently
+    /// fall back to defaults. Unlisted keys keep their default.
+    pub fn from_text(s: &str) -> Result<Self, String> {
+        let mut cfg = BenchmarkConfig::default();
+        for (lineno, raw) in s.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = key.trim();
+            let value = value.trim();
+            let parse_u64 = |v: &str| -> Result<u64, String> {
+                v.parse().map_err(|_| format!("line {}: bad integer `{v}`", lineno + 1))
+            };
+            let parse_f64 = |v: &str| -> Result<f64, String> {
+                v.parse().map_err(|_| format!("line {}: bad number `{v}`", lineno + 1))
+            };
+            match key {
+                "nodes" => cfg.nodes = parse_u64(value)?,
+                "gpus_per_node" => cfg.node.gpus_per_node = parse_u64(value)?,
+                "batch_per_gpu" => cfg.batch_per_gpu = parse_u64(value)?,
+                "learning_rate" => cfg.learning_rate = parse_f64(value)?,
+                "lr_decay_per_epoch" => cfg.lr_decay_per_epoch = parse_f64(value)?,
+                "patience" => cfg.patience = parse_u64(value)?,
+                "min_delta" => cfg.min_delta = parse_f64(value)?,
+                "duration_hours" => cfg.duration_s = parse_f64(value)? * 3600.0,
+                "duration_s" => cfg.duration_s = parse_f64(value)?,
+                "telemetry_interval_s" => cfg.telemetry_interval_s = parse_f64(value)?,
+                "score_interval_s" => cfg.score_interval_s = parse_f64(value)?,
+                "seed" => cfg.seed = parse_u64(value)?,
+                "precision_bits" => cfg.precision_bits = parse_u64(value)? as u32,
+                "max_params" => cfg.morph_limits.max_params = parse_u64(value)?,
+                "max_depth" => cfg.morph_limits.max_depth = parse_u64(value)? as usize,
+                "max_width" => cfg.morph_limits.max_width = parse_u64(value)?,
+                "warmup_first_epochs" => cfg.warmup.first_epochs = parse_u64(value)?,
+                "warmup_step_epochs" => cfg.warmup.step_epochs = parse_u64(value)?,
+                "max_epochs" => cfg.warmup.max_epochs = parse_u64(value)?,
+                "hpo_start_round" => cfg.warmup.hpo_start_round = parse_u64(value)?,
+                "gpu_sustained_flops" => cfg.node.gpu.sustained_flops = parse_f64(value)?,
+                "gpu_memory_gb" => {
+                    cfg.node.gpu.memory_bytes = (parse_f64(value)? * (1u64 << 30) as f64) as u64
+                }
+                other => return Err(format!("line {}: unknown key `{other}`", lineno + 1)),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Render as the same flat `key = value` text `from_text` accepts.
+    pub fn to_text(&self) -> String {
+        format!(
+            "# AIPerf benchmark configuration (Table 5 defaults)\n\
+             nodes = {}\n\
+             gpus_per_node = {}\n\
+             batch_per_gpu = {}\n\
+             learning_rate = {}\n\
+             lr_decay_per_epoch = {}\n\
+             patience = {}\n\
+             min_delta = {}\n\
+             duration_hours = {}\n\
+             telemetry_interval_s = {}\n\
+             score_interval_s = {}\n\
+             seed = {}\n\
+             precision_bits = {}\n\
+             max_params = {}\n\
+             max_depth = {}\n\
+             max_width = {}\n\
+             warmup_first_epochs = {}\n\
+             warmup_step_epochs = {}\n\
+             max_epochs = {}\n\
+             hpo_start_round = {}\n\
+             gpu_sustained_flops = {:e}\n\
+             gpu_memory_gb = {}\n",
+            self.nodes,
+            self.node.gpus_per_node,
+            self.batch_per_gpu,
+            self.learning_rate,
+            self.lr_decay_per_epoch,
+            self.patience,
+            self.min_delta,
+            self.duration_s / 3600.0,
+            self.telemetry_interval_s,
+            self.score_interval_s,
+            self.seed,
+            self.precision_bits,
+            self.morph_limits.max_params,
+            self.morph_limits.max_depth,
+            self.morph_limits.max_width,
+            self.warmup.first_epochs,
+            self.warmup.step_epochs,
+            self.warmup.max_epochs,
+            self.warmup.hpo_start_round,
+            self.node.gpu.sustained_flops,
+            self.node.gpu.memory_bytes / (1 << 30),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_schedule_matches_paper() {
+        let w = WarmupSchedule::default();
+        assert_eq!(w.epochs_for_round(1), 10);
+        assert_eq!(w.epochs_for_round(2), 30);
+        assert_eq!(w.epochs_for_round(3), 50);
+        assert_eq!(w.epochs_for_round(4), 70);
+        assert_eq!(w.epochs_for_round(5), 90);
+        assert_eq!(w.epochs_for_round(9), 90); // capped
+        assert!(!w.hpo_active(4));
+        assert!(w.hpo_active(5));
+    }
+
+    #[test]
+    fn default_config_valid_and_matches_table5() {
+        let c = BenchmarkConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.batch_per_gpu, 448);
+        assert_eq!(c.learning_rate, 0.1);
+        assert_eq!(c.total_gpus(), 16);
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = BenchmarkConfig::default();
+        c.nodes = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = BenchmarkConfig::default();
+        c.precision_bits = 8;
+        assert!(c.validate().is_err());
+
+        let mut c = BenchmarkConfig::default();
+        c.duration_s = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let mut c = BenchmarkConfig::default();
+        c.nodes = 7;
+        c.seed = 99;
+        c.duration_s = 4.5 * 3600.0;
+        let s = c.to_text();
+        let c2 = BenchmarkConfig::from_text(&s).unwrap();
+        assert_eq!(c2.nodes, 7);
+        assert_eq!(c2.seed, 99);
+        assert!((c2.duration_s - c.duration_s).abs() < 1.0);
+        assert_eq!(c2.batch_per_gpu, c.batch_per_gpu);
+        assert_eq!(c2.warmup, c.warmup);
+    }
+
+    #[test]
+    fn text_parse_errors_are_reported() {
+        assert!(BenchmarkConfig::from_text("nodes = two").is_err());
+        assert!(BenchmarkConfig::from_text("bogus_key = 1").is_err());
+        assert!(BenchmarkConfig::from_text("no equals sign").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ok() {
+        let c = BenchmarkConfig::from_text("# comment\n\nnodes = 4 # inline\n").unwrap();
+        assert_eq!(c.nodes, 4);
+    }
+}

@@ -1,0 +1,135 @@
+//! Candidate-architecture buffer (paper §4.3).
+//!
+//! Slave-node CPUs "generate new architectures (then store them in the
+//! buffer)" — an NFS-backed queue the training side drains. Bounded so a
+//! fast search loop cannot outrun the trainers unboundedly (backpressure);
+//! FIFO so inherited-knowledge locality is preserved (children train soon
+//! after their parent's result motivated them).
+
+use std::collections::VecDeque;
+
+use crate::nas::graph::Architecture;
+
+/// A queued candidate with provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub arch: Architecture,
+    /// Which node's search loop proposed it.
+    pub proposed_by: usize,
+    /// Proposal time (seconds since benchmark start).
+    pub proposed_at: f64,
+}
+
+/// Bounded FIFO buffer.
+#[derive(Debug, Clone)]
+pub struct ArchBuffer {
+    queue: VecDeque<Candidate>,
+    capacity: usize,
+    /// Total proposals ever accepted / rejected (report counters).
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum BufferError {
+    #[error("buffer full (capacity {0})")]
+    Full(usize),
+}
+
+impl ArchBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        ArchBuffer {
+            queue: VecDeque::with_capacity(capacity),
+            capacity,
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.queue.len() >= self.capacity
+    }
+
+    /// Push a candidate; rejects when full (the search loop then skips a
+    /// beat — backpressure).
+    pub fn push(&mut self, c: Candidate) -> Result<(), BufferError> {
+        if self.is_full() {
+            self.rejected += 1;
+            return Err(BufferError::Full(self.capacity));
+        }
+        self.queue.push_back(c);
+        self.accepted += 1;
+        Ok(())
+    }
+
+    /// Pop the oldest candidate.
+    pub fn pop(&mut self) -> Option<Candidate> {
+        self.queue.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(i: usize) -> Candidate {
+        Candidate {
+            arch: Architecture::initial(32, 3, 10),
+            proposed_by: i,
+            proposed_at: i as f64,
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut b = ArchBuffer::new(4);
+        for i in 0..3 {
+            b.push(cand(i)).unwrap();
+        }
+        assert_eq!(b.pop().unwrap().proposed_by, 0);
+        assert_eq!(b.pop().unwrap().proposed_by, 1);
+        assert_eq!(b.pop().unwrap().proposed_by, 2);
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut b = ArchBuffer::new(2);
+        b.push(cand(0)).unwrap();
+        b.push(cand(1)).unwrap();
+        assert_eq!(b.push(cand(2)), Err(BufferError::Full(2)));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.accepted, 2);
+        assert_eq!(b.rejected, 1);
+    }
+
+    #[test]
+    fn drain_then_refill() {
+        let mut b = ArchBuffer::new(1);
+        b.push(cand(0)).unwrap();
+        assert!(b.is_full());
+        b.pop();
+        assert!(b.is_empty());
+        b.push(cand(1)).unwrap();
+        assert_eq!(b.pop().unwrap().proposed_by, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        ArchBuffer::new(0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Trial dispatcher (paper §4.3 step 2: "Master dispatches benchmark
+//! workloads with SLURM … in a parallel way to slave nodes
+//! asynchronously").
+//!
+//! Exactly-once bookkeeping: every trial id is assigned to exactly one
+//! node and completed exactly once — the routing invariant the proptest
+//! suite (rust/tests/proptest_coordinator.rs) exercises.
+
+use std::collections::HashMap;
+
+/// Routing state.
+#[derive(Debug, Clone, Default)]
+pub struct Dispatcher {
+    next_trial: u64,
+    /// trial id → node, for in-flight trials.
+    in_flight: HashMap<u64, usize>,
+    /// Per-node totals.
+    assigned: HashMap<usize, u64>,
+    completed: HashMap<usize, u64>,
+}
+
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum DispatchError {
+    #[error("trial {0} is not in flight")]
+    NotInFlight(u64),
+    #[error("trial {0} is owned by node {1}, not {2}")]
+    WrongNode(u64, usize, usize),
+    #[error("node {0} already holds an in-flight trial")]
+    NodeBusy(usize),
+}
+
+impl Dispatcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Assign a fresh trial id to `node`. A node runs one trial at a time
+    /// (each slave trains one candidate across its 8 GPUs).
+    pub fn assign(&mut self, node: usize) -> Result<u64, DispatchError> {
+        if self.in_flight.values().any(|&n| n == node) {
+            return Err(DispatchError::NodeBusy(node));
+        }
+        let id = self.next_trial;
+        self.next_trial += 1;
+        self.in_flight.insert(id, node);
+        *self.assigned.entry(node).or_insert(0) += 1;
+        Ok(id)
+    }
+
+    /// Mark a trial complete on `node`.
+    pub fn complete(&mut self, trial: u64, node: usize) -> Result<(), DispatchError> {
+        match self.in_flight.get(&trial) {
+            None => Err(DispatchError::NotInFlight(trial)),
+            Some(&owner) if owner != node => Err(DispatchError::WrongNode(trial, owner, node)),
+            Some(_) => {
+                self.in_flight.remove(&trial);
+                *self.completed.entry(node).or_insert(0) += 1;
+                Ok(())
+            }
+        }
+    }
+
+    pub fn in_flight_count(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    pub fn total_assigned(&self) -> u64 {
+        self.next_trial
+    }
+
+    pub fn completed_on(&self, node: usize) -> u64 {
+        self.completed.get(&node).copied().unwrap_or(0)
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.completed.values().sum()
+    }
+
+    /// Invariant check: assigned = completed + in-flight, per node and
+    /// globally.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let total_done: u64 = self.completed.values().sum();
+        if total_done + self.in_flight.len() as u64 != self.next_trial {
+            return Err(format!(
+                "assigned {} ≠ completed {} + in-flight {}",
+                self.next_trial,
+                total_done,
+                self.in_flight.len()
+            ));
+        }
+        for (&node, &a) in &self.assigned {
+            let c = self.completed.get(&node).copied().unwrap_or(0);
+            let f = self.in_flight.values().filter(|&&n| n == node).count() as u64;
+            if c + f != a {
+                return Err(format!("node {node}: assigned {a} ≠ {c} + {f}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_complete_cycle() {
+        let mut d = Dispatcher::new();
+        let t0 = d.assign(0).unwrap();
+        let t1 = d.assign(1).unwrap();
+        assert_ne!(t0, t1);
+        assert_eq!(d.in_flight_count(), 2);
+        d.complete(t0, 0).unwrap();
+        d.complete(t1, 1).unwrap();
+        assert_eq!(d.in_flight_count(), 0);
+        assert_eq!(d.total_completed(), 2);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn node_runs_one_trial_at_a_time() {
+        let mut d = Dispatcher::new();
+        let t = d.assign(3).unwrap();
+        assert_eq!(d.assign(3), Err(DispatchError::NodeBusy(3)));
+        d.complete(t, 3).unwrap();
+        d.assign(3).unwrap();
+    }
+
+    #[test]
+    fn double_complete_rejected() {
+        let mut d = Dispatcher::new();
+        let t = d.assign(0).unwrap();
+        d.complete(t, 0).unwrap();
+        assert_eq!(d.complete(t, 0), Err(DispatchError::NotInFlight(t)));
+    }
+
+    #[test]
+    fn wrong_node_rejected() {
+        let mut d = Dispatcher::new();
+        let t = d.assign(0).unwrap();
+        assert_eq!(d.complete(t, 1), Err(DispatchError::WrongNode(t, 0, 1)));
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn per_node_counters() {
+        let mut d = Dispatcher::new();
+        for round in 0..5u64 {
+            for node in 0..3usize {
+                let t = d.assign(node).unwrap();
+                d.complete(t, node).unwrap();
+            }
+            let _ = round;
+        }
+        for node in 0..3 {
+            assert_eq!(d.completed_on(node), 5);
+        }
+        d.check_invariants().unwrap();
+    }
+}

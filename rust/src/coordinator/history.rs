@@ -1,0 +1,174 @@
+//! The historical model list (paper §4.3).
+//!
+//! "The CPUs on slave nodes search for new neural architectures based on
+//! the rank of models in the historical model list, which contains
+//! detailed model information and accuracy on the test dataset." In the
+//! paper the list lives on NFS; here it is the master-owned source of
+//! truth the simulated nodes read (with an NFS latency charge) and the
+//! live runner shares behind a lock.
+
+
+use crate::nas::graph::Architecture;
+use crate::nas::search::RankedModel;
+
+/// One trained (or warm-up-predicted) model.
+#[derive(Debug, Clone)]
+pub struct ModelRecord {
+    pub id: u64,
+    pub arch: Architecture,
+    pub signature: String,
+    pub params: u64,
+    /// Ranking accuracy: the Appendix-C prediction during warm-up rounds,
+    /// the measured value afterwards. Drives parent selection.
+    pub accuracy: f64,
+    /// Best validation accuracy actually achieved while training — what
+    /// Fig 5 plots as "achievable error".
+    pub measured_accuracy: f64,
+    pub predicted: bool,
+    pub node: usize,
+    pub round: u64,
+    pub epochs_trained: u64,
+    /// Analytical ops spent training+validating this model.
+    pub ops: f64,
+    /// Hyperparameters used.
+    pub dropout: f64,
+    pub kernel: f64,
+    /// Completion time, seconds since benchmark start.
+    pub completed_at: f64,
+}
+
+impl ModelRecord {
+    /// Achieved validation error (Fig 5 quantity).
+    pub fn error(&self) -> f64 {
+        1.0 - self.measured_accuracy
+    }
+}
+
+/// Append-only ranked model list.
+#[derive(Debug, Clone, Default)]
+pub struct HistoryList {
+    records: Vec<ModelRecord>,
+}
+
+impl HistoryList {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: ModelRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[ModelRecord] {
+        &self.records
+    }
+
+    /// Best achieved error so far. Every record counts with its *measured*
+    /// accuracy; Appendix-C predictions only influence ranking, never the
+    /// achieved-error series.
+    pub fn best_measured_error(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .map(|r| r.error())
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// Best error among records completed by time `t` (for the Fig 5
+    /// time series).
+    pub fn best_measured_error_at(&self, t: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .filter(|r| r.completed_at <= t)
+            .map(|r| r.error())
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// View for the NAS search policy (all records rank, predicted too —
+    /// that is the point of warm-up prediction).
+    pub fn ranked_view(&self) -> Vec<RankedModel> {
+        self.records
+            .iter()
+            .map(|r| RankedModel {
+                arch: r.arch.clone(),
+                accuracy: r.accuracy,
+            })
+            .collect()
+    }
+
+    /// Serialized size estimate for the NFS charge (the paper stores the
+    /// list as JSON-ish metadata; ~2 KB per record).
+    pub fn nfs_bytes(&self) -> u64 {
+        2048 * self.records.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, acc: f64, predicted: bool, t: f64) -> ModelRecord {
+        ModelRecord {
+            id,
+            arch: Architecture::initial(32, 3, 10),
+            signature: format!("sig{id}"),
+            params: 1000,
+            accuracy: acc,
+            measured_accuracy: acc,
+            predicted,
+            node: 0,
+            round: 1,
+            epochs_trained: 10,
+            ops: 1e12,
+            dropout: 0.5,
+            kernel: 3.0,
+            completed_at: t,
+        }
+    }
+
+    #[test]
+    fn best_error_uses_measured_accuracy() {
+        let mut h = HistoryList::new();
+        // Predicted ranking accuracy 0.9 but measured only 0.4: the
+        // achieved-error series must use the measured value.
+        let mut r0 = rec(0, 0.9, true, 10.0);
+        r0.measured_accuracy = 0.4;
+        h.push(r0);
+        h.push(rec(1, 0.6, false, 20.0));
+        h.push(rec(2, 0.7, false, 30.0));
+        assert!((h.best_measured_error().unwrap() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_error_at_time_respects_completion() {
+        let mut h = HistoryList::new();
+        h.push(rec(0, 0.5, false, 10.0));
+        h.push(rec(1, 0.8, false, 100.0));
+        assert!((h.best_measured_error_at(50.0).unwrap() - 0.5).abs() < 1e-12);
+        assert!((h.best_measured_error_at(150.0).unwrap() - 0.2).abs() < 1e-12);
+        assert!(h.best_measured_error_at(5.0).is_none());
+    }
+
+    #[test]
+    fn ranked_view_includes_all() {
+        let mut h = HistoryList::new();
+        h.push(rec(0, 0.4, true, 1.0));
+        h.push(rec(1, 0.6, false, 2.0));
+        assert_eq!(h.ranked_view().len(), 2);
+    }
+
+    #[test]
+    fn nfs_bytes_scales() {
+        let mut h = HistoryList::new();
+        assert_eq!(h.nfs_bytes(), 0);
+        h.push(rec(0, 0.4, false, 1.0));
+        assert_eq!(h.nfs_bytes(), 2048);
+    }
+}

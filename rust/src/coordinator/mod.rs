@@ -1,0 +1,29 @@
+//! The AIPerf benchmark framework (paper §4.3) — Layer 3.
+//!
+//! AIPerf modifies NNI's master–slave design so nothing centralizes on the
+//! master: slave-node CPUs generate candidate architectures from the
+//! ranked historical model list into a buffer; slave-node GPUs train the
+//! candidates asynchronously with data parallelism; the master only
+//! dispatches workloads and aggregates results.
+//!
+//! * [`history`] — the historical model list (NFS-shared in the paper);
+//! * [`buffer`] — the candidate-architecture buffer;
+//! * [`dispatcher`] — trial routing with exactly-once bookkeeping;
+//! * [`trial`] — per-trial training state: epoch budget, early stopping;
+//! * [`master`] — the simulated end-to-end benchmark run (discrete-event
+//!   loop over the cluster substrate) producing a [`crate::metrics::BenchmarkReport`];
+//! * [`live`] — the real-training mini-benchmark over the AOT artifact
+//!   grid (PJRT execution; wall-clock timed).
+
+pub mod buffer;
+pub mod dispatcher;
+pub mod history;
+pub mod live;
+pub mod master;
+pub mod trial;
+
+pub use buffer::ArchBuffer;
+pub use dispatcher::Dispatcher;
+pub use history::{HistoryList, ModelRecord};
+pub use master::run_benchmark;
+pub use trial::{ActiveTrial, TrialStatus};

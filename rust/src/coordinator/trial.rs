@@ -1,0 +1,167 @@
+//! Per-trial training state: epoch budget, early stopping, accuracy curve.
+//!
+//! §4.5: "there is a maximum allowed training epoch and patience, which is
+//! the number of epochs to wait before early stop if no progress on the
+//! validation dataset."
+
+
+use crate::flops::count::GraphOps;
+use crate::nas::graph::Architecture;
+use crate::sim::accuracy::HpPoint;
+
+/// Verdict after recording an epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialStatus {
+    Continue,
+    /// Patience exhausted without `min_delta` improvement.
+    EarlyStopped,
+    /// Epoch budget reached.
+    BudgetExhausted,
+}
+
+/// A candidate being trained on one slave node.
+#[derive(Debug, Clone)]
+pub struct ActiveTrial {
+    pub trial_id: u64,
+    pub arch: Architecture,
+    pub arch_id: u64,
+    pub hp: HpPoint,
+    pub ops: GraphOps,
+    pub params: u64,
+    pub activation_elems: u64,
+    /// Per-GPU batch after the memory-adaption fit.
+    pub batch_per_gpu: u64,
+    pub round: u64,
+    pub epoch_budget: u64,
+    pub epoch: u64,
+    /// Accuracy per completed epoch (1-based epochs).
+    pub accs: Vec<f64>,
+    best_acc: f64,
+    since_improve: u64,
+}
+
+impl ActiveTrial {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        trial_id: u64,
+        arch: Architecture,
+        arch_id: u64,
+        hp: HpPoint,
+        ops: GraphOps,
+        batch_per_gpu: u64,
+        round: u64,
+        epoch_budget: u64,
+    ) -> Self {
+        assert!(epoch_budget >= 1);
+        let params = arch.params();
+        let activation_elems = arch.activation_elems();
+        ActiveTrial {
+            trial_id,
+            arch,
+            arch_id,
+            hp,
+            ops,
+            params,
+            activation_elems,
+            batch_per_gpu,
+            round,
+            epoch_budget,
+            epoch: 0,
+            accs: Vec::new(),
+            best_acc: 0.0,
+            since_improve: 0,
+        }
+    }
+
+    /// Record one epoch's validation accuracy and decide whether to stop.
+    pub fn record_epoch(&mut self, acc: f64, patience: u64, min_delta: f64) -> TrialStatus {
+        self.epoch += 1;
+        self.accs.push(acc);
+        if acc > self.best_acc + min_delta {
+            self.best_acc = acc;
+            self.since_improve = 0;
+        } else {
+            self.since_improve += 1;
+        }
+        if self.epoch >= self.epoch_budget {
+            TrialStatus::BudgetExhausted
+        } else if self.since_improve >= patience {
+            TrialStatus::EarlyStopped
+        } else {
+            TrialStatus::Continue
+        }
+    }
+
+    /// Best validation accuracy observed.
+    pub fn best_accuracy(&self) -> f64 {
+        self.best_acc
+    }
+
+    /// (epochs, accuracies) pairs for the Appendix-C log fit.
+    pub fn curve(&self) -> (Vec<f64>, Vec<f64>) {
+        (
+            (1..=self.accs.len()).map(|e| e as f64).collect(),
+            self.accs.clone(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flops::{graph_ops_per_image, OpWeights};
+
+    fn trial(budget: u64) -> ActiveTrial {
+        let arch = Architecture::initial(32, 3, 10);
+        let ops = graph_ops_per_image(&arch.lower(), &OpWeights::default());
+        ActiveTrial::new(0, arch, 1, HpPoint::default(), ops, 64, 1, budget)
+    }
+
+    #[test]
+    fn budget_exhaustion() {
+        let mut t = trial(3);
+        assert_eq!(t.record_epoch(0.1, 5, 0.001), TrialStatus::Continue);
+        assert_eq!(t.record_epoch(0.2, 5, 0.001), TrialStatus::Continue);
+        assert_eq!(t.record_epoch(0.3, 5, 0.001), TrialStatus::BudgetExhausted);
+        assert_eq!(t.epoch, 3);
+        assert!((t.best_accuracy() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn early_stop_on_plateau() {
+        let mut t = trial(100);
+        t.record_epoch(0.5, 3, 0.001);
+        assert_eq!(t.record_epoch(0.5, 3, 0.001), TrialStatus::Continue);
+        assert_eq!(t.record_epoch(0.5005, 3, 0.001), TrialStatus::Continue);
+        assert_eq!(t.record_epoch(0.5, 3, 0.001), TrialStatus::EarlyStopped);
+        assert_eq!(t.epoch, 4);
+    }
+
+    #[test]
+    fn improvement_resets_patience() {
+        let mut t = trial(100);
+        t.record_epoch(0.3, 2, 0.001);
+        t.record_epoch(0.3, 2, 0.001); // 1 stale
+        assert_eq!(t.record_epoch(0.4, 2, 0.001), TrialStatus::Continue); // reset
+        t.record_epoch(0.4, 2, 0.001); // 1 stale
+        assert_eq!(t.record_epoch(0.4, 2, 0.001), TrialStatus::EarlyStopped);
+    }
+
+    #[test]
+    fn curve_matches_records() {
+        let mut t = trial(10);
+        for (i, a) in [0.1, 0.2, 0.25].iter().enumerate() {
+            let _ = t.record_epoch(*a, 5, 0.001);
+            let _ = i;
+        }
+        let (es, accs) = t.curve();
+        assert_eq!(es, vec![1.0, 2.0, 3.0]);
+        assert_eq!(accs, vec![0.1, 0.2, 0.25]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_budget_rejected() {
+        trial(0);
+    }
+}

@@ -1,0 +1,60 @@
+//! Dataset shape descriptor (Table 5: the dataset is *fixed* to ImageNet).
+
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DatasetDescriptor {
+    pub train_images: u64,
+    pub val_images: u64,
+    pub image: u64,
+    pub channels: u64,
+    pub num_classes: u64,
+}
+
+impl DatasetDescriptor {
+    /// ImageNet-1k, the paper's fixed benchmark dataset (§4.5).
+    pub fn imagenet() -> Self {
+        DatasetDescriptor {
+            train_images: 1_281_167,
+            val_images: 50_000,
+            image: 224,
+            channels: 3,
+            num_classes: 1000,
+        }
+    }
+
+    /// CIFAR10-shaped descriptor (the paper's preliminary/HPO-selection
+    /// experiments, Appendix A).
+    pub fn cifar10() -> Self {
+        DatasetDescriptor {
+            train_images: 50_000,
+            val_images: 10_000,
+            image: 32,
+            channels: 3,
+            num_classes: 10,
+        }
+    }
+
+    /// Tiny synthetic corpus for the real-training example.
+    pub fn synthetic_tiny() -> Self {
+        DatasetDescriptor {
+            train_images: 4_096,
+            val_images: 512,
+            image: 16,
+            channels: 3,
+            num_classes: 10,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imagenet_sizes_match_paper() {
+        let d = DatasetDescriptor::imagenet();
+        assert_eq!(d.train_images, 1_281_167);
+        assert_eq!(d.val_images, 50_000);
+        assert_eq!(d.image, 224);
+    }
+}

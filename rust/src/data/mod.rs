@@ -1,0 +1,15 @@
+//! Dataset substrate.
+//!
+//! [`synthetic`] generates the procedural classification corpus used by
+//! the real-training path — bit-identical to `python/compile/dataset.py`
+//! so both sides materialize the same batches without shipping arrays.
+//! [`descriptor`] carries the *shape* of the paper's fixed dataset
+//! (ImageNet) for the analytical-FLOPs math in simulate mode.
+
+pub mod descriptor;
+pub mod shard;
+pub mod synthetic;
+
+pub use descriptor::DatasetDescriptor;
+pub use shard::{ShardReader, ShardWriter};
+pub use synthetic::SyntheticDataset;

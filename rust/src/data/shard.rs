@@ -1,0 +1,319 @@
+//! Binary record shards — the TFRecord-style data path (paper §4.5: "the
+//! data can be formatted in an optimal way corresponding to the framework,
+//! e.g. … TFRecord").
+//!
+//! Format (little-endian):
+//!
+//!   shard   := magic "AIPS" | version u32 | record*
+//!   record  := payload_len u32 | crc32 u32 | payload
+//!   payload := label i32 | h u16 | w u16 | c u16 | pad u16 | f32[h·w·c]
+//!
+//! The CRC32 (IEEE 802.3, table-driven) guards against torn writes on the
+//! shared filesystem — the paper's slaves stream training data over NFS,
+//! where partial reads are a real failure mode. The reader verifies every
+//! record and surfaces corruption as an error instead of silent garbage.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::synthetic::SyntheticDataset;
+
+const MAGIC: &[u8; 4] = b"AIPS";
+const VERSION: u32 = 1;
+
+/// IEEE CRC32, table-driven (no crate available offline).
+fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC32 of a byte slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    // Build once; the table is tiny and the build is const-foldable.
+    thread_local! {
+        static TABLE: [u32; 256] = crc32_table();
+    }
+    TABLE.with(|t| {
+        let mut c = 0xFFFF_FFFFu32;
+        for &b in data {
+            c = t[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+        }
+        c ^ 0xFFFF_FFFF
+    })
+}
+
+/// One decoded record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub label: i32,
+    pub h: u16,
+    pub w: u16,
+    pub c: u16,
+    pub pixels: Vec<f32>,
+}
+
+impl Record {
+    fn payload(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.pixels.len() * 4);
+        out.extend_from_slice(&self.label.to_le_bytes());
+        out.extend_from_slice(&self.h.to_le_bytes());
+        out.extend_from_slice(&self.w.to_le_bytes());
+        out.extend_from_slice(&self.c.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        for p in &self.pixels {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        out
+    }
+
+    fn from_payload(payload: &[u8]) -> Result<Record> {
+        if payload.len() < 12 {
+            bail!("payload too short: {}", payload.len());
+        }
+        let label = i32::from_le_bytes(payload[0..4].try_into().unwrap());
+        let h = u16::from_le_bytes(payload[4..6].try_into().unwrap());
+        let w = u16::from_le_bytes(payload[6..8].try_into().unwrap());
+        let c = u16::from_le_bytes(payload[8..10].try_into().unwrap());
+        let n = h as usize * w as usize * c as usize;
+        if payload.len() != 12 + n * 4 {
+            bail!("payload size mismatch: {} vs {}", payload.len(), 12 + n * 4);
+        }
+        let pixels = payload[12..]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(Record {
+            label,
+            h,
+            w,
+            c,
+            pixels,
+        })
+    }
+}
+
+/// Streaming shard writer.
+pub struct ShardWriter<W: Write> {
+    out: BufWriter<W>,
+    pub records: u64,
+}
+
+impl ShardWriter<std::fs::File> {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating shard {:?}", path.as_ref()))?;
+        Self::new(f)
+    }
+}
+
+impl<W: Write> ShardWriter<W> {
+    pub fn new(inner: W) -> Result<Self> {
+        let mut out = BufWriter::new(inner);
+        out.write_all(MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        Ok(ShardWriter { out, records: 0 })
+    }
+
+    pub fn write(&mut self, rec: &Record) -> Result<()> {
+        let payload = rec.payload();
+        self.out
+            .write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.out.write_all(&crc32(&payload).to_le_bytes())?;
+        self.out.write_all(&payload)?;
+        self.records += 1;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<u64> {
+        self.out.flush()?;
+        Ok(self.records)
+    }
+}
+
+/// Streaming shard reader (validates CRC per record).
+pub struct ShardReader<R: Read> {
+    input: BufReader<R>,
+}
+
+impl ShardReader<std::fs::File> {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening shard {:?}", path.as_ref()))?;
+        Self::new(f)
+    }
+}
+
+impl<R: Read> ShardReader<R> {
+    pub fn new(inner: R) -> Result<Self> {
+        let mut input = BufReader::new(inner);
+        let mut magic = [0u8; 4];
+        input.read_exact(&mut magic).context("reading magic")?;
+        if &magic != MAGIC {
+            bail!("not an AIPerf shard (bad magic)");
+        }
+        let mut ver = [0u8; 4];
+        input.read_exact(&mut ver)?;
+        let version = u32::from_le_bytes(ver);
+        if version != VERSION {
+            bail!("unsupported shard version {version}");
+        }
+        Ok(ShardReader { input })
+    }
+
+    /// Next record; None at clean EOF; error on corruption.
+    pub fn next(&mut self) -> Result<Option<Record>> {
+        let mut len_buf = [0u8; 4];
+        match self.input.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(e).context("reading record length"),
+        }
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > 64 << 20 {
+            bail!("record length {len} implausible (corrupt shard?)");
+        }
+        let mut crc_buf = [0u8; 4];
+        self.input.read_exact(&mut crc_buf).context("reading crc")?;
+        let want = u32::from_le_bytes(crc_buf);
+        let mut payload = vec![0u8; len];
+        self.input
+            .read_exact(&mut payload)
+            .context("reading payload (torn record?)")?;
+        let got = crc32(&payload);
+        if got != want {
+            bail!("CRC mismatch: {got:08x} != {want:08x}");
+        }
+        Ok(Some(Record::from_payload(&payload)?))
+    }
+}
+
+/// Materialize `count` synthetic samples into a shard file.
+pub fn write_synthetic_shard(
+    path: impl AsRef<Path>,
+    data: &SyntheticDataset,
+    start_index: u64,
+    count: u64,
+) -> Result<u64> {
+    let mut w = ShardWriter::create(path)?;
+    for i in 0..count {
+        let (pixels, label) = data.sample(start_index + i);
+        w.write(&Record {
+            label: label as i32,
+            h: data.image as u16,
+            w: data.image as u16,
+            c: data.channels as u16,
+            pixels,
+        })?;
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn rec(label: i32, n: usize) -> Record {
+        Record {
+            label,
+            h: n as u16,
+            w: 1,
+            c: 1,
+            pixels: (0..n).map(|i| i as f32 * 0.5).collect(),
+        }
+    }
+
+    #[test]
+    fn crc32_golden() {
+        // Standard IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_records() {
+        let mut buf = Vec::new();
+        {
+            let mut w = ShardWriter::new(&mut buf).unwrap();
+            for i in 0..5 {
+                w.write(&rec(i, 8)).unwrap();
+            }
+            assert_eq!(w.finish().unwrap(), 5);
+        }
+        let mut r = ShardReader::new(&buf[..]).unwrap();
+        for i in 0..5 {
+            let got = r.next().unwrap().unwrap();
+            assert_eq!(got, rec(i, 8));
+        }
+        assert!(r.next().unwrap().is_none());
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut buf = Vec::new();
+        {
+            let mut w = ShardWriter::new(&mut buf).unwrap();
+            w.write(&rec(1, 16)).unwrap();
+            w.finish().unwrap();
+        }
+        // Flip one payload byte.
+        let n = buf.len();
+        buf[n - 3] ^= 0x40;
+        let mut r = ShardReader::new(&buf[..]).unwrap();
+        let err = r.next().unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn detects_torn_write() {
+        let mut buf = Vec::new();
+        {
+            let mut w = ShardWriter::new(&mut buf).unwrap();
+            w.write(&rec(1, 16)).unwrap();
+            w.finish().unwrap();
+        }
+        buf.truncate(buf.len() - 5); // torn tail
+        let mut r = ShardReader::new(&buf[..]).unwrap();
+        assert!(r.next().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        assert!(ShardReader::new(&b"NOPE\x01\x00\x00\x00"[..]).is_err());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&99u32.to_le_bytes());
+        assert!(ShardReader::new(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn synthetic_shard_file_roundtrip() {
+        let dir = TempDir::new("shard").unwrap();
+        let path = dir.path().join("train-00000.aips");
+        let data = SyntheticDataset::new(0, 8, 3, 10);
+        let n = write_synthetic_shard(&path, &data, 100, 32).unwrap();
+        assert_eq!(n, 32);
+        let mut r = ShardReader::open(&path).unwrap();
+        let mut count = 0;
+        while let Some(recd) = r.next().unwrap() {
+            let (pixels, label) = data.sample(100 + count);
+            assert_eq!(recd.label, label as i32);
+            assert_eq!(recd.pixels, pixels);
+            count += 1;
+        }
+        assert_eq!(count, 32);
+    }
+}

@@ -1,0 +1,199 @@
+//! Master server: owns the history, dispatches trials, applies the
+//! termination rule, aggregates the report (paper §4.3 master role).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::protocol::{Connection, Message, WireModel};
+use crate::metrics::score::regulated_score;
+
+/// One aggregated trial result (master-side record).
+#[derive(Debug, Clone)]
+pub struct TrialResult {
+    pub node: u64,
+    pub trial: u64,
+    pub signature: String,
+    pub accuracy: f64,
+    pub error: f64,
+    pub ops: f64,
+    pub epochs: u64,
+}
+
+/// Final report of a distributed run.
+#[derive(Debug, Clone)]
+pub struct DistributedReport {
+    pub slaves: u64,
+    pub trials: Vec<TrialResult>,
+    pub duration_s: f64,
+    pub total_ops: f64,
+    pub score_flops: f64,
+    pub best_error: f64,
+    pub regulated_score: f64,
+}
+
+impl DistributedReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "slaves={} trials={} score={:.3} GFLOPS best_error={:.3} regulated={:.3} GFLOPS ({:.1}s)",
+            self.slaves,
+            self.trials.len(),
+            self.score_flops / 1e9,
+            self.best_error,
+            self.regulated_score / 1e9,
+            self.duration_s
+        )
+    }
+}
+
+struct Shared {
+    history: Mutex<Vec<WireModel>>,
+    results: Mutex<Vec<TrialResult>>,
+    rounds: Mutex<std::collections::HashMap<u64, u64>>,
+    next_trial: AtomicU64,
+    stop: AtomicBool,
+    deadline: Instant,
+}
+
+/// The master: binds a port, accepts `expected_slaves` connections, serves
+/// work until the wall-clock budget expires or `max_trials` complete.
+pub struct MasterServer {
+    listener: TcpListener,
+    expected_slaves: u64,
+    max_trials: u64,
+    budget_s: f64,
+}
+
+impl MasterServer {
+    /// Bind on 127.0.0.1 with an OS-assigned port.
+    pub fn bind(expected_slaves: u64, max_trials: u64, budget_s: f64) -> Result<Self> {
+        assert!(expected_slaves >= 1);
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding master port")?;
+        Ok(MasterServer {
+            listener,
+            expected_slaves,
+            max_trials,
+            budget_s,
+        })
+    }
+
+    /// The address slaves should connect to.
+    pub fn addr(&self) -> Result<std::net::SocketAddr> {
+        self.listener.local_addr().context("local_addr")
+    }
+
+    /// Serve until termination; returns the aggregated report.
+    pub fn serve(self) -> Result<DistributedReport> {
+        let started = Instant::now();
+        let shared = Arc::new(Shared {
+            history: Mutex::new(Vec::new()),
+            results: Mutex::new(Vec::new()),
+            rounds: Mutex::new(Default::default()),
+            next_trial: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            deadline: started + std::time::Duration::from_secs_f64(self.budget_s),
+        });
+
+        let mut handles = Vec::new();
+        for _ in 0..self.expected_slaves {
+            let (stream, _) = self.listener.accept().context("accepting slave")?;
+            let shared = shared.clone();
+            let max_trials = self.max_trials;
+            handles.push(std::thread::spawn(move || {
+                serve_slave(stream, shared, max_trials)
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("slave handler panicked"))??;
+        }
+
+        let duration_s = started.elapsed().as_secs_f64();
+        let results = shared.results.lock().unwrap().clone();
+        let total_ops: f64 = results.iter().map(|r| r.ops).sum();
+        let best_error = results
+            .iter()
+            .map(|r| r.error)
+            .fold(1.0f64, f64::min)
+            .clamp(1e-9, 1.0 - 1e-9);
+        let score_flops = total_ops / duration_s.max(1e-9);
+        Ok(DistributedReport {
+            slaves: self.expected_slaves,
+            trials: results,
+            duration_s,
+            total_ops,
+            score_flops,
+            best_error,
+            regulated_score: regulated_score(best_error, score_flops),
+        })
+    }
+}
+
+fn serve_slave(stream: TcpStream, shared: Arc<Shared>, max_trials: u64) -> Result<()> {
+    let mut conn = Connection::new(stream)?;
+    // Handshake.
+    let node = match conn.recv()? {
+        Message::Hello { node } => node,
+        other => anyhow::bail!("expected Hello, got {other:?}"),
+    };
+    loop {
+        match conn.recv()? {
+            Message::RequestWork { .. } => {
+                let done = shared.results.lock().unwrap().len() as u64;
+                if shared.stop.load(Ordering::SeqCst)
+                    || done >= max_trials
+                    || Instant::now() >= shared.deadline
+                {
+                    shared.stop.store(true, Ordering::SeqCst);
+                    conn.send(&Message::Stop)?;
+                    return Ok(());
+                }
+                let trial = shared.next_trial.fetch_add(1, Ordering::SeqCst);
+                let round = {
+                    let mut rounds = shared.rounds.lock().unwrap();
+                    let r = rounds.entry(node).or_insert(0);
+                    *r += 1;
+                    *r
+                };
+                let history = shared.history.lock().unwrap().clone();
+                conn.send(&Message::Work {
+                    trial,
+                    round,
+                    history,
+                })?;
+            }
+            Message::Result {
+                node,
+                trial,
+                signature,
+                accuracy,
+                error,
+                params: _,
+                ops,
+                epochs,
+                widths,
+                blocks,
+            } => {
+                shared.history.lock().unwrap().push(WireModel {
+                    signature: signature.clone(),
+                    accuracy,
+                    widths,
+                    blocks,
+                });
+                shared.results.lock().unwrap().push(TrialResult {
+                    node,
+                    trial,
+                    signature,
+                    accuracy,
+                    error,
+                    ops,
+                    epochs,
+                });
+            }
+            Message::Hello { .. } => anyhow::bail!("duplicate Hello"),
+            other => anyhow::bail!("unexpected message from slave: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Distributed master–slave runtime (paper §4.3 / §4.5 deployment shape).
+//!
+//! The simulated coordinator ([`crate::coordinator::master`]) models the
+//! cluster; this module is the *real* networked deployment of the same
+//! protocol: a master process binds a TCP port, slave workers connect
+//! (in the paper: SLURM-launched containers on separate hosts; here:
+//! threads or processes on localhost — the wire protocol is identical),
+//! request work, run trials, and stream results back. The master owns the
+//! historical model list and the termination rule; slaves own the CPU
+//! search loop and trial execution — exactly the paper's division of
+//! labour with NFS replaced by the message channel.
+//!
+//! Framing is newline-delimited JSON (in-tree codec; serde/tokio are not
+//! vendored offline — blocking std::net with one thread per slave, which
+//! matches the paper's one-container-per-slave deployment).
+
+pub mod master;
+pub mod protocol;
+pub mod slave;
+
+pub use master::{DistributedReport, MasterServer};
+pub use protocol::Message;
+pub use slave::SlaveWorker;

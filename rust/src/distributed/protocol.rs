@@ -1,0 +1,279 @@
+//! Wire protocol between the master and slave workers.
+//!
+//! Newline-delimited JSON messages. The history snapshot travels as
+//! (signature, accuracy, depth, widths) tuples — enough for the slave's
+//! rank-softmax parent selection without shipping full layer graphs.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// A ranked-history entry compact enough for the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireModel {
+    pub signature: String,
+    pub accuracy: f64,
+    /// Stage widths — enough to reconstruct a morphable architecture.
+    pub widths: Vec<u64>,
+    pub blocks: Vec<u64>,
+}
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Slave → master: join the cluster.
+    Hello { node: u64 },
+    /// Slave → master: ready for the next trial.
+    RequestWork { node: u64 },
+    /// Master → slave: run one trial. Carries the trial id, the node's
+    /// round number, and the current ranked history.
+    Work {
+        trial: u64,
+        round: u64,
+        history: Vec<WireModel>,
+    },
+    /// Master → slave: budget exhausted, disconnect.
+    Stop,
+    /// Slave → master: trial finished.
+    Result {
+        node: u64,
+        trial: u64,
+        signature: String,
+        accuracy: f64,
+        error: f64,
+        params: u64,
+        ops: f64,
+        epochs: u64,
+        widths: Vec<u64>,
+        blocks: Vec<u64>,
+    },
+}
+
+fn u64s(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .with_context(|| format!("missing/invalid `{key}`"))
+}
+
+fn f64s(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("missing/invalid `{key}`"))
+}
+
+fn strs(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing/invalid `{key}`"))?
+        .to_string())
+}
+
+fn u64_arr(j: &Json, key: &str) -> Result<Vec<u64>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .with_context(|| format!("missing `{key}`"))?
+        .iter()
+        .map(|v| v.as_u64().context("non-integer array element"))
+        .collect()
+}
+
+impl Message {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Message::Hello { node } => obj(vec![("t", s("hello")), ("node", num(*node as f64))]),
+            Message::RequestWork { node } => {
+                obj(vec![("t", s("request")), ("node", num(*node as f64))])
+            }
+            Message::Stop => obj(vec![("t", s("stop"))]),
+            Message::Work {
+                trial,
+                round,
+                history,
+            } => obj(vec![
+                ("t", s("work")),
+                ("trial", num(*trial as f64)),
+                ("round", num(*round as f64)),
+                (
+                    "history",
+                    arr(history
+                        .iter()
+                        .map(|m| {
+                            obj(vec![
+                                ("sig", s(m.signature.clone())),
+                                ("acc", num(m.accuracy)),
+                                (
+                                    "widths",
+                                    arr(m.widths.iter().map(|w| num(*w as f64)).collect()),
+                                ),
+                                (
+                                    "blocks",
+                                    arr(m.blocks.iter().map(|b| num(*b as f64)).collect()),
+                                ),
+                            ])
+                        })
+                        .collect()),
+                ),
+            ]),
+            Message::Result {
+                node,
+                trial,
+                signature,
+                accuracy,
+                error,
+                params,
+                ops,
+                epochs,
+                widths,
+                blocks,
+            } => obj(vec![
+                ("t", s("result")),
+                ("node", num(*node as f64)),
+                ("trial", num(*trial as f64)),
+                ("sig", s(signature.clone())),
+                ("acc", num(*accuracy)),
+                ("err", num(*error)),
+                ("params", num(*params as f64)),
+                ("ops", num(*ops)),
+                ("epochs", num(*epochs as f64)),
+                ("widths", arr(widths.iter().map(|w| num(*w as f64)).collect())),
+                ("blocks", arr(blocks.iter().map(|b| num(*b as f64)).collect())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Message> {
+        let t = strs(j, "t")?;
+        Ok(match t.as_str() {
+            "hello" => Message::Hello {
+                node: u64s(j, "node")?,
+            },
+            "request" => Message::RequestWork {
+                node: u64s(j, "node")?,
+            },
+            "stop" => Message::Stop,
+            "work" => {
+                let history = j
+                    .get("history")
+                    .and_then(Json::as_arr)
+                    .context("missing history")?
+                    .iter()
+                    .map(|m| {
+                        Ok(WireModel {
+                            signature: strs(m, "sig")?,
+                            accuracy: f64s(m, "acc")?,
+                            widths: u64_arr(m, "widths")?,
+                            blocks: u64_arr(m, "blocks")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Message::Work {
+                    trial: u64s(j, "trial")?,
+                    round: u64s(j, "round")?,
+                    history,
+                }
+            }
+            "result" => Message::Result {
+                node: u64s(j, "node")?,
+                trial: u64s(j, "trial")?,
+                signature: strs(j, "sig")?,
+                accuracy: f64s(j, "acc")?,
+                error: f64s(j, "err")?,
+                params: u64s(j, "params")?,
+                ops: f64s(j, "ops")?,
+                epochs: u64s(j, "epochs")?,
+                widths: u64_arr(j, "widths")?,
+                blocks: u64_arr(j, "blocks")?,
+            },
+            other => bail!("unknown message type `{other}`"),
+        })
+    }
+}
+
+/// Framed connection: one JSON message per line.
+pub struct Connection {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Connection {
+    pub fn new(stream: TcpStream) -> Result<Self> {
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Connection {
+            reader,
+            writer: stream,
+        })
+    }
+
+    pub fn send(&mut self, msg: &Message) -> Result<()> {
+        let mut line = msg.to_json().to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).context("send")?;
+        self.writer.flush().context("flush")?;
+        Ok(())
+    }
+
+    pub fn recv(&mut self) -> Result<Message> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("recv")?;
+        if n == 0 {
+            bail!("peer closed the connection");
+        }
+        let j = Json::parse(line.trim_end()).context("parsing message")?;
+        Message::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Message) {
+        let j = m.to_json();
+        let back = Message::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Message::Hello { node: 3 });
+        roundtrip(Message::RequestWork { node: 0 });
+        roundtrip(Message::Stop);
+        roundtrip(Message::Work {
+            trial: 7,
+            round: 2,
+            history: vec![WireModel {
+                signature: "16x2p-32x2".into(),
+                accuracy: 0.61,
+                widths: vec![16, 32],
+                blocks: vec![2, 2],
+            }],
+        });
+        roundtrip(Message::Result {
+            node: 1,
+            trial: 7,
+            signature: "16x3p".into(),
+            accuracy: 0.55,
+            error: 0.45,
+            params: 12345,
+            ops: 1.5e12,
+            epochs: 30,
+            widths: vec![16],
+            blocks: vec![3],
+        });
+    }
+
+    #[test]
+    fn rejects_unknown_type() {
+        let j = Json::parse(r#"{"t": "bogus"}"#).unwrap();
+        assert!(Message::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let j = Json::parse(r#"{"t": "result", "node": 1}"#).unwrap();
+        assert!(Message::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Slave worker: the per-node search + train loop (paper §4.3 slave role).
+//!
+//! Connects to the master, and per work item: reconstructs the ranked
+//! history, proposes a morphed candidate on the CPU (rank-softmax parent
+//! selection + random legal morph — identical code to the simulated
+//! coordinator), evaluates it through the accuracy surrogate with the
+//! warm-up epoch schedule and early stopping, and reports the result with
+//! its analytical-FLOPs charge. Swap `evaluate` for a PJRT trainer to run
+//! real training per trial (the live runner does exactly that in-process).
+
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use super::protocol::{Connection, Message, WireModel};
+use crate::config::WarmupSchedule;
+use crate::flops::OpWeights;
+use crate::nas::graph::{Architecture, Block, Stage};
+use crate::nas::search::{RankedModel, SearchPolicy};
+use crate::sim::accuracy::{arch_id, AccuracySurrogate, HpPoint};
+use crate::util::rng::derive;
+
+/// Slave configuration.
+#[derive(Debug, Clone)]
+pub struct SlaveWorker {
+    pub node: u64,
+    pub seed: u64,
+    /// Dataset shape the candidates are evaluated against.
+    pub image: u64,
+    pub channels: u64,
+    pub num_classes: u64,
+    pub warmup: WarmupSchedule,
+    pub patience: u64,
+    pub min_delta: f64,
+}
+
+impl SlaveWorker {
+    pub fn new(node: u64, seed: u64) -> Self {
+        SlaveWorker {
+            node,
+            seed,
+            image: 32,
+            channels: 3,
+            num_classes: 10,
+            warmup: WarmupSchedule::default(),
+            patience: 5,
+            min_delta: 1e-3,
+        }
+    }
+
+    /// Rebuild a morphable architecture from a wire entry.
+    fn rebuild(&self, m: &WireModel) -> Architecture {
+        let stages = m
+            .widths
+            .iter()
+            .zip(&m.blocks)
+            .enumerate()
+            .map(|(i, (&width, &nblocks))| Stage {
+                width,
+                blocks: vec![
+                    Block {
+                        kernel: 3,
+                        residual: true,
+                    };
+                    nblocks.max(1) as usize
+                ],
+                pool_after: i + 1 < m.widths.len(),
+            })
+            .collect();
+        Architecture {
+            image: self.image,
+            channels: self.channels,
+            num_classes: self.num_classes,
+            stem_pool: 0,
+            stages,
+        }
+    }
+
+    /// Run until the master says Stop. Returns completed trial count.
+    pub fn run(&self, addr: std::net::SocketAddr) -> Result<u64> {
+        let stream = TcpStream::connect(addr).context("connecting to master")?;
+        let mut conn = Connection::new(stream)?;
+        conn.send(&Message::Hello { node: self.node })?;
+
+        let weights = OpWeights::default();
+        let policy = SearchPolicy::default();
+        let surrogate = AccuracySurrogate {
+            seed: self.seed,
+            ..AccuracySurrogate::default()
+        };
+        let mut rng = derive(self.seed, "dist-slave", self.node);
+        let mut completed = 0u64;
+
+        loop {
+            conn.send(&Message::RequestWork { node: self.node })?;
+            let (trial, round, history) = match conn.recv()? {
+                Message::Work {
+                    trial,
+                    round,
+                    history,
+                } => (trial, round, history),
+                Message::Stop => return Ok(completed),
+                other => anyhow::bail!("unexpected message: {other:?}"),
+            };
+
+            // --- CPU search: propose from the ranked history.
+            let arch = if history.is_empty() {
+                Architecture::initial(self.image, self.channels, self.num_classes)
+            } else {
+                let ranked: Vec<RankedModel> = history
+                    .iter()
+                    .map(|m| RankedModel {
+                        arch: self.rebuild(m),
+                        accuracy: m.accuracy,
+                    })
+                    .collect();
+                policy.propose(&ranked, &mut rng).0
+            };
+
+            // --- Trial: warm-up schedule + early stopping on the surrogate.
+            let stats = arch.stats(&weights);
+            let budget = self.warmup.epochs_for_round(round);
+            let id = arch_id(&arch.signature());
+            let hp = HpPoint::default();
+            let mut best = 0.0f64;
+            let mut stale = 0u64;
+            let mut epochs = 0u64;
+            for e in 1..=budget {
+                let acc = surrogate.accuracy(id, stats.params, &hp, e);
+                epochs = e;
+                if acc > best + self.min_delta {
+                    best = acc;
+                    stale = 0;
+                } else {
+                    stale += 1;
+                    if stale >= self.patience {
+                        break;
+                    }
+                }
+            }
+            // Analytical op charge: train + validate per epoch on the
+            // CIFAR-scale dataset (50k/10k images).
+            let ops = (stats.ops.train_per_image() as f64 * 50_000.0
+                + stats.ops.val_per_image() as f64 * 10_000.0)
+                * epochs as f64;
+
+            conn.send(&Message::Result {
+                node: self.node,
+                trial,
+                signature: arch.signature(),
+                accuracy: best,
+                error: 1.0 - best,
+                params: stats.params,
+                ops,
+                epochs,
+                widths: arch.stages.iter().map(|s| s.width).collect(),
+                blocks: arch.stages.iter().map(|s| s.blocks.len() as u64).collect(),
+            })?;
+            completed += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rebuild_roundtrips_signature() {
+        let w = SlaveWorker::new(0, 0);
+        let arch = Architecture::initial(32, 3, 10);
+        let wire = WireModel {
+            signature: arch.signature(),
+            accuracy: 0.5,
+            widths: arch.stages.iter().map(|s| s.width).collect(),
+            blocks: arch.stages.iter().map(|s| s.blocks.len() as u64).collect(),
+        };
+        let rebuilt = w.rebuild(&wire);
+        assert_eq!(rebuilt.signature(), arch.signature());
+        rebuilt.validate().unwrap();
+    }
+}

@@ -1,0 +1,214 @@
+//! Whole-run operation accounting (paper §4.4 + Appendix B).
+//!
+//! Given a lowered layer inventory (from [`crate::nas::graph`] or
+//! [`super::resnet50`]) this module computes per-image FP/BP operation
+//! counts and scales them over a training run:
+//!
+//! `Total = init + [train_ops·train_images + val_ops·val_images] · epochs`
+//!
+//! The score is then `FLOPS = Total ops / wall time` (Equation 4). All
+//! counts use the Huss–Pennline weights of [`super::layers`].
+
+
+use super::layers::{
+    backward_ops, forward_ops, param_count, LayerKind, LayerShape, OpWeights,
+};
+
+/// One layer instance with concrete shapes — the unit of counting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoweredLayer {
+    pub kind: LayerKind,
+    pub shape: LayerShape,
+}
+
+impl LoweredLayer {
+    pub fn new(kind: LayerKind, shape: LayerShape) -> Self {
+        LoweredLayer { kind, shape }
+    }
+}
+
+/// Per-image operation totals of one architecture.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GraphOps {
+    /// Weighted forward-pass ops per image.
+    pub fp: u64,
+    /// Weighted backward-pass ops per image (gradients + parameter update).
+    pub bp: u64,
+    /// Trainable parameters.
+    pub params: u64,
+}
+
+impl GraphOps {
+    /// Weighted training ops per image (FP + BP).
+    pub fn train_per_image(&self) -> u64 {
+        self.fp + self.bp
+    }
+
+    /// Weighted validation ops per image (FP only).
+    pub fn val_per_image(&self) -> u64 {
+        self.fp
+    }
+
+    /// BP/FP ratio (paper Table 4 reports ≈1.95 for ResNet-50).
+    pub fn bp_fp_ratio(&self) -> f64 {
+        if self.fp == 0 {
+            0.0
+        } else {
+            self.bp as f64 / self.fp as f64
+        }
+    }
+}
+
+/// Count weighted FP/BP ops per image over a layer inventory.
+pub fn graph_ops_per_image(layers: &[LoweredLayer], w: &OpWeights) -> GraphOps {
+    let mut fp = 0u64;
+    let mut bp = 0u64;
+    let mut params = 0u64;
+    for l in layers {
+        fp += forward_ops(l.kind, &l.shape).weighted(w);
+        bp += backward_ops(l.kind, &l.shape).weighted(w);
+        params += param_count(l.kind, &l.shape);
+    }
+    GraphOps { fp, bp, params }
+}
+
+/// Data volume of a training run (ImageNet defaults per Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrainingVolume {
+    pub train_images: u64,
+    pub val_images: u64,
+    pub epochs: u64,
+}
+
+impl TrainingVolume {
+    /// ImageNet-1k sizes fixed by the paper (§4.5).
+    pub fn imagenet(epochs: u64) -> Self {
+        TrainingVolume {
+            train_images: 1_281_167,
+            val_images: 50_000,
+            epochs,
+        }
+    }
+}
+
+/// Operation totals for a whole run — Appendix B bullet list.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RunFlops {
+    /// One-time initialization ops (does NOT scale with data; Appendix B
+    /// calls this `init.(FLOPs)`). We charge one FP+BP over a single batch
+    /// worth of images as the graph-build/weight-init cost.
+    pub init: u64,
+    /// Training ops over all epochs.
+    pub train: u64,
+    /// Validation ops over all epochs.
+    pub val: u64,
+}
+
+impl RunFlops {
+    pub fn total(&self) -> u64 {
+        self.init + self.train + self.val
+    }
+}
+
+/// Total weighted ops for training + validating one architecture.
+pub fn training_flops(ops: &GraphOps, vol: &TrainingVolume, init_batch: u64) -> RunFlops {
+    RunFlops {
+        init: ops.train_per_image() * init_batch,
+        train: ops.train_per_image() * vol.train_images * vol.epochs,
+        val: ops.val_per_image() * vol.val_images * vol.epochs,
+    }
+}
+
+/// Equation 4: FLOPS = total ops / total seconds.
+pub fn flops_per_second(total_ops: u64, seconds: f64) -> f64 {
+    assert!(seconds > 0.0, "wall time must be positive");
+    total_ops as f64 / seconds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> Vec<LoweredLayer> {
+        vec![
+            LoweredLayer::new(
+                LayerKind::Conv,
+                LayerShape {
+                    hi: 8,
+                    wi: 8,
+                    ci: 3,
+                    ho: 8,
+                    wo: 8,
+                    co: 4,
+                    k: 3,
+                },
+            ),
+            LoweredLayer::new(
+                LayerKind::Relu,
+                LayerShape {
+                    ho: 8,
+                    wo: 8,
+                    co: 4,
+                    ..Default::default()
+                },
+            ),
+            LoweredLayer::new(
+                LayerKind::Dense,
+                LayerShape {
+                    ci: 4,
+                    co: 10,
+                    ..Default::default()
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn graph_ops_sum_layers() {
+        let w = OpWeights::default();
+        let g = graph_ops_per_image(&tiny_graph(), &w);
+        let conv_macc = 3 * 3 * 3 * 8 * 8 * 4u64;
+        let fp = conv_macc * 2 + 8 * 8 * 4 + 4 * 10 * 2;
+        assert_eq!(g.fp, fp);
+        let bp = (2 * conv_macc + 3 * 3 * 3 * 4) * 2 + (2 * 4 * 10 + 5 * 10) * 2;
+        assert_eq!(g.bp, bp);
+        assert_eq!(g.params, 3 * 3 * 3 * 4 + 5 * 10);
+    }
+
+    #[test]
+    fn run_flops_scaling() {
+        let ops = GraphOps {
+            fp: 100,
+            bp: 200,
+            params: 7,
+        };
+        let vol = TrainingVolume {
+            train_images: 10,
+            val_images: 4,
+            epochs: 3,
+        };
+        let r = training_flops(&ops, &vol, 2);
+        assert_eq!(r.init, 300 * 2);
+        assert_eq!(r.train, 300 * 10 * 3);
+        assert_eq!(r.val, 100 * 4 * 3);
+        assert_eq!(r.total(), 600 + 9000 + 1200);
+    }
+
+    #[test]
+    fn imagenet_volume_fixed_sizes() {
+        let v = TrainingVolume::imagenet(90);
+        assert_eq!(v.train_images, 1_281_167);
+        assert_eq!(v.val_images, 50_000);
+    }
+
+    #[test]
+    fn flops_per_second_divides() {
+        assert_eq!(flops_per_second(1_000, 2.0), 500.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn flops_rejects_zero_time() {
+        flops_per_second(1, 0.0);
+    }
+}

@@ -1,0 +1,339 @@
+//! Per-layer analytical operation counts — paper Tables 2 (FP) and 3 (BP).
+//!
+//! The paper treats op counting "as a mathematical problem": for each layer
+//! kind, the forward-pass and backward-pass operation mix is a closed-form
+//! function of the layer's shape. Operation weights follow Huss & Pennline
+//! (1987): MACC = 2, add/sub/mul/comparison = 1, divide/sqrt = 4,
+//! exponential (and other special functions) = 8.
+
+
+/// Huss–Pennline operation weights (Table 2 caption).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpWeights {
+    pub macc: u64,
+    pub add: u64,
+    pub mul: u64,
+    pub comparison: u64,
+    pub div: u64,
+    pub sqrt: u64,
+    pub exp: u64,
+}
+
+impl Default for OpWeights {
+    fn default() -> Self {
+        OpWeights {
+            macc: 2,
+            add: 1,
+            mul: 1,
+            comparison: 1,
+            div: 4,
+            sqrt: 4,
+            exp: 8,
+        }
+    }
+}
+
+/// Raw (unweighted) operation mix for one layer, per image.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub macc: u64,
+    pub add: u64,
+    pub mul: u64,
+    pub comparison: u64,
+    pub div: u64,
+    pub sqrt: u64,
+    pub exp: u64,
+}
+
+impl OpCounts {
+    /// Weighted operation count (what Tables 4/8 report as "operations").
+    pub fn weighted(&self, w: &OpWeights) -> u64 {
+        self.macc * w.macc
+            + self.add * w.add
+            + self.mul * w.mul
+            + self.comparison * w.comparison
+            + self.div * w.div
+            + self.sqrt * w.sqrt
+            + self.exp * w.exp
+    }
+
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    pub fn saturating_sum(&self, o: &OpCounts) -> OpCounts {
+        OpCounts {
+            macc: self.macc + o.macc,
+            add: self.add + o.add,
+            mul: self.mul + o.mul,
+            comparison: self.comparison + o.comparison,
+            div: self.div + o.div,
+            sqrt: self.sqrt + o.sqrt,
+            exp: self.exp + o.exp,
+        }
+    }
+}
+
+impl std::ops::Add for OpCounts {
+    type Output = OpCounts;
+    fn add(self, o: OpCounts) -> OpCounts {
+        self.saturating_sum(&o)
+    }
+}
+
+impl std::iter::Sum for OpCounts {
+    fn sum<I: Iterator<Item = OpCounts>>(iter: I) -> OpCounts {
+        iter.fold(OpCounts::zero(), |a, b| a + b)
+    }
+}
+
+/// Layer kinds of the AIPerf model family plus everything ResNet-50 needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// K×K convolution (any stride; shapes carry the output dims).
+    Conv,
+    /// Fully connected Ci→Co (with bias).
+    Dense,
+    /// Batch normalization over Hi×Wi×Ci.
+    BatchNorm,
+    /// ReLU activation over the output volume.
+    Relu,
+    /// Element-wise residual add over the output volume.
+    Add,
+    /// K×K max-pooling.
+    MaxPool,
+    /// Global average pooling over Hi×Wi×Ci.
+    GlobalPool,
+    /// Softmax over Co classes.
+    Softmax,
+}
+
+/// Shape record consumed by the formulas. Unused fields are zero.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LayerShape {
+    /// Input spatial dims and channels.
+    pub hi: u64,
+    pub wi: u64,
+    pub ci: u64,
+    /// Output spatial dims and channels.
+    pub ho: u64,
+    pub wo: u64,
+    pub co: u64,
+    /// Kernel edge (conv / pooling).
+    pub k: u64,
+}
+
+/// Forward-pass operation counts per image — paper Table 2, verbatim.
+pub fn forward_ops(kind: LayerKind, s: &LayerShape) -> OpCounts {
+    let mut c = OpCounts::zero();
+    match kind {
+        LayerKind::Conv => {
+            // MACC = K·K·Ci·Ho·Wo·Co
+            c.macc = s.k * s.k * s.ci * s.ho * s.wo * s.co;
+        }
+        LayerKind::Dense => {
+            // MACC = Ci·Co
+            c.macc = s.ci * s.co;
+        }
+        LayerKind::BatchNorm => {
+            // MACC = Add = Div = Hi·Wi·Ci
+            let v = s.hi * s.wi * s.ci;
+            c.macc = v;
+            c.add = v;
+            c.div = v;
+        }
+        LayerKind::Relu => {
+            // Comparison = Ho·Wo·Co
+            c.comparison = s.ho * s.wo * s.co;
+        }
+        LayerKind::Add => {
+            // Add = Ho·Wo·Co
+            c.add = s.ho * s.wo * s.co;
+        }
+        LayerKind::MaxPool => {
+            // Comparison = K·K·Ho·Wo·Co
+            c.comparison = s.k * s.k * s.ho * s.wo * s.co;
+        }
+        LayerKind::GlobalPool => {
+            // Add = Hi·Wi·Ci ; Div = Ci
+            c.add = s.hi * s.wi * s.ci;
+            c.div = s.ci;
+        }
+        LayerKind::Softmax => {
+            // Exp = Add = Div = Co
+            c.exp = s.co;
+            c.add = s.co;
+            c.div = s.co;
+        }
+    }
+    c
+}
+
+/// Backward-pass operation counts per image — paper Table 3, verbatim.
+///
+/// Conv:  MACC = 2·(K·K·Ci·Ho·Wo·Co) + K·K·Ci·Co   (gradients + update)
+/// Dense: MACC = 2·Ci·Co + (Ci+1)·Co
+/// Everything else: "ignorable for practical purposes" → 0.
+pub fn backward_ops(kind: LayerKind, s: &LayerShape) -> OpCounts {
+    let mut c = OpCounts::zero();
+    match kind {
+        LayerKind::Conv => {
+            c.macc = 2 * (s.k * s.k * s.ci * s.ho * s.wo * s.co) + s.k * s.k * s.ci * s.co;
+        }
+        LayerKind::Dense => {
+            c.macc = 2 * s.ci * s.co + (s.ci + 1) * s.co;
+        }
+        _ => {}
+    }
+    c
+}
+
+/// Trainable parameter count of a layer (for the gradient-descent update
+/// accounting in §4.4 and for model-capacity estimates in the surrogate).
+pub fn param_count(kind: LayerKind, s: &LayerShape) -> u64 {
+    match kind {
+        LayerKind::Conv => s.k * s.k * s.ci * s.co, // no bias (paper §4.4)
+        LayerKind::Dense => (s.ci + 1) * s.co,      // with bias
+        LayerKind::BatchNorm => 2 * s.ci,           // scale + offset
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_shape() -> LayerShape {
+        LayerShape {
+            hi: 56,
+            wi: 56,
+            ci: 64,
+            ho: 56,
+            wo: 56,
+            co: 64,
+            k: 3,
+        }
+    }
+
+    #[test]
+    fn conv_fp_formula() {
+        let s = conv_shape();
+        let c = forward_ops(LayerKind::Conv, &s);
+        assert_eq!(c.macc, 3 * 3 * 64 * 56 * 56 * 64);
+        assert_eq!(c.add, 0);
+    }
+
+    #[test]
+    fn conv_bp_is_double_plus_update() {
+        let s = conv_shape();
+        let fp = forward_ops(LayerKind::Conv, &s);
+        let bp = backward_ops(LayerKind::Conv, &s);
+        assert_eq!(bp.macc, 2 * fp.macc + 3 * 3 * 64 * 64);
+    }
+
+    #[test]
+    fn dense_bp_ratio_matches_table4() {
+        // ResNet-50 head: 2048 → 1000. Paper Table 4: BP/FP = 3.0005.
+        let s = LayerShape {
+            ci: 2048,
+            co: 1000,
+            ..Default::default()
+        };
+        let w = OpWeights::default();
+        let fp = forward_ops(LayerKind::Dense, &s).weighted(&w);
+        let bp = backward_ops(LayerKind::Dense, &s).weighted(&w);
+        assert_eq!(fp, 2 * 2048 * 1000);
+        let ratio = bp as f64 / fp as f64;
+        assert!((ratio - 3.0005).abs() < 1e-3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn batchnorm_weighted_is_7x_volume() {
+        // MACC(2) + Add(1) + Div(4) per element = 7 weighted ops.
+        let s = LayerShape {
+            hi: 10,
+            wi: 10,
+            ci: 4,
+            ..Default::default()
+        };
+        let w = OpWeights::default();
+        assert_eq!(forward_ops(LayerKind::BatchNorm, &s).weighted(&w), 7 * 400);
+    }
+
+    #[test]
+    fn softmax_weighted_is_13x_classes() {
+        // Exp(8) + Add(1) + Div(4) per class = 13 weighted ops.
+        let s = LayerShape {
+            co: 1000,
+            ..Default::default()
+        };
+        let w = OpWeights::default();
+        assert_eq!(forward_ops(LayerKind::Softmax, &s).weighted(&w), 13 * 1000);
+    }
+
+    #[test]
+    fn pooling_and_relu_and_add() {
+        let s = LayerShape {
+            hi: 8,
+            wi: 8,
+            ci: 16,
+            ho: 4,
+            wo: 4,
+            co: 16,
+            k: 2,
+        };
+        assert_eq!(forward_ops(LayerKind::MaxPool, &s).comparison, 4 * 16 * 16);
+        assert_eq!(forward_ops(LayerKind::Relu, &s).comparison, 4 * 4 * 16);
+        assert_eq!(forward_ops(LayerKind::Add, &s).add, 4 * 4 * 16);
+        let gp = forward_ops(LayerKind::GlobalPool, &s);
+        assert_eq!(gp.add, 8 * 8 * 16);
+        assert_eq!(gp.div, 16);
+    }
+
+    #[test]
+    fn non_conv_dense_bp_is_zero() {
+        let s = conv_shape();
+        for kind in [
+            LayerKind::BatchNorm,
+            LayerKind::Relu,
+            LayerKind::Add,
+            LayerKind::MaxPool,
+            LayerKind::GlobalPool,
+            LayerKind::Softmax,
+        ] {
+            assert_eq!(backward_ops(kind, &s), OpCounts::zero());
+        }
+    }
+
+    #[test]
+    fn param_counts() {
+        let s = conv_shape();
+        assert_eq!(param_count(LayerKind::Conv, &s), 9 * 64 * 64);
+        let d = LayerShape {
+            ci: 2048,
+            co: 1000,
+            ..Default::default()
+        };
+        assert_eq!(param_count(LayerKind::Dense, &d), 2049 * 1000);
+        assert_eq!(param_count(LayerKind::Relu, &s), 0);
+    }
+
+    #[test]
+    fn opcounts_sum() {
+        let a = OpCounts {
+            macc: 1,
+            add: 2,
+            ..Default::default()
+        };
+        let b = OpCounts {
+            macc: 10,
+            exp: 1,
+            ..Default::default()
+        };
+        let s: OpCounts = [a, b].into_iter().sum();
+        assert_eq!(s.macc, 11);
+        assert_eq!(s.add, 2);
+        assert_eq!(s.exp, 1);
+        assert_eq!(s.weighted(&OpWeights::default()), 22 + 2 + 8);
+    }
+}

@@ -1,0 +1,25 @@
+//! Analytical FLOPS measurement (paper §4.4, Tables 2/3/4, Appendix B).
+//!
+//! AIPerf's major score is FLOPS computed *analytically*: for a given
+//! architecture, hyperparameters, and data, the operation count needed to
+//! train and validate is predetermined — independent of any hardware or
+//! software optimization. This module implements:
+//!
+//! * [`layers`] — per-layer forward/backward op-count formulas (Tables 2/3)
+//!   with the Huss–Pennline operation weights;
+//! * [`count`] — op counting over a lowered layer graph and over whole
+//!   training runs (Equation 4 / Appendix B bullets);
+//! * [`resnet50`] — the exact ResNet-50 layer inventory used to validate
+//!   the method against the paper's Table 4 numbers;
+//! * [`tf_profiler`] — a model of TensorFlow's profiler (FP only);
+//! * [`nvprof_model`] — a model of nvprof kernel-replay measurement,
+//!   including the cuDNN batching optimization of Table 9.
+
+pub mod count;
+pub mod layers;
+pub mod nvprof_model;
+pub mod resnet50;
+pub mod tf_profiler;
+
+pub use count::{graph_ops_per_image, training_flops, RunFlops, TrainingVolume};
+pub use layers::{LayerKind, LayerShape, OpCounts, OpWeights};

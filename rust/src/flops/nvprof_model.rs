@@ -1,0 +1,169 @@
+//! Model of nvprof kernel-replay measurement (Appendix B, Tables 8/9).
+//!
+//! The paper's second measurement path profiles actually-executed GPU
+//! operations with nvprof. Two effects distinguish it from the analytical
+//! count, and both are modelled here (the real tool is a hardware gate —
+//! DESIGN.md §2 substitution):
+//!
+//! 1. **Library overhead** — cuDNN executes slightly more ops than the
+//!    mathematical minimum (im2col copies, workspace transforms). Table 8
+//!    measures FP 1.02e16 vs analytical 1.00e16 (×1.021) and BP 2.10e16 vs
+//!    1.95e16 (×1.077) at batch 1.
+//! 2. **Batching optimization** — executed ops grow *sub-linearly* with
+//!    batch size: cuDNN amortizes transforms across the batch, so the
+//!    acceleration ratio `b·ops(1)/ops(b)` rises from 1 and plateaus at
+//!    ≈1.52 past batch 32 (Table 9). We model it as a saturating geometric
+//!    approach in log2(batch), anchored exactly at accel(1)=1.
+//!
+//! §4.4: "if the hardware or software has any special optimization, the
+//! operation count is reduced … therefore higher FLOPS eventually" — the
+//! analytical score deliberately ignores these effects; this module exists
+//! so the benches can regenerate the comparison tables.
+
+use super::count::LoweredLayer;
+use super::layers::OpWeights;
+
+/// Calibration constants (fit to the paper's measurements).
+#[derive(Debug, Clone, Copy)]
+pub struct NvprofModel {
+    /// FP overhead factor at batch 1 (Table 8: 1.02e16 / 1.00e16).
+    pub fp_overhead: f64,
+    /// BP overhead factor at batch 1 (Table 8: 2.10e16 / 1.95e16).
+    pub bp_overhead: f64,
+    /// Acceleration-ratio plateau (Table 9: ≈1.52).
+    pub accel_max: f64,
+    /// Geometric approach rate per log2(batch) step.
+    pub accel_rate: f64,
+}
+
+impl Default for NvprofModel {
+    fn default() -> Self {
+        NvprofModel {
+            fp_overhead: 1.021,
+            bp_overhead: 1.077,
+            accel_max: 1.52,
+            accel_rate: 0.66,
+        }
+    }
+}
+
+/// Paper Table 9 measured values, for side-by-side reporting in the bench:
+/// (batch, op_ratio_fp, op_ratio_bp, accel_fp, accel_bp).
+pub const PAPER_TABLE9: [(u64, f64, f64, f64, f64); 9] = [
+    (1, 1.0, 1.0, 1.0, 1.0),
+    (2, 1.838, 1.938, 1.088, 1.032),
+    (4, 3.343, 3.394, 1.196, 1.178),
+    (8, 6.682, 6.631, 1.197, 1.207),
+    (16, 11.123, 11.492, 1.438, 1.392),
+    (32, 20.985, 21.313, 1.525, 1.501),
+    (64, 41.821, 43.082, 1.530, 1.486),
+    (128, 84.368, 83.951, 1.517, 1.525),
+    (256, 168.726, 169.026, 1.517, 1.515),
+];
+
+impl NvprofModel {
+    /// Acceleration ratio `batch·ops(1)/ops(batch)` (Table 9 definition).
+    /// accel(1) = 1 exactly; approaches `accel_max` geometrically.
+    pub fn acceleration_ratio(&self, batch: u64) -> f64 {
+        assert!(batch >= 1);
+        let lg = (batch as f64).log2();
+        self.accel_max - (self.accel_max - 1.0) * self.accel_rate.powf(lg)
+    }
+
+    /// Operation ratio `ops(batch)/ops(1)` (sub-linear in batch).
+    pub fn operation_ratio(&self, batch: u64) -> f64 {
+        batch as f64 / self.acceleration_ratio(batch)
+    }
+
+    /// Executed (measured) per-image FP ops for an architecture at a batch
+    /// size, relative to the analytical count.
+    pub fn measured_fp_per_image(&self, analytical_fp: u64, batch: u64) -> f64 {
+        analytical_fp as f64 * self.fp_overhead / self.acceleration_ratio(batch)
+    }
+
+    /// Executed (measured) per-image BP ops.
+    pub fn measured_bp_per_image(&self, analytical_bp: u64, batch: u64) -> f64 {
+        analytical_bp as f64 * self.bp_overhead / self.acceleration_ratio(batch)
+    }
+
+    /// Table 8 row generator: per-epoch (fp_train, bp_train, fp_val) as
+    /// nvprof would measure at batch 1 via the Appendix-B partition method.
+    pub fn table8_epoch(
+        &self,
+        layers: &[LoweredLayer],
+        w: &OpWeights,
+        train_images: u64,
+        val_images: u64,
+    ) -> (f64, f64, f64) {
+        let g = crate::flops::graph_ops_per_image(layers, w);
+        (
+            self.measured_fp_per_image(g.fp, 1) * train_images as f64,
+            self.measured_bp_per_image(g.bp, 1) * train_images as f64,
+            self.measured_fp_per_image(g.fp, 1) * val_images as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flops::resnet50::resnet50_imagenet;
+
+    #[test]
+    fn accel_anchored_at_one() {
+        let m = NvprofModel::default();
+        assert!((m.acceleration_ratio(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accel_monotone_and_plateaus() {
+        let m = NvprofModel::default();
+        let mut prev = 0.0;
+        for b in [1u64, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let a = m.acceleration_ratio(b);
+            assert!(a >= prev, "not monotone at {b}");
+            assert!(a < m.accel_max + 1e-9);
+            prev = a;
+        }
+        // Plateau: past batch 32 the curve is within 5 % of the max.
+        assert!(m.acceleration_ratio(32) > 0.95 * m.accel_max);
+        assert!((m.acceleration_ratio(256) - m.accel_max).abs() < 0.02);
+    }
+
+    #[test]
+    fn operation_ratio_sublinear() {
+        let m = NvprofModel::default();
+        for b in [2u64, 4, 8, 16, 32, 64, 128, 256] {
+            let r = m.operation_ratio(b);
+            assert!(r < b as f64, "op ratio must be sub-linear at {b}");
+            assert!(r > b as f64 / m.accel_max - 1e-9);
+        }
+    }
+
+    #[test]
+    fn matches_paper_shape_within_band() {
+        // Not the authors' testbed: require the SHAPE (who wins, plateau
+        // level), not point-exact values — ±15 % per row on acceleration.
+        let m = NvprofModel::default();
+        for (b, _, _, accel_fp, _) in PAPER_TABLE9 {
+            let got = m.acceleration_ratio(b);
+            assert!(
+                (got - accel_fp).abs() / accel_fp < 0.15,
+                "batch {b}: got {got:.3} want {accel_fp:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn table8_row_matches_paper() {
+        let m = NvprofModel::default();
+        let w = OpWeights::default();
+        let (fp, bp, val) = m.table8_epoch(&resnet50_imagenet(), &w, 1_281_167, 50_000);
+        // Paper: nvprof FP(train) 1.02e16, BP(train) 2.10e16, FP(val) 3.98e14.
+        assert!((fp - 1.02e16).abs() / 1.02e16 < 0.03, "fp={fp:.3e}");
+        assert!((bp - 2.10e16).abs() / 2.10e16 < 0.03, "bp={bp:.3e}");
+        assert!((val - 3.98e14).abs() / 3.98e14 < 0.03, "val={val:.3e}");
+        // BP/FP ≈ 2.0603.
+        assert!((bp / fp - 2.0603).abs() < 0.06);
+    }
+}

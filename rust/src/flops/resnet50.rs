@@ -1,0 +1,276 @@
+//! ResNet-50 layer inventory — the paper's Table 4 validation target.
+//!
+//! AIPerf validates its analytical op-counting against ResNet-50 on
+//! ImageNet (224×224): Table 4 reports per-image weighted ops of
+//! 7.81e9 (FP), 1.52e10 (BP), BP/FP ≈ 1.9531, total 2.31e10 — dominated by
+//! convolution (7.71e9 / 1.52e10). This module builds the exact He et al.
+//! (2016) v1 inventory (stride-2 on the first 1×1 of each downsampling
+//! bottleneck) so `benches/table4_flops_breakdown` can regenerate the table
+//! and the unit tests can pin the numbers.
+
+use super::count::LoweredLayer;
+use super::layers::{LayerKind, LayerShape};
+
+/// Convenience constructors.
+fn conv(hi: u64, ci: u64, ho: u64, co: u64, k: u64) -> LoweredLayer {
+    LoweredLayer::new(
+        LayerKind::Conv,
+        LayerShape {
+            hi,
+            wi: hi,
+            ci,
+            ho,
+            wo: ho,
+            co,
+            k,
+        },
+    )
+}
+
+fn bn(h: u64, c: u64) -> LoweredLayer {
+    LoweredLayer::new(
+        LayerKind::BatchNorm,
+        LayerShape {
+            hi: h,
+            wi: h,
+            ci: c,
+            ..Default::default()
+        },
+    )
+}
+
+fn relu(h: u64, c: u64) -> LoweredLayer {
+    LoweredLayer::new(
+        LayerKind::Relu,
+        LayerShape {
+            ho: h,
+            wo: h,
+            co: c,
+            ..Default::default()
+        },
+    )
+}
+
+fn add(h: u64, c: u64) -> LoweredLayer {
+    LoweredLayer::new(
+        LayerKind::Add,
+        LayerShape {
+            ho: h,
+            wo: h,
+            co: c,
+            ..Default::default()
+        },
+    )
+}
+
+/// One bottleneck: 1×1 (stride s) → 3×3 → 1×1, BN+ReLU per conv,
+/// projection shortcut when shapes change, residual add + final ReLU.
+fn bottleneck(
+    layers: &mut Vec<LoweredLayer>,
+    hin: u64,
+    cin: u64,
+    cmid: u64,
+    cout: u64,
+    stride: u64,
+) {
+    let hout = hin / stride;
+    // conv a: 1×1, stride s (ResNet v1 places the stride here).
+    layers.push(conv(hin, cin, hout, cmid, 1));
+    layers.push(bn(hout, cmid));
+    layers.push(relu(hout, cmid));
+    // conv b: 3×3.
+    layers.push(conv(hout, cmid, hout, cmid, 3));
+    layers.push(bn(hout, cmid));
+    layers.push(relu(hout, cmid));
+    // conv c: 1×1 expand.
+    layers.push(conv(hout, cmid, hout, cout, 1));
+    layers.push(bn(hout, cout));
+    // projection shortcut.
+    if cin != cout || stride != 1 {
+        layers.push(conv(hin, cin, hout, cout, 1));
+        layers.push(bn(hout, cout));
+    }
+    layers.push(add(hout, cout));
+    layers.push(relu(hout, cout));
+}
+
+/// Full ResNet-50 (v1) on `image`×`image` inputs with `classes` outputs.
+pub fn resnet50(image: u64, classes: u64) -> Vec<LoweredLayer> {
+    let mut l = Vec::with_capacity(200);
+    let h1 = image / 2; // stem conv stride 2
+    let h2 = h1 / 2; // maxpool stride 2
+
+    // Stem: 7×7/2 conv, BN, ReLU, 3×3/2 maxpool.
+    l.push(conv(image, 3, h1, 64, 7));
+    l.push(bn(h1, 64));
+    l.push(relu(h1, 64));
+    l.push(LoweredLayer::new(
+        LayerKind::MaxPool,
+        LayerShape {
+            hi: h1,
+            wi: h1,
+            ci: 64,
+            ho: h2,
+            wo: h2,
+            co: 64,
+            k: 3,
+        },
+    ));
+
+    // Stage configuration: (blocks, cmid, cout, stride of first block).
+    let stages: [(u64, u64, u64, u64); 4] = [
+        (3, 64, 256, 1),
+        (4, 128, 512, 2),
+        (6, 256, 1024, 2),
+        (3, 512, 2048, 2),
+    ];
+    let mut h = h2;
+    let mut cin = 64;
+    for (blocks, cmid, cout, stride) in stages {
+        for b in 0..blocks {
+            let s = if b == 0 { stride } else { 1 };
+            bottleneck(&mut l, h, cin, cmid, cout, s);
+            h /= s;
+            cin = cout;
+        }
+    }
+
+    // Head: global average pool, dense, softmax.
+    l.push(LoweredLayer::new(
+        LayerKind::GlobalPool,
+        LayerShape {
+            hi: h,
+            wi: h,
+            ci: 2048,
+            ..Default::default()
+        },
+    ));
+    l.push(LoweredLayer::new(
+        LayerKind::Dense,
+        LayerShape {
+            ci: 2048,
+            co: classes,
+            ..Default::default()
+        },
+    ));
+    l.push(LoweredLayer::new(
+        LayerKind::Softmax,
+        LayerShape {
+            co: classes,
+            ..Default::default()
+        },
+    ));
+    l
+}
+
+/// ImageNet configuration (224×224, 1000 classes) used throughout §4.4.
+pub fn resnet50_imagenet() -> Vec<LoweredLayer> {
+    resnet50(224, 1000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flops::count::graph_ops_per_image;
+    use crate::flops::layers::{forward_ops, OpWeights};
+
+    fn rel_err(got: f64, want: f64) -> f64 {
+        (got - want).abs() / want
+    }
+
+    #[test]
+    fn layer_census() {
+        let net = resnet50_imagenet();
+        let convs = net.iter().filter(|l| l.kind == LayerKind::Conv).count();
+        // 1 stem + 16 blocks × 3 + 4 projections = 53 convolutions.
+        assert_eq!(convs, 53);
+        let denses = net.iter().filter(|l| l.kind == LayerKind::Dense).count();
+        assert_eq!(denses, 1);
+        let adds = net.iter().filter(|l| l.kind == LayerKind::Add).count();
+        assert_eq!(adds, 16);
+    }
+
+    #[test]
+    fn param_count_matches_published() {
+        // ResNet-50 has ≈25.6 M parameters (weights; our conv has no bias).
+        let w = OpWeights::default();
+        let g = graph_ops_per_image(&resnet50_imagenet(), &w);
+        assert!(
+            rel_err(g.params as f64, 25.55e6) < 0.01,
+            "params={}",
+            g.params
+        );
+    }
+
+    #[test]
+    fn table4_conv_fp() {
+        // Paper: convolutional FP = 7.71e9 weighted ops per image.
+        let w = OpWeights::default();
+        let fp: u64 = resnet50_imagenet()
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .map(|l| forward_ops(l.kind, &l.shape).weighted(&w))
+            .sum();
+        assert!(rel_err(fp as f64, 7.71e9) < 0.02, "conv fp={fp:.3e}", fp = fp as f64);
+    }
+
+    #[test]
+    fn table4_bn_relu_pool_add_softmax() {
+        let w = OpWeights::default();
+        let sum_kind = |kind: LayerKind| -> u64 {
+            resnet50_imagenet()
+                .iter()
+                .filter(|l| l.kind == kind)
+                .map(|l| forward_ops(l.kind, &l.shape).weighted(&w))
+                .sum()
+        };
+        // Paper Table 4 (per image, weighted).
+        assert!(rel_err(sum_kind(LayerKind::BatchNorm) as f64, 7.41e7) < 0.02);
+        assert!(rel_err(sum_kind(LayerKind::Relu) as f64, 9.08e6) < 0.03);
+        assert!(rel_err(sum_kind(LayerKind::MaxPool) as f64, 1.81e6) < 0.02);
+        assert!(rel_err(sum_kind(LayerKind::Add) as f64, 5.52e6) < 0.02);
+        // Dense FP = 4.10e6; softmax 2.10e4 (paper rounds; we use 13·1000).
+        assert!(rel_err(sum_kind(LayerKind::Dense) as f64, 4.10e6) < 0.01);
+        assert!(rel_err(sum_kind(LayerKind::GlobalPool) as f64, 1.00e5) < 0.10);
+        assert!(rel_err(sum_kind(LayerKind::Softmax) as f64, 2.10e4) < 0.40);
+    }
+
+    #[test]
+    fn table4_totals_and_ratio() {
+        let w = OpWeights::default();
+        let g = graph_ops_per_image(&resnet50_imagenet(), &w);
+        assert!(rel_err(g.fp as f64, 7.81e9) < 0.02, "fp={:.3e}", g.fp as f64);
+        assert!(rel_err(g.bp as f64, 1.52e10) < 0.02, "bp={:.3e}", g.bp as f64);
+        assert!(
+            (g.bp_fp_ratio() - 1.9531).abs() < 0.05,
+            "ratio={}",
+            g.bp_fp_ratio()
+        );
+        let total = (g.fp + g.bp) as f64;
+        assert!(rel_err(total, 2.31e10) < 0.02, "total={total:.3e}");
+    }
+
+    #[test]
+    fn table8_epoch_totals() {
+        // FP (training, per epoch) = 1.00e16; FP (validation) = 3.90e14;
+        // total (training) = 2.95e16; grand total = 2.99e16.
+        let w = OpWeights::default();
+        let g = graph_ops_per_image(&resnet50_imagenet(), &w);
+        let fp_train = g.fp as f64 * 1_281_167.0;
+        let bp_train = g.bp as f64 * 1_281_167.0;
+        let fp_val = g.fp as f64 * 50_000.0;
+        assert!(rel_err(fp_train, 1.00e16) < 0.02, "{fp_train:.3e}");
+        assert!(rel_err(fp_train + bp_train, 2.95e16) < 0.02);
+        assert!(rel_err(fp_val, 3.90e14) < 0.02);
+        assert!(rel_err(fp_train + bp_train + fp_val, 2.99e16) < 0.02);
+    }
+
+    #[test]
+    fn smaller_images_scale_down() {
+        let w = OpWeights::default();
+        let big = graph_ops_per_image(&resnet50_imagenet(), &w);
+        let small = graph_ops_per_image(&resnet50(112, 1000), &w);
+        assert!(small.fp < big.fp / 3);
+        assert_eq!(small.params, big.params); // params don't depend on H×W
+    }
+}

@@ -1,0 +1,131 @@
+//! Evolutionary search (Real et al. 2017) — Fig 7b baseline.
+//!
+//! Regularized-evolution style: keep a sliding population; each suggestion
+//! is either a random sample (until the population fills) or a Gaussian
+//! mutation of a tournament winner; the oldest member dies on overflow.
+
+use crate::util::rng::Rng;
+
+use super::space::{Config, Observation, SearchSpace};
+use super::Optimizer;
+
+#[derive(Debug, Clone)]
+pub struct Evolutionary {
+    space: SearchSpace,
+    history: Vec<Observation>,
+    population: Vec<Observation>,
+    pub population_size: usize,
+    pub tournament_size: usize,
+    /// Mutation stddev as a fraction of each parameter's span.
+    pub sigma_frac: f64,
+}
+
+impl Evolutionary {
+    pub fn new(space: SearchSpace) -> Self {
+        Evolutionary {
+            space,
+            history: Vec::new(),
+            population: Vec::new(),
+            population_size: 12,
+            tournament_size: 3,
+            sigma_frac: 0.15,
+        }
+    }
+
+    fn tournament(&self, rng: &mut Rng) -> &Observation {
+        let mut best: Option<&Observation> = None;
+        for _ in 0..self.tournament_size {
+            let cand = &self.population[rng.gen_range_usize(0, self.population.len())];
+            if best.map_or(true, |b| cand.loss < b.loss) {
+                best = Some(cand);
+            }
+        }
+        best.unwrap()
+    }
+}
+
+impl Optimizer for Evolutionary {
+    fn suggest(&mut self, rng: &mut Rng) -> Config {
+        if self.population.len() < self.population_size {
+            return self.space.sample(rng);
+        }
+        let parent = self.tournament(rng).config.clone();
+        self.space
+            .params
+            .iter()
+            .zip(&parent)
+            .map(|(p, &x)| {
+                let sigma = (p.hi - p.lo) * self.sigma_frac;
+                p.project(rng.gen_normal_with(x, sigma))
+            })
+            .collect()
+    }
+
+    fn observe(&mut self, config: Config, loss: f64) {
+        let obs = Observation { config, loss };
+        self.history.push(obs.clone());
+        self.population.push(obs);
+        if self.population.len() > self.population_size {
+            self.population.remove(0); // regularized: oldest dies
+        }
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.history
+            .iter()
+            .min_by(|a, b| a.loss.partial_cmp(&b.loss).unwrap_or(std::cmp::Ordering::Equal))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpo::aiperf_space;
+    use crate::util::rng::derive;
+
+    fn objective(c: &[f64]) -> f64 {
+        (c[0] - 0.45).powi(2) * 4.0 + (c[1] - 3.0).powi(2) * 0.05
+    }
+
+    #[test]
+    fn improves_over_budget() {
+        let mut ev = Evolutionary::new(aiperf_space());
+        let mut rng = derive(5, "evo", 0);
+        let mut first10 = f64::MAX;
+        for i in 0..80 {
+            let c = ev.suggest(&mut rng);
+            let l = objective(&c);
+            if i < 10 {
+                first10 = first10.min(l);
+            }
+            ev.observe(c, l);
+        }
+        assert!(ev.best().unwrap().loss <= first10);
+        assert!(ev.best().unwrap().loss < 0.05);
+    }
+
+    #[test]
+    fn population_is_bounded() {
+        let mut ev = Evolutionary::new(aiperf_space());
+        let mut rng = derive(6, "evo", 1);
+        for _ in 0..100 {
+            let c = ev.suggest(&mut rng);
+            ev.observe(c, 1.0);
+        }
+        assert_eq!(ev.population.len(), ev.population_size);
+        assert_eq!(ev.history.len(), 100);
+    }
+
+    #[test]
+    fn mutations_stay_in_space() {
+        let space = aiperf_space();
+        let mut ev = Evolutionary::new(space.clone());
+        let mut rng = derive(7, "evo", 2);
+        for _ in 0..60 {
+            let c = ev.suggest(&mut rng);
+            assert!(space.contains(&c), "{c:?}");
+            let l = objective(&c);
+            ev.observe(c, l);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Grid search (Larochelle et al. 2007) — Fig 7b baseline.
+//!
+//! The paper notes grid search uses *discrete* search values while the
+//! other methods are continuous. The lattice has `points_per_dim` levels
+//! per continuous parameter and every integral level for integer
+//! parameters; suggestions enumerate the lattice row-major and wrap around
+//! when exhausted.
+
+use crate::util::rng::Rng;
+
+use super::space::{Config, Observation, SearchSpace};
+use super::Optimizer;
+
+#[derive(Debug, Clone)]
+pub struct GridSearch {
+    space: SearchSpace,
+    levels: Vec<Vec<f64>>,
+    cursor: usize,
+    total: usize,
+    history: Vec<Observation>,
+}
+
+impl GridSearch {
+    pub fn new(space: SearchSpace, points_per_dim: usize) -> Self {
+        assert!(points_per_dim >= 2);
+        let levels: Vec<Vec<f64>> = space
+            .params
+            .iter()
+            .map(|p| {
+                if p.integer {
+                    let lo = p.lo.ceil() as i64;
+                    let hi = p.hi.floor() as i64;
+                    (lo..=hi).map(|v| v as f64).collect()
+                } else {
+                    (0..points_per_dim)
+                        .map(|i| {
+                            p.lo + (p.hi - p.lo) * i as f64 / (points_per_dim - 1) as f64
+                        })
+                        .collect()
+                }
+            })
+            .collect();
+        let total = levels.iter().map(Vec::len).product();
+        GridSearch {
+            space,
+            levels,
+            cursor: 0,
+            total,
+            history: Vec::new(),
+        }
+    }
+
+    /// Number of lattice points.
+    pub fn lattice_size(&self) -> usize {
+        self.total
+    }
+
+    fn point(&self, mut idx: usize) -> Config {
+        let mut c = Vec::with_capacity(self.levels.len());
+        for lv in &self.levels {
+            c.push(lv[idx % lv.len()]);
+            idx /= lv.len();
+        }
+        c
+    }
+}
+
+impl Optimizer for GridSearch {
+    fn suggest(&mut self, _rng: &mut Rng) -> Config {
+        let c = self.point(self.cursor % self.total);
+        self.cursor += 1;
+        self.space.project(&c)
+    }
+
+    fn observe(&mut self, config: Config, loss: f64) {
+        self.history.push(Observation { config, loss });
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.history
+            .iter()
+            .min_by(|a, b| a.loss.partial_cmp(&b.loss).unwrap_or(std::cmp::Ordering::Equal))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpo::aiperf_space;
+    use crate::util::rng::derive;
+
+    #[test]
+    fn lattice_size_and_uniqueness() {
+        let mut gs = GridSearch::new(aiperf_space(), 5);
+        // dropout: 5 levels; kernel (integer): 2,3,4,5 → 4 levels.
+        assert_eq!(gs.lattice_size(), 20);
+        let mut rng = derive(0, "grid", 0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20 {
+            let c = gs.suggest(&mut rng);
+            seen.insert(format!("{c:?}"));
+        }
+        assert_eq!(seen.len(), 20);
+    }
+
+    #[test]
+    fn wraps_after_exhaustion() {
+        let mut gs = GridSearch::new(aiperf_space(), 2);
+        let mut rng = derive(0, "grid", 1);
+        let n = gs.lattice_size();
+        let first = gs.suggest(&mut rng);
+        for _ in 1..n {
+            gs.suggest(&mut rng);
+        }
+        assert_eq!(gs.suggest(&mut rng), first);
+    }
+
+    #[test]
+    fn points_lie_in_space() {
+        let space = aiperf_space();
+        let mut gs = GridSearch::new(space.clone(), 7);
+        let mut rng = derive(0, "grid", 2);
+        for _ in 0..gs.lattice_size() {
+            let c = gs.suggest(&mut rng);
+            assert!(space.contains(&c), "{c:?}");
+        }
+    }
+}

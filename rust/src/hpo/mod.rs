@@ -1,0 +1,70 @@
+//! Hyperparameter optimization (paper §4.2, Appendix A).
+//!
+//! AIPerf fixes HPO to Bayesian optimization with the tree-structured
+//! Parzen estimator (TPE, Bergstra et al. 2011) after comparing it against
+//! grid search, random search and an evolutionary method on CIFAR10
+//! (Fig 7b — TPE wins). All four are implemented here behind a common
+//! [`Optimizer`] trait so the comparison bench can rerun the selection
+//! experiment.
+//!
+//! The benchmark's search space (Appendix A): dropout rate ∈ [0.2, 0.8]
+//! and kernel size ∈ [2, 5]; batch size is fixed at the suggested 448
+//! after the separate Fig 7a study.
+
+pub mod evolutionary;
+pub mod grid;
+pub mod random;
+pub mod space;
+pub mod tpe;
+
+pub use evolutionary::Evolutionary;
+pub use grid::GridSearch;
+pub use random::RandomSearch;
+pub use space::{Config, Observation, ParamSpec, SearchSpace};
+pub use tpe::Tpe;
+
+use crate::util::rng::Rng;
+
+/// Common interface: ask for a configuration, tell the observed loss
+/// (validation error — lower is better).
+pub trait Optimizer {
+    /// Propose the next configuration to evaluate.
+    fn suggest(&mut self, rng: &mut Rng) -> Config;
+    /// Report the loss of a previously suggested configuration.
+    fn observe(&mut self, config: Config, loss: f64);
+    /// Best (config, loss) seen so far.
+    fn best(&self) -> Option<&Observation>;
+}
+
+/// AIPerf's fixed HPO space: dropout ∈ [0.2,0.8], kernel ∈ {2..5}.
+pub fn aiperf_space() -> SearchSpace {
+    SearchSpace {
+        params: vec![
+            ParamSpec {
+                name: "dropout".into(),
+                lo: 0.2,
+                hi: 0.8,
+                integer: false,
+            },
+            ParamSpec {
+                name: "kernel".into(),
+                lo: 2.0,
+                hi: 5.0,
+                integer: true,
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aiperf_space_shape() {
+        let s = aiperf_space();
+        assert_eq!(s.params.len(), 2);
+        assert_eq!(s.params[0].name, "dropout");
+        assert!(s.params[1].integer);
+    }
+}

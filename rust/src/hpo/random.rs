@@ -1,0 +1,73 @@
+//! Random search (Bergstra & Bengio 2012) — Fig 7b baseline.
+
+use crate::util::rng::Rng;
+
+use super::space::{Config, Observation, SearchSpace};
+use super::Optimizer;
+
+#[derive(Debug, Clone)]
+pub struct RandomSearch {
+    space: SearchSpace,
+    history: Vec<Observation>,
+}
+
+impl RandomSearch {
+    pub fn new(space: SearchSpace) -> Self {
+        RandomSearch {
+            space,
+            history: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for RandomSearch {
+    fn suggest(&mut self, rng: &mut Rng) -> Config {
+        self.space.sample(rng)
+    }
+
+    fn observe(&mut self, config: Config, loss: f64) {
+        self.history.push(Observation { config, loss });
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.history
+            .iter()
+            .min_by(|a, b| a.loss.partial_cmp(&b.loss).unwrap_or(std::cmp::Ordering::Equal))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpo::aiperf_space;
+    use crate::util::rng::derive;
+
+    #[test]
+    fn covers_the_space() {
+        let mut rs = RandomSearch::new(aiperf_space());
+        let mut rng = derive(0, "rs", 0);
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for _ in 0..300 {
+            let c = rs.suggest(&mut rng);
+            lo = lo.min(c[0]);
+            hi = hi.max(c[0]);
+            rs.observe(c, 1.0);
+        }
+        assert!(lo < 0.25 && hi > 0.75, "poor coverage: [{lo},{hi}]");
+    }
+
+    #[test]
+    fn best_is_min() {
+        let mut rs = RandomSearch::new(aiperf_space());
+        rs.observe(vec![0.5, 3.0], 0.9);
+        rs.observe(vec![0.6, 2.0], 0.1);
+        assert_eq!(rs.best().unwrap().loss, 0.1);
+    }
+
+    #[test]
+    fn empty_best_is_none() {
+        let rs = RandomSearch::new(aiperf_space());
+        assert!(rs.best().is_none());
+    }
+}

@@ -1,0 +1,125 @@
+//! Search-space definition shared by all HPO methods.
+
+use crate::util::rng::Rng;
+
+/// One tunable hyperparameter: a bounded scalar, optionally integral
+/// (grid search quantizes integral params; continuous methods round).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub lo: f64,
+    pub hi: f64,
+    pub integer: bool,
+}
+
+impl ParamSpec {
+    /// Clamp + round a raw value into the legal domain.
+    pub fn project(&self, x: f64) -> f64 {
+        let v = x.clamp(self.lo, self.hi);
+        if self.integer {
+            v.round().clamp(self.lo, self.hi)
+        } else {
+            v
+        }
+    }
+
+    /// Uniform sample from the domain.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        self.project(rng.gen_range_f64(self.lo, self.hi))
+    }
+}
+
+/// Product space of independent scalar parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpace {
+    pub params: Vec<ParamSpec>,
+}
+
+impl SearchSpace {
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Config {
+        self.params.iter().map(|p| p.sample(rng)).collect()
+    }
+
+    pub fn project(&self, config: &[f64]) -> Config {
+        assert_eq!(config.len(), self.dim());
+        self.params
+            .iter()
+            .zip(config)
+            .map(|(p, &x)| p.project(x))
+            .collect()
+    }
+
+    /// True when the config lies inside every parameter's domain.
+    pub fn contains(&self, config: &[f64]) -> bool {
+        config.len() == self.dim()
+            && self
+                .params
+                .iter()
+                .zip(config)
+                .all(|(p, &x)| x >= p.lo && x <= p.hi && (!p.integer || x.fract() == 0.0))
+    }
+}
+
+/// A flat configuration vector, ordered like `SearchSpace::params`.
+pub type Config = Vec<f64>;
+
+/// A completed evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Observation {
+    pub config: Config,
+    pub loss: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::derive;
+
+    fn space() -> SearchSpace {
+        SearchSpace {
+            params: vec![
+                ParamSpec {
+                    name: "x".into(),
+                    lo: 0.0,
+                    hi: 1.0,
+                    integer: false,
+                },
+                ParamSpec {
+                    name: "k".into(),
+                    lo: 2.0,
+                    hi: 5.0,
+                    integer: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn project_clamps_and_rounds() {
+        let s = space();
+        assert_eq!(s.project(&[1.5, 3.4]), vec![1.0, 3.0]);
+        assert_eq!(s.project(&[-0.2, 9.0]), vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn samples_in_domain() {
+        let s = space();
+        let mut rng = derive(0, "space", 0);
+        for _ in 0..200 {
+            let c = s.sample(&mut rng);
+            assert!(s.contains(&c), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn contains_rejects_bad() {
+        let s = space();
+        assert!(!s.contains(&[0.5]));
+        assert!(!s.contains(&[0.5, 3.5])); // non-integer kernel
+        assert!(!s.contains(&[2.0, 3.0])); // x out of range
+    }
+}

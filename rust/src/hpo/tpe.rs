@@ -1,0 +1,210 @@
+//! Tree-structured Parzen estimator (Bergstra et al. 2011) — the paper's
+//! fixed HPO method (Table 5).
+//!
+//! Per dimension: observations are split at the γ-quantile of loss into
+//! "good" (l) and "bad" (g) sets; each set is modelled by a Parzen window
+//! (Gaussian KDE with data-driven bandwidth); `n_candidates` samples are
+//! drawn from l and the candidate maximizing the expected-improvement
+//! surrogate l(x)/g(x) is suggested. Dimensions are treated independently
+//! (the classic "tree" with no conditional structure — AIPerf's space has
+//! none).
+
+use crate::util::rng::Rng;
+
+use super::space::{Config, Observation, SearchSpace};
+use super::Optimizer;
+
+#[derive(Debug, Clone)]
+pub struct Tpe {
+    space: SearchSpace,
+    history: Vec<Observation>,
+    /// Quantile split between good and bad sets.
+    pub gamma: f64,
+    /// Random-search warm start before the estimator kicks in.
+    pub n_startup: usize,
+    /// Candidates drawn from l(x) per suggestion.
+    pub n_candidates: usize,
+}
+
+impl Tpe {
+    pub fn new(space: SearchSpace) -> Self {
+        Tpe {
+            space,
+            history: Vec::new(),
+            gamma: 0.25,
+            n_startup: 8,
+            n_candidates: 24,
+        }
+    }
+
+    /// Split history into (good, bad) by the γ-quantile of loss.
+    fn split(&self) -> (Vec<&Observation>, Vec<&Observation>) {
+        let mut sorted: Vec<&Observation> = self.history.iter().collect();
+        sorted.sort_by(|a, b| a.loss.partial_cmp(&b.loss).unwrap_or(std::cmp::Ordering::Equal));
+        let n_good = ((self.gamma * sorted.len() as f64).ceil() as usize)
+            .clamp(1, sorted.len().saturating_sub(1).max(1));
+        let (good, bad) = sorted.split_at(n_good.min(sorted.len()));
+        (good.to_vec(), bad.to_vec())
+    }
+
+    /// Parzen bandwidth for a 1-D sample set over [lo, hi]: max of the
+    /// neighbour spacing heuristic and 1/20 of the domain.
+    fn bandwidth(values: &[f64], lo: f64, hi: f64) -> f64 {
+        let span = (hi - lo).max(1e-12);
+        if values.len() < 2 {
+            return span / 4.0;
+        }
+        (span / values.len() as f64).max(span / 20.0)
+    }
+
+    /// KDE log-density of `x` under the Parzen mixture.
+    fn log_density(x: f64, centers: &[f64], bw: f64) -> f64 {
+        let inv = 1.0 / (bw * (2.0 * std::f64::consts::PI).sqrt());
+        let mut acc = 0.0;
+        for &c in centers {
+            let z = (x - c) / bw;
+            acc += inv * (-0.5 * z * z).exp();
+        }
+        (acc / centers.len() as f64).max(1e-300).ln()
+    }
+}
+
+impl Optimizer for Tpe {
+    fn suggest(&mut self, rng: &mut Rng) -> Config {
+        if self.history.len() < self.n_startup {
+            return self.space.sample(rng);
+        }
+        let (good, bad) = self.split();
+        let mut config = Vec::with_capacity(self.space.dim());
+        for (d, p) in self.space.params.iter().enumerate() {
+            let gvals: Vec<f64> = good.iter().map(|o| o.config[d]).collect();
+            let bvals: Vec<f64> = bad.iter().map(|o| o.config[d]).collect();
+            let gbw = Self::bandwidth(&gvals, p.lo, p.hi);
+            let bbw = Self::bandwidth(&bvals, p.lo, p.hi);
+            // Draw candidates from l(x): pick a good center, jitter by bw.
+            let mut best_x = p.sample(rng);
+            let mut best_score = f64::NEG_INFINITY;
+            for _ in 0..self.n_candidates {
+                let center = gvals[rng.gen_range_usize(0, gvals.len())];
+                let x = p.project(rng.gen_normal_with(center, gbw));
+                let score = Self::log_density(x, &gvals, gbw)
+                    - if bvals.is_empty() {
+                        0.0
+                    } else {
+                        Self::log_density(x, &bvals, bbw)
+                    };
+                if score > best_score {
+                    best_score = score;
+                    best_x = x;
+                }
+            }
+            config.push(best_x);
+        }
+        config
+    }
+
+    fn observe(&mut self, config: Config, loss: f64) {
+        debug_assert!(self.space.contains(&config), "observe outside space");
+        self.history.push(Observation { config, loss });
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.history
+            .iter()
+            .min_by(|a, b| a.loss.partial_cmp(&b.loss).unwrap_or(std::cmp::Ordering::Equal))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hpo::aiperf_space;
+    use crate::util::rng::derive;
+
+    /// Smooth test objective with optimum at (0.45, 3): quadratic bowl.
+    fn objective(c: &[f64]) -> f64 {
+        (c[0] - 0.45).powi(2) * 4.0 + (c[1] - 3.0).powi(2) * 0.05
+    }
+
+    fn run(n: usize, seed: u64) -> f64 {
+        let mut tpe = Tpe::new(aiperf_space());
+        let mut rng = derive(seed, "tpe-test", 0);
+        for _ in 0..n {
+            let c = tpe.suggest(&mut rng);
+            let l = objective(&c);
+            tpe.observe(c, l);
+        }
+        tpe.best().unwrap().loss
+    }
+
+    #[test]
+    fn converges_near_optimum() {
+        let best = run(60, 3);
+        assert!(best < 0.01, "best={best}");
+    }
+
+    #[test]
+    fn beats_pure_random_on_average() {
+        use crate::hpo::RandomSearch;
+        let mut tpe_wins = 0;
+        for seed in 0..10u64 {
+            let t = run(40, seed);
+            let mut rs = RandomSearch::new(aiperf_space());
+            let mut rng = derive(seed, "rs-test", 0);
+            for _ in 0..40 {
+                let c = rs.suggest(&mut rng);
+                let l = objective(&c);
+                rs.observe(c, l);
+            }
+            if t <= rs.best().unwrap().loss {
+                tpe_wins += 1;
+            }
+        }
+        assert!(tpe_wins >= 6, "tpe won only {tpe_wins}/10");
+    }
+
+    #[test]
+    fn suggestions_stay_in_space() {
+        let space = aiperf_space();
+        let mut tpe = Tpe::new(space.clone());
+        let mut rng = derive(1, "tpe-dom", 0);
+        for i in 0..50 {
+            let c = tpe.suggest(&mut rng);
+            assert!(space.contains(&c), "iter {i}: {c:?}");
+            let l = objective(&c);
+            tpe.observe(c, l);
+        }
+    }
+
+    #[test]
+    fn startup_phase_is_random() {
+        let mut tpe = Tpe::new(aiperf_space());
+        tpe.n_startup = 5;
+        let mut rng = derive(2, "tpe-start", 0);
+        // No history: suggestions must still be valid samples.
+        for _ in 0..5 {
+            let c = tpe.suggest(&mut rng);
+            assert!(tpe.space.contains(&c));
+            tpe.observe(c, 1.0);
+        }
+    }
+
+    #[test]
+    fn best_tracks_minimum() {
+        let mut tpe = Tpe::new(aiperf_space());
+        tpe.observe(vec![0.3, 3.0], 0.5);
+        tpe.observe(vec![0.4, 4.0], 0.2);
+        tpe.observe(vec![0.5, 2.0], 0.9);
+        assert_eq!(tpe.best().unwrap().loss, 0.2);
+    }
+
+    #[test]
+    fn split_never_empty_sides() {
+        let mut tpe = Tpe::new(aiperf_space());
+        tpe.observe(vec![0.3, 3.0], 0.5);
+        tpe.observe(vec![0.4, 4.0], 0.2);
+        let (g, b) = tpe.split();
+        assert!(!g.is_empty());
+        assert!(!b.is_empty());
+    }
+}

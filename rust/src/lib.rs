@@ -1,0 +1,25 @@
+//! AIPerf — Automated machine learning as an AI-HPC benchmark.
+//!
+//! Rust + JAX + Pallas reproduction of Ren et al. (2020), arXiv:2008.07141.
+//!
+//! The crate is the Layer-3 coordinator of the three-layer stack described
+//! in DESIGN.md: it implements the paper's benchmark framework (master–slave
+//! AutoML orchestration, analytical FLOPS measurement, regulated score)
+//! plus every substrate the paper depends on (network-morphism NAS, TPE
+//! HPO, a discrete-event cluster simulator standing in for the 16×8-V100
+//! testbed, and a PJRT runtime that executes the AOT-compiled JAX/Pallas
+//! training step for the real end-to-end path).
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod distributed;
+pub mod flops;
+pub mod hpo;
+pub mod metrics;
+pub mod nas;
+pub mod predict;
+pub mod runtime;
+pub mod sim;
+pub mod util;

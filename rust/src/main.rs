@@ -1,0 +1,273 @@
+//! aiperf — the benchmark launcher (paper §4.3 step 1: the user-facing
+//! entry point that configures and dispatches the benchmark).
+//!
+//! CLI parsing is hand-rolled (clap is not vendored offline): flat
+//! `--key value` flags per subcommand.
+
+use anyhow::{bail, Context, Result};
+
+use aiperf::config::BenchmarkConfig;
+use aiperf::coordinator::live::{run_live, LiveConfig};
+use aiperf::coordinator::run_benchmark;
+use aiperf::flops::layers::LayerKind;
+use aiperf::flops::resnet50::resnet50_imagenet;
+use aiperf::flops::{graph_ops_per_image, OpWeights};
+
+const USAGE: &str = "\
+aiperf — AIPerf: Automated machine learning as an AI-HPC benchmark (Ren et al., 2020)
+
+USAGE:
+    aiperf run   [--nodes N] [--hours H] [--seed S] [--config FILE]
+                 [--json OUT] [--csv OUT] [--chart 1]
+        Simulated benchmark on the modelled cluster (Figs 4-6, 9-12).
+    aiperf live  [--artifacts DIR] [--trials N] [--epochs E]
+                 [--batches-per-epoch B] [--seed S]
+        Real-training mini-benchmark over the AOT artifacts (PJRT).
+    aiperf cluster [--slaves N] [--trials T] [--seed S]
+        Distributed master-slave run over real TCP (localhost workers).
+    aiperf flops
+        Analytical ResNet-50 op breakdown (paper Table 4).
+    aiperf config
+        Print the default configuration file.
+    aiperf help
+";
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Flags {
+    pairs: Vec<(String, String)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = &args[i];
+            if !k.starts_with("--") {
+                bail!("unexpected argument `{k}` (flags are `--key value`)");
+            }
+            let v = args
+                .get(i + 1)
+                .with_context(|| format!("flag `{k}` needs a value"))?;
+            pairs.push((k.trim_start_matches("--").to_string(), v.clone()));
+            i += 2;
+        }
+        Ok(Flags { pairs })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}: bad integer `{v}`")),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}: bad number `{v}`")),
+        }
+    }
+
+    fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
+        for (k, _) in &self.pairs {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown flag `--{k}`");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    flags.reject_unknown(&["nodes", "hours", "seed", "config", "json", "csv", "chart"])?;
+    let mut cfg = match flags.get("config") {
+        Some(path) => BenchmarkConfig::from_text(
+            &std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!(e))?,
+        None => BenchmarkConfig::default(),
+    };
+    cfg.nodes = flags.get_u64("nodes", cfg.nodes)?;
+    cfg.duration_s = flags.get_f64("hours", cfg.duration_s / 3600.0)? * 3600.0;
+    cfg.seed = flags.get_u64("seed", cfg.seed)?;
+
+    let report = run_benchmark(&cfg);
+    println!("{}", report.summary());
+    println!("score series (hourly):");
+    for s in &report.score_series {
+        println!(
+            "  t={:>5.1}h  score={:.4} PFLOPS  best_error={:.3}  regulated={:.4} PFLOPS",
+            s.t / 3600.0,
+            s.flops / 1e15,
+            s.best_error,
+            s.regulated / 1e15
+        );
+    }
+    let xs: Vec<f64> = report.score_series.iter().map(|s| s.t / 3600.0).collect();
+    let score: Vec<f64> = report.score_series.iter().map(|s| s.flops / 1e15).collect();
+    let err: Vec<f64> = report.score_series.iter().map(|s| s.best_error).collect();
+    let reg: Vec<f64> = report.score_series.iter().map(|s| s.regulated / 1e15).collect();
+    if flags.get("chart").is_some() {
+        println!();
+        print!(
+            "{}",
+            aiperf::metrics::ascii_chart(
+                "score / regulated (PFLOPS) and best error over hours",
+                &xs,
+                &[("score", score.clone()), ("error", err.clone()), ("regulated", reg.clone())],
+                12,
+            )
+        );
+    }
+    if let Some(path) = flags.get("csv") {
+        std::fs::write(
+            path,
+            aiperf::metrics::csv(
+                "hours",
+                &xs,
+                &[("score_pflops", score), ("best_error", err), ("regulated_pflops", reg)],
+            ),
+        )?;
+        println!("CSV written to {path}");
+    }
+    if let Some(path) = flags.get("json") {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_cluster(flags: &Flags) -> Result<()> {
+    flags.reject_unknown(&["slaves", "trials", "seed"])?;
+    let slaves = flags.get_u64("slaves", 4)?;
+    let trials = flags.get_u64("trials", 24)?;
+    let seed = flags.get_u64("seed", 0)?;
+    let master = aiperf::distributed::MasterServer::bind(slaves, trials, 600.0)?;
+    let addr = master.addr()?;
+    println!("master listening on {addr}; launching {slaves} slave workers");
+    let mut handles = Vec::new();
+    for node in 0..slaves {
+        let worker = aiperf::distributed::SlaveWorker::new(node, seed);
+        handles.push(std::thread::spawn(move || worker.run(addr)));
+    }
+    let report = master.serve()?;
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("slave panicked"))??;
+    }
+    for t in &report.trials {
+        println!(
+            "  trial {:>3} node {} round-arch {:<24} acc={:.3} epochs={}",
+            t.trial, t.node, t.signature, t.accuracy, t.epochs
+        );
+    }
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_live(flags: &Flags) -> Result<()> {
+    flags.reject_unknown(&["artifacts", "trials", "epochs", "batches-per-epoch", "seed"])?;
+    let result = run_live(&LiveConfig {
+        artifacts_dir: flags.get("artifacts").unwrap_or("artifacts").to_string(),
+        trials: flags.get_u64("trials", 4)?,
+        epochs_per_trial: flags.get_u64("epochs", 3)?,
+        batches_per_epoch: flags.get_u64("batches-per-epoch", 24)?,
+        seed: flags.get_u64("seed", 0)?,
+        ..LiveConfig::default()
+    })?;
+    for (i, t) in result.trials.iter().enumerate() {
+        println!(
+            "trial {i}: variant={} lr={:.4} loss {:.3}→{:.3} val_acc={:.3} ({:.2}s)",
+            t.variant,
+            t.learning_rate,
+            t.losses.first().copied().unwrap_or(f32::NAN),
+            t.losses.last().copied().unwrap_or(f32::NAN),
+            t.val_accuracy,
+            t.seconds
+        );
+    }
+    println!(
+        "live: score={:.3} GFLOPS  best_error={:.3}  regulated={:.3} GFLOPS  ({:.1}s)",
+        result.score_flops / 1e9,
+        result.best_error,
+        result.regulated_score / 1e9,
+        result.duration_s
+    );
+    Ok(())
+}
+
+fn cmd_flops() {
+    let w = OpWeights::default();
+    let net = resnet50_imagenet();
+    println!("ResNet-50 / ImageNet per-image analytical ops (Table 4):");
+    println!(
+        "{:<22}{:>12}{:>12}{:>9}{:>12}",
+        "layer", "FP", "BP", "BP/FP", "total"
+    );
+    for kind in [
+        LayerKind::Conv,
+        LayerKind::Dense,
+        LayerKind::BatchNorm,
+        LayerKind::Relu,
+        LayerKind::MaxPool,
+        LayerKind::GlobalPool,
+        LayerKind::Add,
+        LayerKind::Softmax,
+    ] {
+        let layers: Vec<_> = net.iter().filter(|l| l.kind == kind).copied().collect();
+        let g = graph_ops_per_image(&layers, &w);
+        println!(
+            "{:<22}{:>12.3e}{:>12.3e}{:>9.4}{:>12.3e}",
+            format!("{kind:?}"),
+            g.fp as f64,
+            g.bp as f64,
+            g.bp_fp_ratio(),
+            (g.fp + g.bp) as f64
+        );
+    }
+    let g = graph_ops_per_image(&net, &w);
+    println!(
+        "{:<22}{:>12.3e}{:>12.3e}{:>9.4}{:>12.3e}",
+        "Total",
+        g.fp as f64,
+        g.bp as f64,
+        g.bp_fp_ratio(),
+        (g.fp + g.bp) as f64
+    );
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            print!("{USAGE}");
+            return Ok(());
+        }
+    };
+    match cmd {
+        "run" => cmd_run(&Flags::parse(rest)?),
+        "live" => cmd_live(&Flags::parse(rest)?),
+        "cluster" => cmd_cluster(&Flags::parse(rest)?),
+        "flops" => {
+            cmd_flops();
+            Ok(())
+        }
+        "config" => {
+            print!("{}", BenchmarkConfig::default().to_text());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}

@@ -1,0 +1,143 @@
+//! Terminal chart + CSV rendering for the report toolkit.
+//!
+//! The paper's analysis toolkit "runs automatically … and then creates a
+//! report"; this module renders the Fig 4/5/6-style time series as ASCII
+//! line charts for the CLI and as CSV for downstream plotting.
+
+/// Render one or more named series sharing an x-axis as an ASCII chart.
+///
+/// `height` rows tall; x is compressed to the series length; values are
+/// scaled to the global [min, max]. Each series draws with its own glyph.
+pub fn ascii_chart(
+    title: &str,
+    xs: &[f64],
+    series: &[(&str, Vec<f64>)],
+    height: usize,
+) -> String {
+    assert!(height >= 2);
+    assert!(!series.is_empty());
+    for (_, ys) in series {
+        assert_eq!(ys.len(), xs.len(), "series length mismatch");
+    }
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+    let all: Vec<f64> = series.iter().flat_map(|(_, ys)| ys.iter().copied()).collect();
+    let lo = all.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = all.iter().cloned().fold(f64::MIN, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let width = xs.len();
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (x, &y) in ys.iter().enumerate() {
+            let row = ((y - lo) / span * (height - 1) as f64).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            grid[row][x] = glyphs[si % glyphs.len()];
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{hi:>10.3}")
+        } else if i == height - 1 {
+            format!("{lo:>10.3}")
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&label);
+        out.push_str(" |");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(10));
+    out.push_str(" +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "{:>10}  x: {:.1} … {:.1}   ",
+        "",
+        xs.first().copied().unwrap_or(0.0),
+        xs.last().copied().unwrap_or(0.0)
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", glyphs[si % glyphs.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Render aligned series as CSV with a header row.
+pub fn csv(xs_name: &str, xs: &[f64], series: &[(&str, Vec<f64>)]) -> String {
+    let mut out = String::new();
+    out.push_str(xs_name);
+    for (name, ys) in series {
+        assert_eq!(ys.len(), xs.len());
+        out.push(',');
+        out.push_str(name);
+    }
+    out.push('\n');
+    for (i, x) in xs.iter().enumerate() {
+        out.push_str(&format!("{x}"));
+        for (_, ys) in series {
+            out.push_str(&format!(",{}", ys[i]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_renders_all_points() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x * x).collect();
+        let chart = ascii_chart("t", &xs, &[("sq", ys)], 6);
+        // 10 plotted points (count only grid rows — the legend adds one).
+        let grid_stars: usize = chart
+            .lines()
+            .filter(|l| l.contains('|'))
+            .map(|l| l.matches('*').count())
+            .sum();
+        assert_eq!(grid_stars, 10);
+        assert!(chart.contains("sq"));
+    }
+
+    #[test]
+    fn chart_two_series_two_glyphs() {
+        let xs: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let a: Vec<f64> = xs.iter().map(|x| *x).collect();
+        let b: Vec<f64> = xs.iter().map(|x| 4.0 - *x).collect();
+        let chart = ascii_chart("t", &xs, &[("up", a), ("down", b)], 5);
+        assert!(chart.contains('*'));
+        assert!(chart.contains('o'));
+    }
+
+    #[test]
+    fn chart_constant_series_no_panic() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = vec![5.0, 5.0, 5.0];
+        let chart = ascii_chart("flat", &xs, &[("c", ys)], 3);
+        assert!(chart.contains('*'));
+    }
+
+    #[test]
+    fn csv_format() {
+        let xs = [1.0, 2.0];
+        let out = csv("t", &xs, &[("a", vec![0.5, 0.6]), ("b", vec![7.0, 8.0])]);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines[0], "t,a,b");
+        assert_eq!(lines[1], "1,0.5,7");
+        assert_eq!(lines[2], "2,0.6,8");
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_rejects_mismatched_lengths() {
+        csv("t", &[1.0], &[("a", vec![1.0, 2.0])]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Scoring and observability (paper §4.4, Appendix D).
+//!
+//! * [`score`] — the major score (FLOPS) and the regulated score
+//!   (Equation 3: −ln(error)·FLOPS), with the paper's validity rules;
+//! * [`telemetry`] — time-series sampling of GPU/CPU/memory utilization
+//!   with per-node standard deviations (Figs 9–12);
+//! * [`report`] — the final benchmark report the data-analysis toolkit
+//!   produces at termination.
+
+pub mod chart;
+pub mod report;
+pub mod score;
+pub mod telemetry;
+
+pub use chart::{ascii_chart, csv};
+pub use report::BenchmarkReport;
+pub use score::{regulated_score, validate_result, ScoreSample, Validity};
+pub use telemetry::{Telemetry, TelemetrySample};

@@ -1,0 +1,165 @@
+//! Final benchmark report (paper §4.3 last bullet: "the final results
+//! (score, achieved error, and regulated score) are automatically
+//! calculated based on the recorded metrics and then reported").
+
+
+use super::score::{ScoreSample, Validity};
+use super::telemetry::TelemetrySample;
+use crate::util::stats::mean;
+
+#[derive(Debug, Clone)]
+pub struct BenchmarkReport {
+    /// Cluster shape.
+    pub nodes: u64,
+    pub gpus_per_node: u64,
+    /// Run length, seconds.
+    pub duration_s: f64,
+    /// Hourly score samples (Figs 4–6 series).
+    pub score_series: Vec<ScoreSample>,
+    /// Reported score: mean FLOPS over the stable window (hours 6–12).
+    pub score_flops: f64,
+    /// Best achieved validation error.
+    pub final_error: f64,
+    /// Reported regulated score over the stable window.
+    pub regulated_score: f64,
+    /// Number of architectures evaluated (paper §5.2: 96 at 16 nodes/12 h).
+    pub architectures_evaluated: u64,
+    /// Utilization telemetry.
+    pub telemetry: Vec<TelemetrySample>,
+    /// Validity verdict per §4.5.
+    pub validity: Validity,
+    /// NFS aggregate I/O.
+    pub nfs_bytes_read: u64,
+    pub nfs_bytes_written: u64,
+}
+
+impl BenchmarkReport {
+    /// Stable-window averages from the series; the paper reports averages
+    /// over [6 h, 12 h] ("after the initial warm-up phase"), falling back
+    /// to the second half for shorter runs.
+    pub fn stable_window(duration_s: f64) -> (f64, f64) {
+        if duration_s >= 12.0 * 3600.0 {
+            (6.0 * 3600.0, 12.0 * 3600.0)
+        } else {
+            (duration_s / 2.0, duration_s)
+        }
+    }
+
+    /// Compute the reported (score, regulated) from a sample series.
+    pub fn stable_scores(series: &[ScoreSample], duration_s: f64) -> (f64, f64) {
+        let (t0, t1) = Self::stable_window(duration_s);
+        let in_window: Vec<&ScoreSample> =
+            series.iter().filter(|s| s.t >= t0 && s.t <= t1).collect();
+        let picked: Vec<&ScoreSample> = if in_window.is_empty() {
+            series.iter().collect()
+        } else {
+            in_window
+        };
+        let f = mean(&picked.iter().map(|s| s.flops).collect::<Vec<_>>());
+        let r = mean(&picked.iter().map(|s| s.regulated).collect::<Vec<_>>());
+        (f, r)
+    }
+
+    /// Full report as JSON (the paper's toolkit emits a machine-readable
+    /// report at termination; serde is not vendored, so this uses the
+    /// in-tree codec).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, obj, s};
+        obj(vec![
+            ("nodes", num(self.nodes as f64)),
+            ("gpus_per_node", num(self.gpus_per_node as f64)),
+            ("duration_s", num(self.duration_s)),
+            ("score_flops", num(self.score_flops)),
+            ("final_error", num(self.final_error)),
+            ("regulated_score", num(self.regulated_score)),
+            (
+                "architectures_evaluated",
+                num(self.architectures_evaluated as f64),
+            ),
+            ("validity", s(format!("{:?}", self.validity))),
+            ("nfs_bytes_read", num(self.nfs_bytes_read as f64)),
+            ("nfs_bytes_written", num(self.nfs_bytes_written as f64)),
+            (
+                "score_series",
+                arr(self
+                    .score_series
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("t", num(p.t)),
+                            ("flops", num(p.flops)),
+                            ("best_error", num(p.best_error)),
+                            ("regulated", num(p.regulated)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "telemetry",
+                arr(self
+                    .telemetry
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("t", num(p.t)),
+                            ("gpu_util_mean", num(p.gpu_util_mean)),
+                            ("gpu_util_std", num(p.gpu_util_std)),
+                            ("gpu_mem_mean", num(p.gpu_mem_mean)),
+                            ("gpu_mem_std", num(p.gpu_mem_std)),
+                            ("cpu_util_mean", num(p.cpu_util_mean)),
+                            ("cpu_util_std", num(p.cpu_util_std)),
+                            ("host_mem_mean", num(p.host_mem_mean)),
+                            ("host_mem_std", num(p.host_mem_std)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    /// Human-readable single-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "nodes={} gpus={} score={:.3} PFLOPS error={:.1}% regulated={:.3} PFLOPS archs={} validity={:?}",
+            self.nodes,
+            self.nodes * self.gpus_per_node,
+            self.score_flops / 1e15,
+            self.final_error * 100.0,
+            self.regulated_score / 1e15,
+            self.architectures_evaluated,
+            self.validity,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_window_long_run() {
+        assert_eq!(
+            BenchmarkReport::stable_window(12.0 * 3600.0),
+            (6.0 * 3600.0, 12.0 * 3600.0)
+        );
+        assert_eq!(BenchmarkReport::stable_window(4.0 * 3600.0), (2.0 * 3600.0, 4.0 * 3600.0));
+    }
+
+    #[test]
+    fn stable_scores_average_window_only() {
+        let series: Vec<ScoreSample> = (1..=12)
+            .map(|h| ScoreSample::new(h as f64 * 3600.0, 1e18 * h as f64, 0.3))
+            .collect();
+        // flops constant at 1e18/3600 ≈ 2.78e14 for every sample.
+        let (f, _) = BenchmarkReport::stable_scores(&series, 12.0 * 3600.0);
+        assert!((f - 1e18 / 3600.0).abs() / f < 1e-9);
+    }
+
+    #[test]
+    fn empty_window_falls_back() {
+        let series = vec![ScoreSample::new(100.0, 1e12, 0.4)];
+        let (f, r) = BenchmarkReport::stable_scores(&series, 12.0 * 3600.0);
+        assert!(f > 0.0);
+        assert!(r > 0.0);
+    }
+}

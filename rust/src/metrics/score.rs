@@ -1,0 +1,142 @@
+//! The benchmark scores (paper §4.4).
+//!
+//! Major score: FLOPS = analytical ops / wall time (Equation 4).
+//! Regulated score (Equation 3): `−ln(Error) × FLOPS`, Error ∈ (0,1) —
+//! designed so ∂score/∂error grows as error shrinks (compensating the
+//! plateauing accuracy curve) while ∂score/∂FLOPS is constant.
+//!
+//! Validity rules (§4.5): precision ≥ fp16 and final error ≤ 35 %.
+
+
+/// One sampled point of the score time series (Fig 4/6 hourly samples).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoreSample {
+    /// Sample time, seconds since benchmark start.
+    pub t: f64,
+    /// Cumulative analytical ops at `t`.
+    pub cumulative_ops: f64,
+    /// FLOPS = cumulative_ops / t.
+    pub flops: f64,
+    /// Best achieved validation error at `t`.
+    pub best_error: f64,
+    /// Regulated score at `t`.
+    pub regulated: f64,
+}
+
+impl ScoreSample {
+    pub fn new(t: f64, cumulative_ops: f64, best_error: f64) -> Self {
+        assert!(t > 0.0);
+        let flops = cumulative_ops / t;
+        ScoreSample {
+            t,
+            cumulative_ops,
+            flops,
+            best_error,
+            regulated: regulated_score(best_error, flops),
+        }
+    }
+}
+
+/// Equation 3. `error` is clamped into (0,1) open interval before the log.
+pub fn regulated_score(error: f64, flops: f64) -> f64 {
+    let e = error.clamp(1e-9, 1.0 - 1e-9);
+    -e.ln() * flops
+}
+
+/// Result-validity verdict (§4.5 fixed rules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Validity {
+    Valid,
+    /// Final error above the 35 % requirement.
+    ErrorTooHigh,
+    /// Sub-fp16 precision used somewhere in training.
+    PrecisionTooLow,
+    /// Run shorter than the suggested minimum (warning-level).
+    RunTooShort,
+}
+
+/// Apply the paper's validity rules.
+pub fn validate_result(
+    final_error: f64,
+    min_precision_bits: u32,
+    run_seconds: f64,
+    min_run_seconds: f64,
+) -> Validity {
+    if min_precision_bits < 16 {
+        Validity::PrecisionTooLow
+    } else if final_error > 0.35 {
+        Validity::ErrorTooHigh
+    } else if run_seconds < min_run_seconds {
+        Validity::RunTooShort
+    } else {
+        Validity::Valid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regulated_increases_with_lower_error() {
+        let f = 1e15;
+        assert!(regulated_score(0.25, f) > regulated_score(0.35, f));
+    }
+
+    #[test]
+    fn regulated_linear_in_flops() {
+        // ∂score/∂FLOPS independent of FLOPS (paper's design condition).
+        let e = 0.3;
+        let a = regulated_score(e, 1e15);
+        let b = regulated_score(e, 2e15);
+        assert!((b / a - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regulated_derivative_grows_as_error_shrinks() {
+        // |∂score/∂error| = FLOPS/error increases with decreasing error.
+        let f = 1.0;
+        let d_at = |e: f64| {
+            let h = 1e-7;
+            (regulated_score(e + h, f) - regulated_score(e - h, f)).abs() / (2.0 * h)
+        };
+        assert!(d_at(0.1) > d_at(0.3));
+    }
+
+    #[test]
+    fn regulated_positive_in_domain() {
+        assert!(regulated_score(0.5, 1e12) > 0.0);
+        assert!(regulated_score(0.999_999, 1e12) > 0.0);
+    }
+
+    #[test]
+    fn clamps_degenerate_error() {
+        assert!(regulated_score(0.0, 1.0).is_finite());
+        assert!(regulated_score(1.0, 1.0).is_finite());
+        assert!(regulated_score(1.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn score_sample_math() {
+        let s = ScoreSample::new(100.0, 5e17, 0.3);
+        assert_eq!(s.flops, 5e15);
+        assert!((s.regulated - regulated_score(0.3, 5e15)).abs() < 1.0);
+    }
+
+    #[test]
+    fn validity_rules() {
+        assert_eq!(validate_result(0.30, 16, 50_000.0, 21_600.0), Validity::Valid);
+        assert_eq!(
+            validate_result(0.40, 16, 50_000.0, 21_600.0),
+            Validity::ErrorTooHigh
+        );
+        assert_eq!(
+            validate_result(0.30, 8, 50_000.0, 21_600.0),
+            Validity::PrecisionTooLow
+        );
+        assert_eq!(
+            validate_result(0.30, 32, 3_600.0, 21_600.0),
+            Validity::RunTooShort
+        );
+    }
+}

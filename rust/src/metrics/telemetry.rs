@@ -1,0 +1,136 @@
+//! Resource-utilization telemetry (paper Appendix D, Figs 9–12).
+//!
+//! The paper samples nvidia-smi/host counters on a user-defined interval
+//! and reports, per timestamp, the mean across nodes and the corresponding
+//! standard deviation (uniformity evidence). The simulated coordinator
+//! pushes per-node readings here; the toolkit aggregates exactly like the
+//! paper's.
+
+
+use crate::util::stats::{mean, stddev};
+
+/// One node's utilization reading at a sample instant.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NodeReading {
+    pub gpu_util: f64,
+    pub gpu_mem_util: f64,
+    pub cpu_util: f64,
+    pub host_mem_util: f64,
+}
+
+/// Aggregated sample across nodes (what Figs 9–12 plot).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TelemetrySample {
+    pub t: f64,
+    pub gpu_util_mean: f64,
+    pub gpu_util_std: f64,
+    pub gpu_mem_mean: f64,
+    pub gpu_mem_std: f64,
+    pub cpu_util_mean: f64,
+    pub cpu_util_std: f64,
+    pub host_mem_mean: f64,
+    pub host_mem_std: f64,
+}
+
+/// Collector with a fixed sampling interval.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    pub interval_s: f64,
+    samples: Vec<TelemetrySample>,
+}
+
+impl Telemetry {
+    /// 18-minute default interval (Figs 9/10).
+    pub fn new(interval_s: f64) -> Self {
+        assert!(interval_s > 0.0);
+        Telemetry {
+            interval_s,
+            samples: Vec::new(),
+        }
+    }
+
+    /// Aggregate one instant's per-node readings.
+    pub fn record(&mut self, t: f64, readings: &[NodeReading]) {
+        assert!(!readings.is_empty());
+        let col = |f: fn(&NodeReading) -> f64| -> Vec<f64> { readings.iter().map(f).collect() };
+        let g = col(|r| r.gpu_util);
+        let gm = col(|r| r.gpu_mem_util);
+        let c = col(|r| r.cpu_util);
+        let hm = col(|r| r.host_mem_util);
+        self.samples.push(TelemetrySample {
+            t,
+            gpu_util_mean: mean(&g),
+            gpu_util_std: stddev(&g),
+            gpu_mem_mean: mean(&gm),
+            gpu_mem_std: stddev(&gm),
+            cpu_util_mean: mean(&c),
+            cpu_util_std: stddev(&c),
+            host_mem_mean: mean(&hm),
+            host_mem_std: stddev(&hm),
+        });
+    }
+
+    pub fn samples(&self) -> &[TelemetrySample] {
+        &self.samples
+    }
+
+    /// Mean of a metric over a time window [t0, t1] — the paper reports
+    /// averages "from 6 hours to 12 hours (after the initial warm-up)".
+    pub fn window_mean(&self, t0: f64, t1: f64, f: fn(&TelemetrySample) -> f64) -> f64 {
+        let v: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|s| s.t >= t0 && s.t <= t1)
+            .map(f)
+            .collect();
+        mean(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reading(g: f64) -> NodeReading {
+        NodeReading {
+            gpu_util: g,
+            gpu_mem_util: 0.8,
+            cpu_util: 0.04,
+            host_mem_util: 0.15,
+        }
+    }
+
+    #[test]
+    fn aggregates_mean_and_std() {
+        let mut t = Telemetry::new(60.0);
+        t.record(0.0, &[reading(0.9), reading(0.95), reading(1.0)]);
+        let s = &t.samples()[0];
+        assert!((s.gpu_util_mean - 0.95).abs() < 1e-9);
+        assert!(s.gpu_util_std > 0.0);
+        assert!(s.gpu_mem_std < 1e-12);
+    }
+
+    #[test]
+    fn single_node_has_zero_std() {
+        // Paper: "there is no standard deviation of just 1 node".
+        let mut t = Telemetry::new(60.0);
+        t.record(0.0, &[reading(0.9)]);
+        assert_eq!(t.samples()[0].gpu_util_std, 0.0);
+    }
+
+    #[test]
+    fn window_mean_filters() {
+        let mut t = Telemetry::new(60.0);
+        for i in 0..10 {
+            t.record(i as f64 * 3600.0, &[reading(if i < 5 { 0.2 } else { 1.0 })]);
+        }
+        let m = t.window_mean(5.0 * 3600.0, 9.0 * 3600.0, |s| s.gpu_util_mean);
+        assert!((m - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn record_requires_readings() {
+        Telemetry::new(60.0).record(0.0, &[]);
+    }
+}

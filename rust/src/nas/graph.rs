@@ -1,0 +1,469 @@
+//! Architecture IR for the morphism search space.
+//!
+//! The space mirrors the paper's: ResNet-style CNNs organised as a chain of
+//! *stages*; each stage holds residual conv+BN+ReLU blocks of a uniform
+//! width and may end in a 2×2 max-pool. The initial model is "pre-morphed
+//! based on ResNet-50" (Table 5) — here a capacity-scaled residual network
+//! with the same stage structure.
+//!
+//! `lower()` flattens an architecture to the `LoweredLayer` inventory used
+//! by the analytical FLOPs counter; `params()` feeds the memory guard that
+//! adapts the search to accelerator memory (§1, "automatic adaption …
+//! regarding AI accelerator's memory").
+
+
+use crate::flops::count::LoweredLayer;
+use crate::flops::layers::{LayerKind, LayerShape};
+
+/// One conv+BN+ReLU block (the paper's morphing unit), optionally residual.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Block {
+    /// Conv kernel edge (K×K). The HPO search range is [2,5] (Appendix A).
+    pub kernel: u64,
+    /// Identity skip across the block (function-preserving when widths match).
+    pub residual: bool,
+}
+
+/// A run of equal-width blocks, optionally followed by a 2×2/2 max-pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stage {
+    pub width: u64,
+    pub blocks: Vec<Block>,
+    pub pool_after: bool,
+}
+
+/// Single-pass architecture statistics (see [`Architecture::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArchStats {
+    pub ops: crate::flops::count::GraphOps,
+    pub params: u64,
+    pub activation_elems: u64,
+}
+
+/// A complete candidate architecture.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Architecture {
+    pub image: u64,
+    pub channels: u64,
+    pub num_classes: u64,
+    /// Number of 2×2 stem max-pools before the first stage (the ResNet
+    /// stem downsamples 224→56 before any residual block; morphing never
+    /// touches this).
+    pub stem_pool: u64,
+    pub stages: Vec<Stage>,
+}
+
+impl Architecture {
+    /// The fixed initial architecture (Table 5: "pre-morphed based on
+    /// ResNet-50"): the ResNet-50 stage layout (3/4/6/3 blocks at widths
+    /// 64/128/256/512 with a 4× stem downsample) for large images, and a
+    /// CIFAR-scale residual net for small ones.
+    pub fn initial(image: u64, channels: u64, num_classes: u64) -> Self {
+        let block = |k| Block {
+            kernel: k,
+            residual: true,
+        };
+        if image >= 64 {
+            Architecture {
+                image,
+                channels,
+                num_classes,
+                stem_pool: 2,
+                stages: vec![
+                    Stage {
+                        width: 64,
+                        blocks: vec![block(3); 3],
+                        pool_after: true,
+                    },
+                    Stage {
+                        width: 128,
+                        blocks: vec![block(3); 4],
+                        pool_after: true,
+                    },
+                    Stage {
+                        width: 256,
+                        blocks: vec![block(3); 6],
+                        pool_after: true,
+                    },
+                    Stage {
+                        width: 512,
+                        blocks: vec![block(3); 3],
+                        pool_after: false,
+                    },
+                ],
+            }
+        } else {
+            Architecture {
+                image,
+                channels,
+                num_classes,
+                stem_pool: 0,
+                stages: vec![
+                    Stage {
+                        width: 16,
+                        blocks: vec![block(3); 2],
+                        pool_after: true,
+                    },
+                    Stage {
+                        width: 32,
+                        blocks: vec![block(3); 2],
+                        pool_after: true,
+                    },
+                    Stage {
+                        width: 64,
+                        blocks: vec![block(3); 2],
+                        pool_after: false,
+                    },
+                ],
+            }
+        }
+    }
+
+    /// ImageNet-shaped initial model (224×224×3, 1000 classes).
+    pub fn initial_imagenet() -> Self {
+        Self::initial(224, 3, 1000)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.stages.iter().map(|s| s.blocks.len()).sum()
+    }
+
+    /// Lower to the flat layer inventory (shapes fully resolved).
+    ///
+    /// Per stage: a transition conv (prev_width → width, first block's
+    /// kernel) then the remaining blocks at uniform width; residual adds
+    /// only where in/out widths match (i.e. not on the transition block).
+    pub fn lower(&self) -> Vec<LoweredLayer> {
+        let mut layers = Vec::new();
+        let mut h = self.image;
+        let mut cin = self.channels;
+        for _ in 0..self.stem_pool {
+            if h < 2 {
+                break;
+            }
+            layers.push(LoweredLayer::new(
+                LayerKind::MaxPool,
+                LayerShape {
+                    hi: h,
+                    wi: h,
+                    ci: cin,
+                    ho: h / 2,
+                    wo: h / 2,
+                    co: cin,
+                    k: 2,
+                },
+            ));
+            h /= 2;
+        }
+        for stage in &self.stages {
+            for (i, block) in stage.blocks.iter().enumerate() {
+                let ci = if i == 0 { cin } else { stage.width };
+                let co = stage.width;
+                layers.push(LoweredLayer::new(
+                    LayerKind::Conv,
+                    LayerShape {
+                        hi: h,
+                        wi: h,
+                        ci,
+                        ho: h,
+                        wo: h,
+                        co,
+                        k: block.kernel,
+                    },
+                ));
+                layers.push(LoweredLayer::new(
+                    LayerKind::BatchNorm,
+                    LayerShape {
+                        hi: h,
+                        wi: h,
+                        ci: co,
+                        ..Default::default()
+                    },
+                ));
+                if block.residual && ci == co {
+                    layers.push(LoweredLayer::new(
+                        LayerKind::Add,
+                        LayerShape {
+                            ho: h,
+                            wo: h,
+                            co,
+                            ..Default::default()
+                        },
+                    ));
+                }
+                layers.push(LoweredLayer::new(
+                    LayerKind::Relu,
+                    LayerShape {
+                        ho: h,
+                        wo: h,
+                        co,
+                        ..Default::default()
+                    },
+                ));
+            }
+            cin = stage.width;
+            if stage.pool_after && h >= 2 {
+                layers.push(LoweredLayer::new(
+                    LayerKind::MaxPool,
+                    LayerShape {
+                        hi: h,
+                        wi: h,
+                        ci: cin,
+                        ho: h / 2,
+                        wo: h / 2,
+                        co: cin,
+                        k: 2,
+                    },
+                ));
+                h /= 2;
+            }
+        }
+        layers.push(LoweredLayer::new(
+            LayerKind::GlobalPool,
+            LayerShape {
+                hi: h,
+                wi: h,
+                ci: cin,
+                ..Default::default()
+            },
+        ));
+        layers.push(LoweredLayer::new(
+            LayerKind::Dense,
+            LayerShape {
+                ci: cin,
+                co: self.num_classes,
+                ..Default::default()
+            },
+        ));
+        layers.push(LoweredLayer::new(
+            LayerKind::Softmax,
+            LayerShape {
+                co: self.num_classes,
+                ..Default::default()
+            },
+        ));
+        layers
+    }
+
+    /// Trainable parameter count (memory-guard input).
+    pub fn params(&self) -> u64 {
+        self.lower()
+            .iter()
+            .map(|l| crate::flops::layers::param_count(l.kind, &l.shape))
+            .sum()
+    }
+
+    /// Total activation elements per image across conv outputs (GPU-memory
+    /// model input: activations are the batch-scaled term).
+    pub fn activation_elems(&self) -> u64 {
+        self.lower()
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::MaxPool))
+            .map(|l| l.shape.ho * l.shape.wo * l.shape.co)
+            .sum()
+    }
+
+    /// Everything the coordinator needs about an architecture, computed
+    /// from a single lowering pass (perf: `lower()` allocates the layer
+    /// inventory; the master previously called it three times per trial —
+    /// ops, params, activations. EXPERIMENTS.md §Perf/L3).
+    pub fn stats(&self, weights: &crate::flops::layers::OpWeights) -> ArchStats {
+        let layers = self.lower();
+        let ops = crate::flops::count::graph_ops_per_image(&layers, weights);
+        let activation_elems = layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::MaxPool))
+            .map(|l| l.shape.ho * l.shape.wo * l.shape.co)
+            .sum();
+        ArchStats {
+            ops,
+            params: ops.params,
+            activation_elems,
+        }
+    }
+
+    /// Structural well-formedness — the invariant proptest exercises after
+    /// arbitrary morph sequences.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("architecture has no stages".into());
+        }
+        let pools =
+            self.stages.iter().filter(|s| s.pool_after).count() as u32 + self.stem_pool as u32;
+        if self.image >> pools == 0 {
+            return Err(format!(
+                "too many pools ({pools}) for image size {}",
+                self.image
+            ));
+        }
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.blocks.is_empty() {
+                return Err(format!("stage {i} has no blocks"));
+            }
+            if s.width == 0 {
+                return Err(format!("stage {i} has zero width"));
+            }
+            for (j, b) in s.blocks.iter().enumerate() {
+                if !(1..=7).contains(&b.kernel) {
+                    return Err(format!("stage {i} block {j}: kernel {}", b.kernel));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Stable short description, e.g. `16x2p-32x2p-64x2` — used as the
+    /// model id in history/log records.
+    pub fn signature(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| {
+                format!(
+                    "{}x{}{}",
+                    s.width,
+                    s.blocks.len(),
+                    if s.pool_after { "p" } else { "" }
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("-")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flops::{graph_ops_per_image, OpWeights};
+
+    #[test]
+    fn initial_is_valid() {
+        let a = Architecture::initial_imagenet();
+        a.validate().unwrap();
+        // ResNet-50 stage layout: 3/4/6/3 blocks at widths 64/128/256/512.
+        assert_eq!(a.depth(), 16);
+        assert_eq!(a.signature(), "64x3p-128x4p-256x6p-512x3");
+        assert_eq!(a.stem_pool, 2);
+        // Capacity in the ResNet-50 ballpark (paper: ~25.6 M; plain 3×3
+        // blocks land lower but same order of magnitude).
+        let p = a.params();
+        assert!((5_000_000..40_000_000).contains(&p), "params={p}");
+
+        let small = Architecture::initial(32, 3, 10);
+        small.validate().unwrap();
+        assert_eq!(small.signature(), "16x2p-32x2p-64x2");
+        assert_eq!(small.stem_pool, 0);
+    }
+
+    #[test]
+    fn initial_imagenet_ops_near_resnet50() {
+        // Trial-cadence calibration: the initial model's per-image training
+        // ops must be within ~3× of ResNet-50's 2.31e10 so the simulated
+        // run reproduces the paper's ~96 architectures at 16 nodes / 12 h.
+        let w = OpWeights::default();
+        let a = Architecture::initial_imagenet();
+        let g = graph_ops_per_image(&a.lower(), &w);
+        let total = (g.fp + g.bp) as f64;
+        assert!(
+            (0.8e10..7.0e10).contains(&total),
+            "train ops/image = {total:.3e}"
+        );
+    }
+
+    #[test]
+    fn activation_elems_positive_and_scale() {
+        let a = Architecture::initial_imagenet();
+        let small = Architecture::initial(32, 3, 10);
+        assert!(a.activation_elems() > small.activation_elems());
+        assert!(a.activation_elems() > 100_000);
+    }
+
+    #[test]
+    fn lowering_shape_chain_consistent() {
+        let a = Architecture::initial(32, 3, 10);
+        let layers = a.lower();
+        // Every conv's ci must equal the previous producing layer's co.
+        let mut cur_c = a.channels;
+        let mut cur_h = a.image;
+        for l in &layers {
+            match l.kind {
+                LayerKind::Conv => {
+                    assert_eq!(l.shape.ci, cur_c, "conv ci mismatch");
+                    assert_eq!(l.shape.hi, cur_h);
+                    cur_c = l.shape.co;
+                }
+                LayerKind::MaxPool => {
+                    assert_eq!(l.shape.ci, cur_c);
+                    cur_h = l.shape.ho;
+                }
+                LayerKind::Dense => assert_eq!(l.shape.ci, cur_c),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn residual_add_only_on_width_match() {
+        let a = Architecture::initial(32, 3, 10);
+        let layers = a.lower();
+        let adds = layers.iter().filter(|l| l.kind == LayerKind::Add).count();
+        // 2 blocks per stage, transition block has ci≠co → 1 add per stage.
+        assert_eq!(adds, 3);
+    }
+
+    #[test]
+    fn params_grow_with_width() {
+        let mut a = Architecture::initial(32, 3, 10);
+        let p0 = a.params();
+        a.stages[0].width *= 2;
+        assert!(a.params() > p0);
+    }
+
+    #[test]
+    fn flops_grow_with_depth() {
+        let w = OpWeights::default();
+        let mut a = Architecture::initial(32, 3, 10);
+        let f0 = graph_ops_per_image(&a.lower(), &w).fp;
+        a.stages[1].blocks.push(Block {
+            kernel: 3,
+            residual: true,
+        });
+        assert!(graph_ops_per_image(&a.lower(), &w).fp > f0);
+    }
+
+    #[test]
+    fn validate_rejects_broken() {
+        let mut a = Architecture::initial(8, 3, 10);
+        a.stages[0].pool_after = true;
+        a.stages[1].pool_after = true;
+        a.stages[2].pool_after = true;
+        a.stages.push(Stage {
+            width: 8,
+            blocks: vec![Block {
+                kernel: 3,
+                residual: false,
+            }],
+            pool_after: true,
+        });
+        // 8 >> 4 pools = 0 → invalid.
+        assert!(a.validate().is_err());
+
+        let mut b = Architecture::initial(32, 3, 10);
+        b.stages[0].blocks.clear();
+        assert!(b.validate().is_err());
+
+        let mut c = Architecture::initial(32, 3, 10);
+        c.stages[0].blocks[0].kernel = 9;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn signature_distinguishes() {
+        let a = Architecture::initial(32, 3, 10);
+        let mut b = a.clone();
+        b.stages[2].blocks.push(Block {
+            kernel: 3,
+            residual: true,
+        });
+        assert_ne!(a.signature(), b.signature());
+    }
+}

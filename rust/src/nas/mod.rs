@@ -1,0 +1,21 @@
+//! Neural architecture search by network morphism (paper §4.1).
+//!
+//! AIPerf fixes the NAS method to network morphism (Wei et al. 2016): a
+//! parent network is transformed into a child by function-preserving
+//! operations — deepening (AIPerf's variant adds a whole conv+BN+ReLU
+//! *block*, not a single layer), widening, kernel-size changes and skip
+//! connections — and the child continues training from inherited knowledge.
+//!
+//! * [`graph`] — the architecture IR (stages of residual conv blocks) and
+//!   its lowering to the flat layer inventory the FLOPs counter consumes;
+//! * [`morphism`] — the morph operators with their legality rules;
+//! * [`search`] — history-ranked parent selection driving the search, as
+//!   run on slave-node CPUs in the paper's framework (§4.3).
+
+pub mod graph;
+pub mod morphism;
+pub mod search;
+
+pub use graph::{Architecture, Block, Stage};
+pub use morphism::{morph, Morph};
+pub use search::SearchPolicy;

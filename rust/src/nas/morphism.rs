@@ -1,0 +1,334 @@
+//! Network-morphism operators (Wei et al. 2016, as adapted by AIPerf §4.1).
+//!
+//! Each operator maps a parent architecture to a child that can inherit
+//! the parent's knowledge (function-preserving at morph time):
+//!
+//! * **Deepen** — insert an identity-initialisable conv+BN+ReLU *block*
+//!   (AIPerf's modification: a whole block per step, not one layer);
+//! * **Widen** — grow a stage's channel width (weights padded/replicated);
+//! * **Kernel** — grow/shrink a block's kernel (zero-pad the filter);
+//! * **Skip** — add an identity skip across a block (subnet morph).
+//!
+//! Operators carry legality rules: a memory guard caps parameters (the
+//! benchmark "automatically adapts … regarding AI accelerator's memory"),
+//! widths stay powers-of-two-ish for MXU alignment, kernels stay in the
+//! paper's [1,5] range.
+
+use crate::util::rng::Rng;
+
+use super::graph::{Architecture, Block};
+
+/// A single morph step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Morph {
+    /// Insert a block at `at` within stage `stage`.
+    Deepen { stage: usize, at: usize, kernel: u64 },
+    /// Multiply stage width by 2 (function-preserving widening).
+    Widen { stage: usize },
+    /// Set block kernel size.
+    Kernel { stage: usize, block: usize, kernel: u64 },
+    /// Make a block residual.
+    Skip { stage: usize, block: usize },
+}
+
+/// Limits that keep morphed models trainable on the target accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct MorphLimits {
+    /// Parameter cap from accelerator memory (§4.5 memory adaption).
+    pub max_params: u64,
+    /// Total block cap (search-space bound).
+    pub max_depth: usize,
+    /// Channel cap per stage.
+    pub max_width: u64,
+}
+
+impl Default for MorphLimits {
+    fn default() -> Self {
+        MorphLimits {
+            // 32 GB V100: fits well beyond ResNet-50's 25.6 M params; the
+            // cap reflects activation+optimizer-state headroom at batch 448.
+            max_params: 60_000_000,
+            max_depth: 48,
+            max_width: 1024,
+        }
+    }
+}
+
+/// Error for illegal morphs.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum MorphError {
+    #[error("stage index {0} out of range")]
+    BadStage(usize),
+    #[error("block index {0} out of range")]
+    BadBlock(usize),
+    #[error("kernel {0} outside [1,5]")]
+    BadKernel(u64),
+    #[error("morph would exceed limits: {0}")]
+    LimitExceeded(String),
+}
+
+/// Apply one morph, returning the child (parent is untouched).
+pub fn morph(
+    parent: &Architecture,
+    m: Morph,
+    limits: &MorphLimits,
+) -> Result<Architecture, MorphError> {
+    let mut child = parent.clone();
+    match m {
+        Morph::Deepen { stage, at, kernel } => {
+            if !(1..=5).contains(&kernel) {
+                return Err(MorphError::BadKernel(kernel));
+            }
+            let s = child.stages.get_mut(stage).ok_or(MorphError::BadStage(stage))?;
+            if at > s.blocks.len() {
+                return Err(MorphError::BadBlock(at));
+            }
+            // Identity-initialisable insert: residual so the new block can
+            // start as a no-op (conv≈0 ⇒ output = input via the skip).
+            s.blocks.insert(
+                at,
+                Block {
+                    kernel,
+                    residual: true,
+                },
+            );
+            if child.depth() > limits.max_depth {
+                return Err(MorphError::LimitExceeded(format!(
+                    "depth {} > {}",
+                    child.depth(),
+                    limits.max_depth
+                )));
+            }
+        }
+        Morph::Widen { stage } => {
+            let s = child.stages.get_mut(stage).ok_or(MorphError::BadStage(stage))?;
+            let new_w = s.width * 2;
+            if new_w > limits.max_width {
+                return Err(MorphError::LimitExceeded(format!(
+                    "width {new_w} > {}",
+                    limits.max_width
+                )));
+            }
+            s.width = new_w;
+        }
+        Morph::Kernel { stage, block, kernel } => {
+            if !(1..=5).contains(&kernel) {
+                return Err(MorphError::BadKernel(kernel));
+            }
+            let s = child.stages.get_mut(stage).ok_or(MorphError::BadStage(stage))?;
+            let b = s.blocks.get_mut(block).ok_or(MorphError::BadBlock(block))?;
+            b.kernel = kernel;
+        }
+        Morph::Skip { stage, block } => {
+            let s = child.stages.get_mut(stage).ok_or(MorphError::BadStage(stage))?;
+            let b = s.blocks.get_mut(block).ok_or(MorphError::BadBlock(block))?;
+            b.residual = true;
+        }
+    }
+    if child.params() > limits.max_params {
+        return Err(MorphError::LimitExceeded(format!(
+            "params {} > {}",
+            child.params(),
+            limits.max_params
+        )));
+    }
+    debug_assert!(child.validate().is_ok());
+    Ok(child)
+}
+
+/// Draw a random legal morph proposal (retry loop lives in the caller).
+pub fn random_morph(parent: &Architecture, rng: &mut Rng) -> Morph {
+    let stage = rng.gen_range_usize(0, parent.stages.len());
+    let nblocks = parent.stages[stage].blocks.len();
+    match rng.gen_range_usize(0, 100) {
+        // Deepen dominates: the paper's morphism "adds a block" per step.
+        0..=54 => Morph::Deepen {
+            stage,
+            at: rng.gen_range_usize(0, nblocks + 1),
+            kernel: *[1u64, 3, 3, 5].get(rng.gen_range_usize(0, 4)).unwrap(),
+        },
+        55..=74 => Morph::Widen { stage },
+        75..=89 => Morph::Kernel {
+            stage,
+            block: rng.gen_range_usize(0, nblocks),
+            kernel: *[1u64, 2, 3, 4, 5].get(rng.gen_range_usize(0, 5)).unwrap(),
+        },
+        _ => Morph::Skip {
+            stage,
+            block: rng.gen_range_usize(0, nblocks),
+        },
+    }
+}
+
+/// Apply up to `tries` random proposals until one is legal; returns the
+/// child and the morph used. Falls back to the parent clone if the space
+/// is saturated (all proposals hit limits).
+pub fn random_legal_morph(
+    parent: &Architecture,
+    limits: &MorphLimits,
+    rng: &mut Rng,
+    tries: usize,
+) -> (Architecture, Option<Morph>) {
+    for _ in 0..tries {
+        let m = random_morph(parent, rng);
+        if let Ok(child) = morph(parent, m, limits) {
+            return (child, Some(m));
+        }
+    }
+    (parent.clone(), None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::derive;
+
+    fn arch() -> Architecture {
+        Architecture::initial(32, 3, 10)
+    }
+
+    #[test]
+    fn deepen_adds_block() {
+        let a = arch();
+        let c = morph(
+            &a,
+            Morph::Deepen {
+                stage: 1,
+                at: 1,
+                kernel: 3,
+            },
+            &MorphLimits::default(),
+        )
+        .unwrap();
+        assert_eq!(c.depth(), a.depth() + 1);
+        assert!(c.stages[1].blocks[1].residual);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn widen_doubles() {
+        let a = arch();
+        let c = morph(&a, Morph::Widen { stage: 0 }, &MorphLimits::default()).unwrap();
+        assert_eq!(c.stages[0].width, a.stages[0].width * 2);
+    }
+
+    #[test]
+    fn kernel_change_applies() {
+        let a = arch();
+        let c = morph(
+            &a,
+            Morph::Kernel {
+                stage: 2,
+                block: 0,
+                kernel: 5,
+            },
+            &MorphLimits::default(),
+        )
+        .unwrap();
+        assert_eq!(c.stages[2].blocks[0].kernel, 5);
+    }
+
+    #[test]
+    fn limits_enforced() {
+        let a = arch();
+        let tight = MorphLimits {
+            max_depth: 6,
+            ..Default::default()
+        };
+        let err = morph(
+            &a,
+            Morph::Deepen {
+                stage: 0,
+                at: 0,
+                kernel: 3,
+            },
+            &tight,
+        )
+        .unwrap_err();
+        assert!(matches!(err, MorphError::LimitExceeded(_)));
+
+        let narrow = MorphLimits {
+            max_width: 16,
+            ..Default::default()
+        };
+        assert!(morph(&a, Morph::Widen { stage: 0 }, &narrow).is_err());
+    }
+
+    #[test]
+    fn bad_indices_rejected() {
+        let a = arch();
+        let l = MorphLimits::default();
+        assert_eq!(
+            morph(&a, Morph::Widen { stage: 9 }, &l).unwrap_err(),
+            MorphError::BadStage(9)
+        );
+        assert_eq!(
+            morph(
+                &a,
+                Morph::Kernel {
+                    stage: 0,
+                    block: 7,
+                    kernel: 3
+                },
+                &l
+            )
+            .unwrap_err(),
+            MorphError::BadBlock(7)
+        );
+        assert_eq!(
+            morph(
+                &a,
+                Morph::Kernel {
+                    stage: 0,
+                    block: 0,
+                    kernel: 6
+                },
+                &l
+            )
+            .unwrap_err(),
+            MorphError::BadKernel(6)
+        );
+    }
+
+    #[test]
+    fn parent_untouched() {
+        let a = arch();
+        let sig = a.signature();
+        let _ = morph(&a, Morph::Widen { stage: 0 }, &MorphLimits::default()).unwrap();
+        assert_eq!(a.signature(), sig);
+    }
+
+    #[test]
+    fn random_legal_morph_always_valid() {
+        let mut rng = derive(42, "morph-test", 0);
+        let limits = MorphLimits::default();
+        let mut cur = arch();
+        for _ in 0..200 {
+            let (child, _) = random_legal_morph(&cur, &limits, &mut rng, 16);
+            child.validate().unwrap();
+            assert!(child.params() <= limits.max_params);
+            cur = child;
+        }
+        assert!(cur.depth() <= limits.max_depth);
+    }
+
+    #[test]
+    fn morph_increases_flops_on_deepen() {
+        use crate::flops::{graph_ops_per_image, OpWeights};
+        let a = arch();
+        let w = OpWeights::default();
+        let c = morph(
+            &a,
+            Morph::Deepen {
+                stage: 0,
+                at: 0,
+                kernel: 3,
+            },
+            &MorphLimits::default(),
+        )
+        .unwrap();
+        assert!(
+            graph_ops_per_image(&c.lower(), &w).fp > graph_ops_per_image(&a.lower(), &w).fp
+        );
+    }
+}

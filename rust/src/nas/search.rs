@@ -1,0 +1,160 @@
+//! NAS search driver: history-ranked parent selection (paper §4.3).
+//!
+//! "The CPUs on slave nodes search for new neural architectures based on
+//! the rank of models in the historical model list." The policy here is
+//! rank-softmax parent selection: candidates are ranked by (predicted or
+//! measured) accuracy and the parent is drawn with probability
+//! exponentially tilted toward the best — exploration comes from the
+//! random morph on top of the chosen parent.
+
+use crate::util::rng::Rng;
+
+use super::graph::Architecture;
+use super::morphism::{random_legal_morph, Morph, MorphLimits};
+
+/// Scored history entry the policy selects from.
+#[derive(Debug, Clone)]
+pub struct RankedModel {
+    pub arch: Architecture,
+    /// Accuracy in [0,1] (measured, or predicted during warm-up).
+    pub accuracy: f64,
+}
+
+/// Rank-tilted parent selection + random morphism.
+#[derive(Debug, Clone)]
+pub struct SearchPolicy {
+    pub limits: MorphLimits,
+    /// Rank temperature: 0 → uniform, large → greedy-best.
+    pub rank_beta: f64,
+    /// Proposal retries before giving up on morphing a parent.
+    pub morph_tries: usize,
+}
+
+impl Default for SearchPolicy {
+    fn default() -> Self {
+        SearchPolicy {
+            limits: MorphLimits::default(),
+            rank_beta: 1.0,
+            morph_tries: 16,
+        }
+    }
+}
+
+impl SearchPolicy {
+    /// Select a parent index by rank-softmax over accuracies.
+    /// `history` may be unsorted; an empty history is a caller bug.
+    pub fn select_parent(&self, history: &[RankedModel], rng: &mut Rng) -> usize {
+        assert!(!history.is_empty(), "select_parent on empty history");
+        // Rank ascending by accuracy: best gets the largest weight.
+        let mut idx: Vec<usize> = (0..history.len()).collect();
+        idx.sort_by(|&a, &b| {
+            history[a]
+                .accuracy
+                .partial_cmp(&history[b].accuracy)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let n = history.len();
+        let weights: Vec<f64> = (0..n)
+            .map(|rank| (self.rank_beta * rank as f64 / n.max(1) as f64).exp())
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = rng.gen_range_f64(0.0, total);
+        for (rank, &i) in idx.iter().enumerate() {
+            u -= weights[rank];
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        *idx.last().unwrap()
+    }
+
+    /// Generate one child architecture from the history (the unit of work a
+    /// slave-node CPU performs before pushing into the buffer).
+    pub fn propose(
+        &self,
+        history: &[RankedModel],
+        rng: &mut Rng,
+    ) -> (Architecture, Option<Morph>) {
+        let parent = &history[self.select_parent(history, rng)].arch;
+        random_legal_morph(parent, &self.limits, rng, self.morph_tries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::derive;
+
+    fn history() -> Vec<RankedModel> {
+        let base = Architecture::initial(32, 3, 10);
+        (0..8)
+            .map(|i| RankedModel {
+                arch: base.clone(),
+                accuracy: 0.1 * i as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parent_selection_prefers_accurate() {
+        let policy = SearchPolicy {
+            rank_beta: 4.0,
+            ..Default::default()
+        };
+        let h = history();
+        let mut rng = derive(1, "search", 0);
+        let mut counts = vec![0usize; h.len()];
+        for _ in 0..4000 {
+            counts[policy.select_parent(&h, &mut rng)] += 1;
+        }
+        // Best model (idx 7, acc 0.7) must be chosen far more often than
+        // the worst (idx 0, acc 0.0).
+        assert!(counts[7] > counts[0] * 3, "{counts:?}");
+    }
+
+    #[test]
+    fn uniform_at_zero_beta() {
+        let policy = SearchPolicy {
+            rank_beta: 0.0,
+            ..Default::default()
+        };
+        let h = history();
+        let mut rng = derive(2, "search", 1);
+        let mut counts = vec![0usize; h.len()];
+        for _ in 0..8000 {
+            counts[policy.select_parent(&h, &mut rng)] += 1;
+        }
+        let expect = 8000.0 / 8.0;
+        for c in &counts {
+            assert!((*c as f64 - expect).abs() < expect * 0.25, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn propose_yields_valid_children() {
+        let policy = SearchPolicy::default();
+        let h = history();
+        let mut rng = derive(3, "search", 2);
+        for _ in 0..100 {
+            let (child, _) = policy.propose(&h, &mut rng);
+            child.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn propose_is_deterministic_per_seed() {
+        let policy = SearchPolicy::default();
+        let h = history();
+        let a = policy.propose(&h, &mut derive(9, "s", 0));
+        let b = policy.propose(&h, &mut derive(9, "s", 0));
+        assert_eq!(a.0.signature(), b.0.signature());
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_history_panics() {
+        let policy = SearchPolicy::default();
+        policy.select_parent(&[], &mut derive(0, "s", 0));
+    }
+}

@@ -1,0 +1,126 @@
+//! Logarithmic accuracy prediction (paper Appendix C / Fig 8).
+//!
+//! During warm-up, models train only 10–70 epochs while ImageNet typically
+//! converges after ~60; the framework must rank them anyway. The paper
+//! fits `acc(e) = a + b·ln(e)` by ordinary least squares over the partial
+//! curve, estimates the goodness of fit with RMSE, and predicts the
+//! achievable accuracy at the convergence epoch *minus twice the RMSE*
+//! ("a conservative prediction").
+
+
+use crate::util::stats::{ols, rmse};
+
+/// The fitted curve with its fit quality.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogFit {
+    /// acc(e) = a + b·ln(e)
+    pub a: f64,
+    pub b: f64,
+    pub rmse: f64,
+}
+
+impl LogFit {
+    /// Fit to (epoch, accuracy) pairs. Needs ≥ 2 points, epochs ≥ 1.
+    pub fn fit(epochs: &[f64], accs: &[f64]) -> LogFit {
+        assert_eq!(epochs.len(), accs.len());
+        assert!(epochs.len() >= 2, "log fit needs at least two points");
+        assert!(epochs.iter().all(|&e| e >= 1.0), "epochs must be >= 1");
+        let xs: Vec<f64> = epochs.iter().map(|e| e.ln()).collect();
+        let (a, b) = ols(&xs, accs);
+        let pred: Vec<f64> = xs.iter().map(|x| a + b * x).collect();
+        LogFit {
+            a,
+            b,
+            rmse: rmse(&pred, accs),
+        }
+    }
+
+    /// Curve value at an epoch.
+    pub fn at(&self, epoch: f64) -> f64 {
+        assert!(epoch >= 1.0);
+        self.a + self.b * epoch.ln()
+    }
+
+    /// Conservative prediction: value at `target_epoch` − 2·RMSE, clamped
+    /// to [0, 1].
+    pub fn conservative(&self, target_epoch: f64) -> f64 {
+        (self.at(target_epoch) - 2.0 * self.rmse).clamp(0.0, 1.0)
+    }
+}
+
+/// One-shot helper: the paper's exact procedure (predict at epoch 60).
+pub fn predict_accuracy(epochs: &[f64], accs: &[f64]) -> f64 {
+    LogFit::fit(epochs, accs).conservative(60.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Generate a noiseless logarithmic curve.
+    fn curve(a: f64, b: f64, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let epochs: Vec<f64> = (1..=n).map(|e| e as f64).collect();
+        let accs = epochs.iter().map(|e| a + b * e.ln()).collect();
+        (epochs, accs)
+    }
+
+    #[test]
+    fn recovers_exact_log_curve() {
+        let (e, acc) = curve(0.3, 0.08, 20);
+        let fit = LogFit::fit(&e, &acc);
+        assert!((fit.a - 0.3).abs() < 1e-10);
+        assert!((fit.b - 0.08).abs() < 1e-10);
+        assert!(fit.rmse < 1e-10);
+        assert!((fit.at(60.0) - (0.3 + 0.08 * 60f64.ln())).abs() < 1e-10);
+    }
+
+    #[test]
+    fn conservative_is_below_fit_under_noise() {
+        let mut rng = crate::util::rng::derive(0, "logfit", 0);
+        let (e, acc) = curve(0.3, 0.08, 30);
+        let noisy: Vec<f64> = acc.iter().map(|a| a + rng.gen_range_f64(-0.02, 0.02)).collect();
+        let fit = LogFit::fit(&e, &noisy);
+        assert!(fit.rmse > 0.0);
+        assert!(fit.conservative(60.0) < fit.at(60.0));
+        // Still in the right ballpark (±0.08 of the true value).
+        let truth = 0.3 + 0.08 * 60f64.ln();
+        assert!((fit.conservative(60.0) - truth).abs() < 0.08);
+    }
+
+    #[test]
+    fn prediction_clamped_to_unit_interval() {
+        let fit = LogFit {
+            a: 0.9,
+            b: 0.2,
+            rmse: 0.0,
+        };
+        assert_eq!(fit.conservative(60.0), 1.0);
+        let low = LogFit {
+            a: 0.0,
+            b: 0.0,
+            rmse: 0.5,
+        };
+        assert_eq!(low.conservative(60.0), 0.0);
+    }
+
+    #[test]
+    fn helper_matches_manual() {
+        let (e, acc) = curve(0.2, 0.1, 10);
+        let p = predict_accuracy(&e, &acc);
+        let fit = LogFit::fit(&e, &acc);
+        assert_eq!(p, fit.conservative(60.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_single_point() {
+        LogFit::fit(&[5.0], &[0.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_epoch_zero() {
+        LogFit::fit(&[0.0, 1.0], &[0.1, 0.2]);
+    }
+}

@@ -1,0 +1,5 @@
+//! Accuracy prediction for insufficiently trained models (Appendix C).
+
+pub mod logfit;
+
+pub use logfit::{predict_accuracy, LogFit};

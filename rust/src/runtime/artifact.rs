@@ -1,0 +1,278 @@
+//! Artifact manifest — the ABI between `python/compile/aot.py` and rust.
+//!
+//! Parsed with the in-tree JSON codec (util::json); field-by-field
+//! extraction keeps schema errors precise ("variant 2: missing `files`").
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter slot (ordered).
+#[derive(Debug, Clone)]
+pub struct ParamSlot {
+    pub name: String,
+    pub shape: Vec<i64>,
+}
+
+impl ParamSlot {
+    pub fn elems(&self) -> i64 {
+        self.shape.iter().product::<i64>().max(1)
+    }
+}
+
+/// File names per function kind.
+#[derive(Debug, Clone)]
+pub struct VariantFiles {
+    pub init: String,
+    pub train: String,
+    pub eval: String,
+}
+
+/// One compiled architecture variant.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub depth: u64,
+    pub width: u64,
+    pub kernel: u64,
+    pub image: u64,
+    pub channels: u64,
+    pub num_classes: u64,
+    pub batch: u64,
+    pub seed: u64,
+    pub params: Vec<ParamSlot>,
+    pub files: VariantFiles,
+}
+
+impl Variant {
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_param_elems(&self) -> i64 {
+        self.params.iter().map(ParamSlot::elems).sum()
+    }
+}
+
+/// artifacts/manifest.json root.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub schema: u64,
+    pub default_variant: String,
+    pub variants: Vec<Variant>,
+    pub dir: PathBuf,
+}
+
+fn req<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a Json> {
+    j.get(key)
+        .with_context(|| format!("{ctx}: missing `{key}`"))
+}
+
+fn req_str(j: &Json, key: &str, ctx: &str) -> Result<String> {
+    Ok(req(j, key, ctx)?
+        .as_str()
+        .with_context(|| format!("{ctx}: `{key}` is not a string"))?
+        .to_string())
+}
+
+fn req_u64(j: &Json, key: &str, ctx: &str) -> Result<u64> {
+    req(j, key, ctx)?
+        .as_u64()
+        .with_context(|| format!("{ctx}: `{key}` is not an integer"))
+}
+
+fn parse_variant(j: &Json, idx: usize) -> Result<Variant> {
+    let ctx = format!("variant {idx}");
+    let params = req(j, "params", &ctx)?
+        .as_arr()
+        .with_context(|| format!("{ctx}: `params` is not an array"))?
+        .iter()
+        .enumerate()
+        .map(|(pi, p)| {
+            let pctx = format!("{ctx} param {pi}");
+            let shape = req(p, "shape", &pctx)?
+                .as_arr()
+                .with_context(|| format!("{pctx}: `shape` not an array"))?
+                .iter()
+                .map(|d| {
+                    d.as_i64()
+                        .with_context(|| format!("{pctx}: non-integer dim"))
+                })
+                .collect::<Result<Vec<i64>>>()?;
+            Ok(ParamSlot {
+                name: req_str(p, "name", &pctx)?,
+                shape,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let files = req(j, "files", &ctx)?;
+    Ok(Variant {
+        name: req_str(j, "name", &ctx)?,
+        depth: req_u64(j, "depth", &ctx)?,
+        width: req_u64(j, "width", &ctx)?,
+        kernel: req_u64(j, "kernel", &ctx)?,
+        image: req_u64(j, "image", &ctx)?,
+        channels: req_u64(j, "channels", &ctx)?,
+        num_classes: req_u64(j, "num_classes", &ctx)?,
+        batch: req_u64(j, "batch", &ctx)?,
+        seed: req_u64(j, "seed", &ctx)?,
+        params,
+        files: VariantFiles {
+            init: req_str(files, "init", &ctx)?,
+            train: req_str(files, "train", &ctx)?,
+            eval: req_str(files, "eval", &ctx)?,
+        },
+    })
+}
+
+impl Manifest {
+    /// Load from `artifacts/manifest.json` under `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let schema = req_u64(&j, "schema", "manifest")?;
+        anyhow::ensure!(schema == 1, "unsupported manifest schema {schema}");
+        let variants = req(&j, "variants", "manifest")?
+            .as_arr()
+            .context("manifest: `variants` is not an array")?
+            .iter()
+            .enumerate()
+            .map(|(i, v)| parse_variant(v, i))
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!variants.is_empty(), "manifest has no variants");
+        let default_variant = req_str(&j, "default_variant", "manifest")?;
+        anyhow::ensure!(
+            variants.iter().any(|v| v.name == default_variant),
+            "default variant {default_variant} not among variants"
+        );
+        Ok(Manifest {
+            schema,
+            default_variant,
+            variants,
+            dir,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    pub fn default_variant(&self) -> &Variant {
+        self.variant(&self.default_variant)
+            .expect("default variant present")
+    }
+
+    /// Pick the variant closest in capacity to (depth, width) — the
+    /// projection used when mapping a morphed architecture onto the
+    /// compiled grid (DESIGN.md §3).
+    pub fn nearest_variant(&self, depth: u64, width: u64) -> &Variant {
+        self.variants
+            .iter()
+            .min_by_key(|v| {
+                let dd = v.depth.abs_diff(depth);
+                let dw = v.width.abs_diff(width);
+                dd * 100 + dw
+            })
+            .expect("non-empty variants")
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn manifest_json() -> &'static str {
+        r#"{
+          "schema": 1,
+          "default_variant": "d2w8k3i16b32",
+          "variants": [
+            {"name":"d2w8k3i16b32","depth":2,"width":8,"kernel":3,"image":16,
+             "channels":3,"num_classes":10,"batch":32,"seed":0,
+             "params":[{"name":"stem/conv","shape":[3,3,3,8]},
+                        {"name":"stem/bn_scale","shape":[8]}],
+             "files":{"init":"i.hlo.txt","train":"t.hlo.txt","eval":"e.hlo.txt"}},
+            {"name":"d4w16k3i16b32","depth":4,"width":16,"kernel":3,"image":16,
+             "channels":3,"num_classes":10,"batch":32,"seed":0,
+             "params":[{"name":"stem/conv","shape":[3,3,3,16]}],
+             "files":{"init":"i2.hlo.txt","train":"t2.hlo.txt","eval":"e2.hlo.txt"}}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn parse_and_lookup() {
+        let dir = TempDir::new("manifest").unwrap();
+        std::fs::write(dir.path().join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.default_variant().name, "d2w8k3i16b32");
+        assert!(m.variant("nope").is_none());
+        assert_eq!(m.variant("d4w16k3i16b32").unwrap().width, 16);
+        assert_eq!(m.variants[0].params[0].shape, vec![3, 3, 3, 8]);
+        assert_eq!(m.variants[0].total_param_elems(), 216 + 8);
+    }
+
+    #[test]
+    fn param_slot_math() {
+        let s = ParamSlot {
+            name: "w".into(),
+            shape: vec![3, 3, 3, 8],
+        };
+        assert_eq!(s.elems(), 216);
+        let scalar = ParamSlot {
+            name: "s".into(),
+            shape: vec![],
+        };
+        assert_eq!(scalar.elems(), 1);
+    }
+
+    #[test]
+    fn nearest_variant_projection() {
+        let dir = TempDir::new("manifest").unwrap();
+        std::fs::write(dir.path().join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.nearest_variant(2, 8).name, "d2w8k3i16b32");
+        assert_eq!(m.nearest_variant(5, 20).name, "d4w16k3i16b32");
+        assert_eq!(m.nearest_variant(3, 8).name, "d2w8k3i16b32");
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let dir = TempDir::new("manifest").unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn schema_and_field_errors() {
+        let dir = TempDir::new("manifest").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"schema": 2, "default_variant": "x", "variants": []}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(dir.path())
+            .unwrap_err()
+            .to_string()
+            .contains("schema"));
+
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"schema": 1, "default_variant": "x",
+                "variants": [{"name": "x", "depth": 1}]}"#,
+        )
+        .unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("variant 0"), "{err}");
+    }
+}

@@ -1,0 +1,97 @@
+//! PJRT client wrapper with a compile cache.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute` (the /opt/xla-example/load_hlo pattern).
+//! Compilation is the expensive step, so executables are cached per path:
+//! one compiled executable per model variant, reused across the whole run
+//! (the paper's slaves likewise build each candidate's graph once).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO program.
+pub struct Executable {
+    inner: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (aot.py lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .inner
+            .execute::<xla::Literal>(inputs)
+            .context("PJRT execution failed")?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("device→host transfer failed")?;
+        lit.to_tuple().context("output is not a tuple")
+    }
+}
+
+/// CPU PJRT runtime with per-path executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached).
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<std::rc::Rc<Executable>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(e) = self.cache.get(&path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        let exe = std::rc::Rc::new(Executable { inner: exe });
+        self.cache.insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of cached executables (perf accounting).
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in rust/tests/runtime_e2e.rs
+    // (they require `make artifacts` to have run). Here: path hygiene only.
+    use super::*;
+
+    #[test]
+    fn load_missing_file_errors() {
+        let mut rt = Runtime::cpu().unwrap();
+        let err = rt.load("/nonexistent/foo.hlo.txt");
+        assert!(err.is_err());
+        assert_eq!(rt.cache_len(), 0);
+    }
+
+    #[test]
+    fn platform_is_cpu() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+    }
+}

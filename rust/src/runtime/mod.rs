@@ -1,0 +1,22 @@
+//! PJRT runtime — executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs ONCE at build time (`make artifacts`); this module makes the
+//! rust binary self-contained afterwards: it loads `artifacts/*.hlo.txt`
+//! (HLO **text** — the jax≥0.5 / xla_extension-0.5.1-safe interchange, see
+//! python/compile/aot.py), compiles each on the PJRT CPU client, and runs
+//! train/eval steps from the coordinator's hot path with no Python in
+//! sight.
+//!
+//! * [`artifact`] — manifest parsing + artifact registry;
+//! * [`client`] — the `xla` crate wrapper: text → executable, with a
+//!   compile cache (one compiled executable per model variant);
+//! * [`trainer`] — stateful trainer: parameter/momentum literals threaded
+//!   through repeated train-step executions.
+
+pub mod artifact;
+pub mod client;
+pub mod trainer;
+
+pub use artifact::{Manifest, Variant};
+pub use client::Runtime;
+pub use trainer::Trainer;

@@ -1,0 +1,148 @@
+//! Stateful trainer over one compiled variant.
+//!
+//! Holds parameter + momentum literals and threads them through repeated
+//! executions of the AOT train step:
+//!
+//!   train(*params, *moms, x, y, lr) → (*params', *moms', loss)
+//!
+//! matching python/compile/aot.py's flat ABI (manifest records the slot
+//! order). All tensors are f32; labels are i32.
+
+use anyhow::{Context, Result};
+
+use super::artifact::{Manifest, Variant};
+use super::client::Runtime;
+use crate::data::synthetic::SyntheticDataset;
+
+/// One variant's trainer.
+pub struct Trainer {
+    pub variant: Variant,
+    train_exe: std::rc::Rc<super::client::Executable>,
+    eval_exe: std::rc::Rc<super::client::Executable>,
+    params: Vec<xla::Literal>,
+    moms: Vec<xla::Literal>,
+    pub steps_done: u64,
+}
+
+impl Trainer {
+    /// Build from the manifest: compiles init/train/eval and runs init to
+    /// materialize the He-initialized parameters.
+    pub fn new(rt: &mut Runtime, manifest: &Manifest, variant_name: &str) -> Result<Self> {
+        let variant = manifest
+            .variant(variant_name)
+            .with_context(|| format!("unknown variant {variant_name}"))?
+            .clone();
+        let init_exe = rt.load(manifest.hlo_path(&variant.files.init))?;
+        let train_exe = rt.load(manifest.hlo_path(&variant.files.train))?;
+        let eval_exe = rt.load(manifest.hlo_path(&variant.files.eval))?;
+
+        let params = init_exe.run(&[])?;
+        anyhow::ensure!(
+            params.len() == variant.num_params(),
+            "init returned {} params, manifest says {}",
+            params.len(),
+            variant.num_params()
+        );
+        let moms = variant
+            .params
+            .iter()
+            .map(|slot| {
+                let zeros = vec![0f32; slot.elems() as usize];
+                xla::Literal::vec1(&zeros)
+                    .reshape(&slot.shape)
+                    .context("zero momentum literal")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trainer {
+            variant,
+            train_exe,
+            eval_exe,
+            params,
+            moms,
+            steps_done: 0,
+        })
+    }
+
+    fn batch_literals(&self, xs: &[f32], ys: &[i32]) -> Result<(xla::Literal, xla::Literal)> {
+        let v = &self.variant;
+        let b = v.batch as i64;
+        anyhow::ensure!(
+            xs.len() as i64 == b * v.image as i64 * v.image as i64 * v.channels as i64,
+            "bad batch pixel count"
+        );
+        anyhow::ensure!(ys.len() as i64 == b, "bad label count");
+        let x = xla::Literal::vec1(xs).reshape(&[
+            b,
+            v.image as i64,
+            v.image as i64,
+            v.channels as i64,
+        ])?;
+        let y = xla::Literal::vec1(ys).reshape(&[b])?;
+        Ok((x, y))
+    }
+
+    /// One SGD-momentum step; returns the training loss.
+    pub fn train_step(&mut self, xs: &[f32], ys: &[i32], lr: f32) -> Result<f32> {
+        let (x, y) = self.batch_literals(xs, ys)?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 * self.params.len() + 3);
+        // Flat ABI: params…, moms…, x, y, lr. Literals move into the call;
+        // the outputs become the new state.
+        inputs.extend(self.params.drain(..));
+        inputs.extend(self.moms.drain(..));
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(xla::Literal::scalar(lr));
+
+        let mut out = self.train_exe.run(&inputs)?;
+        let n = self.variant.num_params();
+        anyhow::ensure!(out.len() == 2 * n + 1, "train step arity mismatch");
+        let loss_lit = out.pop().unwrap();
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        self.moms = out.split_off(n);
+        self.params = out;
+        self.steps_done += 1;
+        Ok(loss)
+    }
+
+    /// (loss, accuracy) on one validation batch.
+    pub fn eval_step(&self, xs: &[f32], ys: &[i32]) -> Result<(f32, f32)> {
+        let (x, y) = self.batch_literals(xs, ys)?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+        for p in &self.params {
+            // Literal has no Clone; round-trip through host data.
+            inputs.push(clone_literal(p)?);
+        }
+        inputs.push(x);
+        inputs.push(y);
+        let out = self.eval_exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "eval step arity mismatch");
+        Ok((out[0].to_vec::<f32>()?[0], out[1].to_vec::<f32>()?[0]))
+    }
+
+    /// Evaluate over `batches` consecutive validation batches.
+    pub fn evaluate(
+        &self,
+        data: &SyntheticDataset,
+        start_index: u64,
+        batches: u64,
+    ) -> Result<(f32, f32)> {
+        let mut loss = 0f32;
+        let mut acc = 0f32;
+        let b = self.variant.batch as usize;
+        for i in 0..batches {
+            let (xs, ys) = data.batch(start_index + i * b as u64, b);
+            let (l, a) = self.eval_step(&xs, &ys)?;
+            loss += l;
+            acc += a;
+        }
+        Ok((loss / batches as f32, acc / batches as f32))
+    }
+}
+
+/// Clone a literal via host round-trip (f32 tensors only).
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    let data = l.to_vec::<f32>()?;
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}

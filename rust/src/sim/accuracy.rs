@@ -1,0 +1,241 @@
+//! Learning-curve accuracy surrogate (DESIGN.md §2 substitution).
+//!
+//! The paper measures real ImageNet validation accuracy of every candidate;
+//! training 90-epoch ImageNet runs is a hardware/data gate here, so the
+//! simulate path models accuracy with a capacity-aware saturating learning
+//! curve:
+//!
+//!   ceiling(P, hp) = base + gain·(1 − e^(−P/P₀)) − overfit(P) − hpo(hp)
+//!   acc(e)         = ceiling · (1 − e^(−e/τ)) + ε(arch, hp, e)
+//!
+//! Shape guarantees (what Figs 5/7 need): monotone saturating in epochs;
+//! increasing in capacity until an overfit knee; a unique optimum in the
+//! HPO space at (dropout 0.45, kernel 3) so TPE has something to find; and
+//! deterministic per-(architecture, hyperparameter, seed) noise so early
+//! stopping and reproducibility behave like a real run. Calibrated so the
+//! best reachable error ≈ 22–28 % at 90 epochs — the paper's Fig 5 band
+//! (and under its 35 % validity threshold), with early morphs in the
+//! 45–70 % range.
+//!
+//! The *real* accuracy path exists too: `examples/train_e2e.rs` trains the
+//! compiled L2/L1 artifacts on the synthetic corpus via PJRT.
+
+
+use crate::util::rng::splitmix64;
+
+/// Hyperparameters the surrogate is sensitive to (the paper's HPO group 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HpPoint {
+    pub dropout: f64,
+    pub kernel: f64,
+}
+
+impl Default for HpPoint {
+    fn default() -> Self {
+        // Pre-HPO defaults used during warm-up rounds.
+        HpPoint {
+            dropout: 0.5,
+            kernel: 3.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracySurrogate {
+    pub seed: u64,
+    /// Accuracy floor of a barely-trained tiny model.
+    pub base: f64,
+    /// Capacity gain ceiling.
+    pub gain: f64,
+    /// Capacity scale (parameters) of the saturating gain.
+    pub p0: f64,
+    /// Overfit knee: parameters beyond which quality degrades (log10 slope).
+    pub overfit_knee: f64,
+    pub overfit_slope: f64,
+    /// Learning-curve time constant, epochs.
+    pub tau: f64,
+    /// Per-epoch noise amplitude.
+    pub noise: f64,
+}
+
+impl Default for AccuracySurrogate {
+    fn default() -> Self {
+        AccuracySurrogate {
+            seed: 0,
+            base: 0.30,
+            gain: 0.48,
+            p0: 3.0e6,
+            overfit_knee: 3.0e7,
+            overfit_slope: 0.06,
+            tau: 20.0,
+            noise: 0.004,
+        }
+    }
+}
+
+impl AccuracySurrogate {
+    /// HPO penalty: quadratic bowls around the optimum (0.45, 3).
+    fn hpo_penalty(hp: &HpPoint) -> f64 {
+        0.35 * (hp.dropout - 0.45).powi(2) + 0.012 * (hp.kernel - 3.0).powi(2)
+    }
+
+    /// Converged accuracy ceiling for an architecture + hyperparameters.
+    pub fn ceiling(&self, params: u64, hp: &HpPoint) -> f64 {
+        let p = params.max(1) as f64;
+        let capacity = self.base + self.gain * (1.0 - (-p / self.p0).exp());
+        let overfit = if p > self.overfit_knee {
+            self.overfit_slope * (p / self.overfit_knee).log10()
+        } else {
+            0.0
+        };
+        (capacity - overfit - Self::hpo_penalty(hp)).clamp(0.01, 0.99)
+    }
+
+    /// Deterministic noise for (architecture id, hp, epoch).
+    fn eps(&self, arch_id: u64, hp: &HpPoint, epoch: u64) -> f64 {
+        let h = splitmix64(
+            self.seed
+                ^ splitmix64(arch_id)
+                ^ splitmix64((hp.dropout * 1e6) as u64)
+                ^ splitmix64((hp.kernel * 1e3) as u64)
+                ^ splitmix64(epoch.wrapping_mul(0x9E37)),
+        );
+        // Uniform in [-noise, +noise].
+        ((h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) * self.noise
+    }
+
+    /// Validation accuracy after `epoch` epochs of training.
+    ///
+    /// `arch_id` is a stable hash of the architecture (noise stream key).
+    pub fn accuracy(&self, arch_id: u64, params: u64, hp: &HpPoint, epoch: u64) -> f64 {
+        assert!(epoch >= 1);
+        let c = self.ceiling(params, hp);
+        let curve = c * (1.0 - (-(epoch as f64) / self.tau).exp());
+        (curve + self.eps(arch_id, hp, epoch)).clamp(0.001, 0.999)
+    }
+
+    /// Validation error (1 − accuracy), the paper's Fig 5 quantity.
+    pub fn error(&self, arch_id: u64, params: u64, hp: &HpPoint, epoch: u64) -> f64 {
+        1.0 - self.accuracy(arch_id, params, hp, epoch)
+    }
+}
+
+/// Stable architecture id from its signature string.
+pub fn arch_id(signature: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64; // FNV offset
+    for b in signature.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    splitmix64(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sur() -> AccuracySurrogate {
+        AccuracySurrogate::default()
+    }
+
+    #[test]
+    fn monotone_saturating_in_epochs() {
+        let s = sur();
+        let hp = HpPoint::default();
+        let mut prev = 0.0;
+        for e in [1u64, 5, 10, 20, 40, 90] {
+            // Smooth component only (strip noise by averaging ids).
+            let a: f64 = (0..64)
+                .map(|i| s.accuracy(i, 25_000_000, &hp, e))
+                .sum::<f64>()
+                / 64.0;
+            assert!(a > prev - 0.002, "epoch {e}: {a} < {prev}");
+            prev = a;
+        }
+        // 90-epoch value close to the ceiling.
+        let c = s.ceiling(25_000_000, &hp);
+        assert!((prev - c).abs() < 0.02);
+    }
+
+    #[test]
+    fn capacity_helps_until_overfit() {
+        let s = sur();
+        let hp = HpPoint::default();
+        let small = s.ceiling(50_000, &hp);
+        let mid = s.ceiling(25_000_000, &hp);
+        let huge = s.ceiling(500_000_000, &hp);
+        assert!(small < mid);
+        assert!(huge < mid);
+    }
+
+    #[test]
+    fn best_error_in_paper_band() {
+        // Best reachable error at 90 epochs with optimal HPO: 20–30 %.
+        let s = sur();
+        let hp = HpPoint {
+            dropout: 0.45,
+            kernel: 3.0,
+        };
+        let err = s.error(1, 28_000_000, &hp, 90);
+        assert!((0.18..0.30).contains(&err), "err={err}");
+        // And it satisfies the paper's 35 % validity requirement.
+        assert!(err < 0.35);
+    }
+
+    #[test]
+    fn early_models_much_worse() {
+        let s = sur();
+        let hp = HpPoint::default();
+        let err = s.error(2, 60_000, &hp, 10);
+        assert!(err > 0.45, "err={err}");
+    }
+
+    #[test]
+    fn hpo_optimum_at_paper_point() {
+        let s = sur();
+        let best = s.ceiling(
+            25_000_000,
+            &HpPoint {
+                dropout: 0.45,
+                kernel: 3.0,
+            },
+        );
+        for (d, k) in [(0.2, 3.0), (0.8, 3.0), (0.45, 5.0), (0.45, 2.0)] {
+            let c = s.ceiling(25_000_000, &HpPoint { dropout: d, kernel: k });
+            assert!(c < best, "({d},{k}) not worse than optimum");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_inputs() {
+        let s = sur();
+        let hp = HpPoint::default();
+        assert_eq!(
+            s.accuracy(7, 1_000_000, &hp, 30),
+            s.accuracy(7, 1_000_000, &hp, 30)
+        );
+        let s2 = AccuracySurrogate { seed: 1, ..sur() };
+        assert_ne!(
+            s.accuracy(7, 1_000_000, &hp, 30),
+            s2.accuracy(7, 1_000_000, &hp, 30)
+        );
+    }
+
+    #[test]
+    fn noise_bounded() {
+        let s = sur();
+        let hp = HpPoint::default();
+        for id in 0..200u64 {
+            let a = s.accuracy(id, 25_000_000, &hp, 90);
+            let c = s.ceiling(25_000_000, &hp);
+            let clean = c * (1.0 - (-90.0f64 / s.tau).exp());
+            assert!((a - clean).abs() <= s.noise + 1e-12);
+        }
+    }
+
+    #[test]
+    fn arch_id_stable_and_distinct() {
+        assert_eq!(arch_id("16x2p-32x2p"), arch_id("16x2p-32x2p"));
+        assert_ne!(arch_id("16x2p-32x2p"), arch_id("16x3p-32x2p"));
+    }
+}

@@ -1,0 +1,174 @@
+//! Deterministic discrete-event queue.
+//!
+//! A minimal DES core: events carry an `f64` timestamp; `pop` yields them
+//! in time order with FIFO tie-breaking (a monotone sequence number), so
+//! simulations are bit-reproducible regardless of insertion pattern.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Time-ordered event queue.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+        }
+    }
+
+    /// Current simulation time (the timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `t`. Scheduling in the past is a
+    /// logic error.
+    pub fn schedule(&mut self, t: f64, event: E) {
+        assert!(
+            t >= self.now,
+            "cannot schedule into the past: {t} < {}",
+            self.now
+        );
+        assert!(t.is_finite(), "non-finite event time");
+        self.heap.push(Entry {
+            time: t,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule relative to now.
+    pub fn schedule_in(&mut self, dt: f64, event: E) {
+        assert!(dt >= 0.0);
+        self.schedule(self.now + dt, event);
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| {
+            self.now = e.time;
+            (e.time, e.event)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (2.0, "b"));
+        assert_eq!(q.pop().unwrap(), (3.0, "c"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_within_timestamp() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, ());
+        q.schedule(2.0, ());
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(q.now(), t1);
+        q.schedule_in(0.5, ());
+        let (t2, _) = q.pop().unwrap();
+        assert_eq!(t2, 2.5);
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t3, 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_past_scheduling() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, ());
+        q.pop();
+        q.schedule(1.0, ());
+    }
+
+    #[test]
+    fn interleaved_schedule_pop_deterministic() {
+        let run = || {
+            let mut q = EventQueue::new();
+            let mut order = Vec::new();
+            q.schedule(1.0, 10);
+            q.schedule(4.0, 40);
+            while let Some((t, e)) = q.pop() {
+                order.push(e);
+                if e == 10 {
+                    q.schedule(t + 1.0, 20);
+                    q.schedule(t + 1.0, 21);
+                }
+            }
+            order
+        };
+        assert_eq!(run(), vec![10, 20, 21, 40]);
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,17 @@
+//! Discrete-event simulation substrate.
+//!
+//! * [`engine`] — a generic deterministic event queue (time-ordered, FIFO
+//!   within a timestamp);
+//! * [`timing`] — the data-parallel training-time model composing GPU,
+//!   network and NFS costs into per-epoch durations;
+//! * [`accuracy`] — the learning-curve surrogate standing in for real
+//!   ImageNet validation accuracy (DESIGN.md §2 substitution; the *real*
+//!   accuracy path is `examples/train_e2e.rs` at toy scale).
+
+pub mod accuracy;
+pub mod engine;
+pub mod timing;
+
+pub use accuracy::AccuracySurrogate;
+pub use engine::EventQueue;
+pub use timing::TimingModel;

@@ -1,0 +1,143 @@
+//! Data-parallel training-time model (paper §4.3).
+//!
+//! Composes the substrate models into per-epoch durations for one slave
+//! node training one candidate with synchronous data parallelism
+//! (MirroredStrategy across the node's 8 GPUs):
+//!
+//!   step  = max(compute(batch/gpu), input_pipeline) + allreduce(params)
+//!   epoch = ceil(images / global_batch) · step
+//!
+//! The input pipeline is pipelined with compute (prefetching), so only the
+//! slower of the two bounds the step; gradient sync is serialized after
+//! compute (the synchronous strategy of §4.3).
+
+
+use crate::cluster::{GpuModel, NetworkModel, NfsModel, NodeModel};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingModel {
+    pub node: NodeModel,
+    pub network: NetworkModel,
+    pub nfs: NfsModel,
+    /// Decoded bytes per training image (224² RGB fp16 + label overhead).
+    pub bytes_per_image: u64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        TimingModel {
+            node: NodeModel::default(),
+            network: NetworkModel::default(),
+            nfs: NfsModel::default(),
+            bytes_per_image: 150_000,
+        }
+    }
+}
+
+/// Per-epoch timing breakdown (for telemetry and the perf report).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EpochTiming {
+    pub steps: u64,
+    pub compute_s: f64,
+    pub input_s: f64,
+    pub allreduce_s: f64,
+    pub total_s: f64,
+    /// Fraction of wall time the GPUs spend computing (telemetry basis).
+    pub gpu_busy_fraction: f64,
+}
+
+impl TimingModel {
+    pub fn gpu(&self) -> &GpuModel {
+        &self.node.gpu
+    }
+
+    /// Duration of one training epoch of `images` images for a model with
+    /// `ops_per_image` (train FP+BP) and `params` parameters, at
+    /// `batch_per_gpu`, on this node.
+    pub fn epoch(&self, ops_per_image: u64, params: u64, images: u64, batch_per_gpu: u64) -> EpochTiming {
+        let gpus = self.node.gpus_per_node;
+        let global_batch = batch_per_gpu * gpus;
+        let steps = images.div_ceil(global_batch).max(1);
+
+        let compute_step = self.node.gpu.step_seconds(ops_per_image, batch_per_gpu);
+        let input_step = self
+            .nfs
+            .epoch_input_seconds(global_batch, self.bytes_per_image, gpus);
+        let sync_step = self.network.gradient_sync_seconds(gpus, params, false);
+
+        let step = compute_step.max(input_step) + sync_step;
+        let total = step * steps as f64;
+        EpochTiming {
+            steps,
+            compute_s: compute_step * steps as f64,
+            input_s: input_step * steps as f64,
+            allreduce_s: sync_step * steps as f64,
+            total_s: total,
+            gpu_busy_fraction: (compute_step / step).min(1.0),
+        }
+    }
+
+    /// Duration of one validation epoch (forward only, no sync).
+    pub fn validation(&self, fp_per_image: u64, images: u64, batch_per_gpu: u64) -> f64 {
+        let gpus = self.node.gpus_per_node;
+        let global_batch = batch_per_gpu * gpus;
+        let steps = images.div_ceil(global_batch).max(1);
+        self.node.gpu.step_seconds(fp_per_image, batch_per_gpu) * steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RESNET_TRAIN_OPS: u64 = 23_100_000_000;
+    const RESNET_FP_OPS: u64 = 7_810_000_000;
+    const RESNET_PARAMS: u64 = 25_600_000;
+
+    #[test]
+    fn imagenet_epoch_duration_plausible() {
+        // 8 V100s, batch 448/GPU: published ResNet-50 epochs are ~4–10 min.
+        let t = TimingModel::default();
+        let e = t.epoch(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 448);
+        assert!(
+            (120.0..900.0).contains(&e.total_s),
+            "epoch={}s",
+            e.total_s
+        );
+    }
+
+    #[test]
+    fn gpu_busy_fraction_high_at_large_batch() {
+        let t = TimingModel::default();
+        let e = t.epoch(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 448);
+        assert!(e.gpu_busy_fraction > 0.85, "{}", e.gpu_busy_fraction);
+        let small = t.epoch(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 8);
+        assert!(small.gpu_busy_fraction < e.gpu_busy_fraction);
+    }
+
+    #[test]
+    fn validation_cheaper_than_training() {
+        let t = TimingModel::default();
+        let e = t.epoch(RESNET_TRAIN_OPS, RESNET_PARAMS, 50_000, 448);
+        let v = t.validation(RESNET_FP_OPS, 50_000, 448);
+        assert!(v < e.total_s);
+    }
+
+    #[test]
+    fn steps_round_up() {
+        let t = TimingModel::default();
+        // 100 images, global batch 8×448 → 1 step.
+        let e = t.epoch(RESNET_TRAIN_OPS, RESNET_PARAMS, 100, 448);
+        assert_eq!(e.steps, 1);
+        let e2 = t.epoch(RESNET_TRAIN_OPS, RESNET_PARAMS, 3585, 448);
+        assert_eq!(e2.steps, 2);
+    }
+
+    #[test]
+    fn heavier_model_slower_epoch() {
+        let t = TimingModel::default();
+        let light = t.epoch(RESNET_TRAIN_OPS, RESNET_PARAMS, 100_000, 448);
+        let heavy = t.epoch(3 * RESNET_TRAIN_OPS, RESNET_PARAMS, 100_000, 448);
+        assert!(heavy.total_s > 2.0 * light.total_s);
+    }
+}

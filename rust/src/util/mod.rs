@@ -1,0 +1,7 @@
+//! Small shared utilities. The build is offline (crates restricted to the
+//! vendored set), so the RNG, JSON codec, and temp-dir helper live in-tree.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tmp;

@@ -1,0 +1,184 @@
+//! Deterministic in-tree RNG (the build is offline; `rand` is not
+//! vendored, so the generator lives here).
+//!
+//! Every stochastic component (NAS, HPO, accuracy surrogate, telemetry
+//! noise) derives an independent xoshiro256** stream from (benchmark seed,
+//! component label, counter). Runs are bit-reproducible for a fixed seed —
+//! the paper's "reproducible measurement, based on open rules" requirement.
+
+/// splitmix64 — also the python/rust shared dataset hash (see data module)
+/// and the seeding function of the xoshiro state.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** (Blackman & Vigna) with convenience sampling methods.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller draw.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        // SplitMix64 expansion, as recommended by the xoshiro authors.
+        let mut x = seed;
+        let mut s = [0u64; 4];
+        for v in &mut s {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            *v = splitmix64(x);
+        }
+        Rng {
+            s,
+            spare_normal: None,
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn gen_range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(hi >= lo, "empty range [{lo}, {hi})");
+        lo + (hi - lo) * self.gen_f64()
+    }
+
+    /// Uniform integer in [lo, hi) (Lemire-style rejection-free for our
+    /// non-cryptographic purposes: 128-bit multiply reduction).
+    pub fn gen_range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty range [{lo}, {hi})");
+        let span = (hi - lo) as u64;
+        let x = self.next_u64();
+        lo + (((x as u128 * span as u128) >> 64) as u64) as usize
+    }
+
+    /// Uniform u64 in [lo, hi).
+    pub fn gen_range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        let span = hi - lo;
+        let x = self.next_u64();
+        lo + ((x as u128 * span as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gen_normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u1 in (0,1] to avoid ln(0).
+        let u1 = 1.0 - self.gen_f64();
+        let u2 = self.gen_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with mean/stddev.
+    pub fn gen_normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gen_normal()
+    }
+
+    /// Bernoulli(p).
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+}
+
+/// Derive a named substream from a root seed.
+pub fn derive(seed: u64, label: &str, counter: u64) -> Rng {
+    let mut h = seed;
+    for b in label.bytes() {
+        h = splitmix64(h ^ u64::from(b));
+    }
+    h = splitmix64(h ^ counter);
+    Rng::seed_from_u64(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_golden_matches_python() {
+        // Same golden values pinned in python/tests/test_dataset.py.
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(1), 0x910A_2DEC_8902_5CC1);
+        assert_eq!(splitmix64(0xDEAD_BEEF), 0x4ADF_B90F_68C9_EB9B);
+    }
+
+    #[test]
+    fn derive_is_deterministic() {
+        assert_eq!(derive(7, "nas", 3).next_u64(), derive(7, "nas", 3).next_u64());
+    }
+
+    #[test]
+    fn derive_streams_independent() {
+        let a = derive(7, "nas", 3).next_u64();
+        let b = derive(7, "hpo", 3).next_u64();
+        let c = derive(7, "nas", 4).next_u64();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_in_bounds_and_covers() {
+        let mut r = derive(0, "t", 0);
+        let (mut lo, mut hi) = (1.0f64, 0.0f64);
+        for _ in 0..10_000 {
+            let x = r.gen_f64();
+            assert!((0.0..1.0).contains(&x));
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        assert!(lo < 0.01 && hi > 0.99);
+    }
+
+    #[test]
+    fn range_usize_uniformish() {
+        let mut r = derive(1, "t", 0);
+        let mut counts = [0usize; 8];
+        for _ in 0..16_000 {
+            counts[r.gen_range_usize(0, 8)] += 1;
+        }
+        for c in counts {
+            assert!((1600..2400).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = derive(2, "t", 0);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_int_range_panics() {
+        derive(0, "t", 0).gen_range_usize(3, 3);
+    }
+}

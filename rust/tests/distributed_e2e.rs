@@ -1,0 +1,82 @@
+//! Distributed master–slave runtime over real TCP (localhost).
+//!
+//! Spins a master server and N slave-worker threads, runs a bounded
+//! AutoML benchmark over the wire protocol, and checks the aggregated
+//! report: exactly-once trial accounting, history-driven search progress,
+//! and score consistency.
+
+use aiperf::distributed::{DistributedReport, MasterServer, SlaveWorker};
+
+fn run_cluster(slaves: u64, max_trials: u64, seed: u64) -> DistributedReport {
+    let master = MasterServer::bind(slaves, max_trials, 30.0).unwrap();
+    let addr = master.addr().unwrap();
+    let mut handles = Vec::new();
+    for node in 0..slaves {
+        let worker = SlaveWorker::new(node, seed);
+        handles.push(std::thread::spawn(move || worker.run(addr).unwrap()));
+    }
+    let report = master.serve().unwrap();
+    let completed: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(
+        completed,
+        report.trials.len() as u64,
+        "slave and master trial counts disagree"
+    );
+    report
+}
+
+#[test]
+fn cluster_completes_requested_trials() {
+    let r = run_cluster(4, 24, 0);
+    assert_eq!(r.trials.len(), 24);
+    assert_eq!(r.slaves, 4);
+    // Exactly-once: all trial ids distinct.
+    let mut ids: Vec<u64> = r.trials.iter().map(|t| t.trial).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 24);
+    // Every slave did work.
+    for node in 0..4 {
+        assert!(
+            r.trials.iter().any(|t| t.node == node),
+            "node {node} starved"
+        );
+    }
+}
+
+#[test]
+fn search_improves_over_trials() {
+    let r = run_cluster(2, 30, 1);
+    // Best error among the first third vs the whole run: history-driven
+    // morphism must find better architectures as the history grows.
+    let third = r.trials.len() / 3;
+    let early_best = r.trials[..third]
+        .iter()
+        .map(|t| t.error)
+        .fold(1.0f64, f64::min);
+    let overall_best = r.best_error;
+    assert!(
+        overall_best <= early_best,
+        "no search progress: early {early_best} vs overall {overall_best}"
+    );
+    assert!(overall_best < 0.6, "search stuck: best={overall_best}");
+}
+
+#[test]
+fn report_scores_consistent() {
+    let r = run_cluster(2, 10, 2);
+    let sum_ops: f64 = r.trials.iter().map(|t| t.ops).sum();
+    assert!((sum_ops - r.total_ops).abs() / r.total_ops < 1e-9);
+    assert!(r.score_flops > 0.0);
+    assert!(r.regulated_score > 0.0);
+    assert!(r.duration_s > 0.0);
+}
+
+#[test]
+fn single_slave_cluster_works() {
+    let r = run_cluster(1, 6, 3);
+    assert_eq!(r.trials.len(), 6);
+    // Rounds advance → warm-up schedule grows epoch budgets.
+    let max_epochs = r.trials.iter().map(|t| t.epochs).max().unwrap();
+    assert!(max_epochs > 10, "warm-up schedule did not advance");
+}

@@ -1,0 +1,134 @@
+//! Cross-module integration tests over the simulated benchmark.
+
+use aiperf::config::BenchmarkConfig;
+use aiperf::coordinator::run_benchmark;
+use aiperf::metrics::score::Validity;
+use aiperf::util::json::Json;
+
+fn cfg(nodes: u64, hours: f64, seed: u64) -> BenchmarkConfig {
+    BenchmarkConfig {
+        nodes,
+        duration_s: hours * 3600.0,
+        seed,
+        ..BenchmarkConfig::default()
+    }
+}
+
+#[test]
+fn twelve_hour_run_produces_full_series() {
+    let r = run_benchmark(&cfg(2, 12.0, 0));
+    assert_eq!(r.score_series.len(), 12, "hourly samples over 12 h");
+    // Telemetry every 18 min over 12 h = 40 samples.
+    assert_eq!(r.telemetry.len(), 40);
+    assert_eq!(r.validity, Validity::Valid);
+}
+
+#[test]
+fn bit_reproducible_under_fixed_seed() {
+    let a = run_benchmark(&cfg(3, 6.0, 11));
+    let b = run_benchmark(&cfg(3, 6.0, 11));
+    assert_eq!(a.score_flops.to_bits(), b.score_flops.to_bits());
+    assert_eq!(a.final_error.to_bits(), b.final_error.to_bits());
+    assert_eq!(a.regulated_score.to_bits(), b.regulated_score.to_bits());
+    assert_eq!(a.architectures_evaluated, b.architectures_evaluated);
+    for (x, y) in a.score_series.iter().zip(&b.score_series) {
+        assert_eq!(x.flops.to_bits(), y.flops.to_bits());
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let a = run_benchmark(&cfg(2, 6.0, 0));
+    let b = run_benchmark(&cfg(2, 6.0, 1));
+    assert_ne!(a.score_flops.to_bits(), b.score_flops.to_bits());
+}
+
+#[test]
+fn scaling_2_to_16_nodes_linear() {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for nodes in [2u64, 4, 8, 16] {
+        let r = run_benchmark(&cfg(nodes, 12.0, 0));
+        xs.push(nodes as f64);
+        ys.push(r.score_flops);
+    }
+    let r2 = aiperf::util::stats::r_squared(&xs, &ys);
+    assert!(r2 > 0.99, "R²={r2}");
+    // Per-GPU score roughly constant across scales (±15 %).
+    let per_gpu: Vec<f64> = ys.iter().zip(&xs).map(|(y, x)| y / (x * 8.0)).collect();
+    let max = per_gpu.iter().cloned().fold(f64::MIN, f64::max);
+    let min = per_gpu.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max / min < 1.15, "per-GPU spread {max}/{min}");
+}
+
+#[test]
+fn longer_runs_do_not_reduce_quality() {
+    let short = run_benchmark(&cfg(2, 6.0, 3));
+    let long = run_benchmark(&cfg(2, 12.0, 3));
+    assert!(long.final_error <= short.final_error + 0.02);
+    assert!(long.architectures_evaluated >= short.architectures_evaluated);
+}
+
+#[test]
+fn gpus_per_node_scaling() {
+    // Scale-up (more GPUs per node) must raise the score too.
+    let mut c4 = cfg(2, 6.0, 0);
+    c4.node.gpus_per_node = 4;
+    let mut c8 = cfg(2, 6.0, 0);
+    c8.node.gpus_per_node = 8;
+    let r4 = run_benchmark(&c4);
+    let r8 = run_benchmark(&c8);
+    assert!(r8.score_flops > 1.5 * r4.score_flops);
+}
+
+#[test]
+fn report_json_roundtrips() {
+    let r = run_benchmark(&cfg(2, 6.0, 5));
+    let text = r.to_json().to_string();
+    let parsed = Json::parse(&text).expect("report JSON parses");
+    assert_eq!(parsed.get("nodes").unwrap().as_u64(), Some(2));
+    assert_eq!(
+        parsed.get("score_series").unwrap().as_arr().unwrap().len(),
+        r.score_series.len()
+    );
+    let flops = parsed.get("score_flops").unwrap().as_f64().unwrap();
+    assert!((flops - r.score_flops).abs() / r.score_flops < 1e-9);
+}
+
+#[test]
+fn config_file_flow() {
+    let text = "nodes = 3\nseed = 9\nduration_hours = 6\nbatch_per_gpu = 256\n";
+    let cfg = BenchmarkConfig::from_text(text).unwrap();
+    assert_eq!(cfg.nodes, 3);
+    assert_eq!(cfg.batch_per_gpu, 256);
+    let r = run_benchmark(&cfg);
+    assert!(r.score_flops > 0.0);
+}
+
+#[test]
+fn warmup_records_are_predicted_then_measured() {
+    let r = run_benchmark(&cfg(2, 12.0, 7));
+    // Architectures were evaluated and the error satisfies validity.
+    assert!(r.architectures_evaluated >= 6);
+    assert!(r.final_error < 0.35);
+    // Error at hour 1 must be worse than the final error (learning curve).
+    let early = r.score_series.first().unwrap().best_error;
+    assert!(early > r.final_error);
+}
+
+#[test]
+fn tiny_cluster_and_short_run_still_work() {
+    let mut c = cfg(1, 1.0, 0);
+    c.node.gpus_per_node = 1;
+    let r = run_benchmark(&c);
+    // One GPU for one hour: little progress, but a well-formed report.
+    assert!(r.score_flops > 0.0);
+    assert!(!r.score_series.is_empty());
+}
+
+#[test]
+fn nfs_traffic_scales_with_trials() {
+    let small = run_benchmark(&cfg(2, 6.0, 0));
+    let big = run_benchmark(&cfg(8, 6.0, 0));
+    assert!(big.nfs_bytes_read > small.nfs_bytes_read);
+}

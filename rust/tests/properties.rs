@@ -1,0 +1,305 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! proptest is not vendored in this offline environment, so the driver is
+//! hand-rolled: each property generates many random operation sequences
+//! from a seeded in-tree RNG and asserts the invariant after every step.
+//! On failure the seed and step index identify the reproducer exactly.
+
+use aiperf::coordinator::buffer::{ArchBuffer, Candidate};
+use aiperf::coordinator::dispatcher::Dispatcher;
+use aiperf::coordinator::trial::{ActiveTrial, TrialStatus};
+use aiperf::flops::{graph_ops_per_image, OpWeights};
+use aiperf::hpo::{aiperf_space, Evolutionary, GridSearch, Optimizer, RandomSearch, Tpe};
+use aiperf::nas::graph::Architecture;
+use aiperf::nas::morphism::{morph, random_legal_morph, random_morph, MorphLimits};
+use aiperf::sim::accuracy::HpPoint;
+use aiperf::sim::engine::EventQueue;
+use aiperf::util::rng::derive;
+
+const CASES: u64 = 64;
+
+/// Routing invariant: every trial is assigned to exactly one node and
+/// completed at most once; assigned = completed + in-flight at all times.
+#[test]
+fn prop_dispatcher_exactly_once_routing() {
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-dispatch", 0);
+        let nodes = rng.gen_range_usize(1, 9);
+        let mut d = Dispatcher::new();
+        let mut in_flight: Vec<Option<u64>> = vec![None; nodes];
+        for step in 0..200 {
+            let node = rng.gen_range_usize(0, nodes);
+            match in_flight[node] {
+                None => {
+                    let id = d.assign(node).unwrap_or_else(|e| {
+                        panic!("seed {seed} step {step}: assign failed: {e}")
+                    });
+                    // Double-assign to a busy node must fail.
+                    assert!(d.assign(node).is_err());
+                    in_flight[node] = Some(id);
+                }
+                Some(id) => {
+                    // Completing on the wrong node must fail.
+                    let wrong = (node + 1) % nodes;
+                    if wrong != node {
+                        assert!(d.complete(id, wrong).is_err());
+                    }
+                    d.complete(id, node).unwrap();
+                    // Double-complete must fail.
+                    assert!(d.complete(id, node).is_err());
+                    in_flight[node] = None;
+                }
+            }
+            d.check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+        }
+    }
+}
+
+/// Buffer invariant: len ≤ capacity always; FIFO order preserved;
+/// accepted − popped = len.
+#[test]
+fn prop_buffer_bounded_fifo() {
+    let arch = Architecture::initial(32, 3, 10);
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-buffer", 0);
+        let cap = rng.gen_range_usize(1, 9);
+        let mut b = ArchBuffer::new(cap);
+        let mut model: std::collections::VecDeque<usize> = Default::default();
+        let mut next = 0usize;
+        for step in 0..300 {
+            if rng.gen_bool(0.55) {
+                let c = Candidate {
+                    arch: arch.clone(),
+                    proposed_by: next,
+                    proposed_at: step as f64,
+                };
+                let ok = b.push(c).is_ok();
+                assert_eq!(ok, model.len() < cap, "seed {seed} step {step}");
+                if ok {
+                    model.push_back(next);
+                }
+                next += 1;
+            } else {
+                let got = b.pop().map(|c| c.proposed_by);
+                assert_eq!(got, model.pop_front(), "seed {seed} step {step}");
+            }
+            assert!(b.len() <= cap);
+            assert_eq!(b.len(), model.len());
+            // Conservation: every push attempt was either accepted or
+            // rejected, never both.
+            assert_eq!((b.accepted + b.rejected) as usize, next);
+        }
+    }
+}
+
+/// Morphism invariant: any sequence of legal morphs yields a structurally
+/// valid architecture within limits, and illegal morphs never mutate.
+#[test]
+fn prop_morphism_preserves_validity() {
+    let limits = MorphLimits::default();
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-morph", 0);
+        let mut arch = if rng.gen_bool(0.5) {
+            Architecture::initial(32, 3, 10)
+        } else {
+            Architecture::initial_imagenet()
+        };
+        for step in 0..60 {
+            let proposal = random_morph(&arch, &mut rng);
+            match morph(&arch, proposal, &limits) {
+                Ok(child) => {
+                    child
+                        .validate()
+                        .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+                    assert!(child.params() <= limits.max_params);
+                    assert!(child.depth() <= limits.max_depth);
+                    arch = child;
+                }
+                Err(_) => {
+                    // Parent must be untouched (morph clones).
+                    arch.validate().unwrap();
+                }
+            }
+        }
+    }
+}
+
+/// Capacity semantics per morph kind: Deepen grows depth by one; Widen
+/// strictly grows ops and params; Skip never reduces ops. (Deepen may
+/// legitimately REDUCE ops: a small-kernel block inserted before a
+/// large-kernel transition conv shrinks that conv's input channels — so
+/// the depth claim, not an ops claim, is the Deepen invariant.)
+#[test]
+fn prop_morph_capacity_semantics() {
+    let w = OpWeights::default();
+    let limits = MorphLimits::default();
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-flops", 0);
+        let mut arch = Architecture::initial(32, 3, 10);
+        for _ in 0..40 {
+            let prev = graph_ops_per_image(&arch.lower(), &w);
+            let prev_depth = arch.depth();
+            let (child, applied) = random_legal_morph(&arch, &limits, &mut rng, 16);
+            let cur = graph_ops_per_image(&child.lower(), &w);
+            if let Some(m) = applied {
+                use aiperf::nas::morphism::Morph;
+                match m {
+                    Morph::Deepen { .. } => {
+                        assert_eq!(child.depth(), prev_depth + 1, "seed {seed}: {m:?}");
+                        assert!(cur.params > 0);
+                    }
+                    Morph::Widen { .. } => {
+                        assert!(cur.fp > prev.fp, "seed {seed}: {m:?} did not grow ops");
+                        assert!(cur.params > prev.params, "seed {seed}: {m:?}");
+                    }
+                    Morph::Skip { .. } => {
+                        assert!(cur.fp >= prev.fp, "seed {seed}: {m:?} reduced ops");
+                        assert_eq!(child.depth(), prev_depth);
+                    }
+                    Morph::Kernel { .. } => {
+                        assert_eq!(child.depth(), prev_depth);
+                    }
+                }
+            }
+            arch = child;
+        }
+    }
+}
+
+/// Event-queue invariant: pops are globally time-ordered and FIFO within
+/// a timestamp, for any interleaving of schedules and pops.
+#[test]
+fn prop_event_queue_ordering() {
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-queue", 0);
+        let mut q = EventQueue::new();
+        let mut popped: Vec<(f64, u64)> = Vec::new();
+        let mut scheduled = 0u64;
+        for _ in 0..400 {
+            if rng.gen_bool(0.6) {
+                let t = q.now() + rng.gen_range_f64(0.0, 10.0);
+                q.schedule(t, scheduled);
+                scheduled += 1;
+            } else if let Some((t, e)) = q.pop() {
+                popped.push((t, e));
+            }
+        }
+        while let Some((t, e)) = q.pop() {
+            popped.push((t, e));
+        }
+        assert_eq!(popped.len() as u64, scheduled, "seed {seed}: lost events");
+        for w in popped.windows(2) {
+            assert!(
+                w[0].0 <= w[1].0,
+                "seed {seed}: time order violated: {w:?}"
+            );
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "seed {seed}: FIFO violated: {w:?}");
+            }
+        }
+    }
+}
+
+/// HPO invariant: every optimizer only ever suggests points inside the
+/// search space, for arbitrary observation feedback.
+#[test]
+fn prop_optimizers_respect_domain() {
+    let space = aiperf_space();
+    for seed in 0..16 {
+        let opts: Vec<Box<dyn Optimizer>> = vec![
+            Box::new(Tpe::new(space.clone())),
+            Box::new(RandomSearch::new(space.clone())),
+            Box::new(GridSearch::new(space.clone(), 5)),
+            Box::new(Evolutionary::new(space.clone())),
+        ];
+        for (k, mut opt) in opts.into_iter().enumerate() {
+            let mut rng = derive(seed, "prop-hpo", k as u64);
+            for step in 0..60 {
+                let c = opt.suggest(&mut rng);
+                assert!(
+                    space.contains(&c),
+                    "seed {seed} opt {k} step {step}: {c:?} outside space"
+                );
+                let loss = rng.gen_range_f64(0.0, 1.0);
+                opt.observe(c, loss);
+            }
+        }
+    }
+}
+
+/// Early-stopping invariant: a trial never trains past its budget, never
+/// stops before `patience` stale epochs, and `best_accuracy` equals the
+/// max of the recorded curve.
+#[test]
+fn prop_trial_early_stopping() {
+    let arch = Architecture::initial(32, 3, 10);
+    let ops = graph_ops_per_image(&arch.lower(), &OpWeights::default());
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-trial", 0);
+        let budget = rng.gen_range_u64(1, 60);
+        let patience = rng.gen_range_u64(1, 8);
+        let mut trial = ActiveTrial::new(
+            0,
+            arch.clone(),
+            1,
+            HpPoint::default(),
+            ops,
+            64,
+            1,
+            budget,
+        );
+        let mut max_acc = 0.0f64;
+        let mut stale = 0u64;
+        loop {
+            let acc = rng.gen_range_f64(0.0, 1.0);
+            let status = trial.record_epoch(acc, patience, 1e-3);
+            if acc > max_acc + 1e-3 {
+                max_acc = acc.max(max_acc);
+                stale = 0;
+            } else {
+                stale += 1;
+            }
+            max_acc = max_acc.max(acc.min(max_acc + 1e-3));
+            match status {
+                TrialStatus::Continue => {
+                    assert!(trial.epoch < budget, "seed {seed}: ran past budget");
+                    assert!(stale < patience, "seed {seed}: missed early stop");
+                }
+                TrialStatus::BudgetExhausted => {
+                    assert_eq!(trial.epoch, budget);
+                    break;
+                }
+                TrialStatus::EarlyStopped => {
+                    assert!(stale >= patience, "seed {seed}: stopped too early");
+                    assert!(trial.epoch < budget);
+                    break;
+                }
+            }
+        }
+        let curve_max = trial
+            .accs
+            .iter()
+            .cloned()
+            .fold(f64::MIN, f64::max);
+        assert!((trial.best_accuracy() - curve_max).abs() < 1e-2 + 1e-3);
+    }
+}
+
+/// Score invariants: regulated score is monotone decreasing in error and
+/// strictly linear in FLOPS, over random inputs.
+#[test]
+fn prop_regulated_score_shape() {
+    use aiperf::metrics::score::regulated_score;
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-score", 0);
+        let f = rng.gen_range_f64(1e9, 1e18);
+        let e1 = rng.gen_range_f64(0.01, 0.98);
+        let e2 = e1 + rng.gen_range_f64(0.001, 1.0 - e1 - 0.01);
+        assert!(regulated_score(e1, f) > regulated_score(e2, f));
+        let k = rng.gen_range_f64(1.1, 10.0);
+        let a = regulated_score(e1, f);
+        let b = regulated_score(e1, f * k);
+        assert!((b / a - k).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,72 @@
+//! Cross-language parity: the rust synthetic dataset must produce
+//! bit-identical batches to python/compile/dataset.py (the ABI that lets
+//! both sides materialize the same corpus without shipping arrays).
+//!
+//! Shells out to the build-time python; skips when python/jax is absent
+//! (the runtime never needs python — this is a build-path check).
+
+use aiperf::data::SyntheticDataset;
+
+fn python_batch(seed: u64, start: u64, batch: usize, image: usize, channels: usize,
+                classes: usize) -> Option<(Vec<f32>, Vec<i32>)> {
+    let code = format!(
+        "import sys; sys.path.insert(0, 'python')\n\
+         from compile.dataset import make_batch\n\
+         xs, ys = make_batch({seed}, {start}, {batch}, {image}, {channels}, {classes})\n\
+         print(' '.join(repr(float(v)) for v in xs.reshape(-1)))\n\
+         print(' '.join(str(int(v)) for v in ys))"
+    );
+    let out = std::process::Command::new("python3")
+        .arg("-c")
+        .arg(&code)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        eprintln!(
+            "SKIP python parity: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        return None;
+    }
+    let text = String::from_utf8(out.stdout).ok()?;
+    let mut lines = text.lines();
+    let xs: Vec<f32> = lines
+        .next()?
+        .split_whitespace()
+        .map(|v| v.parse().unwrap())
+        .collect();
+    let ys: Vec<i32> = lines
+        .next()?
+        .split_whitespace()
+        .map(|v| v.parse().unwrap())
+        .collect();
+    Some((xs, ys))
+}
+
+#[test]
+fn labels_match_python() {
+    let Some((_, py_ys)) = python_batch(3, 100, 16, 4, 1, 4) else {
+        return;
+    };
+    let d = SyntheticDataset::new(3, 4, 1, 4);
+    let (_, rs_ys) = d.batch(100, 16);
+    assert_eq!(rs_ys, py_ys, "label streams diverge");
+}
+
+#[test]
+fn pixels_match_python_within_f32_rounding() {
+    let Some((py_xs, _)) = python_batch(7, 0, 4, 8, 3, 10) else {
+        return;
+    };
+    let d = SyntheticDataset::new(7, 8, 3, 10);
+    let (rs_xs, _) = d.batch(0, 4);
+    assert_eq!(rs_xs.len(), py_xs.len());
+    let mut max_err = 0f32;
+    for (a, b) in rs_xs.iter().zip(&py_xs) {
+        max_err = max_err.max((a - b).abs());
+    }
+    // python computes templates in float64 then casts; rust accumulates in
+    // f32 — identical counter hashes, so only rounding separates them.
+    assert!(max_err < 1e-5, "pixel divergence {max_err}");
+}

@@ -1,0 +1,149 @@
+//! Runtime end-to-end tests: load the real AOT artifacts, execute them on
+//! the PJRT CPU client, and verify training/eval semantics.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+//! When artifacts are absent (plain `cargo test` in a fresh checkout) the
+//! tests skip with a notice rather than fail — artifact production is
+//! python's responsibility, exercised by pytest.
+
+use aiperf::data::SyntheticDataset;
+use aiperf::runtime::{Manifest, Runtime, Trainer};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_grid_variants() {
+    let Some(m) = manifest() else { return };
+    assert!(!m.variants.is_empty());
+    for v in &m.variants {
+        assert!(v.num_params() == (3 + 3 * v.depth + 2) as usize);
+        for kind in [&v.files.init, &v.files.train, &v.files.eval] {
+            assert!(m.hlo_path(kind).exists(), "missing {kind}");
+        }
+    }
+}
+
+#[test]
+fn init_params_match_manifest_shapes() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    let t = Trainer::new(&mut rt, &m, &m.default_variant).unwrap();
+    assert_eq!(t.variant.name, m.default_variant);
+    assert!(t.variant.total_param_elems() > 0);
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    let mut t = Trainer::new(&mut rt, &m, &m.default_variant).unwrap();
+    let v = t.variant.clone();
+    let data = SyntheticDataset::new(
+        0,
+        v.image as usize,
+        v.channels as usize,
+        v.num_classes as usize,
+    );
+    let b = v.batch as usize;
+    let mut first = 0f32;
+    let mut last = 0f32;
+    for step in 0..40u64 {
+        let (xs, ys) = data.batch(step * b as u64, b);
+        let loss = t.train_step(&xs, &ys, 0.08).unwrap();
+        assert!(loss.is_finite(), "loss diverged at step {step}");
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(
+        last < first * 0.9,
+        "loss did not decrease: {first} → {last}"
+    );
+    assert_eq!(t.steps_done, 40);
+}
+
+#[test]
+fn eval_step_consistent_with_training() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    let mut t = Trainer::new(&mut rt, &m, &m.default_variant).unwrap();
+    let v = t.variant.clone();
+    let data = SyntheticDataset::new(
+        0,
+        v.image as usize,
+        v.channels as usize,
+        v.num_classes as usize,
+    );
+    let b = v.batch as usize;
+    // Untrained accuracy ≈ chance.
+    let (l0, a0) = t.evaluate(&data, 500_000, 4).unwrap();
+    assert!(l0 > 0.0);
+    assert!(a0 < 0.45, "untrained accuracy suspiciously high: {a0}");
+    // Train, then accuracy must improve.
+    for step in 0..60u64 {
+        let (xs, ys) = data.batch(step * b as u64, b);
+        t.train_step(&xs, &ys, 0.08).unwrap();
+    }
+    let (_, a1) = t.evaluate(&data, 500_000, 4).unwrap();
+    assert!(a1 > a0 + 0.1, "accuracy did not improve: {a0} → {a1}");
+}
+
+#[test]
+fn deterministic_training_given_fixed_data() {
+    let Some(m) = manifest() else { return };
+    let run = || {
+        let mut rt = Runtime::cpu().unwrap();
+        let mut t = Trainer::new(&mut rt, &m, &m.default_variant).unwrap();
+        let v = t.variant.clone();
+        let data = SyntheticDataset::new(
+            3,
+            v.image as usize,
+            v.channels as usize,
+            v.num_classes as usize,
+        );
+        let mut losses = Vec::new();
+        for step in 0..5u64 {
+            let (xs, ys) = data.batch(step * v.batch, v.batch as usize);
+            losses.push(t.train_step(&xs, &ys, 0.05).unwrap());
+        }
+        losses
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn executable_cache_reused_across_trainers() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    let _a = Trainer::new(&mut rt, &m, &m.default_variant).unwrap();
+    let n = rt.cache_len();
+    let _b = Trainer::new(&mut rt, &m, &m.default_variant).unwrap();
+    assert_eq!(rt.cache_len(), n, "same variant must not recompile");
+}
+
+#[test]
+fn all_variants_compile_and_step() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    for v in &m.variants {
+        let mut t = Trainer::new(&mut rt, &m, &v.name).unwrap();
+        let data = SyntheticDataset::new(
+            0,
+            v.image as usize,
+            v.channels as usize,
+            v.num_classes as usize,
+        );
+        let (xs, ys) = data.batch(0, v.batch as usize);
+        let loss = t.train_step(&xs, &ys, 0.05).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "variant {}", v.name);
+    }
+}

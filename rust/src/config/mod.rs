@@ -11,6 +11,42 @@ use crate::cluster::NodeModel;
 use crate::data::DatasetDescriptor;
 use crate::nas::morphism::MorphLimits;
 
+/// Simulation execution engine.
+///
+/// Both engines run the identical sharded coordinator and are
+/// bit-identical for the same seed (enforced by
+/// `rust/tests/engine_parity.rs`); `Parallel` executes the per-slave
+/// shards on a scoped thread pool between deterministic epoch barriers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Shards run one after another on the calling thread.
+    Sequential,
+    /// Shards run on a scoped `std::thread` pool.
+    #[default]
+    Parallel,
+}
+
+impl Engine {
+    /// Parse from the configuration-file / CLI spelling.
+    pub fn parse(s: &str) -> Result<Engine, String> {
+        match s {
+            "sequential" => Ok(Engine::Sequential),
+            "parallel" => Ok(Engine::Parallel),
+            other => Err(format!(
+                "unknown engine `{other}` (expected `sequential` or `parallel`)"
+            )),
+        }
+    }
+
+    /// The configuration-file spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Engine::Sequential => "sequential",
+            Engine::Parallel => "parallel",
+        }
+    }
+}
+
 /// Warm-up schedule (§4.5): round r trains `first + step·(r−1)` epochs,
 /// capped at `max_epochs`; HPO starts at round `hpo_start_round`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,6 +115,12 @@ pub struct BenchmarkConfig {
     pub seed: u64,
     /// Training numeric precision in bits (validity requires ≥ 16).
     pub precision_bits: u32,
+    /// Execution engine for the sharded simulation.
+    pub engine: Engine,
+    /// Epoch-barrier interval, seconds: shards run independently within a
+    /// window and merge into the shared history at each barrier. Both
+    /// engines use the same windows, so results are engine-independent.
+    pub sync_interval_s: f64,
 }
 
 impl Default for BenchmarkConfig {
@@ -99,6 +141,8 @@ impl Default for BenchmarkConfig {
             morph_limits: MorphLimits::default(),
             seed: 0,
             precision_bits: 16,
+            engine: Engine::default(),
+            sync_interval_s: 300.0,
         }
     }
 }
@@ -123,11 +167,21 @@ impl BenchmarkConfig {
         if self.batch_per_gpu == 0 {
             return Err("batch size must be positive".into());
         }
-        if self.duration_s <= 0.0 {
+        // Written as `!(x > 0.0)` so NaN fails validation too.
+        if !(self.duration_s > 0.0) {
             return Err("duration must be positive".into());
         }
         if !(0.0..1.0).contains(&self.min_delta) {
             return Err("min_delta must be in [0,1)".into());
+        }
+        if !(self.sync_interval_s > 0.0) {
+            return Err("sync_interval_s must be positive".into());
+        }
+        if !(self.score_interval_s > 0.0) {
+            return Err("score_interval_s must be positive".into());
+        }
+        if !(self.telemetry_interval_s > 0.0) {
+            return Err("telemetry_interval_s must be positive".into());
         }
         Ok(())
     }
@@ -167,6 +221,11 @@ impl BenchmarkConfig {
                 "score_interval_s" => cfg.score_interval_s = parse_f64(value)?,
                 "seed" => cfg.seed = parse_u64(value)?,
                 "precision_bits" => cfg.precision_bits = parse_u64(value)? as u32,
+                "engine" => {
+                    cfg.engine = Engine::parse(value)
+                        .map_err(|e| format!("line {}: {e}", lineno + 1))?
+                }
+                "sync_interval_s" => cfg.sync_interval_s = parse_f64(value)?,
                 "max_params" => cfg.morph_limits.max_params = parse_u64(value)?,
                 "max_depth" => cfg.morph_limits.max_depth = parse_u64(value)? as usize,
                 "max_width" => cfg.morph_limits.max_width = parse_u64(value)?,
@@ -178,6 +237,9 @@ impl BenchmarkConfig {
                 "gpu_memory_gb" => {
                     cfg.node.gpu.memory_bytes = (parse_f64(value)? * (1u64 << 30) as f64) as u64
                 }
+                "gpu_util_half_batch" => cfg.node.gpu.util_half_batch = parse_f64(value)?,
+                "gpu_util_max" => cfg.node.gpu.util_max = parse_f64(value)?,
+                "gpu_step_overhead_s" => cfg.node.gpu.step_overhead_s = parse_f64(value)?,
                 other => return Err(format!("line {}: unknown key `{other}`", lineno + 1)),
             }
         }
@@ -208,7 +270,12 @@ impl BenchmarkConfig {
              max_epochs = {}\n\
              hpo_start_round = {}\n\
              gpu_sustained_flops = {:e}\n\
-             gpu_memory_gb = {}\n",
+             gpu_memory_gb = {}\n\
+             gpu_util_half_batch = {}\n\
+             gpu_util_max = {}\n\
+             gpu_step_overhead_s = {}\n\
+             engine = {}\n\
+             sync_interval_s = {}\n",
             self.nodes,
             self.node.gpus_per_node,
             self.batch_per_gpu,
@@ -230,6 +297,11 @@ impl BenchmarkConfig {
             self.warmup.hpo_start_round,
             self.node.gpu.sustained_flops,
             self.node.gpu.memory_bytes / (1 << 30),
+            self.node.gpu.util_half_batch,
+            self.node.gpu.util_max,
+            self.node.gpu.step_overhead_s,
+            self.engine.as_str(),
+            self.sync_interval_s,
         )
     }
 }
@@ -301,5 +373,38 @@ mod tests {
     fn comments_and_blank_lines_ok() {
         let c = BenchmarkConfig::from_text("# comment\n\nnodes = 4 # inline\n").unwrap();
         assert_eq!(c.nodes, 4);
+    }
+
+    #[test]
+    fn engine_parses_and_roundtrips() {
+        let c = BenchmarkConfig::from_text("engine = sequential\nsync_interval_s = 120\n")
+            .unwrap();
+        assert_eq!(c.engine, Engine::Sequential);
+        assert_eq!(c.sync_interval_s, 120.0);
+        let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
+        assert_eq!(c2.engine, Engine::Sequential);
+        assert_eq!(c2.sync_interval_s, 120.0);
+        assert!(BenchmarkConfig::from_text("engine = turbo\n").is_err());
+    }
+
+    #[test]
+    fn sync_interval_validated() {
+        let mut c = BenchmarkConfig::default();
+        c.sync_interval_s = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn nan_intervals_rejected() {
+        for field in 0..4 {
+            let mut c = BenchmarkConfig::default();
+            match field {
+                0 => c.sync_interval_s = f64::NAN,
+                1 => c.score_interval_s = f64::NAN,
+                2 => c.telemetry_interval_s = f64::NAN,
+                _ => c.duration_s = f64::NAN,
+            }
+            assert!(c.validate().is_err(), "field {field}: NaN passed validation");
+        }
     }
 }

@@ -30,11 +30,20 @@ pub struct ArchBuffer {
     pub rejected: u64,
 }
 
-#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum BufferError {
-    #[error("buffer full (capacity {0})")]
     Full(usize),
 }
+
+impl std::fmt::Display for BufferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BufferError::Full(capacity) => write!(f, "buffer full (capacity {capacity})"),
+        }
+    }
+}
+
+impl std::error::Error for BufferError {}
 
 impl ArchBuffer {
     pub fn new(capacity: usize) -> Self {

@@ -19,15 +19,28 @@ pub struct Dispatcher {
     completed: HashMap<usize, u64>,
 }
 
-#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum DispatchError {
-    #[error("trial {0} is not in flight")]
     NotInFlight(u64),
-    #[error("trial {0} is owned by node {1}, not {2}")]
     WrongNode(u64, usize, usize),
-    #[error("node {0} already holds an in-flight trial")]
     NodeBusy(usize),
 }
+
+impl std::fmt::Display for DispatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DispatchError::NotInFlight(trial) => write!(f, "trial {trial} is not in flight"),
+            DispatchError::WrongNode(trial, owner, node) => {
+                write!(f, "trial {trial} is owned by node {owner}, not {node}")
+            }
+            DispatchError::NodeBusy(node) => {
+                write!(f, "node {node} already holds an in-flight trial")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DispatchError {}
 
 impl Dispatcher {
     pub fn new() -> Self {

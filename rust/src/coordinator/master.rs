@@ -1,322 +1,211 @@
 //! The end-to-end simulated benchmark run (paper §4.3 workflow).
 //!
-//! A discrete-event loop over the cluster substrate executes the paper's
-//! exact protocol: per slave node, the CPU search loop proposes a morphed
-//! candidate from the ranked history into the buffer; the node's GPUs
-//! drain the buffer and train it with synchronous data parallelism,
-//! epoch by epoch, with early stopping; warm-up rounds use the Appendix-C
-//! predicted accuracy; HPO (TPE) activates at round 5; the run terminates
-//! at the user-defined wall-clock budget and the analysis toolkit computes
-//! score, achieved error, regulated score, and telemetry (Figs 4–6, 9–12).
+//! The run is sharded by slave node (see [`crate::coordinator::shard`]):
+//! every [`SlaveShard`] executes the paper's exact per-node protocol —
+//! the CPU search loop proposes a morphed candidate from the ranked
+//! history into the buffer; the node's GPUs drain the buffer and train it
+//! with synchronous data parallelism, epoch by epoch, with early
+//! stopping; warm-up rounds use the Appendix-C predicted accuracy; HPO
+//! (TPE) activates at round 5; the run terminates at the user-defined
+//! wall-clock budget and the analysis toolkit computes score, achieved
+//! error, regulated score, and telemetry (Figs 4–6, 9–12).
+//!
+//! Shards advance independently within an epoch-barrier window
+//! ([`BenchmarkConfig::sync_interval_s`]) against a frozen snapshot of
+//! the shared historical model list, and the coordinator merges their
+//! outputs in deterministic node order at every barrier. The
+//! [`Engine::Parallel`] path executes the shards of each window on a
+//! scoped thread pool; [`Engine::Sequential`] runs them in a loop. Both
+//! are bit-identical for the same seed (`rust/tests/engine_parity.rs`).
 //!
 //! Simulation time is *modelled* cluster time (the 16×8-V100 testbed is a
 //! hardware gate — DESIGN.md §2); every decision the framework makes —
 //! routing, ranking, morphing, HPO, stopping — executes for real.
 
-use crate::util::rng::Rng;
+use std::cmp::Ordering;
 
 use crate::cluster::nfs::NfsStats;
-use crate::config::BenchmarkConfig;
-use crate::coordinator::buffer::{ArchBuffer, Candidate};
-use crate::coordinator::dispatcher::Dispatcher;
-use crate::coordinator::history::{HistoryList, ModelRecord};
-use crate::coordinator::trial::{ActiveTrial, TrialStatus};
-use crate::flops::OpWeights;
-use crate::hpo::{aiperf_space, Optimizer, Tpe};
+use crate::config::{BenchmarkConfig, Engine};
+use crate::coordinator::history::HistoryList;
+use crate::coordinator::shard::{HistorySnapshot, SimContext, SlaveShard};
 use crate::metrics::report::BenchmarkReport;
 use crate::metrics::score::{validate_result, ScoreSample};
 use crate::metrics::telemetry::{NodeReading, Telemetry};
-use crate::nas::graph::Architecture;
-use crate::nas::search::SearchPolicy;
-use crate::predict::logfit::LogFit;
-use crate::sim::accuracy::{arch_id, AccuracySurrogate, HpPoint};
-use crate::sim::engine::EventQueue;
-use crate::sim::timing::TimingModel;
-use crate::util::rng::derive;
 
-/// Discrete events of the run.
-#[derive(Debug, Clone, Copy)]
-enum Event {
-    /// Node is free: run the search loop and start the next trial.
-    NodeReady(usize),
-    /// Node finished one training epoch (incl. validation).
-    EpochDone(usize),
-    /// Telemetry sampling tick.
-    Telemetry,
-    /// Score sampling tick (hourly in the paper).
-    Score,
+/// Mutable global state merged at every epoch barrier.
+struct GlobalState {
+    history: HistoryList,
+    telemetry: Telemetry,
+    score_series: Vec<ScoreSample>,
+    cumulative_ops: f64,
+    next_score_t: f64,
 }
 
-/// Per-slave mutable state.
-struct SlaveState {
-    round: u64,
-    tpe: Tpe,
-    rng: Rng,
-    trial: Option<ActiveTrial>,
-    /// Seconds per (train + validate) epoch for the current trial.
-    epoch_seconds: f64,
-    /// GPU busy fraction while the current trial trains.
-    busy_fraction: f64,
-    /// GPU memory utilization fraction for the current trial.
-    mem_fraction: f64,
-    /// Until when the node is in inter-trial setup (telemetry dent).
-    setup_until: f64,
+/// Merge one window's shard outputs into the global state, in
+/// deterministic node order, then emit any score samples due.
+fn merge_window(
+    global: &mut GlobalState,
+    shards: &mut [SlaveShard],
+    window_end: f64,
+    cfg: &BenchmarkConfig,
+) {
+    // Completed models: drained in node order, then stably sorted by
+    // completion time (ties keep node order) — the order the shared
+    // history would have seen them.
+    let mut completions = Vec::new();
+    for s in shards.iter_mut() {
+        completions.append(&mut s.completed);
+    }
+    completions.sort_by(|a, b| {
+        a.completed_at
+            .partial_cmp(&b.completed_at)
+            .unwrap_or(Ordering::Equal)
+    });
+    for rec in completions {
+        global.history.push(rec);
+    }
+
+    // Analytical-ops events, same deterministic order. Summation order is
+    // fixed so the f64 accumulation is engine-independent.
+    let mut ops_events: Vec<(f64, f64)> = Vec::new();
+    for s in shards.iter_mut() {
+        ops_events.append(&mut s.epoch_ops);
+    }
+    ops_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal));
+
+    // Telemetry: every shard ticks on the same schedule; zip the per-node
+    // readings per tick.
+    let ticks = shards.first().map_or(0, |s| s.readings.len());
+    for j in 0..ticks {
+        let t = shards[0].readings[j].0;
+        let readings: Vec<NodeReading> = shards
+            .iter()
+            .map(|s| {
+                debug_assert_eq!(s.readings[j].0, t, "telemetry ticks diverged");
+                s.readings[j].1
+            })
+            .collect();
+        global.telemetry.record(t, &readings);
+    }
+    for s in shards.iter_mut() {
+        s.readings.clear();
+    }
+
+    // Score samples due in this window (hourly in the paper).
+    let mut op_i = 0;
+    while global.next_score_t <= window_end {
+        let ts = global.next_score_t;
+        while op_i < ops_events.len() && ops_events[op_i].0 <= ts {
+            global.cumulative_ops += ops_events[op_i].1;
+            op_i += 1;
+        }
+        let best = global
+            .history
+            .best_measured_error_at(ts)
+            .unwrap_or(1.0 - 1e-9);
+        global
+            .score_series
+            .push(ScoreSample::new(ts, global.cumulative_ops, best));
+        global.next_score_t += cfg.score_interval_s;
+    }
+    while op_i < ops_events.len() {
+        global.cumulative_ops += ops_events[op_i].1;
+        op_i += 1;
+    }
 }
 
-/// Run the full simulated benchmark and produce the report.
-pub fn run_benchmark(cfg: &BenchmarkConfig) -> BenchmarkReport {
+/// Epoch-barrier boundaries: multiples of `sync_interval_s`, closed with
+/// the benchmark duration.
+fn window_ends(cfg: &BenchmarkConfig) -> Vec<f64> {
+    let mut ends = Vec::new();
+    let mut t = cfg.sync_interval_s;
+    while t < cfg.duration_s {
+        ends.push(t);
+        t += cfg.sync_interval_s;
+    }
+    ends.push(cfg.duration_s);
+    ends
+}
+
+/// Run the full simulated benchmark with an explicit engine.
+pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkReport {
     cfg.validate().expect("invalid benchmark configuration");
-    let weights = OpWeights::default();
-    let timing = TimingModel {
-        node: cfg.node,
-        ..TimingModel::default()
-    };
-    let surrogate = AccuracySurrogate {
-        seed: cfg.seed,
-        ..AccuracySurrogate::default()
-    };
-    let policy = SearchPolicy {
-        limits: cfg.morph_limits,
-        ..SearchPolicy::default()
-    };
-    let initial = Architecture::initial(
-        cfg.dataset.image,
-        cfg.dataset.channels,
-        cfg.dataset.num_classes,
-    );
+    let ctx = SimContext::new(cfg);
 
-    let mut history = HistoryList::new();
-    let mut buffer = ArchBuffer::new((cfg.nodes as usize * 2).max(4));
-    let mut dispatcher = Dispatcher::new();
-    let mut telemetry = Telemetry::new(cfg.telemetry_interval_s);
-    let mut score_series: Vec<ScoreSample> = Vec::new();
-    let mut nfs_stats = NfsStats::default();
-    let mut cumulative_ops = 0f64;
-    let mut tele_rng = derive(cfg.seed, "telemetry", 0);
-
-    let mut slaves: Vec<SlaveState> = (0..cfg.nodes as usize)
-        .map(|i| SlaveState {
-            round: 0,
-            tpe: Tpe::new(aiperf_space()),
-            rng: derive(cfg.seed, "slave", i as u64),
-            trial: None,
-            epoch_seconds: 0.0,
-            busy_fraction: 0.0,
-            mem_fraction: 0.0,
-            setup_until: 0.0,
-        })
+    let mut shards: Vec<SlaveShard> = (0..cfg.nodes as usize)
+        .map(|i| SlaveShard::new(i, cfg))
         .collect();
+    let mut global = GlobalState {
+        history: HistoryList::new(),
+        telemetry: Telemetry::new(cfg.telemetry_interval_s),
+        score_series: Vec::new(),
+        cumulative_ops: 0.0,
+        next_score_t: cfg.score_interval_s,
+    };
+    let mut snapshot = HistorySnapshot::default();
 
-    let mut q = EventQueue::new();
-    for i in 0..cfg.nodes as usize {
-        // Asynchronous dispatch: SLURM stagger of a few seconds per node.
-        q.schedule(i as f64 * 2.0, Event::NodeReady(i));
-    }
-    q.schedule(cfg.telemetry_interval_s, Event::Telemetry);
-    q.schedule(cfg.score_interval_s, Event::Score);
-
-    while let Some((t, ev)) = q.pop() {
-        if t > cfg.duration_s {
-            continue; // termination rule: user-defined running time
+    for (window, window_end) in window_ends(cfg).into_iter().enumerate() {
+        // Refresh the frozen history view from the previous barrier's
+        // merge (done lazily here so the final merge skips the rebuild —
+        // ranked_view clones every recorded architecture).
+        if window > 0 {
+            snapshot = HistorySnapshot {
+                ranked: global.history.ranked_view(),
+                records: global.history.len() as u64,
+            };
         }
-        match ev {
-            Event::NodeReady(i) => {
-                let trial_id = match dispatcher.assign(i) {
-                    Ok(id) => id,
-                    Err(_) => continue, // defensive: node already busy
-                };
-                let s = &mut slaves[i];
-                s.round += 1;
-
-                // --- CPU search loop: propose a candidate into the buffer.
-                let arch = if history.is_empty() {
-                    initial.clone()
-                } else {
-                    policy.propose(&history.ranked_view(), &mut s.rng).0
-                };
-                let _ = buffer.push(Candidate {
-                    arch: arch.clone(),
-                    proposed_by: i,
-                    proposed_at: t,
+        match engine {
+            Engine::Sequential => {
+                for s in shards.iter_mut() {
+                    s.run_until(window_end, &snapshot, &ctx);
+                }
+            }
+            Engine::Parallel => {
+                let workers = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+                    .min(shards.len())
+                    .max(1);
+                let chunk = shards.len().div_ceil(workers);
+                let snap = &snapshot;
+                let ctx_ref = &ctx;
+                std::thread::scope(|scope| {
+                    for group in shards.chunks_mut(chunk) {
+                        scope.spawn(move || {
+                            for s in group {
+                                s.run_until(window_end, snap, ctx_ref);
+                            }
+                        });
+                    }
                 });
-                // --- Trainer drains the buffer (NFS round trips charged).
-                let cand = buffer.pop().map(|c| c.arch).unwrap_or(arch);
-                let mut setup = cfg.node.search_seconds + cfg.node.setup_seconds;
-                setup += timing.nfs.read_seconds(history.nfs_bytes(), &mut nfs_stats);
-                setup += timing.nfs.write_seconds(2048, &mut nfs_stats);
-                setup += timing.nfs.read_seconds(2048, &mut nfs_stats);
-
-                // --- Hyperparameters: defaults in warm-up, TPE afterwards.
-                let hp = if cfg.warmup.hpo_active(s.round) {
-                    let c = s.tpe.suggest(&mut s.rng);
-                    HpPoint {
-                        dropout: c[0],
-                        kernel: c[1],
-                    }
-                } else {
-                    HpPoint::default()
-                };
-
-                // --- Memory adaption: halve the batch until the model fits.
-                // Single lowering pass per trial (EXPERIMENTS.md §Perf/L3).
-                let stats = cand.stats(&weights);
-                let (params, act, ops) = (stats.params, stats.activation_elems, stats.ops);
-                let mut batch = cfg.batch_per_gpu;
-                while batch > 8 && !cfg.node.gpu.fits(params, act, batch) {
-                    batch /= 2;
-                }
-                let budget = cfg.warmup.epochs_for_round(s.round);
-                let epoch = timing.epoch(
-                    ops.train_per_image(),
-                    params,
-                    cfg.dataset.train_images,
-                    batch,
-                );
-                let val_s =
-                    timing.validation(ops.val_per_image(), cfg.dataset.val_images, batch);
-                let total_epoch_s = epoch.total_s + val_s;
-
-                s.epoch_seconds = total_epoch_s;
-                s.busy_fraction =
-                    (epoch.compute_s + val_s) / total_epoch_s * epoch.gpu_busy_fraction.max(0.9);
-                s.mem_fraction = (cfg.node.gpu.memory_demand(params, act, batch) as f64
-                    / cfg.node.gpu.memory_bytes as f64)
-                    .min(1.0);
-                s.setup_until = t + setup;
-                s.trial = Some(ActiveTrial::new(
-                    trial_id,
-                    cand.clone(),
-                    arch_id(&cand.signature()),
-                    hp,
-                    ops,
-                    batch,
-                    s.round,
-                    budget,
-                ));
-                q.schedule(t + setup + total_epoch_s, Event::EpochDone(i));
-            }
-
-            Event::EpochDone(i) => {
-                let s = &mut slaves[i];
-                let Some(trial) = s.trial.as_mut() else {
-                    continue;
-                };
-                // Account analytical ops for the finished epoch.
-                cumulative_ops += trial.ops.train_per_image() as f64
-                    * cfg.dataset.train_images as f64
-                    + trial.ops.val_per_image() as f64 * cfg.dataset.val_images as f64;
-
-                let acc = surrogate.accuracy(
-                    trial.arch_id,
-                    trial.params,
-                    &trial.hp,
-                    trial.epoch + 1,
-                );
-                let status = trial.record_epoch(acc, cfg.patience, cfg.min_delta);
-                let next_epoch_end = t + s.epoch_seconds;
-
-                if status == TrialStatus::Continue && next_epoch_end <= cfg.duration_s {
-                    q.schedule(next_epoch_end, Event::EpochDone(i));
-                } else {
-                    // --- Trial complete: record into the history.
-                    let trial = s.trial.take().unwrap();
-                    let warmup_round = !cfg.warmup.hpo_active(trial.round);
-                    let (accuracy, predicted) = if warmup_round
-                        && trial.epoch < cfg.warmup.max_epochs
-                        && trial.accs.len() >= 2
-                    {
-                        // Appendix C: conservative log-fit prediction.
-                        let (es, accs) = trial.curve();
-                        (LogFit::fit(&es, &accs).conservative(60.0), true)
-                    } else {
-                        (trial.best_accuracy(), false)
-                    };
-                    let ops_spent = (trial.ops.train_per_image() as f64
-                        * cfg.dataset.train_images as f64
-                        + trial.ops.val_per_image() as f64 * cfg.dataset.val_images as f64)
-                        * trial.epoch as f64;
-                    if cfg.warmup.hpo_active(trial.round) {
-                        s.tpe.observe(
-                            vec![trial.hp.dropout, trial.hp.kernel],
-                            1.0 - trial.best_accuracy(),
-                        );
-                    }
-                    history.push(ModelRecord {
-                        id: trial.trial_id,
-                        signature: trial.arch.signature(),
-                        params: trial.params,
-                        measured_accuracy: trial.best_accuracy(),
-                        arch: trial.arch,
-                        accuracy,
-                        predicted,
-                        node: i,
-                        round: trial.round,
-                        epochs_trained: trial.epoch,
-                        ops: ops_spent,
-                        dropout: trial.hp.dropout,
-                        kernel: trial.hp.kernel,
-                        completed_at: t,
-                    });
-                    let _ = dispatcher.complete(trial.trial_id, i);
-                    debug_assert!(dispatcher.check_invariants().is_ok());
-                    q.schedule(t, Event::NodeReady(i));
-                }
-            }
-
-            Event::Telemetry => {
-                let readings: Vec<NodeReading> = slaves
-                    .iter()
-                    .map(|s| {
-                        let training = s.trial.is_some() && t >= s.setup_until;
-                        let jitter = tele_rng.gen_range_f64(-0.02, 0.02);
-                        if training {
-                            NodeReading {
-                                gpu_util: (s.busy_fraction + jitter).clamp(0.0, 1.0),
-                                gpu_mem_util: s.mem_fraction.clamp(0.0, 1.0),
-                                cpu_util: (cfg.node.cpu_util_training() + jitter / 4.0)
-                                    .clamp(0.0, 1.0),
-                                host_mem_util: cfg.node.host_memory_util(30 << 30),
-                            }
-                        } else {
-                            // The inter-stage "dent" of Figs 9/10.
-                            NodeReading {
-                                gpu_util: (0.02 + jitter.abs()).min(0.1),
-                                gpu_mem_util: 0.10,
-                                cpu_util: (0.30 + jitter).clamp(0.0, 1.0), // search burst
-                                host_mem_util: cfg.node.host_memory_util(30 << 30),
-                            }
-                        }
-                    })
-                    .collect();
-                telemetry.record(t, &readings);
-                if t + cfg.telemetry_interval_s <= cfg.duration_s {
-                    q.schedule(t + cfg.telemetry_interval_s, Event::Telemetry);
-                }
-            }
-
-            Event::Score => {
-                let best = history.best_measured_error_at(t).unwrap_or(1.0 - 1e-9);
-                score_series.push(ScoreSample::new(t, cumulative_ops, best));
-                if t + cfg.score_interval_s <= cfg.duration_s {
-                    q.schedule(t + cfg.score_interval_s, Event::Score);
-                }
             }
         }
+        merge_window(&mut global, &mut shards, window_end, cfg);
     }
 
-    let final_error = history.best_measured_error().unwrap_or(1.0 - 1e-9);
+    let mut nfs_stats = NfsStats::default();
+    let mut architectures_evaluated = 0;
+    for s in &shards {
+        nfs_stats.reads += s.nfs.reads;
+        nfs_stats.writes += s.nfs.writes;
+        nfs_stats.bytes_read += s.nfs.bytes_read;
+        nfs_stats.bytes_written += s.nfs.bytes_written;
+        architectures_evaluated += s.dispatcher.total_completed();
+    }
+
+    let final_error = global.history.best_measured_error().unwrap_or(1.0 - 1e-9);
     let (score_flops, regulated) =
-        BenchmarkReport::stable_scores(&score_series, cfg.duration_s);
+        BenchmarkReport::stable_scores(&global.score_series, cfg.duration_s);
     BenchmarkReport {
         nodes: cfg.nodes,
         gpus_per_node: cfg.node.gpus_per_node,
         duration_s: cfg.duration_s,
-        score_series,
+        score_series: global.score_series,
         score_flops,
         final_error,
         regulated_score: regulated,
-        architectures_evaluated: dispatcher.total_completed(),
-        telemetry: telemetry.samples().to_vec(),
+        architectures_evaluated,
+        telemetry: global.telemetry.samples().to_vec(),
         validity: validate_result(
             final_error,
             cfg.precision_bits,
@@ -326,6 +215,11 @@ pub fn run_benchmark(cfg: &BenchmarkConfig) -> BenchmarkReport {
         nfs_bytes_read: nfs_stats.bytes_read,
         nfs_bytes_written: nfs_stats.bytes_written,
     }
+}
+
+/// Run the full simulated benchmark with the engine from the config.
+pub fn run_benchmark(cfg: &BenchmarkConfig) -> BenchmarkReport {
+    run_benchmark_with(cfg, cfg.engine)
 }
 
 #[cfg(test)]
@@ -360,6 +254,16 @@ mod tests {
         assert_eq!(a.final_error, b.final_error);
         let c = run_benchmark(&small_cfg(2, 8.0, 8));
         assert_ne!(a.score_flops, c.score_flops);
+    }
+
+    #[test]
+    fn engines_agree_on_a_short_run() {
+        let cfg = small_cfg(3, 4.0, 5);
+        let seq = run_benchmark_with(&cfg, Engine::Sequential);
+        let par = run_benchmark_with(&cfg, Engine::Parallel);
+        assert_eq!(seq.score_flops.to_bits(), par.score_flops.to_bits());
+        assert_eq!(seq.final_error.to_bits(), par.final_error.to_bits());
+        assert_eq!(seq.architectures_evaluated, par.architectures_evaluated);
     }
 
     #[test]
@@ -420,5 +324,17 @@ mod tests {
         let r = run_benchmark(&small_cfg(2, 8.0, 6));
         assert!(r.nfs_bytes_read > 0);
         assert!(r.nfs_bytes_written > 0);
+    }
+
+    #[test]
+    fn window_ends_cover_duration() {
+        let mut cfg = small_cfg(1, 1.0, 0);
+        cfg.sync_interval_s = 1000.0;
+        let ends = window_ends(&cfg);
+        assert_eq!(ends, vec![1000.0, 2000.0, 3000.0, 3600.0]);
+        cfg.sync_interval_s = 7200.0; // longer than the run: one window
+        assert_eq!(window_ends(&cfg), vec![3600.0]);
+        cfg.sync_interval_s = 1800.0; // exact divisor: no duplicate end
+        assert_eq!(window_ends(&cfg), vec![1800.0, 3600.0]);
     }
 }

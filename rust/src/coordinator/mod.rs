@@ -10,20 +10,27 @@
 //! * [`buffer`] — the candidate-architecture buffer;
 //! * [`dispatcher`] — trial routing with exactly-once bookkeeping;
 //! * [`trial`] — per-trial training state: epoch budget, early stopping;
-//! * [`master`] — the simulated end-to-end benchmark run (discrete-event
-//!   loop over the cluster substrate) producing a [`crate::metrics::BenchmarkReport`];
+//! * [`shard`] — one slave node's simulation shard: search loop, TPE,
+//!   RNG streams, local event queue (the parallel scale-out unit);
+//! * [`master`] — the simulated end-to-end benchmark run (sharded
+//!   discrete-event loops with deterministic epoch-barrier merges)
+//!   producing a [`crate::metrics::BenchmarkReport`];
 //! * [`live`] — the real-training mini-benchmark over the AOT artifact
-//!   grid (PJRT execution; wall-clock timed).
+//!   grid (PJRT execution; wall-clock timed; requires the `pjrt`
+//!   feature).
 
 pub mod buffer;
 pub mod dispatcher;
 pub mod history;
+#[cfg(feature = "pjrt")]
 pub mod live;
 pub mod master;
+pub mod shard;
 pub mod trial;
 
 pub use buffer::ArchBuffer;
 pub use dispatcher::Dispatcher;
 pub use history::{HistoryList, ModelRecord};
-pub use master::run_benchmark;
+pub use master::{run_benchmark, run_benchmark_with};
+pub use shard::SlaveShard;
 pub use trial::{ActiveTrial, TrialStatus};

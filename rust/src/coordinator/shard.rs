@@ -1,0 +1,444 @@
+//! Per-slave simulation shard (the parallel scale-out refactor).
+//!
+//! The discrete-event benchmark is sharded by slave node: each
+//! [`SlaveShard`] owns its CPU search loop, TPE optimizer, RNG streams,
+//! candidate buffer, trial dispatcher bookkeeping, and local event queue.
+//! Shards advance independently inside an epoch-barrier window
+//! (`BenchmarkConfig::sync_interval_s`) against a frozen
+//! [`HistorySnapshot`] of the shared historical model list, then the
+//! coordinator merges their window outputs (completed models, analytical
+//! ops, telemetry readings) in deterministic node order.
+//!
+//! Because a shard's evolution depends only on (its own state, the
+//! snapshot, the window end), executing shards on a thread pool is
+//! bit-identical to executing them sequentially — which is what
+//! `rust/tests/engine_parity.rs` enforces.
+
+use crate::cluster::nfs::NfsStats;
+use crate::config::BenchmarkConfig;
+use crate::coordinator::buffer::{ArchBuffer, Candidate};
+use crate::coordinator::dispatcher::Dispatcher;
+use crate::coordinator::history::ModelRecord;
+use crate::coordinator::trial::{ActiveTrial, TrialStatus};
+use crate::flops::OpWeights;
+use crate::hpo::{aiperf_space, Optimizer, Tpe};
+use crate::metrics::telemetry::NodeReading;
+use crate::nas::graph::Architecture;
+use crate::nas::search::{RankedModel, SearchPolicy};
+use crate::predict::logfit::LogFit;
+use crate::sim::accuracy::{arch_id, AccuracySurrogate, HpPoint};
+use crate::sim::engine::EventQueue;
+use crate::sim::timing::TimingModel;
+use crate::util::rng::{derive, Rng};
+
+/// Discrete events local to one shard.
+#[derive(Debug, Clone, Copy)]
+pub enum ShardEvent {
+    /// Node is free: run the search loop and start the next trial.
+    NodeReady,
+    /// Node finished one training epoch (incl. validation).
+    EpochDone,
+    /// Telemetry sampling tick.
+    Telemetry,
+}
+
+/// Immutable per-run context shared (read-only) by every shard.
+pub struct SimContext<'a> {
+    pub cfg: &'a BenchmarkConfig,
+    pub weights: OpWeights,
+    pub timing: TimingModel,
+    pub surrogate: AccuracySurrogate,
+    pub policy: SearchPolicy,
+    pub initial: Architecture,
+    pub total_nodes: u64,
+}
+
+impl<'a> SimContext<'a> {
+    /// Build the per-run context from a (validated) configuration.
+    pub fn new(cfg: &'a BenchmarkConfig) -> Self {
+        SimContext {
+            cfg,
+            weights: OpWeights::default(),
+            timing: TimingModel {
+                node: cfg.node,
+                ..TimingModel::default()
+            },
+            surrogate: AccuracySurrogate {
+                seed: cfg.seed,
+                ..AccuracySurrogate::default()
+            },
+            policy: SearchPolicy {
+                limits: cfg.morph_limits,
+                ..SearchPolicy::default()
+            },
+            initial: Architecture::initial(
+                cfg.dataset.image,
+                cfg.dataset.channels,
+                cfg.dataset.num_classes,
+            ),
+            total_nodes: cfg.nodes,
+        }
+    }
+}
+
+/// Frozen view of the shared historical model list, rebuilt at each
+/// epoch barrier. `records` is the global record count (drives the NFS
+/// read charge exactly like `HistoryList::nfs_bytes`).
+#[derive(Default)]
+pub struct HistorySnapshot {
+    pub ranked: Vec<RankedModel>,
+    pub records: u64,
+}
+
+/// One slave node's complete simulation state.
+pub struct SlaveShard {
+    pub node: usize,
+    round: u64,
+    tpe: Tpe,
+    rng: Rng,
+    tele_rng: Rng,
+    queue: EventQueue<ShardEvent>,
+    buffer: ArchBuffer,
+    pub dispatcher: Dispatcher,
+    pub nfs: NfsStats,
+    trial: Option<ActiveTrial>,
+    /// Dispatcher-local id of the in-flight trial.
+    current_local: u64,
+    /// Seconds per (train + validate) epoch for the current trial.
+    epoch_seconds: f64,
+    /// GPU busy fraction while the current trial trains.
+    busy_fraction: f64,
+    /// GPU memory utilization fraction for the current trial.
+    mem_fraction: f64,
+    /// Until when the node is in inter-trial setup (telemetry dent).
+    setup_until: f64,
+    /// Window outputs, drained by the coordinator at each barrier.
+    pub completed: Vec<ModelRecord>,
+    pub epoch_ops: Vec<(f64, f64)>,
+    pub readings: Vec<(f64, NodeReading)>,
+}
+
+impl SlaveShard {
+    /// A fresh shard for `node`, with its stream-derived RNGs and the
+    /// SLURM-stagger initial schedule.
+    pub fn new(node: usize, cfg: &BenchmarkConfig) -> Self {
+        let mut queue = EventQueue::new();
+        // Asynchronous dispatch: SLURM stagger of a few seconds per node.
+        queue.schedule(node as f64 * 2.0, ShardEvent::NodeReady);
+        queue.schedule(cfg.telemetry_interval_s, ShardEvent::Telemetry);
+        SlaveShard {
+            node,
+            round: 0,
+            tpe: Tpe::new(aiperf_space()),
+            rng: derive(cfg.seed, "slave", node as u64),
+            tele_rng: derive(cfg.seed, "telemetry", node as u64),
+            queue,
+            // Per-shard buffer: the search loop pushes one candidate and
+            // the trainer drains it within the same NodeReady event, so a
+            // small constant capacity captures the actual invariant.
+            buffer: ArchBuffer::new(4),
+            dispatcher: Dispatcher::new(),
+            nfs: NfsStats::default(),
+            trial: None,
+            current_local: 0,
+            epoch_seconds: 0.0,
+            busy_fraction: 0.0,
+            mem_fraction: 0.0,
+            setup_until: 0.0,
+            completed: Vec::new(),
+            epoch_ops: Vec::new(),
+            readings: Vec::new(),
+        }
+    }
+
+    /// Advance this shard's local event loop up to (and including)
+    /// `window_end`. Events past the benchmark duration stay unpopped.
+    pub fn run_until(&mut self, window_end: f64, snapshot: &HistorySnapshot, ctx: &SimContext) {
+        while let Some(t) = self.queue.peek_time() {
+            if t > window_end {
+                break;
+            }
+            let (t, ev) = self.queue.pop().expect("peeked event vanished");
+            match ev {
+                ShardEvent::NodeReady => self.on_node_ready(t, snapshot, ctx),
+                ShardEvent::EpochDone => self.on_epoch_done(t, ctx),
+                ShardEvent::Telemetry => self.on_telemetry(t, ctx),
+            }
+        }
+    }
+
+    /// The CPU search loop + trial start (paper §4.3 steps 3–5).
+    fn on_node_ready(&mut self, t: f64, snapshot: &HistorySnapshot, ctx: &SimContext) {
+        let local = match self.dispatcher.assign(self.node) {
+            Ok(id) => id,
+            Err(_) => return, // defensive: node already busy
+        };
+        self.current_local = local;
+        // Globally unique, execution-order-independent trial id.
+        let trial_id = local * ctx.total_nodes + self.node as u64;
+        self.round += 1;
+        let cfg = ctx.cfg;
+
+        // --- CPU search loop: propose a candidate into the buffer. The
+        // shard ranks the frozen global snapshot plus its own completions
+        // since the last barrier (a node always sees its own results).
+        // The snapshot is only cloned when there are local completions to
+        // append — the common case borrows it directly.
+        let arch = if snapshot.ranked.is_empty() && self.completed.is_empty() {
+            ctx.initial.clone()
+        } else if self.completed.is_empty() {
+            ctx.policy.propose(&snapshot.ranked, &mut self.rng).0
+        } else {
+            let mut ranked = snapshot.ranked.clone();
+            ranked.extend(self.completed.iter().map(|r| RankedModel {
+                arch: r.arch.clone(),
+                accuracy: r.accuracy,
+            }));
+            ctx.policy.propose(&ranked, &mut self.rng).0
+        };
+        let _ = self.buffer.push(Candidate {
+            arch: arch.clone(),
+            proposed_by: self.node,
+            proposed_at: t,
+        });
+        // --- Trainer drains the buffer (NFS round trips charged).
+        let cand = self.buffer.pop().map(|c| c.arch).unwrap_or(arch);
+        let mut setup = cfg.node.search_seconds + cfg.node.setup_seconds;
+        let history_bytes = 2048 * (snapshot.records + self.completed.len() as u64);
+        setup += ctx.timing.nfs.read_seconds(history_bytes, &mut self.nfs);
+        setup += ctx.timing.nfs.write_seconds(2048, &mut self.nfs);
+        setup += ctx.timing.nfs.read_seconds(2048, &mut self.nfs);
+
+        // --- Hyperparameters: defaults in warm-up, TPE afterwards.
+        let hp = if cfg.warmup.hpo_active(self.round) {
+            let c = self.tpe.suggest(&mut self.rng);
+            HpPoint {
+                dropout: c[0],
+                kernel: c[1],
+            }
+        } else {
+            HpPoint::default()
+        };
+
+        // --- Memory adaption: halve the batch until the model fits.
+        let stats = cand.stats(&ctx.weights);
+        let (params, act, ops) = (stats.params, stats.activation_elems, stats.ops);
+        let mut batch = cfg.batch_per_gpu;
+        while batch > 8 && !cfg.node.gpu.fits(params, act, batch) {
+            batch /= 2;
+        }
+        let budget = cfg.warmup.epochs_for_round(self.round);
+        let epoch = ctx.timing.epoch(
+            ops.train_per_image(),
+            params,
+            cfg.dataset.train_images,
+            batch,
+        );
+        let val_s = ctx
+            .timing
+            .validation(ops.val_per_image(), cfg.dataset.val_images, batch);
+        let total_epoch_s = epoch.total_s + val_s;
+
+        self.epoch_seconds = total_epoch_s;
+        self.busy_fraction =
+            (epoch.compute_s + val_s) / total_epoch_s * epoch.gpu_busy_fraction.max(0.9);
+        self.mem_fraction = (cfg.node.gpu.memory_demand(params, act, batch) as f64
+            / cfg.node.gpu.memory_bytes as f64)
+            .min(1.0);
+        self.setup_until = t + setup;
+        self.trial = Some(ActiveTrial::new(
+            trial_id,
+            cand.clone(),
+            arch_id(&cand.signature()),
+            hp,
+            ops,
+            batch,
+            self.round,
+            budget,
+        ));
+        self.queue.schedule(t + setup + total_epoch_s, ShardEvent::EpochDone);
+    }
+
+    /// One finished training epoch: account ops, record accuracy, decide
+    /// whether to continue, early-stop, or finalize into the history.
+    fn on_epoch_done(&mut self, t: f64, ctx: &SimContext) {
+        let cfg = ctx.cfg;
+        let Some(trial) = self.trial.as_mut() else {
+            return;
+        };
+        // Account analytical ops for the finished epoch.
+        let epoch_ops = trial.ops.train_per_image() as f64 * cfg.dataset.train_images as f64
+            + trial.ops.val_per_image() as f64 * cfg.dataset.val_images as f64;
+        self.epoch_ops.push((t, epoch_ops));
+
+        let acc = ctx.surrogate.accuracy(
+            trial.arch_id,
+            trial.params,
+            &trial.hp,
+            trial.epoch + 1,
+        );
+        let status = trial.record_epoch(acc, cfg.patience, cfg.min_delta);
+        let next_epoch_end = t + self.epoch_seconds;
+
+        if status == TrialStatus::Continue && next_epoch_end <= cfg.duration_s {
+            self.queue.schedule(next_epoch_end, ShardEvent::EpochDone);
+        } else {
+            // --- Trial complete: record into the window output.
+            let trial = self.trial.take().unwrap();
+            let warmup_round = !cfg.warmup.hpo_active(trial.round);
+            let (accuracy, predicted) = if warmup_round
+                && trial.epoch < cfg.warmup.max_epochs
+                && trial.accs.len() >= 2
+            {
+                // Appendix C: conservative log-fit prediction.
+                let (es, accs) = trial.curve();
+                (LogFit::fit(&es, &accs).conservative(60.0), true)
+            } else {
+                (trial.best_accuracy(), false)
+            };
+            let ops_spent = (trial.ops.train_per_image() as f64
+                * cfg.dataset.train_images as f64
+                + trial.ops.val_per_image() as f64 * cfg.dataset.val_images as f64)
+                * trial.epoch as f64;
+            if cfg.warmup.hpo_active(trial.round) {
+                self.tpe.observe(
+                    vec![trial.hp.dropout, trial.hp.kernel],
+                    1.0 - trial.best_accuracy(),
+                );
+            }
+            self.completed.push(ModelRecord {
+                id: trial.trial_id,
+                signature: trial.arch.signature(),
+                params: trial.params,
+                measured_accuracy: trial.best_accuracy(),
+                arch: trial.arch,
+                accuracy,
+                predicted,
+                node: self.node,
+                round: trial.round,
+                epochs_trained: trial.epoch,
+                ops: ops_spent,
+                dropout: trial.hp.dropout,
+                kernel: trial.hp.kernel,
+                completed_at: t,
+            });
+            let _ = self.dispatcher.complete(self.current_local, self.node);
+            debug_assert!(self.dispatcher.check_invariants().is_ok());
+            self.queue.schedule(t, ShardEvent::NodeReady);
+        }
+    }
+
+    /// One telemetry tick: sample this node's utilization (per-node jitter
+    /// stream keeps the readings engine-independent).
+    fn on_telemetry(&mut self, t: f64, ctx: &SimContext) {
+        let cfg = ctx.cfg;
+        let training = self.trial.is_some() && t >= self.setup_until;
+        let jitter = self.tele_rng.gen_range_f64(-0.02, 0.02);
+        let reading = if training {
+            NodeReading {
+                gpu_util: (self.busy_fraction + jitter).clamp(0.0, 1.0),
+                gpu_mem_util: self.mem_fraction.clamp(0.0, 1.0),
+                cpu_util: (cfg.node.cpu_util_training() + jitter / 4.0).clamp(0.0, 1.0),
+                host_mem_util: cfg.node.host_memory_util(30 << 30),
+            }
+        } else {
+            // The inter-stage "dent" of Figs 9/10.
+            NodeReading {
+                gpu_util: (0.02 + jitter.abs()).min(0.1),
+                gpu_mem_util: 0.10,
+                cpu_util: (0.30 + jitter).clamp(0.0, 1.0), // search burst
+                host_mem_util: cfg.node.host_memory_util(30 << 30),
+            }
+        };
+        self.readings.push((t, reading));
+        if t + cfg.telemetry_interval_s <= cfg.duration_s {
+            self.queue
+                .schedule(t + cfg.telemetry_interval_s, ShardEvent::Telemetry);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_for(cfg: &BenchmarkConfig) -> SimContext<'_> {
+        SimContext::new(cfg)
+    }
+
+    #[test]
+    fn shard_is_deterministic_and_snapshot_driven() {
+        let cfg = BenchmarkConfig {
+            nodes: 2,
+            duration_s: 4.0 * 3600.0,
+            ..BenchmarkConfig::default()
+        };
+        let ctx = ctx_for(&cfg);
+        let snapshot = HistorySnapshot::default();
+        let run = || {
+            let mut s = SlaveShard::new(0, &cfg);
+            s.run_until(cfg.duration_s, &snapshot, &ctx);
+            (
+                s.completed.len(),
+                s.epoch_ops.len(),
+                s.readings.len(),
+                s.completed.iter().map(|r| r.accuracy).collect::<Vec<_>>(),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(a.0 > 0, "no trials completed in 4 h");
+        assert!(a.1 > 0);
+        assert!(a.2 > 0);
+    }
+
+    #[test]
+    fn windowed_run_equals_single_window() {
+        let cfg = BenchmarkConfig {
+            nodes: 1,
+            duration_s: 3.0 * 3600.0,
+            ..BenchmarkConfig::default()
+        };
+        let ctx = ctx_for(&cfg);
+        let snapshot = HistorySnapshot::default();
+        // Without barrier merges (snapshot never refreshed), splitting the
+        // run into windows must not change anything.
+        let mut whole = SlaveShard::new(0, &cfg);
+        whole.run_until(cfg.duration_s, &snapshot, &ctx);
+        let mut split = SlaveShard::new(0, &cfg);
+        let mut t = 600.0;
+        while t < cfg.duration_s {
+            split.run_until(t, &snapshot, &ctx);
+            t += 600.0;
+        }
+        split.run_until(cfg.duration_s, &snapshot, &ctx);
+        assert_eq!(whole.completed.len(), split.completed.len());
+        assert_eq!(whole.epoch_ops, split.epoch_ops);
+        assert_eq!(
+            whole.readings.iter().map(|r| r.0).collect::<Vec<_>>(),
+            split.readings.iter().map(|r| r.0).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn trial_ids_unique_per_node_stride() {
+        let cfg = BenchmarkConfig {
+            nodes: 3,
+            duration_s: 6.0 * 3600.0,
+            ..BenchmarkConfig::default()
+        };
+        let ctx = ctx_for(&cfg);
+        let snapshot = HistorySnapshot::default();
+        let mut ids = Vec::new();
+        for node in 0..3 {
+            let mut s = SlaveShard::new(node, &cfg);
+            s.run_until(cfg.duration_s, &snapshot, &ctx);
+            ids.extend(s.completed.iter().map(|r| r.id));
+        }
+        let mut deduped = ids.clone();
+        deduped.sort_unstable();
+        deduped.dedup();
+        assert_eq!(deduped.len(), ids.len(), "trial ids collide across shards");
+    }
+}

@@ -20,6 +20,8 @@ pub mod hpo;
 pub mod metrics;
 pub mod nas;
 pub mod predict;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenarios;
 pub mod sim;
 pub mod util;

@@ -6,7 +6,8 @@
 
 use anyhow::{bail, Context, Result};
 
-use aiperf::config::BenchmarkConfig;
+use aiperf::config::{BenchmarkConfig, Engine};
+#[cfg(feature = "pjrt")]
 use aiperf::coordinator::live::{run_live, LiveConfig};
 use aiperf::coordinator::run_benchmark;
 use aiperf::flops::layers::LayerKind;
@@ -17,12 +18,23 @@ const USAGE: &str = "\
 aiperf — AIPerf: Automated machine learning as an AI-HPC benchmark (Ren et al., 2020)
 
 USAGE:
-    aiperf run   [--nodes N] [--hours H] [--seed S] [--config FILE]
+    aiperf run   [--scenario NAME] [--nodes N] [--hours H] [--seed S]
+                 [--engine sequential|parallel] [--config FILE]
                  [--json OUT] [--csv OUT] [--chart 1]
         Simulated benchmark on the modelled cluster (Figs 4-6, 9-12).
+        Scenario presets reproduce the paper's evaluated systems:
+          smoke        2 x 8 V100, 2 h — CI-sized sanity run
+          t4-32        4 x 8 NVIDIA T4, 12 h (paper: 56.1 Tera-OPS)
+          v100-128     16 x 8 V100 NVLink, 12 h (the paper testbed)
+          ascend-4096  512 x 8 Ascend 910, 12 h (paper: 194.53 Peta-OPS)
+        The engine defaults to `parallel` (sharded slave nodes on a
+        thread pool); `sequential` is bit-identical for the same seed.
+    aiperf scenarios
+        List the scenario presets with their cluster shapes.
     aiperf live  [--artifacts DIR] [--trials N] [--epochs E]
                  [--batches-per-epoch B] [--seed S]
-        Real-training mini-benchmark over the AOT artifacts (PJRT).
+        Real-training mini-benchmark over the AOT artifacts (PJRT;
+        requires building with `--features pjrt`).
     aiperf cluster [--slaves N] [--trials T] [--seed S]
         Distributed master-slave run over real TCP (localhost workers).
     aiperf flops
@@ -87,17 +99,33 @@ impl Flags {
 }
 
 fn cmd_run(flags: &Flags) -> Result<()> {
-    flags.reject_unknown(&["nodes", "hours", "seed", "config", "json", "csv", "chart"])?;
-    let mut cfg = match flags.get("config") {
-        Some(path) => BenchmarkConfig::from_text(
+    flags.reject_unknown(&[
+        "scenario", "nodes", "hours", "seed", "engine", "config", "json", "csv", "chart",
+    ])?;
+    let mut cfg = match (flags.get("scenario"), flags.get("config")) {
+        (Some(_), Some(_)) => bail!("--scenario and --config are mutually exclusive"),
+        (Some(name), None) => {
+            aiperf::scenarios::get(name)
+                .with_context(|| {
+                    format!(
+                        "unknown scenario `{name}` (available: {})",
+                        aiperf::scenarios::names().join(", ")
+                    )
+                })?
+                .config
+        }
+        (None, Some(path)) => BenchmarkConfig::from_text(
             &std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?,
         )
         .map_err(|e| anyhow::anyhow!(e))?,
-        None => BenchmarkConfig::default(),
+        (None, None) => BenchmarkConfig::default(),
     };
     cfg.nodes = flags.get_u64("nodes", cfg.nodes)?;
     cfg.duration_s = flags.get_f64("hours", cfg.duration_s / 3600.0)? * 3600.0;
     cfg.seed = flags.get_u64("seed", cfg.seed)?;
+    if let Some(engine) = flags.get("engine") {
+        cfg.engine = Engine::parse(engine).map_err(|e| anyhow::anyhow!(e))?;
+    }
 
     let report = run_benchmark(&cfg);
     println!("{}", report.summary());
@@ -172,6 +200,30 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+fn cmd_scenarios() {
+    println!("scenario presets (aiperf run --scenario NAME):");
+    for p in aiperf::scenarios::all() {
+        let c = &p.config;
+        println!(
+            "  {:<12} {:>4} nodes x {} GPUs, {:>4.1} h  — {}",
+            p.name,
+            c.nodes,
+            c.node.gpus_per_node,
+            c.duration_s / 3600.0,
+            p.description
+        );
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_live(_flags: &Flags) -> Result<()> {
+    bail!(
+        "`aiperf live` needs the PJRT runtime: rebuild with `--features pjrt` \
+         (requires the `xla` bindings crate, which is not vendored offline)"
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_live(flags: &Flags) -> Result<()> {
     flags.reject_unknown(&["artifacts", "trials", "epochs", "batches-per-epoch", "seed"])?;
     let result = run_live(&LiveConfig {
@@ -254,6 +306,11 @@ fn main() -> Result<()> {
     };
     match cmd {
         "run" => cmd_run(&Flags::parse(rest)?),
+        "scenarios" => {
+            Flags::parse(rest)?.reject_unknown(&[])?;
+            cmd_scenarios();
+            Ok(())
+        }
         "live" => cmd_live(&Flags::parse(rest)?),
         "cluster" => cmd_cluster(&Flags::parse(rest)?),
         "flops" => {

@@ -55,17 +55,26 @@ impl Default for MorphLimits {
 }
 
 /// Error for illegal morphs.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum MorphError {
-    #[error("stage index {0} out of range")]
     BadStage(usize),
-    #[error("block index {0} out of range")]
     BadBlock(usize),
-    #[error("kernel {0} outside [1,5]")]
     BadKernel(u64),
-    #[error("morph would exceed limits: {0}")]
     LimitExceeded(String),
 }
+
+impl std::fmt::Display for MorphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MorphError::BadStage(stage) => write!(f, "stage index {stage} out of range"),
+            MorphError::BadBlock(block) => write!(f, "block index {block} out of range"),
+            MorphError::BadKernel(kernel) => write!(f, "kernel {kernel} outside [1,5]"),
+            MorphError::LimitExceeded(why) => write!(f, "morph would exceed limits: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for MorphError {}
 
 /// Apply one morph, returning the child (parent is untouched).
 pub fn morph(

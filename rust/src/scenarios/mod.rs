@@ -1,0 +1,179 @@
+//! Named scenario presets reproducing the paper's evaluated systems.
+//!
+//! AIPerf's weak-scalability claim (§5, Table 1 of the scalability
+//! evaluation) spans 4 nodes / 32 NVIDIA T4s (56.1 Tera-OPS) through the
+//! 16-node / 128-V100 testbed up to 512 nodes / 4096 Ascend 910s
+//! (194.53 Peta-OPS). Each preset packages the cluster shape, accelerator
+//! model, and run length of one evaluated system as a ready-to-run
+//! [`BenchmarkConfig`], selectable with `aiperf run --scenario NAME`.
+//!
+//! Accelerator calibration follows the GPU model's convention
+//! (sustained *analytical* ops/second — see [`crate::cluster::gpu`]):
+//! the sustained rate × utilization reproduces the paper's reported
+//! per-device score at each scale.
+//!
+//! The extra `smoke` preset is a down-scaled run for CI: small cluster,
+//! short modelled duration, dense sampling intervals — the workload the
+//! engine-parity and wall-clock-budget tests exercise.
+
+use crate::cluster::GpuModel;
+use crate::config::BenchmarkConfig;
+
+/// A named, ready-to-run benchmark configuration.
+pub struct ScenarioPreset {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub config: BenchmarkConfig,
+    /// Wall-clock budget for *simulating* this scenario on a laptop-class
+    /// CI host, seconds (enforced for `smoke` in the integration suite).
+    pub wall_clock_budget_s: f64,
+}
+
+/// NVIDIA T4 (16 GB): ~56.1 Tera-OPS across 32 cards in the paper ⇒
+/// ≈ 1.75e12 sustained analytical ops/s/device at benchmark utilization.
+fn t4() -> GpuModel {
+    GpuModel {
+        sustained_flops: 2.0e12,
+        memory_bytes: 16 * (1 << 30),
+        util_half_batch: 32.0,
+        util_max: 0.95,
+        step_overhead_s: 2.5e-3,
+    }
+}
+
+/// Huawei Ascend 910 (32 GB): 194.53 Peta-OPS across 4096 devices in the
+/// paper ⇒ ≈ 4.75e13 sustained analytical ops/s/device.
+fn ascend910() -> GpuModel {
+    GpuModel {
+        sustained_flops: 5.4e13,
+        memory_bytes: 32 * (1 << 30),
+        util_half_batch: 64.0,
+        util_max: 0.97,
+        step_overhead_s: 1.5e-3,
+    }
+}
+
+fn smoke() -> ScenarioPreset {
+    let mut config = BenchmarkConfig {
+        nodes: 2,
+        duration_s: 2.0 * 3600.0,
+        ..BenchmarkConfig::default()
+    };
+    // Dense sampling so short runs still produce rich series for the
+    // parity and integration tests.
+    config.telemetry_interval_s = 600.0;
+    config.score_interval_s = 900.0;
+    ScenarioPreset {
+        name: "smoke",
+        description: "CI smoke run: 2 nodes x 8 V100, 2 modelled hours, dense sampling",
+        config,
+        wall_clock_budget_s: 120.0,
+    }
+}
+
+fn t4_32() -> ScenarioPreset {
+    let mut config = BenchmarkConfig {
+        nodes: 4,
+        duration_s: 12.0 * 3600.0,
+        ..BenchmarkConfig::default()
+    };
+    config.node.gpu = t4();
+    config.batch_per_gpu = 256; // 16 GB card: headroom for morphed models
+    ScenarioPreset {
+        name: "t4-32",
+        description: "Paper system 1: 4 nodes x 8 NVIDIA T4 (56.1 Tera-OPS)",
+        config,
+        wall_clock_budget_s: 300.0,
+    }
+}
+
+fn v100_128() -> ScenarioPreset {
+    let config = BenchmarkConfig {
+        nodes: 16,
+        duration_s: 12.0 * 3600.0,
+        ..BenchmarkConfig::default()
+    };
+    ScenarioPreset {
+        name: "v100-128",
+        description: "Paper testbed: 16 nodes x 8 V100 NVLink 32 GB (Figs 4-6, 9-12)",
+        config,
+        wall_clock_budget_s: 300.0,
+    }
+}
+
+fn ascend_4096() -> ScenarioPreset {
+    let mut config = BenchmarkConfig {
+        nodes: 512,
+        duration_s: 12.0 * 3600.0,
+        ..BenchmarkConfig::default()
+    };
+    config.node.gpu = ascend910();
+    ScenarioPreset {
+        name: "ascend-4096",
+        description: "Paper system 3: 512 nodes x 8 Ascend 910 (194.53 Peta-OPS)",
+        config,
+        wall_clock_budget_s: 1800.0,
+    }
+}
+
+/// All presets, CI-cheapest first.
+pub fn all() -> Vec<ScenarioPreset> {
+    vec![smoke(), t4_32(), v100_128(), ascend_4096()]
+}
+
+/// Look up a preset by name.
+pub fn get(name: &str) -> Option<ScenarioPreset> {
+    all().into_iter().find(|p| p.name == name)
+}
+
+/// Preset names, for CLI help and error messages.
+pub fn names() -> Vec<&'static str> {
+    all().into_iter().map(|p| p.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_name() {
+        for name in ["smoke", "t4-32", "v100-128", "ascend-4096"] {
+            let p = get(name).unwrap_or_else(|| panic!("missing preset {name}"));
+            assert_eq!(p.name, name);
+            assert!(!p.description.is_empty());
+            assert!(p.wall_clock_budget_s > 0.0);
+        }
+        assert!(get("nope").is_none());
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut n = names();
+        n.sort_unstable();
+        n.dedup();
+        assert_eq!(n.len(), all().len());
+    }
+
+    #[test]
+    fn cluster_shapes_match_paper() {
+        assert_eq!(get("t4-32").unwrap().config.total_gpus(), 32);
+        assert_eq!(get("v100-128").unwrap().config.total_gpus(), 128);
+        assert_eq!(get("ascend-4096").unwrap().config.total_gpus(), 4096);
+    }
+
+    #[test]
+    fn accelerator_scale_ordering() {
+        // Ascend 910 >> V100 >> T4 in sustained analytical throughput.
+        let t4 = get("t4-32").unwrap().config.node.gpu.sustained_flops;
+        let v100 = get("v100-128").unwrap().config.node.gpu.sustained_flops;
+        let ascend = get("ascend-4096").unwrap().config.node.gpu.sustained_flops;
+        assert!(t4 < v100 && v100 < ascend);
+    }
+
+    #[test]
+    fn t4_batch_fits_memory() {
+        let cfg = get("t4-32").unwrap().config;
+        // ResNet-50-class model must fit at the preset batch size.
+        assert!(cfg.node.gpu.fits(25_600_000, 11_000_000, cfg.batch_per_gpu));
+    }
+}

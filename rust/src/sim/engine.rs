@@ -93,6 +93,11 @@ impl<E> EventQueue<E> {
         self.schedule(self.now + dt, event);
     }
 
+    /// Timestamp of the earliest pending event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
     /// Pop the earliest event, advancing the clock.
     pub fn pop(&mut self) -> Option<(f64, E)> {
         self.heap.pop().map(|e| {
@@ -150,6 +155,18 @@ mod tests {
         q.schedule(2.0, ());
         q.pop();
         q.schedule(1.0, ());
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.schedule(4.0, ());
+        q.schedule(2.0, ());
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.peek_time(), Some(4.0));
     }
 
     #[test]

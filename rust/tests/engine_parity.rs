@@ -1,0 +1,141 @@
+//! Sequential vs. parallel engine parity.
+//!
+//! The sharded coordinator must produce *bit-identical* reports from
+//! `Engine::Sequential` and `Engine::Parallel` for the same seed: the
+//! parallel path only changes which thread executes a shard, never what
+//! the shard computes or the order window outputs are merged. Every f64
+//! is compared through `to_bits` — "close enough" is a bug here.
+
+use aiperf::config::{BenchmarkConfig, Engine};
+use aiperf::coordinator::run_benchmark_with;
+use aiperf::metrics::report::BenchmarkReport;
+
+fn assert_bit_identical(a: &BenchmarkReport, b: &BenchmarkReport, label: &str) {
+    assert_eq!(a.nodes, b.nodes, "{label}: nodes");
+    assert_eq!(a.gpus_per_node, b.gpus_per_node, "{label}: gpus_per_node");
+    assert_eq!(
+        a.score_flops.to_bits(),
+        b.score_flops.to_bits(),
+        "{label}: score {} vs {}",
+        a.score_flops,
+        b.score_flops
+    );
+    assert_eq!(
+        a.final_error.to_bits(),
+        b.final_error.to_bits(),
+        "{label}: final_error {} vs {}",
+        a.final_error,
+        b.final_error
+    );
+    assert_eq!(
+        a.regulated_score.to_bits(),
+        b.regulated_score.to_bits(),
+        "{label}: regulated score"
+    );
+    assert_eq!(
+        a.architectures_evaluated, b.architectures_evaluated,
+        "{label}: architectures evaluated"
+    );
+    assert_eq!(a.validity, b.validity, "{label}: validity");
+    assert_eq!(a.nfs_bytes_read, b.nfs_bytes_read, "{label}: NFS reads");
+    assert_eq!(
+        a.nfs_bytes_written, b.nfs_bytes_written,
+        "{label}: NFS writes"
+    );
+
+    assert_eq!(
+        a.score_series.len(),
+        b.score_series.len(),
+        "{label}: score series length"
+    );
+    for (i, (x, y)) in a.score_series.iter().zip(&b.score_series).enumerate() {
+        assert_eq!(x.t.to_bits(), y.t.to_bits(), "{label}: sample {i} t");
+        assert_eq!(
+            x.cumulative_ops.to_bits(),
+            y.cumulative_ops.to_bits(),
+            "{label}: sample {i} cumulative ops"
+        );
+        assert_eq!(x.flops.to_bits(), y.flops.to_bits(), "{label}: sample {i} flops");
+        assert_eq!(
+            x.best_error.to_bits(),
+            y.best_error.to_bits(),
+            "{label}: sample {i} best error"
+        );
+        assert_eq!(
+            x.regulated.to_bits(),
+            y.regulated.to_bits(),
+            "{label}: sample {i} regulated"
+        );
+    }
+
+    assert_eq!(
+        a.telemetry.len(),
+        b.telemetry.len(),
+        "{label}: telemetry length"
+    );
+    for (i, (x, y)) in a.telemetry.iter().zip(&b.telemetry).enumerate() {
+        for (what, u, v) in [
+            ("t", x.t, y.t),
+            ("gpu_util_mean", x.gpu_util_mean, y.gpu_util_mean),
+            ("gpu_util_std", x.gpu_util_std, y.gpu_util_std),
+            ("gpu_mem_mean", x.gpu_mem_mean, y.gpu_mem_mean),
+            ("gpu_mem_std", x.gpu_mem_std, y.gpu_mem_std),
+            ("cpu_util_mean", x.cpu_util_mean, y.cpu_util_mean),
+            ("cpu_util_std", x.cpu_util_std, y.cpu_util_std),
+            ("host_mem_mean", x.host_mem_mean, y.host_mem_mean),
+            ("host_mem_std", x.host_mem_std, y.host_mem_std),
+        ] {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{label}: telemetry sample {i} field {what}"
+            );
+        }
+    }
+
+    // Belt and braces: the machine-readable report must serialize
+    // identically byte for byte.
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "{label}: JSON report"
+    );
+}
+
+#[test]
+fn smoke_scenario_parity_seeds_0_to_2() {
+    for seed in 0..3u64 {
+        let mut cfg = aiperf::scenarios::get("smoke").expect("smoke preset").config;
+        cfg.seed = seed;
+        let seq = run_benchmark_with(&cfg, Engine::Sequential);
+        let par = run_benchmark_with(&cfg, Engine::Parallel);
+        assert_bit_identical(&seq, &par, &format!("smoke seed {seed}"));
+    }
+}
+
+#[test]
+fn parity_with_odd_shard_count_and_uneven_windows() {
+    // 5 shards never divide evenly across a pool, and a sync interval
+    // that does not divide the duration (6300 / 800 = 7.875) exercises
+    // the truncated final window.
+    let cfg = BenchmarkConfig {
+        nodes: 5,
+        duration_s: 1.75 * 3600.0,
+        seed: 13,
+        sync_interval_s: 800.0,
+        ..BenchmarkConfig::default()
+    };
+    let seq = run_benchmark_with(&cfg, Engine::Sequential);
+    let par = run_benchmark_with(&cfg, Engine::Parallel);
+    assert_bit_identical(&seq, &par, "odd shards");
+}
+
+#[test]
+fn parity_on_t4_preset_shortened() {
+    let mut cfg = aiperf::scenarios::get("t4-32").expect("t4 preset").config;
+    cfg.duration_s = 2.0 * 3600.0;
+    cfg.seed = 1;
+    let seq = run_benchmark_with(&cfg, Engine::Sequential);
+    let par = run_benchmark_with(&cfg, Engine::Parallel);
+    assert_bit_identical(&seq, &par, "t4-32 short");
+}

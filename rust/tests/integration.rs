@@ -3,6 +3,7 @@
 use aiperf::config::BenchmarkConfig;
 use aiperf::coordinator::run_benchmark;
 use aiperf::metrics::score::Validity;
+use aiperf::scenarios;
 use aiperf::util::json::Json;
 
 fn cfg(nodes: u64, hours: f64, seed: u64) -> BenchmarkConfig {
@@ -131,4 +132,68 @@ fn nfs_traffic_scales_with_trials() {
     let small = run_benchmark(&cfg(2, 6.0, 0));
     let big = run_benchmark(&cfg(8, 6.0, 0));
     assert!(big.nfs_bytes_read > small.nfs_bytes_read);
+}
+
+#[test]
+fn every_scenario_preset_validates() {
+    let presets = scenarios::all();
+    assert!(presets.len() >= 4, "expected the paper's systems + smoke");
+    for p in &presets {
+        p.config
+            .validate()
+            .unwrap_or_else(|e| panic!("preset {}: {e}", p.name));
+        // A preset must round-trip through the configuration text format
+        // (what `aiperf config` emits and `--config` reads back).
+        let text = p.config.to_text();
+        let parsed = BenchmarkConfig::from_text(&text)
+            .unwrap_or_else(|e| panic!("preset {} text: {e}", p.name));
+        assert_eq!(parsed.nodes, p.config.nodes, "preset {}", p.name);
+        assert_eq!(
+            parsed.node.gpus_per_node, p.config.node.gpus_per_node,
+            "preset {}",
+            p.name
+        );
+        // The accelerator model must survive the round trip too — the T4
+        // and Ascend presets differ from the V100 default in every one of
+        // these fields.
+        assert_eq!(
+            parsed.node.gpu.sustained_flops, p.config.node.gpu.sustained_flops,
+            "preset {}",
+            p.name
+        );
+        assert_eq!(
+            parsed.node.gpu.util_half_batch, p.config.node.gpu.util_half_batch,
+            "preset {}",
+            p.name
+        );
+        assert_eq!(
+            parsed.node.gpu.util_max, p.config.node.gpu.util_max,
+            "preset {}",
+            p.name
+        );
+        assert_eq!(
+            parsed.node.gpu.step_overhead_s, p.config.node.gpu.step_overhead_s,
+            "preset {}",
+            p.name
+        );
+        assert_eq!(parsed.engine, p.config.engine, "preset {}", p.name);
+    }
+}
+
+#[test]
+fn smoke_scenario_runs_within_wall_clock_budget() {
+    let p = scenarios::get("smoke").expect("smoke preset exists");
+    let start = std::time::Instant::now();
+    let r = run_benchmark(&p.config);
+    let elapsed = start.elapsed().as_secs_f64();
+    assert!(
+        elapsed < p.wall_clock_budget_s,
+        "smoke took {elapsed:.1}s, budget {}s",
+        p.wall_clock_budget_s
+    );
+    // And it produced a meaningful report: dense sampling over 2 h.
+    assert_eq!(r.score_series.len(), 8, "2 h at 15-min score interval");
+    assert_eq!(r.telemetry.len(), 12, "2 h at 10-min telemetry interval");
+    assert!(r.score_flops > 0.0);
+    assert!(r.architectures_evaluated > 0);
 }

@@ -201,6 +201,66 @@ fn prop_event_queue_ordering() {
     }
 }
 
+/// Event-queue tie-breaking: on a coarse integer time grid (forcing many
+/// equal timestamps) and under random schedule/pop interleavings, pops
+/// must match a reference model that always yields the pending event with
+/// the smallest (time, insertion order) — i.e. time-ordered with FIFO
+/// tie-breaking.
+#[test]
+fn prop_event_queue_fifo_tie_breaking() {
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-queue-ties", 0);
+        let mut q = EventQueue::new();
+        // Reference model: pending (time, insertion-order id) pairs.
+        let mut pending: Vec<(f64, u64)> = Vec::new();
+        let mut scheduled = 0u64;
+        let mut last: Option<(f64, u64)> = None;
+        for step in 0..500 {
+            if rng.gen_bool(0.6) {
+                // Integer offsets 0..4 from `now` make timestamp
+                // collisions the common case, not the exception.
+                let t = q.now() + rng.gen_range_u64(0, 4) as f64;
+                q.schedule(t, scheduled);
+                pending.push((t, scheduled));
+                scheduled += 1;
+            } else {
+                let got = q.pop();
+                let want = pending
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        a.0.partial_cmp(&b.0)
+                            .unwrap()
+                            .then_with(|| a.1.cmp(&b.1))
+                    })
+                    .map(|(i, _)| i);
+                match (got, want) {
+                    (None, None) => {}
+                    (Some((t, e)), Some(i)) => {
+                        let (wt, we) = pending.remove(i);
+                        assert_eq!(
+                            (t, e),
+                            (wt, we),
+                            "seed {seed} step {step}: wrong pop order"
+                        );
+                        if let Some((lt, le)) = last {
+                            assert!(
+                                lt < t || (lt == t && le < e),
+                                "seed {seed} step {step}: (time, seq) not increasing"
+                            );
+                        }
+                        last = Some((t, e));
+                    }
+                    (got, want) => {
+                        panic!("seed {seed} step {step}: pop {got:?} vs model {want:?}")
+                    }
+                }
+            }
+        }
+        assert_eq!(q.len(), pending.len(), "seed {seed}: queue/model diverged");
+    }
+}
+
 /// HPO invariant: every optimizer only ever suggests points inside the
 /// search space, for arbitrary observation feedback.
 #[test]

@@ -16,10 +16,12 @@ fn python_batch(seed: u64, start: u64, batch: usize, image: usize, channels: usi
          print(' '.join(repr(float(v)) for v in xs.reshape(-1)))\n\
          print(' '.join(str(int(v)) for v in ys))"
     );
+    // The python/ tree lives at the workspace root, one level above the
+    // aiperf crate's manifest directory (rust/).
     let out = std::process::Command::new("python3")
         .arg("-c")
         .arg(&code)
-        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .current_dir(concat!(env!("CARGO_MANIFEST_DIR"), "/.."))
         .output()
         .ok()?;
     if !out.status.success() {

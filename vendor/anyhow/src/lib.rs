@@ -1,0 +1,241 @@
+//! Minimal offline-vendored subset of the `anyhow` API.
+//!
+//! The build runs without network access to crates.io, so the small slice
+//! of `anyhow` this project uses is vendored in-tree: `Error`, `Result`,
+//! the `Context` extension trait for `Result`/`Option`, and the
+//! `anyhow!`/`bail!`/`ensure!` macros. Semantics follow upstream where the
+//! project relies on them: `Display` shows the outermost context, `Debug`
+//! shows the whole cause chain, and `?` converts any
+//! `std::error::Error + Send + Sync + 'static` into `Error`.
+
+use std::convert::Infallible;
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with a stack of human-readable context messages.
+pub struct Error {
+    /// Context layers, outermost first.
+    context: Vec<String>,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// A plain-message error (what `anyhow!("...")` produces).
+struct MessageError(String);
+
+impl Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error {
+            context: Vec::new(),
+            source: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Wrap the error in an additional layer of context.
+    pub fn context<C: Display>(mut self, context: C) -> Self {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// The lowest-level (root) cause.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cause: &(dyn StdError + 'static) = self.source.as_ref();
+        while let Some(next) = cause.source() {
+            cause = next;
+        }
+        cause
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.first() {
+            Some(outer) => f.write_str(outer),
+            None => write!(f, "{}", self.source),
+        }
+    }
+}
+
+fn print_cause(
+    f: &mut fmt::Formatter<'_>,
+    printed_header: &mut bool,
+    cause: &dyn Display,
+) -> fmt::Result {
+    if !*printed_header {
+        write!(f, "\n\nCaused by:")?;
+        *printed_header = true;
+    }
+    write!(f, "\n    {cause}")
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self)?;
+        let mut printed_header = false;
+        for layer in self.context.iter().skip(1) {
+            print_cause(f, &mut printed_header, layer)?;
+        }
+        if !self.context.is_empty() {
+            print_cause(f, &mut printed_header, &self.source)?;
+        }
+        let mut cause: &(dyn StdError + 'static) = self.source.as_ref();
+        while let Some(next) = cause.source() {
+            print_cause(f, &mut printed_header, &next)?;
+            cause = next;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error {
+            context: Vec::new(),
+            source: Box::new(e),
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($tt)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("opening config")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(e.root_cause().to_string(), "missing");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("layer1")
+            .map_err(|e| e.context("layer0"))
+            .unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("layer0"));
+        assert!(dbg.contains("layer1"));
+        assert!(dbg.contains("missing"));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(3u32).context("ok").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(fail: bool) -> Result<u32> {
+            ensure!(!fail, "flag {fail} was set");
+            if fail {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        assert_eq!(inner(true).unwrap_err().to_string(), "flag true was set");
+        let s = String::from("stringy");
+        assert_eq!(anyhow!(s).to_string(), "stringy");
+        assert_eq!(anyhow!("x={}", 3).to_string(), "x=3");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn run() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(run().is_err());
+    }
+}

@@ -18,12 +18,9 @@ use aiperf::config::BenchmarkConfig;
 use aiperf::coordinator::run_benchmark;
 
 fn base(nodes: u64) -> BenchmarkConfig {
-    BenchmarkConfig {
-        nodes,
-        duration_s: 12.0 * 3600.0,
-        seed: 0,
-        ..BenchmarkConfig::default()
-    }
+    let mut cfg = BenchmarkConfig::homogeneous(nodes);
+    cfg.duration_s = 12.0 * 3600.0;
+    cfg
 }
 
 fn main() {
@@ -77,7 +74,7 @@ fn main() {
     println!("\n== ablation 3: scale-up (2x8) vs scale-out (16x1), 16 GPUs ==\n");
     let up = run_benchmark(&base(2));
     let mut out_cfg = base(16);
-    out_cfg.node.gpus_per_node = 1;
+    out_cfg.topology.groups[0].gpus_per_node = 1;
     let out = run_benchmark(&out_cfg);
     println!(
         "scale-up : nodes=2  gpus/node=8  score={:.4} PFLOPS archs={} error={:.1}%",

@@ -25,12 +25,9 @@ fn main() {
     let mut series = Vec::new();
     for &nodes in &scales {
         let t0 = std::time::Instant::now();
-        let r = run_benchmark(&BenchmarkConfig {
-            nodes,
-            duration_s: 12.0 * 3600.0,
-            seed: 0,
-            ..BenchmarkConfig::default()
-        });
+        let mut cfg = BenchmarkConfig::homogeneous(nodes);
+        cfg.duration_s = 12.0 * 3600.0;
+        let r = run_benchmark(&cfg);
         eprintln!("[bench] {} nodes simulated in {:?}", nodes, t0.elapsed());
         xs.push(nodes as f64);
         stable_scores.push(r.score_flops);

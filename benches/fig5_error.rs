@@ -14,12 +14,9 @@ fn main() {
     let scales = [2u64, 4, 8, 16];
     let mut series = Vec::new();
     for &nodes in &scales {
-        let r = run_benchmark(&BenchmarkConfig {
-            nodes,
-            duration_s: 12.0 * 3600.0,
-            seed: 0,
-            ..BenchmarkConfig::default()
-        });
+        let mut cfg = BenchmarkConfig::homogeneous(nodes);
+        cfg.duration_s = 12.0 * 3600.0;
+        let r = run_benchmark(&cfg);
         series.push((nodes, r.score_series.clone(), r.final_error));
     }
 

@@ -16,12 +16,9 @@ fn main() {
     let mut stable = Vec::new();
     let mut series = Vec::new();
     for &nodes in &scales {
-        let r = run_benchmark(&BenchmarkConfig {
-            nodes,
-            duration_s: 12.0 * 3600.0,
-            seed: 0,
-            ..BenchmarkConfig::default()
-        });
+        let mut cfg = BenchmarkConfig::homogeneous(nodes);
+        cfg.duration_s = 12.0 * 3600.0;
+        let r = run_benchmark(&cfg);
         xs.push(nodes as f64);
         stable.push(r.regulated_score);
         series.push(r.score_series.clone());

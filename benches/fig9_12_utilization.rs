@@ -22,12 +22,9 @@ fn main() {
         "nodes", "gpu %", "±std", "gpu-mem %", "±std", "cpu %", "host-mem %"
     );
     for nodes in [2u64, 4, 8, 16] {
-        let r = run_benchmark(&BenchmarkConfig {
-            nodes,
-            duration_s: 12.0 * 3600.0,
-            seed: 0,
-            ..BenchmarkConfig::default()
-        });
+        let mut cfg = BenchmarkConfig::homogeneous(nodes);
+        cfg.duration_s = 12.0 * 3600.0;
+        let r = run_benchmark(&cfg);
         let window: Vec<_> = r
             .telemetry
             .iter()

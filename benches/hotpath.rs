@@ -101,12 +101,9 @@ fn main() {
     });
 
     let t0 = Instant::now();
-    let r = run_benchmark(&BenchmarkConfig {
-        nodes: 16,
-        duration_s: 12.0 * 3600.0,
-        seed: 0,
-        ..BenchmarkConfig::default()
-    });
+    let mut e2e_cfg = BenchmarkConfig::homogeneous(16);
+    e2e_cfg.duration_s = 12.0 * 3600.0;
+    let r = run_benchmark(&e2e_cfg);
     let t_e2e = t0.elapsed().as_secs_f64();
     println!(
         "{:<44} {:>12.3} s  ({} archs, {} score samples)",

@@ -13,16 +13,12 @@ use aiperf::config::BenchmarkConfig;
 use aiperf::coordinator::run_benchmark;
 
 fn main() {
-    let cfg = BenchmarkConfig {
-        nodes: 2,
-        duration_s: 2.0 * 3600.0,
-        seed: 42,
-        ..BenchmarkConfig::default()
-    };
+    let mut cfg = BenchmarkConfig::homogeneous(2);
+    cfg.duration_s = 2.0 * 3600.0;
+    cfg.seed = 42;
     println!(
-        "AIPerf quickstart: {} nodes × {} GPUs, {:.0} h budget",
-        cfg.nodes,
-        cfg.node.gpus_per_node,
+        "AIPerf quickstart: {} ({:.0} h budget)",
+        cfg.topology.summary(),
         cfg.duration_s / 3600.0
     );
 

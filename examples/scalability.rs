@@ -27,12 +27,8 @@ fn main() {
     let mut regulated = Vec::new();
     let mut archs_at_16 = 0;
     for &nodes in &scales {
-        let cfg = BenchmarkConfig {
-            nodes,
-            duration_s: 12.0 * 3600.0,
-            seed: 0,
-            ..BenchmarkConfig::default()
-        };
+        let mut cfg = BenchmarkConfig::homogeneous(nodes);
+        cfg.duration_s = 12.0 * 3600.0;
         let r = run_benchmark(&cfg);
         println!(
             "{:>6} {:>6} {:>14.4} {:>12.1} {:>16.4} {:>8}",

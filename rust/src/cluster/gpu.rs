@@ -37,6 +37,48 @@ impl Default for GpuModel {
 }
 
 impl GpuModel {
+    /// NVIDIA V100 NVLink 32 GB — the paper's testbed accelerator
+    /// (Tables 6/7). Identical to [`GpuModel::default`].
+    pub fn v100() -> Self {
+        GpuModel::default()
+    }
+
+    /// NVIDIA T4 (16 GB): ~56.1 Tera-OPS across 32 cards in the paper ⇒
+    /// ≈ 1.75e12 sustained analytical ops/s/device at benchmark
+    /// utilization.
+    pub fn t4() -> Self {
+        GpuModel {
+            sustained_flops: 2.0e12,
+            memory_bytes: 16 * (1 << 30),
+            util_half_batch: 32.0,
+            util_max: 0.95,
+            step_overhead_s: 2.5e-3,
+        }
+    }
+
+    /// Huawei Ascend 910 (32 GB): 194.53 Peta-OPS across 4096 devices in
+    /// the paper ⇒ ≈ 4.75e13 sustained analytical ops/s/device.
+    pub fn ascend910() -> Self {
+        GpuModel {
+            sustained_flops: 5.4e13,
+            memory_bytes: 32 * (1 << 30),
+            util_half_batch: 64.0,
+            util_max: 0.97,
+            step_overhead_s: 1.5e-3,
+        }
+    }
+
+    /// Look up a named accelerator model (the `gpu = NAME` config
+    /// shorthand and scenario presets).
+    pub fn named(name: &str) -> Option<Self> {
+        match name {
+            "v100" => Some(Self::v100()),
+            "t4" => Some(Self::t4()),
+            "ascend910" => Some(Self::ascend910()),
+            _ => None,
+        }
+    }
+
     /// Utilization fraction at a per-GPU batch size (Fig 7a upper curve).
     pub fn utilization(&self, batch: u64) -> f64 {
         assert!(batch >= 1);
@@ -119,6 +161,18 @@ mod tests {
         let t1 = g.step_seconds(RESNET50_OPS, 64);
         let t2 = g.step_seconds(2 * RESNET50_OPS, 64);
         assert!(t2 > 1.8 * t1);
+    }
+
+    #[test]
+    fn named_models_resolve_and_order() {
+        assert_eq!(GpuModel::named("v100"), Some(GpuModel::default()));
+        assert!(GpuModel::named("nope").is_none());
+        // Ascend 910 >> V100 >> T4 in sustained analytical throughput.
+        assert!(GpuModel::t4().sustained_flops < GpuModel::v100().sustained_flops);
+        assert!(GpuModel::v100().sustained_flops < GpuModel::ascend910().sustained_flops);
+        // T4 is the 16 GB card; the others are 32 GB.
+        assert_eq!(GpuModel::t4().memory_bytes, 16 * (1 << 30));
+        assert_eq!(GpuModel::ascend910().memory_bytes, 32 * (1 << 30));
     }
 
     #[test]

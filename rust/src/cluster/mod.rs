@@ -8,6 +8,8 @@
 //! * [`gpu`] — V100-like accelerator: sustained analytical-op throughput,
 //!   32 GB memory, batch-amortized utilization;
 //! * [`node`] — a slave node: 8 GPUs + CPU search capacity + memory;
+//! * [`topology`] — the whole cluster as ordered [`NodeGroup`]s, so
+//!   heterogeneous (mixed-accelerator) sites are first-class;
 //! * [`network`] — NCCL-style ring allreduce cost on 100 Gb/s links;
 //! * [`nfs`] — the shared filesystem holding the architecture buffer and
 //!   the historical model list, with latency/bandwidth charges.
@@ -16,8 +18,10 @@ pub mod gpu;
 pub mod network;
 pub mod nfs;
 pub mod node;
+pub mod topology;
 
 pub use gpu::GpuModel;
 pub use network::NetworkModel;
 pub use nfs::NfsModel;
-pub use node::NodeModel;
+pub use node::{HostModel, NodeModel};
+pub use topology::{ClusterTopology, NodeGroup};

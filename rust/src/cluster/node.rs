@@ -6,14 +6,17 @@
 //! container). The node model supplies per-component capacities and the
 //! CPU-side costs of the search loop (architecture generation is run on
 //! slave CPUs in AIPerf's modified NNI, §4.3).
-
+//!
+//! The host side ([`HostModel`]) is split from the accelerator side so a
+//! heterogeneous [`crate::cluster::ClusterTopology`] can vary the GPU
+//! complement per node group while every group shares the same slave
+//! container shape.
 
 use super::gpu::GpuModel;
 
+/// CPU-side slave container: cores, memory, and the search-loop costs.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub struct NodeModel {
-    pub gpus_per_node: u64,
-    pub gpu: GpuModel,
+pub struct HostModel {
     /// Container CPU cores (Table 7: 24).
     pub cpu_cores: u64,
     /// Container memory bytes (Table 7: 280 GB).
@@ -26,11 +29,9 @@ pub struct NodeModel {
     pub setup_seconds: f64,
 }
 
-impl Default for NodeModel {
+impl Default for HostModel {
     fn default() -> Self {
-        NodeModel {
-            gpus_per_node: 8,
-            gpu: GpuModel::default(),
+        HostModel {
             cpu_cores: 24,
             memory_bytes: 280 * (1 << 30),
             search_seconds: 1.5,
@@ -39,14 +40,7 @@ impl Default for NodeModel {
     }
 }
 
-impl NodeModel {
-    /// Aggregate per-node sustained analytical throughput at a batch size.
-    pub fn node_flops(&self, batch_per_gpu: u64) -> f64 {
-        self.gpus_per_node as f64
-            * self.gpu.sustained_flops
-            * self.gpu.utilization(batch_per_gpu)
-    }
-
+impl HostModel {
     /// CPU utilization fraction while training runs: the input pipeline and
     /// the search thread keep a few cores busy (paper Fig 11: < 5 % of the
     /// host, i.e. a couple of container cores).
@@ -63,6 +57,43 @@ impl NodeModel {
     }
 }
 
+/// One fully-specified slave node: its accelerator complement plus host.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeModel {
+    pub gpus_per_node: u64,
+    pub gpu: GpuModel,
+    pub host: HostModel,
+}
+
+impl Default for NodeModel {
+    fn default() -> Self {
+        NodeModel {
+            gpus_per_node: 8,
+            gpu: GpuModel::default(),
+            host: HostModel::default(),
+        }
+    }
+}
+
+impl NodeModel {
+    /// Aggregate per-node sustained analytical throughput at a batch size.
+    pub fn node_flops(&self, batch_per_gpu: u64) -> f64 {
+        self.gpus_per_node as f64
+            * self.gpu.sustained_flops
+            * self.gpu.utilization(batch_per_gpu)
+    }
+
+    /// CPU utilization fraction while training runs (see [`HostModel`]).
+    pub fn cpu_util_training(&self) -> f64 {
+        self.host.cpu_util_training()
+    }
+
+    /// Main-memory fraction used while training (see [`HostModel`]).
+    pub fn host_memory_util(&self, dataset_cache_bytes: u64) -> f64 {
+        self.host.host_memory_util(dataset_cache_bytes)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,8 +102,8 @@ mod tests {
     fn defaults_match_table7() {
         let n = NodeModel::default();
         assert_eq!(n.gpus_per_node, 8);
-        assert_eq!(n.cpu_cores, 24);
-        assert_eq!(n.memory_bytes, 280 * (1 << 30));
+        assert_eq!(n.host.cpu_cores, 24);
+        assert_eq!(n.host.memory_bytes, 280 * (1 << 30));
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Heterogeneous cluster topology.
+//!
+//! AIPerf ranks *diverse* systems with a single OPS metric — the paper
+//! evaluates NVIDIA T4 and V100 fleets and a 4096-device Ascend 910
+//! system side by side (Fig 4 / Table 1). A [`ClusterTopology`] is an
+//! ordered list of [`NodeGroup`]s, each a homogeneous slice of the
+//! cluster (`count` nodes × `gpus_per_node` accelerators of one
+//! [`GpuModel`]); mixing groups models real mixed-accelerator sites.
+//!
+//! The ordering is load-bearing: slave nodes are numbered globally in
+//! group order (group 0's nodes first, then group 1's, …), which fixes
+//! shard RNG streams and the coordinator's deterministic merge order —
+//! the reason heterogeneous runs stay bit-identical between the
+//! sequential and parallel engines.
+
+use super::gpu::GpuModel;
+use super::node::{HostModel, NodeModel};
+
+/// A homogeneous slice of the cluster: `count` identical slave nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeGroup {
+    /// Section name in the config text (`[group.LABEL]`) and report rows.
+    pub label: String,
+    /// Number of slave nodes in this group.
+    pub count: u64,
+    /// Accelerators per node in this group.
+    pub gpus_per_node: u64,
+    /// The group's accelerator model.
+    pub gpu: GpuModel,
+}
+
+impl NodeGroup {
+    pub fn new(label: &str, count: u64, gpus_per_node: u64, gpu: GpuModel) -> Self {
+        NodeGroup {
+            label: label.to_string(),
+            count,
+            gpus_per_node,
+            gpu,
+        }
+    }
+
+    /// Whether `label` can name a `[group.LABEL]` config section — the
+    /// single source of the charset rule shared by topology validation
+    /// and the config parser, so everything `validate` accepts survives
+    /// a `to_text`/`from_text` round trip.
+    pub fn is_valid_label(label: &str) -> bool {
+        !label.is_empty()
+            && label
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+    }
+
+    /// Total accelerators in this group.
+    pub fn gpus(&self) -> u64 {
+        self.count * self.gpus_per_node
+    }
+
+    /// The fully-specified node model for this group's nodes, sharing the
+    /// cluster-wide host (slave container) shape.
+    pub fn node_model(&self, host: HostModel) -> NodeModel {
+        NodeModel {
+            gpus_per_node: self.gpus_per_node,
+            gpu: self.gpu,
+            host,
+        }
+    }
+}
+
+/// Ordered node groups describing the whole cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterTopology {
+    pub groups: Vec<NodeGroup>,
+}
+
+impl Default for ClusterTopology {
+    /// The historical flat default: 2 nodes × 8 V100.
+    fn default() -> Self {
+        ClusterTopology::homogeneous(2, 8, GpuModel::default())
+    }
+}
+
+impl ClusterTopology {
+    /// A cluster of exactly one node group.
+    pub fn single(group: NodeGroup) -> Self {
+        ClusterTopology {
+            groups: vec![group],
+        }
+    }
+
+    /// A single-group cluster — what the legacy flat `nodes` /
+    /// `gpus_per_node` configuration keys describe.
+    pub fn homogeneous(count: u64, gpus_per_node: u64, gpu: GpuModel) -> Self {
+        Self::single(NodeGroup::new("default", count, gpus_per_node, gpu))
+    }
+
+    /// Total slave nodes across all groups.
+    pub fn total_nodes(&self) -> u64 {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// Total accelerators across all groups.
+    pub fn total_gpus(&self) -> u64 {
+        self.groups.iter().map(|g| g.gpus()).sum()
+    }
+
+    /// Group index of a global node index (nodes are numbered in group
+    /// order). `None` when `node` is out of range.
+    pub fn group_of_node(&self, node: u64) -> Option<usize> {
+        let mut first = 0;
+        for (i, g) in self.groups.iter().enumerate() {
+            if node < first + g.count {
+                return Some(i);
+            }
+            first += g.count;
+        }
+        None
+    }
+
+    /// `(group index, global node index)` for every node, in merge order.
+    pub fn nodes(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.groups
+            .iter()
+            .enumerate()
+            .flat_map(|(g, grp)| std::iter::repeat_n(g, grp.count as usize))
+            .enumerate()
+            .map(|(node, g)| (g, node))
+    }
+
+    /// Rescale a *single-group* topology to `count` nodes (the CLI
+    /// `--nodes` override). Multi-group topologies are ambiguous here.
+    pub fn scale_to_nodes(&mut self, count: u64) -> Result<(), String> {
+        match self.groups.as_mut_slice() {
+            [only] => {
+                only.count = count;
+                Ok(())
+            }
+            _ => Err(format!(
+                "--nodes applies to single-group topologies only (this one has {} groups)",
+                self.groups.len()
+            )),
+        }
+    }
+
+    /// Human-readable shape, e.g. `2x8 t4 + 2x8 v100 (32 GPUs)`.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .groups
+            .iter()
+            .map(|g| format!("{}x{} {}", g.count, g.gpus_per_node, g.label))
+            .collect();
+        format!("{} ({} GPUs)", parts.join(" + "), self.total_gpus())
+    }
+
+    /// Structural validity: at least one group, no empty groups, unique
+    /// labels drawn from the config-section charset (labels name
+    /// `[group.NAME]` sections, so anything `validate` accepts must
+    /// survive a `to_text`/`from_text` round trip).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.groups.is_empty() {
+            return Err("at least one node group required".into());
+        }
+        for g in &self.groups {
+            if !NodeGroup::is_valid_label(&g.label) {
+                return Err(format!(
+                    "bad node group label `{}` (alphanumeric, `-`, `_`)",
+                    g.label
+                ));
+            }
+            if g.count == 0 {
+                return Err(format!("group `{}`: at least one node required", g.label));
+            }
+            if g.gpus_per_node == 0 {
+                return Err(format!(
+                    "group `{}`: at least one GPU per node required",
+                    g.label
+                ));
+            }
+        }
+        for (i, g) in self.groups.iter().enumerate() {
+            if self.groups[..i].iter().any(|h| h.label == g.label) {
+                return Err(format!("duplicate node group label `{}`", g.label));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixed() -> ClusterTopology {
+        ClusterTopology {
+            groups: vec![
+                NodeGroup::new("t4", 2, 8, GpuModel::t4()),
+                NodeGroup::new("v100", 3, 4, GpuModel::v100()),
+            ],
+        }
+    }
+
+    #[test]
+    fn totals_sum_over_groups() {
+        let t = mixed();
+        assert_eq!(t.total_nodes(), 5);
+        assert_eq!(t.total_gpus(), 2 * 8 + 3 * 4);
+    }
+
+    #[test]
+    fn default_matches_legacy_flat_shape() {
+        let t = ClusterTopology::default();
+        assert_eq!(t.groups.len(), 1);
+        assert_eq!(t.total_nodes(), 2);
+        assert_eq!(t.total_gpus(), 16);
+        assert_eq!(t.groups[0].gpu, GpuModel::default());
+    }
+
+    #[test]
+    fn node_numbering_is_group_ordered() {
+        let t = mixed();
+        let nodes: Vec<(usize, usize)> = t.nodes().collect();
+        assert_eq!(nodes, vec![(0, 0), (0, 1), (1, 2), (1, 3), (1, 4)]);
+        assert_eq!(t.group_of_node(0), Some(0));
+        assert_eq!(t.group_of_node(1), Some(0));
+        assert_eq!(t.group_of_node(2), Some(1));
+        assert_eq!(t.group_of_node(4), Some(1));
+        assert_eq!(t.group_of_node(5), None);
+    }
+
+    #[test]
+    fn validation_catches_bad_shapes() {
+        assert!(ClusterTopology { groups: vec![] }.validate().is_err());
+        let mut t = mixed();
+        t.groups[0].count = 0;
+        assert!(t.validate().is_err());
+        let mut t = mixed();
+        t.groups[1].gpus_per_node = 0;
+        assert!(t.validate().is_err());
+        let mut t = mixed();
+        t.groups[1].label = "t4".into();
+        assert!(t.validate().is_err(), "duplicate labels must be rejected");
+        let mut t = mixed();
+        t.groups[0].label = String::new();
+        assert!(t.validate().is_err());
+        // Labels outside the `[group.NAME]` section charset would break
+        // the config round trip, so validation rejects them up front.
+        let mut t = mixed();
+        t.groups[0].label = "my gpu".into();
+        assert!(t.validate().is_err());
+        assert!(mixed().validate().is_ok());
+    }
+
+    #[test]
+    fn scale_to_nodes_single_group_only() {
+        let mut t = ClusterTopology::default();
+        t.scale_to_nodes(7).unwrap();
+        assert_eq!(t.total_nodes(), 7);
+        let mut t = mixed();
+        assert!(t.scale_to_nodes(7).is_err());
+    }
+
+    #[test]
+    fn summary_names_every_group() {
+        let s = mixed().summary();
+        assert!(s.contains("2x8 t4"), "{s}");
+        assert!(s.contains("3x4 v100"), "{s}");
+        assert!(s.contains("28 GPUs"), "{s}");
+    }
+
+    #[test]
+    fn node_model_inherits_host() {
+        let host = HostModel {
+            cpu_cores: 48,
+            ..HostModel::default()
+        };
+        let n = mixed().groups[0].node_model(host);
+        assert_eq!(n.gpus_per_node, 8);
+        assert_eq!(n.gpu, GpuModel::t4());
+        assert_eq!(n.host.cpu_cores, 48);
+    }
+}

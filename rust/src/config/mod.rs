@@ -5,9 +5,49 @@
 //! "pencil-and-paper" customizable (framework, batch size, optimizer,
 //! learning rate, termination). This module is the single source of those
 //! knobs: TOML-serializable, CLI-overridable, validated before a run.
+//!
+//! # Configuration text format
+//!
+//! The file is a TOML subset: global `key = value` lines followed by one
+//! `[group.NAME]` section per node group of the cluster topology
+//! (heterogeneous clusters list several). `#` starts a comment. Example:
+//!
+//! ```text
+//! batch_per_gpu = 256
+//! duration_s = 43200
+//!
+//! [group.t4]
+//! count = 2
+//! gpus_per_node = 8
+//! gpu = t4                 # named model: t4 | v100 | ascend910
+//!
+//! [group.v100]
+//! count = 2
+//! gpus_per_node = 8
+//! gpu = v100
+//! gpu_util_max = 0.96      # per-field overrides after `gpu = NAME`
+//! ```
+//!
+//! Group keys: `count` (required per section), `gpus_per_node`, `gpu`
+//! (named accelerator), and the per-field accelerator overrides
+//! `gpu_sustained_flops`, `gpu_memory_bytes` (or `gpu_memory_gb`),
+//! `gpu_util_half_batch`, `gpu_util_max`, `gpu_step_overhead_s`.
+//!
+//! **Legacy flat shorthand:** the pre-topology keys `nodes`,
+//! `gpus_per_node`, and the `gpu_*` family may still appear at the top
+//! level *instead of* `[group.*]` sections; they describe a single
+//! homogeneous group labelled `default`. Mixing the flat shorthand with
+//! explicit sections is an error. Global keys must precede the first
+//! section header.
+//!
+//! [`BenchmarkConfig::to_text`] always emits the canonical sectioned
+//! form, and for any configuration that passes
+//! [`BenchmarkConfig::validate`] (in particular, group labels restricted
+//! to the `[group.NAME]` charset), `BenchmarkConfig::from_text(cfg.to_text())`
+//! is the identity (enforced by a property test in
+//! `rust/tests/properties.rs`).
 
-
-use crate::cluster::NodeModel;
+use crate::cluster::{ClusterTopology, GpuModel, HostModel, NodeGroup};
 use crate::data::DatasetDescriptor;
 use crate::nas::morphism::MorphLimits;
 
@@ -84,11 +124,13 @@ impl WarmupSchedule {
 }
 
 /// Full benchmark configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BenchmarkConfig {
-    /// Cluster scale.
-    pub nodes: u64,
-    pub node: NodeModel,
+    /// Cluster shape: ordered node groups (heterogeneous clusters list
+    /// several; the legacy flat keys describe a single group).
+    pub topology: ClusterTopology,
+    /// Slave container (host) shape, shared by every group.
+    pub host: HostModel,
     /// Dataset (fixed to ImageNet shape for official runs).
     pub dataset: DatasetDescriptor,
     /// Suggested per-GPU batch size (Table 5: 448).
@@ -126,8 +168,8 @@ pub struct BenchmarkConfig {
 impl Default for BenchmarkConfig {
     fn default() -> Self {
         BenchmarkConfig {
-            nodes: 2,
-            node: NodeModel::default(),
+            topology: ClusterTopology::default(),
+            host: HostModel::default(),
             dataset: DatasetDescriptor::imagenet(),
             batch_per_gpu: 448,
             learning_rate: 0.1,
@@ -148,19 +190,27 @@ impl Default for BenchmarkConfig {
 }
 
 impl BenchmarkConfig {
+    /// The default configuration rescaled to a homogeneous cluster of
+    /// `nodes` V100 slave nodes (the pre-topology constructor shape).
+    pub fn homogeneous(nodes: u64) -> Self {
+        let mut cfg = BenchmarkConfig::default();
+        cfg.topology.groups[0].count = nodes;
+        cfg
+    }
+
+    /// Total slave node count.
+    pub fn total_nodes(&self) -> u64 {
+        self.topology.total_nodes()
+    }
+
     /// Total GPU count.
     pub fn total_gpus(&self) -> u64 {
-        self.nodes * self.node.gpus_per_node
+        self.topology.total_gpus()
     }
 
     /// Validate the configuration against the paper's fixed rules.
     pub fn validate(&self) -> Result<(), String> {
-        if self.nodes == 0 {
-            return Err("at least one slave node required".into());
-        }
-        if self.node.gpus_per_node == 0 {
-            return Err("at least one GPU per node required".into());
-        }
+        self.topology.validate()?;
         if self.precision_bits < 16 {
             return Err("precision must be FP16 or higher (Table 5)".into());
         }
@@ -186,30 +236,137 @@ impl BenchmarkConfig {
         Ok(())
     }
 
-    /// Parse from a flat `key = value` text (a TOML subset; `#` comments).
-    /// Unknown keys are an error — configuration typos must not silently
-    /// fall back to defaults. Unlisted keys keep their default.
+    /// Parse from the configuration text format (see the module doc):
+    /// global `key = value` lines, then `[group.NAME]` sections — or the
+    /// legacy flat cluster keys as a single-group shorthand. Unknown keys
+    /// are an error — configuration typos must not silently fall back to
+    /// defaults. Unlisted keys keep their default.
     pub fn from_text(s: &str) -> Result<Self, String> {
+        /// Apply one cluster-group key to `g`; `Ok(false)` means the key
+        /// is not a group key. Shared by the `[group.*]` branch and the
+        /// legacy flat branch so the two dialects cannot drift.
+        fn apply_group_key(g: &mut NodeGroup, key: &str, value: &str) -> Result<bool, String> {
+            let parse_u64 = |v: &str| -> Result<u64, String> {
+                v.parse().map_err(|_| format!("bad integer `{v}`"))
+            };
+            let parse_f64 = |v: &str| -> Result<f64, String> {
+                v.parse().map_err(|_| format!("bad number `{v}`"))
+            };
+            match key {
+                "count" => g.count = parse_u64(value)?,
+                "gpus_per_node" => g.gpus_per_node = parse_u64(value)?,
+                "gpu" => {
+                    g.gpu = GpuModel::named(value).ok_or_else(|| {
+                        format!(
+                            "unknown accelerator `{value}` (expected t4, v100, or ascend910)"
+                        )
+                    })?
+                }
+                "gpu_sustained_flops" => g.gpu.sustained_flops = parse_f64(value)?,
+                "gpu_memory_bytes" => g.gpu.memory_bytes = parse_u64(value)?,
+                "gpu_memory_gb" => {
+                    g.gpu.memory_bytes = (parse_f64(value)? * (1u64 << 30) as f64) as u64
+                }
+                "gpu_util_half_batch" => g.gpu.util_half_batch = parse_f64(value)?,
+                "gpu_util_max" => g.gpu.util_max = parse_f64(value)?,
+                "gpu_step_overhead_s" => g.gpu.step_overhead_s = parse_f64(value)?,
+                _ => return Ok(false),
+            }
+            Ok(true)
+        }
+
         let mut cfg = BenchmarkConfig::default();
+        // Explicit `[group.NAME]` sections, in file order; each section
+        // must set `count` explicitly (no silent one-node default).
+        let mut groups: Vec<NodeGroup> = Vec::new();
+        let mut count_seen: Vec<bool> = Vec::new();
+        // Single group accumulated from the legacy flat keys, starting
+        // from the default topology's group so partial flat configs stay
+        // consistent with the no-keys default.
+        let mut flat: Option<NodeGroup> = None;
+        fn flat_group() -> NodeGroup {
+            ClusterTopology::default().groups.swap_remove(0)
+        }
+
         for (lineno, raw) in s.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
                 continue;
             }
+            let err = |msg: String| format!("line {}: {msg}", lineno + 1);
+
+            // Section header?
+            if let Some(inner) = line.strip_prefix('[') {
+                let inner = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header".into()))?
+                    .trim();
+                let label = inner.strip_prefix("group.").ok_or_else(|| {
+                    err(format!("unknown section `[{inner}]` (expected `[group.NAME]`)"))
+                })?;
+                if !NodeGroup::is_valid_label(label) {
+                    return Err(err(format!(
+                        "bad group label `{label}` (alphanumeric, `-`, `_`)"
+                    )));
+                }
+                if groups.iter().any(|g| g.label == label) {
+                    return Err(err(format!("duplicate group `[group.{label}]`")));
+                }
+                groups.push(NodeGroup::new(label, 1, 8, GpuModel::default()));
+                count_seen.push(false);
+                continue;
+            }
+
             let (key, value) = line
                 .split_once('=')
-                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+                .ok_or_else(|| err("expected `key = value`".into()))?;
             let key = key.trim();
             let value = value.trim();
             let parse_u64 = |v: &str| -> Result<u64, String> {
-                v.parse().map_err(|_| format!("line {}: bad integer `{v}`", lineno + 1))
+                v.parse().map_err(|_| err(format!("bad integer `{v}`")))
             };
             let parse_f64 = |v: &str| -> Result<f64, String> {
-                v.parse().map_err(|_| format!("line {}: bad number `{v}`", lineno + 1))
+                v.parse().map_err(|_| err(format!("bad number `{v}`")))
             };
+
+            // Inside a section: keys configure the newest group.
+            if let Some(g) = groups.last_mut() {
+                if apply_group_key(g, key, value).map_err(&err)? {
+                    if key == "count" {
+                        *count_seen.last_mut().expect("group just pushed") = true;
+                    }
+                    continue;
+                }
+                return Err(err(format!(
+                    "unknown key `{key}` in [group.{}] (global keys go before \
+                     the first section)",
+                    g.label
+                )));
+            }
+
+            // Legacy flat cluster keys: a single-group shorthand
+            // (`nodes` is the flat spelling of a group's `count`; the
+            // section-only `count` key stays invalid at the top level).
+            let flat_key = match key {
+                "nodes" => Some("count"),
+                "gpus_per_node" | "gpu" | "gpu_sustained_flops" | "gpu_memory_bytes"
+                | "gpu_memory_gb" | "gpu_util_half_batch" | "gpu_util_max"
+                | "gpu_step_overhead_s" => Some(key),
+                _ => None,
+            };
+            if let Some(flat_key) = flat_key {
+                let g = flat.get_or_insert_with(flat_group);
+                apply_group_key(g, flat_key, value).map_err(&err)?;
+                continue;
+            }
+
             match key {
-                "nodes" => cfg.nodes = parse_u64(value)?,
-                "gpus_per_node" => cfg.node.gpus_per_node = parse_u64(value)?,
+                // Host (slave container) keys.
+                "cpu_cores" => cfg.host.cpu_cores = parse_u64(value)?,
+                "host_memory_bytes" => cfg.host.memory_bytes = parse_u64(value)?,
+                "search_seconds" => cfg.host.search_seconds = parse_f64(value)?,
+                "setup_seconds" => cfg.host.setup_seconds = parse_f64(value)?,
+                // Global benchmark keys.
                 "batch_per_gpu" => cfg.batch_per_gpu = parse_u64(value)?,
                 "learning_rate" => cfg.learning_rate = parse_f64(value)?,
                 "lr_decay_per_epoch" => cfg.lr_decay_per_epoch = parse_f64(value)?,
@@ -221,10 +378,7 @@ impl BenchmarkConfig {
                 "score_interval_s" => cfg.score_interval_s = parse_f64(value)?,
                 "seed" => cfg.seed = parse_u64(value)?,
                 "precision_bits" => cfg.precision_bits = parse_u64(value)? as u32,
-                "engine" => {
-                    cfg.engine = Engine::parse(value)
-                        .map_err(|e| format!("line {}: {e}", lineno + 1))?
-                }
+                "engine" => cfg.engine = Engine::parse(value).map_err(err)?,
                 "sync_interval_s" => cfg.sync_interval_s = parse_f64(value)?,
                 "max_params" => cfg.morph_limits.max_params = parse_u64(value)?,
                 "max_depth" => cfg.morph_limits.max_depth = parse_u64(value)? as usize,
@@ -233,31 +387,53 @@ impl BenchmarkConfig {
                 "warmup_step_epochs" => cfg.warmup.step_epochs = parse_u64(value)?,
                 "max_epochs" => cfg.warmup.max_epochs = parse_u64(value)?,
                 "hpo_start_round" => cfg.warmup.hpo_start_round = parse_u64(value)?,
-                "gpu_sustained_flops" => cfg.node.gpu.sustained_flops = parse_f64(value)?,
-                "gpu_memory_gb" => {
-                    cfg.node.gpu.memory_bytes = (parse_f64(value)? * (1u64 << 30) as f64) as u64
-                }
-                "gpu_util_half_batch" => cfg.node.gpu.util_half_batch = parse_f64(value)?,
-                "gpu_util_max" => cfg.node.gpu.util_max = parse_f64(value)?,
-                "gpu_step_overhead_s" => cfg.node.gpu.step_overhead_s = parse_f64(value)?,
-                other => return Err(format!("line {}: unknown key `{other}`", lineno + 1)),
+                other => return Err(err(format!("unknown key `{other}`"))),
             }
+        }
+
+        // A section that never set `count` would silently simulate a
+        // one-node group; require it explicitly (typos must not shrink
+        // the cluster).
+        if let Some(i) = count_seen.iter().position(|&seen| !seen) {
+            return Err(format!(
+                "[group.{}] is missing the required `count` key",
+                groups[i].label
+            ));
+        }
+        match (groups.is_empty(), flat) {
+            (false, Some(_)) => {
+                return Err(
+                    "flat cluster keys (nodes/gpus_per_node/gpu_*) cannot be mixed with \
+                     [group.*] sections"
+                        .into(),
+                )
+            }
+            (false, None) => cfg.topology = ClusterTopology { groups },
+            (true, Some(g)) => cfg.topology = ClusterTopology { groups: vec![g] },
+            (true, None) => {} // default topology stands
         }
         Ok(cfg)
     }
 
-    /// Render as the same flat `key = value` text `from_text` accepts.
+    /// Render as the canonical sectioned text `from_text` accepts;
+    /// for any configuration that passes [`BenchmarkConfig::validate`],
+    /// `from_text(self.to_text())` reproduces `self` exactly.
     pub fn to_text(&self) -> String {
-        format!(
+        debug_assert!(
+            self.topology
+                .groups
+                .iter()
+                .all(|g| NodeGroup::is_valid_label(&g.label)),
+            "group labels must use the [group.NAME] charset to round-trip"
+        );
+        let mut out = format!(
             "# AIPerf benchmark configuration (Table 5 defaults)\n\
-             nodes = {}\n\
-             gpus_per_node = {}\n\
              batch_per_gpu = {}\n\
              learning_rate = {}\n\
              lr_decay_per_epoch = {}\n\
              patience = {}\n\
              min_delta = {}\n\
-             duration_hours = {}\n\
+             duration_s = {}\n\
              telemetry_interval_s = {}\n\
              score_interval_s = {}\n\
              seed = {}\n\
@@ -269,21 +445,18 @@ impl BenchmarkConfig {
              warmup_step_epochs = {}\n\
              max_epochs = {}\n\
              hpo_start_round = {}\n\
-             gpu_sustained_flops = {:e}\n\
-             gpu_memory_gb = {}\n\
-             gpu_util_half_batch = {}\n\
-             gpu_util_max = {}\n\
-             gpu_step_overhead_s = {}\n\
+             cpu_cores = {}\n\
+             host_memory_bytes = {}\n\
+             search_seconds = {}\n\
+             setup_seconds = {}\n\
              engine = {}\n\
              sync_interval_s = {}\n",
-            self.nodes,
-            self.node.gpus_per_node,
             self.batch_per_gpu,
             self.learning_rate,
             self.lr_decay_per_epoch,
             self.patience,
             self.min_delta,
-            self.duration_s / 3600.0,
+            self.duration_s,
             self.telemetry_interval_s,
             self.score_interval_s,
             self.seed,
@@ -295,14 +468,34 @@ impl BenchmarkConfig {
             self.warmup.step_epochs,
             self.warmup.max_epochs,
             self.warmup.hpo_start_round,
-            self.node.gpu.sustained_flops,
-            self.node.gpu.memory_bytes / (1 << 30),
-            self.node.gpu.util_half_batch,
-            self.node.gpu.util_max,
-            self.node.gpu.step_overhead_s,
+            self.host.cpu_cores,
+            self.host.memory_bytes,
+            self.host.search_seconds,
+            self.host.setup_seconds,
             self.engine.as_str(),
             self.sync_interval_s,
-        )
+        );
+        for g in &self.topology.groups {
+            out.push_str(&format!(
+                "\n[group.{}]\n\
+                 count = {}\n\
+                 gpus_per_node = {}\n\
+                 gpu_sustained_flops = {}\n\
+                 gpu_memory_bytes = {}\n\
+                 gpu_util_half_batch = {}\n\
+                 gpu_util_max = {}\n\
+                 gpu_step_overhead_s = {}\n",
+                g.label,
+                g.count,
+                g.gpus_per_node,
+                g.gpu.sustained_flops,
+                g.gpu.memory_bytes,
+                g.gpu.util_half_batch,
+                g.gpu.util_max,
+                g.gpu.step_overhead_s,
+            ));
+        }
+        out
     }
 }
 
@@ -330,36 +523,112 @@ mod tests {
         assert_eq!(c.batch_per_gpu, 448);
         assert_eq!(c.learning_rate, 0.1);
         assert_eq!(c.total_gpus(), 16);
+        assert_eq!(c.total_nodes(), 2);
     }
 
     #[test]
     fn validation_rejects_bad() {
         let mut c = BenchmarkConfig::default();
-        c.nodes = 0;
+        c.topology.groups[0].count = 0;
         assert!(c.validate().is_err());
 
         let mut c = BenchmarkConfig::default();
-        c.precision_bits = 8;
+        c.topology.groups.clear();
         assert!(c.validate().is_err());
 
-        let mut c = BenchmarkConfig::default();
-        c.duration_s = -1.0;
+        let c = BenchmarkConfig {
+            precision_bits: 8,
+            ..BenchmarkConfig::default()
+        };
+        assert!(c.validate().is_err());
+
+        let c = BenchmarkConfig {
+            duration_s: -1.0,
+            ..BenchmarkConfig::default()
+        };
         assert!(c.validate().is_err());
     }
 
     #[test]
-    fn text_roundtrip() {
-        let mut c = BenchmarkConfig::default();
-        c.nodes = 7;
+    fn text_roundtrip_is_identity() {
+        let mut c = BenchmarkConfig::homogeneous(7);
         c.seed = 99;
         c.duration_s = 4.5 * 3600.0;
-        let s = c.to_text();
-        let c2 = BenchmarkConfig::from_text(&s).unwrap();
-        assert_eq!(c2.nodes, 7);
-        assert_eq!(c2.seed, 99);
-        assert!((c2.duration_s - c.duration_s).abs() < 1.0);
-        assert_eq!(c2.batch_per_gpu, c.batch_per_gpu);
-        assert_eq!(c2.warmup, c.warmup);
+        let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
+        assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn multi_group_roundtrip_is_identity() {
+        let c = BenchmarkConfig {
+            topology: ClusterTopology {
+                groups: vec![
+                    NodeGroup::new("t4", 2, 8, GpuModel::t4()),
+                    NodeGroup::new("v100", 3, 4, GpuModel::v100()),
+                    NodeGroup::new("ascend", 1, 16, GpuModel::ascend910()),
+                ],
+            },
+            host: HostModel {
+                cpu_cores: 48,
+                ..HostModel::default()
+            },
+            ..BenchmarkConfig::default()
+        };
+        let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
+        assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn legacy_flat_keys_parse_to_one_group() {
+        let c = BenchmarkConfig::from_text(
+            "nodes = 4\ngpus_per_node = 2\ngpu_sustained_flops = 2e12\ngpu_memory_gb = 16\n",
+        )
+        .unwrap();
+        assert_eq!(c.topology.groups.len(), 1);
+        let g = &c.topology.groups[0];
+        assert_eq!(g.label, "default");
+        assert_eq!((g.count, g.gpus_per_node), (4, 2));
+        assert_eq!(g.gpu.sustained_flops, 2e12);
+        assert_eq!(g.gpu.memory_bytes, 16 * (1 << 30));
+    }
+
+    #[test]
+    fn group_sections_parse_with_named_gpu_and_overrides() {
+        let text = "batch_per_gpu = 256\n\
+                    [group.t4]\ncount = 2\ngpus_per_node = 8\ngpu = t4\n\
+                    [group.v100]\ncount = 3\ngpus_per_node = 4\ngpu = v100\ngpu_util_max = 0.9\n";
+        let c = BenchmarkConfig::from_text(text).unwrap();
+        assert_eq!(c.batch_per_gpu, 256);
+        assert_eq!(c.topology.groups.len(), 2);
+        assert_eq!(c.topology.groups[0].gpu, GpuModel::t4());
+        assert_eq!(c.topology.groups[1].gpu.util_max, 0.9);
+        assert_eq!(c.total_nodes(), 5);
+        assert_eq!(c.total_gpus(), 28);
+    }
+
+    #[test]
+    fn flat_and_sections_do_not_mix() {
+        let text = "nodes = 2\n[group.t4]\ncount = 1\n";
+        assert!(BenchmarkConfig::from_text(text).is_err());
+    }
+
+    #[test]
+    fn section_errors_are_reported() {
+        assert!(BenchmarkConfig::from_text("[group.t4]\nseed = 1\n").is_err(),
+            "global key inside a section must error");
+        assert!(BenchmarkConfig::from_text("[group.]\ncount = 1\n").is_err());
+        assert!(BenchmarkConfig::from_text("[group.a b]\ncount = 1\n").is_err());
+        assert!(BenchmarkConfig::from_text("[nodes]\n").is_err());
+        assert!(BenchmarkConfig::from_text("[group.x\ncount = 1\n").is_err());
+        assert!(
+            BenchmarkConfig::from_text("[group.x]\ncount = 1\n[group.x]\ncount = 2\n").is_err(),
+            "duplicate group labels must error"
+        );
+        assert!(BenchmarkConfig::from_text("[group.x]\ngpu = hal9000\n").is_err());
+        assert!(
+            BenchmarkConfig::from_text("[group.x]\ngpus_per_node = 4\n").is_err(),
+            "a section without `count` must not silently default"
+        );
     }
 
     #[test]
@@ -372,7 +641,7 @@ mod tests {
     #[test]
     fn comments_and_blank_lines_ok() {
         let c = BenchmarkConfig::from_text("# comment\n\nnodes = 4 # inline\n").unwrap();
-        assert_eq!(c.nodes, 4);
+        assert_eq!(c.total_nodes(), 4);
     }
 
     #[test]
@@ -382,15 +651,16 @@ mod tests {
         assert_eq!(c.engine, Engine::Sequential);
         assert_eq!(c.sync_interval_s, 120.0);
         let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
-        assert_eq!(c2.engine, Engine::Sequential);
-        assert_eq!(c2.sync_interval_s, 120.0);
+        assert_eq!(c2, c);
         assert!(BenchmarkConfig::from_text("engine = turbo\n").is_err());
     }
 
     #[test]
     fn sync_interval_validated() {
-        let mut c = BenchmarkConfig::default();
-        c.sync_interval_s = 0.0;
+        let c = BenchmarkConfig {
+            sync_interval_s: 0.0,
+            ..BenchmarkConfig::default()
+        };
         assert!(c.validate().is_err());
     }
 

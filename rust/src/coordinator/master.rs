@@ -28,7 +28,7 @@ use crate::cluster::nfs::NfsStats;
 use crate::config::{BenchmarkConfig, Engine};
 use crate::coordinator::history::HistoryList;
 use crate::coordinator::shard::{HistorySnapshot, SimContext, SlaveShard};
-use crate::metrics::report::BenchmarkReport;
+use crate::metrics::report::{BenchmarkReport, GroupBreakdown};
 use crate::metrics::score::{validate_result, ScoreSample};
 use crate::metrics::telemetry::{NodeReading, Telemetry};
 
@@ -38,6 +38,8 @@ struct GlobalState {
     telemetry: Telemetry,
     score_series: Vec<ScoreSample>,
     cumulative_ops: f64,
+    /// Analytical ops attributed to each topology group (index = group).
+    group_ops: Vec<f64>,
     next_score_t: f64,
 }
 
@@ -66,9 +68,13 @@ fn merge_window(
     }
 
     // Analytical-ops events, same deterministic order. Summation order is
-    // fixed so the f64 accumulation is engine-independent.
+    // fixed so the f64 accumulation is engine-independent — the per-group
+    // attribution too (shard order, then within-shard event order).
     let mut ops_events: Vec<(f64, f64)> = Vec::new();
     for s in shards.iter_mut() {
+        for &(_, ops) in &s.epoch_ops {
+            global.group_ops[s.group] += ops;
+        }
         ops_events.append(&mut s.epoch_ops);
     }
     ops_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal));
@@ -132,14 +138,19 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
     cfg.validate().expect("invalid benchmark configuration");
     let ctx = SimContext::new(cfg);
 
-    let mut shards: Vec<SlaveShard> = (0..cfg.nodes as usize)
-        .map(|i| SlaveShard::new(i, cfg))
+    // Shards in topology order: group 0's nodes first, then group 1's, …
+    // — the global node numbering that fixes RNG streams and merge order.
+    let mut shards: Vec<SlaveShard> = cfg
+        .topology
+        .nodes()
+        .map(|(group, node)| SlaveShard::new(node, group, cfg))
         .collect();
     let mut global = GlobalState {
         history: HistoryList::new(),
         telemetry: Telemetry::new(cfg.telemetry_interval_s),
         score_series: Vec::new(),
         cumulative_ops: 0.0,
+        group_ops: vec![0.0; cfg.topology.groups.len()],
         next_score_t: cfg.score_interval_s,
     };
     let mut snapshot = HistorySnapshot::default();
@@ -196,9 +207,23 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
     let final_error = global.history.best_measured_error().unwrap_or(1.0 - 1e-9);
     let (score_flops, regulated) =
         BenchmarkReport::stable_scores(&global.score_series, cfg.duration_s);
+    let groups: Vec<GroupBreakdown> = cfg
+        .topology
+        .groups
+        .iter()
+        .zip(&global.group_ops)
+        .map(|(g, &ops)| GroupBreakdown {
+            label: g.label.clone(),
+            nodes: g.count,
+            gpus_per_node: g.gpus_per_node,
+            ops,
+            ops_per_second: ops / cfg.duration_s,
+        })
+        .collect();
     BenchmarkReport {
-        nodes: cfg.nodes,
-        gpus_per_node: cfg.node.gpus_per_node,
+        nodes: cfg.topology.total_nodes(),
+        total_gpus: cfg.topology.total_gpus(),
+        groups,
         duration_s: cfg.duration_s,
         score_series: global.score_series,
         score_flops,
@@ -227,12 +252,10 @@ mod tests {
     use super::*;
 
     fn small_cfg(nodes: u64, hours: f64, seed: u64) -> BenchmarkConfig {
-        BenchmarkConfig {
-            nodes,
-            duration_s: hours * 3600.0,
-            seed,
-            ..BenchmarkConfig::default()
-        }
+        let mut cfg = BenchmarkConfig::homogeneous(nodes);
+        cfg.duration_s = hours * 3600.0;
+        cfg.seed = seed;
+        cfg
     }
 
     #[test]
@@ -317,6 +340,44 @@ mod tests {
         let mean_util: f64 =
             stable.iter().map(|s| s.gpu_util_mean).sum::<f64>() / stable.len() as f64;
         assert!(mean_util > 0.6, "mean gpu util = {mean_util}");
+    }
+
+    #[test]
+    fn group_breakdown_accounts_all_ops() {
+        use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
+        let mut cfg = small_cfg(2, 6.0, 9);
+        cfg.batch_per_gpu = 256;
+        cfg.topology = ClusterTopology {
+            groups: vec![
+                NodeGroup::new("t4", 2, 8, GpuModel::t4()),
+                NodeGroup::new("v100", 2, 8, GpuModel::v100()),
+            ],
+        };
+        let r = run_benchmark(&cfg);
+        assert_eq!(r.groups.len(), 2);
+        assert_eq!(r.nodes, 4);
+        assert_eq!(r.total_gpus, 32);
+        // Every group trained something, and the V100 half outproduced
+        // the T4 half (8x the per-device throughput).
+        assert!(r.groups.iter().all(|g| g.ops > 0.0));
+        assert!(r.groups[1].ops > r.groups[0].ops);
+        // Attribution is complete: group ops sum to the series total
+        // (only float summation order differs between the two).
+        let total: f64 = r.groups.iter().map(|g| g.ops).sum();
+        let series_total = r.score_series.last().unwrap().cumulative_ops;
+        assert!(
+            ((total - series_total) / total).abs() < 1e-9,
+            "group ops {total:e} != sampled cumulative {series_total:e}"
+        );
+    }
+
+    #[test]
+    fn single_group_breakdown_matches_shape() {
+        let r = run_benchmark(&small_cfg(2, 4.0, 0));
+        assert_eq!(r.groups.len(), 1);
+        assert_eq!(r.groups[0].nodes, 2);
+        assert_eq!(r.groups[0].gpus_per_node, 8);
+        assert!(r.groups[0].ops_per_second > 0.0);
     }
 
     #[test]

@@ -3,6 +3,10 @@
 //! The discrete-event benchmark is sharded by slave node: each
 //! [`SlaveShard`] owns its CPU search loop, TPE optimizer, RNG streams,
 //! candidate buffer, trial dispatcher bookkeeping, and local event queue.
+//! A shard belongs to one topology node group and draws its device
+//! parameters (GPU model, GPUs per node) from that group's
+//! [`crate::sim::timing::TimingModel`], so heterogeneous clusters run
+//! mixed-speed shards side by side.
 //! Shards advance independently inside an epoch-barrier window
 //! (`BenchmarkConfig::sync_interval_s`) against a frozen
 //! [`HistorySnapshot`] of the shared historical model list, then the
@@ -46,7 +50,9 @@ pub enum ShardEvent {
 pub struct SimContext<'a> {
     pub cfg: &'a BenchmarkConfig,
     pub weights: OpWeights,
-    pub timing: TimingModel,
+    /// One timing model per topology node group (per-group accelerator
+    /// parameters; index = group index).
+    pub timings: Vec<TimingModel>,
     pub surrogate: AccuracySurrogate,
     pub policy: SearchPolicy,
     pub initial: Architecture,
@@ -59,10 +65,15 @@ impl<'a> SimContext<'a> {
         SimContext {
             cfg,
             weights: OpWeights::default(),
-            timing: TimingModel {
-                node: cfg.node,
-                ..TimingModel::default()
-            },
+            timings: cfg
+                .topology
+                .groups
+                .iter()
+                .map(|g| TimingModel {
+                    node: g.node_model(cfg.host),
+                    ..TimingModel::default()
+                })
+                .collect(),
             surrogate: AccuracySurrogate {
                 seed: cfg.seed,
                 ..AccuracySurrogate::default()
@@ -76,8 +87,18 @@ impl<'a> SimContext<'a> {
                 cfg.dataset.channels,
                 cfg.dataset.num_classes,
             ),
-            total_nodes: cfg.nodes,
+            total_nodes: cfg.topology.total_nodes(),
         }
+    }
+
+    /// Timing model of a node group.
+    pub fn timing(&self, group: usize) -> &TimingModel {
+        &self.timings[group]
+    }
+
+    /// Fully-specified node model of a node group.
+    pub fn node(&self, group: usize) -> &crate::cluster::NodeModel {
+        &self.timings[group].node
     }
 }
 
@@ -93,6 +114,8 @@ pub struct HistorySnapshot {
 /// One slave node's complete simulation state.
 pub struct SlaveShard {
     pub node: usize,
+    /// Topology group this node belongs to (selects its device model).
+    pub group: usize,
     round: u64,
     tpe: Tpe,
     rng: Rng,
@@ -119,15 +142,16 @@ pub struct SlaveShard {
 }
 
 impl SlaveShard {
-    /// A fresh shard for `node`, with its stream-derived RNGs and the
-    /// SLURM-stagger initial schedule.
-    pub fn new(node: usize, cfg: &BenchmarkConfig) -> Self {
+    /// A fresh shard for `node` in topology group `group`, with its
+    /// stream-derived RNGs and the SLURM-stagger initial schedule.
+    pub fn new(node: usize, group: usize, cfg: &BenchmarkConfig) -> Self {
         let mut queue = EventQueue::new();
         // Asynchronous dispatch: SLURM stagger of a few seconds per node.
         queue.schedule(node as f64 * 2.0, ShardEvent::NodeReady);
         queue.schedule(cfg.telemetry_interval_s, ShardEvent::Telemetry);
         SlaveShard {
             node,
+            group,
             round: 0,
             tpe: Tpe::new(aiperf_space()),
             rng: derive(cfg.seed, "slave", node as u64),
@@ -203,11 +227,13 @@ impl SlaveShard {
         });
         // --- Trainer drains the buffer (NFS round trips charged).
         let cand = self.buffer.pop().map(|c| c.arch).unwrap_or(arch);
-        let mut setup = cfg.node.search_seconds + cfg.node.setup_seconds;
+        let timing = ctx.timing(self.group);
+        let node = &timing.node;
+        let mut setup = node.host.search_seconds + node.host.setup_seconds;
         let history_bytes = 2048 * (snapshot.records + self.completed.len() as u64);
-        setup += ctx.timing.nfs.read_seconds(history_bytes, &mut self.nfs);
-        setup += ctx.timing.nfs.write_seconds(2048, &mut self.nfs);
-        setup += ctx.timing.nfs.read_seconds(2048, &mut self.nfs);
+        setup += timing.nfs.read_seconds(history_bytes, &mut self.nfs);
+        setup += timing.nfs.write_seconds(2048, &mut self.nfs);
+        setup += timing.nfs.read_seconds(2048, &mut self.nfs);
 
         // --- Hyperparameters: defaults in warm-up, TPE afterwards.
         let hp = if cfg.warmup.hpo_active(self.round) {
@@ -220,30 +246,29 @@ impl SlaveShard {
             HpPoint::default()
         };
 
-        // --- Memory adaption: halve the batch until the model fits.
+        // --- Memory adaption: halve the batch until the model fits this
+        // group's accelerator (a 16 GB T4 adapts sooner than a 32 GB V100).
         let stats = cand.stats(&ctx.weights);
         let (params, act, ops) = (stats.params, stats.activation_elems, stats.ops);
         let mut batch = cfg.batch_per_gpu;
-        while batch > 8 && !cfg.node.gpu.fits(params, act, batch) {
+        while batch > 8 && !node.gpu.fits(params, act, batch) {
             batch /= 2;
         }
         let budget = cfg.warmup.epochs_for_round(self.round);
-        let epoch = ctx.timing.epoch(
+        let epoch = timing.epoch(
             ops.train_per_image(),
             params,
             cfg.dataset.train_images,
             batch,
         );
-        let val_s = ctx
-            .timing
-            .validation(ops.val_per_image(), cfg.dataset.val_images, batch);
+        let val_s = timing.validation(ops.val_per_image(), cfg.dataset.val_images, batch);
         let total_epoch_s = epoch.total_s + val_s;
 
         self.epoch_seconds = total_epoch_s;
         self.busy_fraction =
             (epoch.compute_s + val_s) / total_epoch_s * epoch.gpu_busy_fraction.max(0.9);
-        self.mem_fraction = (cfg.node.gpu.memory_demand(params, act, batch) as f64
-            / cfg.node.gpu.memory_bytes as f64)
+        self.mem_fraction = (node.gpu.memory_demand(params, act, batch) as f64
+            / node.gpu.memory_bytes as f64)
             .min(1.0);
         self.setup_until = t + setup;
         self.trial = Some(ActiveTrial::new(
@@ -332,14 +357,15 @@ impl SlaveShard {
     /// stream keeps the readings engine-independent).
     fn on_telemetry(&mut self, t: f64, ctx: &SimContext) {
         let cfg = ctx.cfg;
+        let host = &ctx.node(self.group).host;
         let training = self.trial.is_some() && t >= self.setup_until;
         let jitter = self.tele_rng.gen_range_f64(-0.02, 0.02);
         let reading = if training {
             NodeReading {
                 gpu_util: (self.busy_fraction + jitter).clamp(0.0, 1.0),
                 gpu_mem_util: self.mem_fraction.clamp(0.0, 1.0),
-                cpu_util: (cfg.node.cpu_util_training() + jitter / 4.0).clamp(0.0, 1.0),
-                host_mem_util: cfg.node.host_memory_util(30 << 30),
+                cpu_util: (host.cpu_util_training() + jitter / 4.0).clamp(0.0, 1.0),
+                host_mem_util: host.host_memory_util(30 << 30),
             }
         } else {
             // The inter-stage "dent" of Figs 9/10.
@@ -347,7 +373,7 @@ impl SlaveShard {
                 gpu_util: (0.02 + jitter.abs()).min(0.1),
                 gpu_mem_util: 0.10,
                 cpu_util: (0.30 + jitter).clamp(0.0, 1.0), // search burst
-                host_mem_util: cfg.node.host_memory_util(30 << 30),
+                host_mem_util: host.host_memory_util(30 << 30),
             }
         };
         self.readings.push((t, reading));
@@ -368,15 +394,12 @@ mod tests {
 
     #[test]
     fn shard_is_deterministic_and_snapshot_driven() {
-        let cfg = BenchmarkConfig {
-            nodes: 2,
-            duration_s: 4.0 * 3600.0,
-            ..BenchmarkConfig::default()
-        };
+        let mut cfg = BenchmarkConfig::homogeneous(2);
+        cfg.duration_s = 4.0 * 3600.0;
         let ctx = ctx_for(&cfg);
         let snapshot = HistorySnapshot::default();
         let run = || {
-            let mut s = SlaveShard::new(0, &cfg);
+            let mut s = SlaveShard::new(0, 0, &cfg);
             s.run_until(cfg.duration_s, &snapshot, &ctx);
             (
                 s.completed.len(),
@@ -395,18 +418,15 @@ mod tests {
 
     #[test]
     fn windowed_run_equals_single_window() {
-        let cfg = BenchmarkConfig {
-            nodes: 1,
-            duration_s: 3.0 * 3600.0,
-            ..BenchmarkConfig::default()
-        };
+        let mut cfg = BenchmarkConfig::homogeneous(1);
+        cfg.duration_s = 3.0 * 3600.0;
         let ctx = ctx_for(&cfg);
         let snapshot = HistorySnapshot::default();
         // Without barrier merges (snapshot never refreshed), splitting the
         // run into windows must not change anything.
-        let mut whole = SlaveShard::new(0, &cfg);
+        let mut whole = SlaveShard::new(0, 0, &cfg);
         whole.run_until(cfg.duration_s, &snapshot, &ctx);
-        let mut split = SlaveShard::new(0, &cfg);
+        let mut split = SlaveShard::new(0, 0, &cfg);
         let mut t = 600.0;
         while t < cfg.duration_s {
             split.run_until(t, &snapshot, &ctx);
@@ -423,16 +443,13 @@ mod tests {
 
     #[test]
     fn trial_ids_unique_per_node_stride() {
-        let cfg = BenchmarkConfig {
-            nodes: 3,
-            duration_s: 6.0 * 3600.0,
-            ..BenchmarkConfig::default()
-        };
+        let mut cfg = BenchmarkConfig::homogeneous(3);
+        cfg.duration_s = 6.0 * 3600.0;
         let ctx = ctx_for(&cfg);
         let snapshot = HistorySnapshot::default();
         let mut ids = Vec::new();
         for node in 0..3 {
-            let mut s = SlaveShard::new(node, &cfg);
+            let mut s = SlaveShard::new(node, 0, &cfg);
             s.run_until(cfg.duration_s, &snapshot, &ctx);
             ids.extend(s.completed.iter().map(|r| r.id));
         }
@@ -440,5 +457,36 @@ mod tests {
         deduped.sort_unstable();
         deduped.dedup();
         assert_eq!(deduped.len(), ids.len(), "trial ids collide across shards");
+    }
+
+    #[test]
+    fn groups_with_different_gpus_diverge() {
+        // Same node index, same seed streams, different device model ⇒
+        // different trial timings and counts.
+        use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
+        let cfg = BenchmarkConfig {
+            duration_s: 4.0 * 3600.0,
+            batch_per_gpu: 256,
+            topology: ClusterTopology {
+                groups: vec![
+                    NodeGroup::new("t4", 1, 8, GpuModel::t4()),
+                    NodeGroup::new("ascend", 1, 8, GpuModel::ascend910()),
+                ],
+            },
+            ..BenchmarkConfig::default()
+        };
+        let ctx = ctx_for(&cfg);
+        let snapshot = HistorySnapshot::default();
+        let ops_of = |group: usize| {
+            let mut s = SlaveShard::new(0, group, &cfg);
+            s.run_until(cfg.duration_s, &snapshot, &ctx);
+            s.epoch_ops.iter().map(|e| e.1).sum::<f64>()
+        };
+        let slow = ops_of(0);
+        let fast = ops_of(1);
+        assert!(
+            fast > 2.0 * slow,
+            "ascend shard should finish far more epochs: t4={slow:e} ascend={fast:e}"
+        );
     }
 }

@@ -20,17 +20,31 @@ aiperf — AIPerf: Automated machine learning as an AI-HPC benchmark (Ren et al.
 USAGE:
     aiperf run   [--scenario NAME] [--nodes N] [--hours H] [--seed S]
                  [--engine sequential|parallel] [--config FILE]
-                 [--json OUT] [--csv OUT] [--chart 1]
+                 [--json OUT] [--csv OUT] [--chart] [--list-scenarios]
         Simulated benchmark on the modelled cluster (Figs 4-6, 9-12).
         Scenario presets reproduce the paper's evaluated systems:
-          smoke        2 x 8 V100, 2 h — CI-sized sanity run
-          t4-32        4 x 8 NVIDIA T4, 12 h (paper: 56.1 Tera-OPS)
-          v100-128     16 x 8 V100 NVLink, 12 h (the paper testbed)
-          ascend-4096  512 x 8 Ascend 910, 12 h (paper: 194.53 Peta-OPS)
-        The engine defaults to `parallel` (sharded slave nodes on a
-        thread pool); `sequential` is bit-identical for the same seed.
+          smoke         2 x 8 V100, 2 h — CI-sized sanity run
+          t4v100-mixed  2 x 8 T4 + 2 x 8 V100, 6 h — heterogeneous site
+          t4-32         4 x 8 NVIDIA T4, 12 h (paper: 56.1 Tera-OPS)
+          v100-128      16 x 8 V100 NVLink, 12 h (the paper testbed)
+          ascend-4096   512 x 8 Ascend 910, 12 h (paper: 194.53 Peta-OPS)
+        `--list-scenarios` prints every preset with its topology and
+        exits. A `--config FILE` may describe a heterogeneous cluster
+        with `[group.NAME]` sections (see `aiperf config`); the legacy
+        flat `nodes`/`gpus_per_node` keys still work as a single-group
+        shorthand. The engine defaults to `parallel` (sharded slave
+        nodes on a thread pool); `sequential` is bit-identical for the
+        same seed.
+    aiperf sweep [--scenarios A,B,C] [--hours H] [--seed S]
+                 [--engine sequential|parallel]
+        Run several scenario presets and print the Fig-4-style scaling
+        table: nodes, devices, measured OPS, per-device OPS, and weak-
+        scaling efficiency vs the smallest sweep entry with the same
+        accelerator mix (a scenario with a unique mix is its own
+        baseline at 100%), with a per-group breakdown for heterogeneous
+        presets. Defaults to smoke,v100-128,t4v100-mixed.
     aiperf scenarios
-        List the scenario presets with their cluster shapes.
+        List the scenario presets with their cluster topologies.
     aiperf live  [--artifacts DIR] [--trials N] [--epochs E]
                  [--batches-per-epoch B] [--seed S]
         Real-training mini-benchmark over the AOT artifacts (PJRT;
@@ -44,10 +58,15 @@ USAGE:
     aiperf help
 ";
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Minimal flag parser: `--key value` pairs after the subcommand, plus a
+/// fixed set of valueless boolean flags (`--chart`, `--list-scenarios`).
 struct Flags {
     pairs: Vec<(String, String)>,
 }
+
+/// Flags that take no value; every other flag still requires one, so a
+/// forgotten value fails up front instead of mid-run.
+const BOOLEAN_FLAGS: &[&str] = &["chart", "list-scenarios"];
 
 impl Flags {
     fn parse(args: &[String]) -> Result<Flags> {
@@ -58,11 +77,27 @@ impl Flags {
             if !k.starts_with("--") {
                 bail!("unexpected argument `{k}` (flags are `--key value`)");
             }
-            let v = args
-                .get(i + 1)
-                .with_context(|| format!("flag `{k}` needs a value"))?;
-            pairs.push((k.trim_start_matches("--").to_string(), v.clone()));
-            i += 2;
+            let key = k.trim_start_matches("--").to_string();
+            if BOOLEAN_FLAGS.contains(&key.as_str()) {
+                // Accept both `--chart` and the legacy `--chart 1`.
+                match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        pairs.push((key, v.clone()));
+                        i += 2;
+                    }
+                    _ => {
+                        pairs.push((key, String::new()));
+                        i += 1;
+                    }
+                }
+            } else {
+                let v = args
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .with_context(|| format!("flag `{k}` needs a value"))?;
+                pairs.push((key, v.clone()));
+                i += 2;
+            }
         }
         Ok(Flags { pairs })
     }
@@ -101,7 +136,12 @@ impl Flags {
 fn cmd_run(flags: &Flags) -> Result<()> {
     flags.reject_unknown(&[
         "scenario", "nodes", "hours", "seed", "engine", "config", "json", "csv", "chart",
+        "list-scenarios",
     ])?;
+    if flags.get("list-scenarios").is_some() {
+        cmd_scenarios();
+        return Ok(());
+    }
     let mut cfg = match (flags.get("scenario"), flags.get("config")) {
         (Some(_), Some(_)) => bail!("--scenario and --config are mutually exclusive"),
         (Some(name), None) => {
@@ -120,15 +160,22 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?,
         (None, None) => BenchmarkConfig::default(),
     };
-    cfg.nodes = flags.get_u64("nodes", cfg.nodes)?;
+    if flags.get("nodes").is_some() {
+        let n = flags.get_u64("nodes", 0)?;
+        cfg.topology.scale_to_nodes(n).map_err(|e| anyhow::anyhow!(e))?;
+    }
     cfg.duration_s = flags.get_f64("hours", cfg.duration_s / 3600.0)? * 3600.0;
     cfg.seed = flags.get_u64("seed", cfg.seed)?;
     if let Some(engine) = flags.get("engine") {
         cfg.engine = Engine::parse(engine).map_err(|e| anyhow::anyhow!(e))?;
     }
 
+    println!("topology: {}", cfg.topology.summary());
     let report = run_benchmark(&cfg);
     println!("{}", report.summary());
+    if report.groups.len() > 1 {
+        print!("{}", report.group_table());
+    }
     println!("score series (hourly):");
     for s in &report.score_series {
         println!(
@@ -203,15 +250,131 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
 fn cmd_scenarios() {
     println!("scenario presets (aiperf run --scenario NAME):");
     for p in aiperf::scenarios::all() {
-        let c = &p.config;
         println!(
-            "  {:<12} {:>4} nodes x {} GPUs, {:>4.1} h  — {}",
+            "  {:<13} {:<28} {:>4.1} h  — {}",
             p.name,
-            c.nodes,
-            c.node.gpus_per_node,
-            c.duration_s / 3600.0,
+            p.topology_summary(),
+            p.config.duration_s / 3600.0,
             p.description
         );
+    }
+}
+
+/// `aiperf sweep`: run several presets and print the Fig-4-style scaling
+/// table (nodes, devices, measured OPS, weak-scaling efficiency vs the
+/// smallest sweep entry of the same accelerator mix).
+fn cmd_sweep(flags: &Flags) -> Result<()> {
+    flags.reject_unknown(&["scenarios", "hours", "seed", "engine"])?;
+    // Default list: two scales of the V100 mix (so the efficiency column
+    // measures real weak scaling) plus the heterogeneous preset (so the
+    // per-group breakdown shows).
+    let list = flags
+        .get("scenarios")
+        .unwrap_or("smoke,v100-128,t4v100-mixed");
+    let names: Vec<&str> = list
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        bail!("--scenarios needs a comma-separated list of preset names");
+    }
+    let mut runs = Vec::new();
+    for name in &names {
+        let mut preset = aiperf::scenarios::get(name).with_context(|| {
+            format!(
+                "unknown scenario `{name}` (available: {})",
+                aiperf::scenarios::names().join(", ")
+            )
+        })?;
+        let cfg = &mut preset.config;
+        if flags.get("hours").is_some() {
+            cfg.duration_s = flags.get_f64("hours", cfg.duration_s / 3600.0)? * 3600.0;
+        }
+        cfg.seed = flags.get_u64("seed", cfg.seed)?;
+        if let Some(engine) = flags.get("engine") {
+            cfg.engine = Engine::parse(engine).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        eprintln!("[sweep] running {name} ({}) ...", cfg.topology.summary());
+        let report = run_benchmark(cfg);
+        runs.push((preset, report));
+    }
+
+    // Efficiency baseline per accelerator mix: the paper's Fig-4 weak-
+    // scaling efficiency compares scales of the SAME system, so each
+    // scenario is measured against the fewest-device sweep entry sharing
+    // its accelerator composition (a T4 fleet is never scored against a
+    // V100 baseline — that would measure hardware speed, not scaling).
+    let mix = |r: &aiperf::metrics::BenchmarkReport| -> String {
+        let mut labels: Vec<&str> = r.groups.iter().map(|g| g.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        labels.join("+")
+    };
+    let mut baselines: std::collections::HashMap<String, (u64, f64)> =
+        std::collections::HashMap::new();
+    for (_, r) in &runs {
+        let per_device = r.score_flops / r.total_gpus as f64;
+        let e = baselines
+            .entry(mix(r))
+            .or_insert((r.total_gpus, per_device));
+        if r.total_gpus < e.0 {
+            *e = (r.total_gpus, per_device);
+        }
+    }
+
+    println!(
+        "\nscaling table (stable-window score; efficiency vs the smallest \
+         sweep entry of the same accelerator mix):"
+    );
+    println!(
+        "{:<14} {:>6} {:>8} {:>16} {:>16} {:>11}",
+        "scenario", "nodes", "devices", "score OPS", "OPS/device", "efficiency"
+    );
+    for (preset, r) in &runs {
+        let per_device = r.score_flops / r.total_gpus as f64;
+        let base_per_device = baselines[&mix(r)].1;
+        println!(
+            "{:<14} {:>6} {:>8} {:>16} {:>16} {:>10.1}%",
+            preset.name,
+            r.nodes,
+            r.total_gpus,
+            si_ops(r.score_flops),
+            si_ops(per_device),
+            per_device / base_per_device * 100.0,
+        );
+        if r.groups.len() > 1 {
+            // Group rows allocate the scenario's stable-window score by
+            // each group's share of the run's analytical ops, so the
+            // sub-rows use the same estimator as (and sum to) the parent.
+            let total_ops = r.total_ops();
+            for g in &r.groups {
+                let share = if total_ops > 0.0 { g.ops / total_ops } else { 0.0 };
+                let group_score = r.score_flops * share;
+                println!(
+                    "{:<14} {:>6} {:>8} {:>16} {:>16}",
+                    format!("  .{}", g.label),
+                    g.nodes,
+                    g.gpus(),
+                    si_ops(group_score),
+                    si_ops(group_score / g.gpus() as f64),
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Format an ops/s quantity with the paper's unit ladder (Tera/Peta).
+fn si_ops(x: f64) -> String {
+    if x >= 1e15 {
+        format!("{:.2} POPS", x / 1e15)
+    } else if x >= 1e12 {
+        format!("{:.2} TOPS", x / 1e12)
+    } else if x >= 1e9 {
+        format!("{:.2} GOPS", x / 1e9)
+    } else {
+        format!("{x:.3e} OPS")
     }
 }
 
@@ -306,6 +469,7 @@ fn main() -> Result<()> {
     };
     match cmd {
         "run" => cmd_run(&Flags::parse(rest)?),
+        "sweep" => cmd_sweep(&Flags::parse(rest)?),
         "scenarios" => {
             Flags::parse(rest)?.reject_unknown(&[])?;
             cmd_scenarios();

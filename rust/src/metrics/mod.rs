@@ -13,6 +13,6 @@ pub mod score;
 pub mod telemetry;
 
 pub use chart::{ascii_chart, csv};
-pub use report::BenchmarkReport;
+pub use report::{BenchmarkReport, GroupBreakdown};
 pub use score::{regulated_score, validate_result, ScoreSample, Validity};
 pub use telemetry::{Telemetry, TelemetrySample};

@@ -7,11 +7,35 @@ use super::score::{ScoreSample, Validity};
 use super::telemetry::TelemetrySample;
 use crate::util::stats::mean;
 
-#[derive(Debug, Clone)]
-pub struct BenchmarkReport {
-    /// Cluster shape.
+/// Per-node-group slice of the report: how much of the cluster's
+/// analytical work each topology group contributed (the paper ranks
+/// heterogeneous systems — T4, V100, Ascend 910 — with one OPS metric,
+/// and this row is a system's entry at sub-cluster granularity).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupBreakdown {
+    pub label: String,
     pub nodes: u64,
     pub gpus_per_node: u64,
+    /// Total analytical ops trained by this group's nodes.
+    pub ops: f64,
+    /// Mean analytical ops/second over the whole run.
+    pub ops_per_second: f64,
+}
+
+impl GroupBreakdown {
+    /// Total devices in this group.
+    pub fn gpus(&self) -> u64 {
+        self.nodes * self.gpus_per_node
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchmarkReport {
+    /// Cluster shape: total slave nodes and devices across all groups.
+    pub nodes: u64,
+    pub total_gpus: u64,
+    /// Per-group OPS contributions, in topology order.
+    pub groups: Vec<GroupBreakdown>,
     /// Run length, seconds.
     pub duration_s: f64,
     /// Hourly score samples (Figs 4–6 series).
@@ -67,7 +91,23 @@ impl BenchmarkReport {
         use crate::util::json::{arr, num, obj, s};
         obj(vec![
             ("nodes", num(self.nodes as f64)),
-            ("gpus_per_node", num(self.gpus_per_node as f64)),
+            ("total_gpus", num(self.total_gpus as f64)),
+            (
+                "groups",
+                arr(self
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        obj(vec![
+                            ("label", s(g.label.clone())),
+                            ("nodes", num(g.nodes as f64)),
+                            ("gpus_per_node", num(g.gpus_per_node as f64)),
+                            ("ops", num(g.ops)),
+                            ("ops_per_second", num(g.ops_per_second)),
+                        ])
+                    })
+                    .collect()),
+            ),
             ("duration_s", num(self.duration_s)),
             ("score_flops", num(self.score_flops)),
             ("final_error", num(self.final_error)),
@@ -122,13 +162,40 @@ impl BenchmarkReport {
         format!(
             "nodes={} gpus={} score={:.3} PFLOPS error={:.1}% regulated={:.3} PFLOPS archs={} validity={:?}",
             self.nodes,
-            self.nodes * self.gpus_per_node,
+            self.total_gpus,
             self.score_flops / 1e15,
             self.final_error * 100.0,
             self.regulated_score / 1e15,
             self.architectures_evaluated,
             self.validity,
         )
+    }
+
+    /// Per-group OPS breakdown as indented table lines (one per group),
+    /// printed under the summary for heterogeneous runs.
+    pub fn group_table(&self) -> String {
+        let mut out = String::new();
+        for g in &self.groups {
+            out.push_str(&format!(
+                "  group {:<12} {:>4} nodes x {:<2} GPUs  ops={:.3e}  mean {:.4} PFLOPS  ({:.1}% of total)\n",
+                g.label,
+                g.nodes,
+                g.gpus_per_node,
+                g.ops,
+                g.ops_per_second / 1e15,
+                if self.total_ops() > 0.0 {
+                    g.ops / self.total_ops() * 100.0
+                } else {
+                    0.0
+                },
+            ));
+        }
+        out
+    }
+
+    /// Total analytical ops across all groups.
+    pub fn total_ops(&self) -> f64 {
+        self.groups.iter().map(|g| g.ops).sum()
     }
 }
 

@@ -32,7 +32,7 @@ pub enum Morph {
 }
 
 /// Limits that keep morphed models trainable on the target accelerator.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MorphLimits {
     /// Parameter cap from accelerator memory (§4.5 memory adaption).
     pub max_params: u64,

@@ -3,20 +3,23 @@
 //! AIPerf's weak-scalability claim (§5, Table 1 of the scalability
 //! evaluation) spans 4 nodes / 32 NVIDIA T4s (56.1 Tera-OPS) through the
 //! 16-node / 128-V100 testbed up to 512 nodes / 4096 Ascend 910s
-//! (194.53 Peta-OPS). Each preset packages the cluster shape, accelerator
-//! model, and run length of one evaluated system as a ready-to-run
-//! [`BenchmarkConfig`], selectable with `aiperf run --scenario NAME`.
+//! (194.53 Peta-OPS). Each preset packages one evaluated system — its
+//! [`crate::cluster::ClusterTopology`], accelerator models, and run
+//! length — as a ready-to-run [`BenchmarkConfig`], selectable with
+//! `aiperf run --scenario NAME` and sweepable with `aiperf sweep`.
 //!
-//! Accelerator calibration follows the GPU model's convention
-//! (sustained *analytical* ops/second — see [`crate::cluster::gpu`]):
-//! the sustained rate × utilization reproduces the paper's reported
-//! per-device score at each scale.
+//! Accelerator calibration lives in the named [`GpuModel`] constructors
+//! ([`GpuModel::t4`], [`GpuModel::v100`], [`GpuModel::ascend910`] — see
+//! [`crate::cluster::gpu`]): the sustained rate × utilization reproduces
+//! the paper's reported per-device score at each scale, enforced by
+//! `rust/tests/calibration.rs`.
 //!
-//! The extra `smoke` preset is a down-scaled run for CI: small cluster,
-//! short modelled duration, dense sampling intervals — the workload the
-//! engine-parity and wall-clock-budget tests exercise.
+//! The extra `smoke` preset is a down-scaled run for CI, and
+//! `t4v100-mixed` is a heterogeneous two-group topology (the paper's two
+//! NVIDIA systems sharing one cluster) exercising the per-group device
+//! models and the mixed-GPU engine-parity test.
 
-use crate::cluster::GpuModel;
+use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
 use crate::config::BenchmarkConfig;
 
 /// A named, ready-to-run benchmark configuration.
@@ -29,40 +32,29 @@ pub struct ScenarioPreset {
     pub wall_clock_budget_s: f64,
 }
 
-/// NVIDIA T4 (16 GB): ~56.1 Tera-OPS across 32 cards in the paper ⇒
-/// ≈ 1.75e12 sustained analytical ops/s/device at benchmark utilization.
-fn t4() -> GpuModel {
-    GpuModel {
-        sustained_flops: 2.0e12,
-        memory_bytes: 16 * (1 << 30),
-        util_half_batch: 32.0,
-        util_max: 0.95,
-        step_overhead_s: 2.5e-3,
+impl ScenarioPreset {
+    /// Per-group cluster shape, e.g. `4x8 t4 (32 GPUs)`.
+    pub fn topology_summary(&self) -> String {
+        self.config.topology.summary()
     }
 }
 
-/// Huawei Ascend 910 (32 GB): 194.53 Peta-OPS across 4096 devices in the
-/// paper ⇒ ≈ 4.75e13 sustained analytical ops/s/device.
-fn ascend910() -> GpuModel {
-    GpuModel {
-        sustained_flops: 5.4e13,
-        memory_bytes: 32 * (1 << 30),
-        util_half_batch: 64.0,
-        util_max: 0.97,
-        step_overhead_s: 1.5e-3,
-    }
+/// A single-group topology labelled after its accelerator; every paper
+/// system runs 8 devices per slave node (Tables 6/7).
+fn uniform(label: &'static str, nodes: u64, gpu: GpuModel) -> ClusterTopology {
+    ClusterTopology::single(NodeGroup::new(label, nodes, 8, gpu))
 }
 
 fn smoke() -> ScenarioPreset {
-    let mut config = BenchmarkConfig {
-        nodes: 2,
+    let config = BenchmarkConfig {
+        topology: uniform("v100", 2, GpuModel::v100()),
         duration_s: 2.0 * 3600.0,
+        // Dense sampling so short runs still produce rich series for the
+        // parity and integration tests.
+        telemetry_interval_s: 600.0,
+        score_interval_s: 900.0,
         ..BenchmarkConfig::default()
     };
-    // Dense sampling so short runs still produce rich series for the
-    // parity and integration tests.
-    config.telemetry_interval_s = 600.0;
-    config.score_interval_s = 900.0;
     ScenarioPreset {
         name: "smoke",
         description: "CI smoke run: 2 nodes x 8 V100, 2 modelled hours, dense sampling",
@@ -72,13 +64,12 @@ fn smoke() -> ScenarioPreset {
 }
 
 fn t4_32() -> ScenarioPreset {
-    let mut config = BenchmarkConfig {
-        nodes: 4,
+    let config = BenchmarkConfig {
+        topology: uniform("t4", 4, GpuModel::t4()),
         duration_s: 12.0 * 3600.0,
+        batch_per_gpu: 256, // 16 GB card: headroom for morphed models
         ..BenchmarkConfig::default()
     };
-    config.node.gpu = t4();
-    config.batch_per_gpu = 256; // 16 GB card: headroom for morphed models
     ScenarioPreset {
         name: "t4-32",
         description: "Paper system 1: 4 nodes x 8 NVIDIA T4 (56.1 Tera-OPS)",
@@ -89,7 +80,7 @@ fn t4_32() -> ScenarioPreset {
 
 fn v100_128() -> ScenarioPreset {
     let config = BenchmarkConfig {
-        nodes: 16,
+        topology: uniform("v100", 16, GpuModel::v100()),
         duration_s: 12.0 * 3600.0,
         ..BenchmarkConfig::default()
     };
@@ -102,12 +93,11 @@ fn v100_128() -> ScenarioPreset {
 }
 
 fn ascend_4096() -> ScenarioPreset {
-    let mut config = BenchmarkConfig {
-        nodes: 512,
+    let config = BenchmarkConfig {
+        topology: uniform("ascend910", 512, GpuModel::ascend910()),
         duration_s: 12.0 * 3600.0,
         ..BenchmarkConfig::default()
     };
-    config.node.gpu = ascend910();
     ScenarioPreset {
         name: "ascend-4096",
         description: "Paper system 3: 512 nodes x 8 Ascend 910 (194.53 Peta-OPS)",
@@ -116,9 +106,29 @@ fn ascend_4096() -> ScenarioPreset {
     }
 }
 
+fn t4v100_mixed() -> ScenarioPreset {
+    let config = BenchmarkConfig {
+        topology: ClusterTopology {
+            groups: vec![
+                NodeGroup::new("t4", 2, 8, GpuModel::t4()),
+                NodeGroup::new("v100", 2, 8, GpuModel::v100()),
+            ],
+        },
+        duration_s: 6.0 * 3600.0,
+        batch_per_gpu: 256, // T4-friendly batch across both groups
+        ..BenchmarkConfig::default()
+    };
+    ScenarioPreset {
+        name: "t4v100-mixed",
+        description: "Heterogeneous site: 2 nodes x 8 T4 + 2 nodes x 8 V100 in one run",
+        config,
+        wall_clock_budget_s: 300.0,
+    }
+}
+
 /// All presets, CI-cheapest first.
 pub fn all() -> Vec<ScenarioPreset> {
-    vec![smoke(), t4_32(), v100_128(), ascend_4096()]
+    vec![smoke(), t4v100_mixed(), t4_32(), v100_128(), ascend_4096()]
 }
 
 /// Look up a preset by name.
@@ -137,7 +147,7 @@ mod tests {
 
     #[test]
     fn presets_resolve_by_name() {
-        for name in ["smoke", "t4-32", "v100-128", "ascend-4096"] {
+        for name in ["smoke", "t4-32", "v100-128", "ascend-4096", "t4v100-mixed"] {
             let p = get(name).unwrap_or_else(|| panic!("missing preset {name}"));
             assert_eq!(p.name, name);
             assert!(!p.description.is_empty());
@@ -159,21 +169,36 @@ mod tests {
         assert_eq!(get("t4-32").unwrap().config.total_gpus(), 32);
         assert_eq!(get("v100-128").unwrap().config.total_gpus(), 128);
         assert_eq!(get("ascend-4096").unwrap().config.total_gpus(), 4096);
+        assert_eq!(get("t4v100-mixed").unwrap().config.total_gpus(), 32);
+    }
+
+    #[test]
+    fn mixed_preset_is_heterogeneous() {
+        let cfg = get("t4v100-mixed").unwrap().config;
+        assert_eq!(cfg.topology.groups.len(), 2);
+        assert_eq!(cfg.topology.groups[0].gpu, GpuModel::t4());
+        assert_eq!(cfg.topology.groups[1].gpu, GpuModel::v100());
+        let s = get("t4v100-mixed").unwrap().topology_summary();
+        assert!(s.contains("2x8 t4") && s.contains("2x8 v100"), "{s}");
     }
 
     #[test]
     fn accelerator_scale_ordering() {
         // Ascend 910 >> V100 >> T4 in sustained analytical throughput.
-        let t4 = get("t4-32").unwrap().config.node.gpu.sustained_flops;
-        let v100 = get("v100-128").unwrap().config.node.gpu.sustained_flops;
-        let ascend = get("ascend-4096").unwrap().config.node.gpu.sustained_flops;
-        assert!(t4 < v100 && v100 < ascend);
+        let flops = |name: &str| {
+            get(name).unwrap().config.topology.groups[0]
+                .gpu
+                .sustained_flops
+        };
+        assert!(flops("t4-32") < flops("v100-128"));
+        assert!(flops("v100-128") < flops("ascend-4096"));
     }
 
     #[test]
     fn t4_batch_fits_memory() {
         let cfg = get("t4-32").unwrap().config;
         // ResNet-50-class model must fit at the preset batch size.
-        assert!(cfg.node.gpu.fits(25_600_000, 11_000_000, cfg.batch_per_gpu));
+        let gpu = &cfg.topology.groups[0].gpu;
+        assert!(gpu.fits(25_600_000, 11_000_000, cfg.batch_per_gpu));
     }
 }

@@ -1,0 +1,73 @@
+//! Accelerator-calibration regression against the paper's reported scores.
+//!
+//! The paper's scalability table reports 56.1 Tera-OPS for the 32-T4
+//! system and 194.53 Peta-OPS for the 4096-Ascend-910 system. The named
+//! device models ([`aiperf::cluster::GpuModel::t4`] / `ascend910`) are
+//! calibrated so the *simulated* benchmark reproduces those numbers; this
+//! suite pins each preset's stable-window score inside a ±20 % band so a
+//! drive-by change to the throughput model, the timing composition, or
+//! the search loop cannot silently drift the headline metric.
+//!
+//! The score is a rate (analytical ops / wall time) that stabilizes once
+//! the first trials are underway (Ascend epochs are ~80 modelled seconds,
+//! so its nodes are into round 3 within the first two modelled hours), so
+//! the Ascend run is shortened from the preset's 12 modelled hours to 2
+//! to keep the 512-shard simulation affordable in CI's debug-built test
+//! step; the T4 preset (4 nodes, ~20 long epochs) is cheap enough to run
+//! at full length.
+
+use aiperf::coordinator::run_benchmark;
+use aiperf::scenarios;
+
+fn assert_in_band(score: f64, paper: f64, label: &str) {
+    let (lo, hi) = (0.8 * paper, 1.2 * paper);
+    assert!(
+        (lo..=hi).contains(&score),
+        "{label}: simulated score {score:.4e} outside ±20% of paper {paper:.4e} \
+         (band [{lo:.4e}, {hi:.4e}])"
+    );
+}
+
+#[test]
+fn t4_32_score_within_band_of_56_1_tera_ops() {
+    let p = scenarios::get("t4-32").expect("t4-32 preset");
+    let r = run_benchmark(&p.config);
+    assert_in_band(r.score_flops, 56.1e12, "t4-32");
+    // The whole cluster is one T4 group; its attributed rate must carry
+    // essentially the entire score.
+    assert_eq!(r.groups.len(), 1);
+    assert!(r.groups[0].ops > 0.0);
+}
+
+#[test]
+fn ascend_4096_score_within_band_of_194_53_peta_ops() {
+    let mut cfg = scenarios::get("ascend-4096").expect("ascend preset").config;
+    cfg.duration_s = 2.0 * 3600.0;
+    let r = run_benchmark(&cfg);
+    assert_in_band(r.score_flops, 194.53e15, "ascend-4096");
+    assert_eq!(r.nodes, 512);
+    assert_eq!(r.total_gpus, 4096);
+}
+
+#[test]
+fn per_device_throughput_ordering_matches_paper() {
+    // Paper Table 1 ordering at the per-device level:
+    // T4 (~1.75 T/device) < V100 (~14 T/device) < Ascend (~47.5 T/device).
+    let t4 = run_benchmark(&{
+        let mut c = scenarios::get("t4-32").unwrap().config;
+        c.duration_s = 2.0 * 3600.0;
+        c
+    });
+    let v100 = run_benchmark(&{
+        let mut c = scenarios::get("v100-128").unwrap().config;
+        c.duration_s = 2.0 * 3600.0;
+        c
+    });
+    let per_device = |r: &aiperf::metrics::BenchmarkReport| r.score_flops / r.total_gpus as f64;
+    assert!(per_device(&t4) < per_device(&v100));
+    // The Ascend leg of the ordering is pinned without re-running the
+    // 512-shard simulation: the ±20 % band test above forces the Ascend
+    // per-device score to at least 0.8 × 194.53 P / 4096 ≈ 38 T/device,
+    // so V100 staying below that floor closes the V100 < Ascend gap.
+    assert!(per_device(&v100) < 0.8 * 194.53e15 / 4096.0);
+}

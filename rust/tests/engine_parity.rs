@@ -12,7 +12,28 @@ use aiperf::metrics::report::BenchmarkReport;
 
 fn assert_bit_identical(a: &BenchmarkReport, b: &BenchmarkReport, label: &str) {
     assert_eq!(a.nodes, b.nodes, "{label}: nodes");
-    assert_eq!(a.gpus_per_node, b.gpus_per_node, "{label}: gpus_per_node");
+    assert_eq!(a.total_gpus, b.total_gpus, "{label}: total_gpus");
+    assert_eq!(
+        a.groups.len(),
+        b.groups.len(),
+        "{label}: group breakdown length"
+    );
+    for (i, (x, y)) in a.groups.iter().zip(&b.groups).enumerate() {
+        assert_eq!(x.label, y.label, "{label}: group {i} label");
+        assert_eq!(x.nodes, y.nodes, "{label}: group {i} nodes");
+        assert_eq!(
+            x.ops.to_bits(),
+            y.ops.to_bits(),
+            "{label}: group {i} ops {} vs {}",
+            x.ops,
+            y.ops
+        );
+        assert_eq!(
+            x.ops_per_second.to_bits(),
+            y.ops_per_second.to_bits(),
+            "{label}: group {i} ops/s"
+        );
+    }
     assert_eq!(
         a.score_flops.to_bits(),
         b.score_flops.to_bits(),
@@ -118,16 +139,35 @@ fn parity_with_odd_shard_count_and_uneven_windows() {
     // 5 shards never divide evenly across a pool, and a sync interval
     // that does not divide the duration (6300 / 800 = 7.875) exercises
     // the truncated final window.
-    let cfg = BenchmarkConfig {
-        nodes: 5,
-        duration_s: 1.75 * 3600.0,
-        seed: 13,
-        sync_interval_s: 800.0,
-        ..BenchmarkConfig::default()
-    };
+    let mut cfg = BenchmarkConfig::homogeneous(5);
+    cfg.duration_s = 1.75 * 3600.0;
+    cfg.seed = 13;
+    cfg.sync_interval_s = 800.0;
     let seq = run_benchmark_with(&cfg, Engine::Sequential);
     let par = run_benchmark_with(&cfg, Engine::Parallel);
     assert_bit_identical(&seq, &par, "odd shards");
+}
+
+#[test]
+fn parity_on_heterogeneous_mixed_gpu_topology() {
+    // Non-uniform shards: T4 and V100 groups evolve at different speeds,
+    // so the parallel pool sees unbalanced work — merge order and per-
+    // group ops attribution must still be bit-identical to sequential.
+    for seed in [0u64, 7] {
+        let mut cfg = aiperf::scenarios::get("t4v100-mixed")
+            .expect("mixed preset")
+            .config;
+        cfg.duration_s = 2.0 * 3600.0;
+        cfg.seed = seed;
+        let seq = run_benchmark_with(&cfg, Engine::Sequential);
+        let par = run_benchmark_with(&cfg, Engine::Parallel);
+        assert_bit_identical(&seq, &par, &format!("t4v100-mixed seed {seed}"));
+        assert_eq!(seq.groups.len(), 2, "expected two-group breakdown");
+        assert!(
+            seq.groups.iter().all(|g| g.ops > 0.0),
+            "both groups must contribute ops"
+        );
+    }
 }
 
 #[test]

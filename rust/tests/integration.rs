@@ -7,12 +7,10 @@ use aiperf::scenarios;
 use aiperf::util::json::Json;
 
 fn cfg(nodes: u64, hours: f64, seed: u64) -> BenchmarkConfig {
-    BenchmarkConfig {
-        nodes,
-        duration_s: hours * 3600.0,
-        seed,
-        ..BenchmarkConfig::default()
-    }
+    let mut cfg = BenchmarkConfig::homogeneous(nodes);
+    cfg.duration_s = hours * 3600.0;
+    cfg.seed = seed;
+    cfg
 }
 
 #[test]
@@ -74,9 +72,9 @@ fn longer_runs_do_not_reduce_quality() {
 fn gpus_per_node_scaling() {
     // Scale-up (more GPUs per node) must raise the score too.
     let mut c4 = cfg(2, 6.0, 0);
-    c4.node.gpus_per_node = 4;
+    c4.topology.groups[0].gpus_per_node = 4;
     let mut c8 = cfg(2, 6.0, 0);
-    c8.node.gpus_per_node = 8;
+    c8.topology.groups[0].gpus_per_node = 8;
     let r4 = run_benchmark(&c4);
     let r8 = run_benchmark(&c8);
     assert!(r8.score_flops > 1.5 * r4.score_flops);
@@ -88,6 +86,11 @@ fn report_json_roundtrips() {
     let text = r.to_json().to_string();
     let parsed = Json::parse(&text).expect("report JSON parses");
     assert_eq!(parsed.get("nodes").unwrap().as_u64(), Some(2));
+    assert_eq!(parsed.get("total_gpus").unwrap().as_u64(), Some(16));
+    assert_eq!(
+        parsed.get("groups").unwrap().as_arr().unwrap().len(),
+        r.groups.len()
+    );
     assert_eq!(
         parsed.get("score_series").unwrap().as_arr().unwrap().len(),
         r.score_series.len()
@@ -100,10 +103,25 @@ fn report_json_roundtrips() {
 fn config_file_flow() {
     let text = "nodes = 3\nseed = 9\nduration_hours = 6\nbatch_per_gpu = 256\n";
     let cfg = BenchmarkConfig::from_text(text).unwrap();
-    assert_eq!(cfg.nodes, 3);
+    assert_eq!(cfg.total_nodes(), 3);
     assert_eq!(cfg.batch_per_gpu, 256);
     let r = run_benchmark(&cfg);
     assert!(r.score_flops > 0.0);
+}
+
+#[test]
+fn heterogeneous_config_file_flow() {
+    let text = "seed = 3\nduration_hours = 2\nbatch_per_gpu = 256\n\
+                [group.t4]\ncount = 1\ngpus_per_node = 8\ngpu = t4\n\
+                [group.v100]\ncount = 1\ngpus_per_node = 8\ngpu = v100\n";
+    let cfg = BenchmarkConfig::from_text(text).unwrap();
+    assert_eq!(cfg.total_nodes(), 2);
+    assert_eq!(cfg.topology.groups.len(), 2);
+    let r = run_benchmark(&cfg);
+    assert_eq!(r.groups.len(), 2);
+    assert!(r.groups.iter().all(|g| g.ops > 0.0));
+    // The V100 group sustains more analytical ops than the T4 group.
+    assert!(r.groups[1].ops > r.groups[0].ops);
 }
 
 #[test]
@@ -120,7 +138,7 @@ fn warmup_records_are_predicted_then_measured() {
 #[test]
 fn tiny_cluster_and_short_run_still_work() {
     let mut c = cfg(1, 1.0, 0);
-    c.node.gpus_per_node = 1;
+    c.topology.groups[0].gpus_per_node = 1;
     let r = run_benchmark(&c);
     // One GPU for one hour: little progress, but a well-formed report.
     assert!(r.score_flops > 0.0);
@@ -137,46 +155,22 @@ fn nfs_traffic_scales_with_trials() {
 #[test]
 fn every_scenario_preset_validates() {
     let presets = scenarios::all();
-    assert!(presets.len() >= 4, "expected the paper's systems + smoke");
+    assert!(
+        presets.len() >= 5,
+        "expected the paper's systems + smoke + mixed"
+    );
     for p in &presets {
         p.config
             .validate()
             .unwrap_or_else(|e| panic!("preset {}: {e}", p.name));
         // A preset must round-trip through the configuration text format
-        // (what `aiperf config` emits and `--config` reads back).
+        // (what `aiperf config` emits and `--config` reads back) exactly —
+        // topology (incl. the heterogeneous preset's two accelerator
+        // models) and all.
         let text = p.config.to_text();
         let parsed = BenchmarkConfig::from_text(&text)
             .unwrap_or_else(|e| panic!("preset {} text: {e}", p.name));
-        assert_eq!(parsed.nodes, p.config.nodes, "preset {}", p.name);
-        assert_eq!(
-            parsed.node.gpus_per_node, p.config.node.gpus_per_node,
-            "preset {}",
-            p.name
-        );
-        // The accelerator model must survive the round trip too — the T4
-        // and Ascend presets differ from the V100 default in every one of
-        // these fields.
-        assert_eq!(
-            parsed.node.gpu.sustained_flops, p.config.node.gpu.sustained_flops,
-            "preset {}",
-            p.name
-        );
-        assert_eq!(
-            parsed.node.gpu.util_half_batch, p.config.node.gpu.util_half_batch,
-            "preset {}",
-            p.name
-        );
-        assert_eq!(
-            parsed.node.gpu.util_max, p.config.node.gpu.util_max,
-            "preset {}",
-            p.name
-        );
-        assert_eq!(
-            parsed.node.gpu.step_overhead_s, p.config.node.gpu.step_overhead_s,
-            "preset {}",
-            p.name
-        );
-        assert_eq!(parsed.engine, p.config.engine, "preset {}", p.name);
+        assert_eq!(parsed, p.config, "preset {} round trip", p.name);
     }
 }
 

@@ -5,6 +5,8 @@
 //! from a seeded in-tree RNG and asserts the invariant after every step.
 //! On failure the seed and step index identify the reproducer exactly.
 
+use aiperf::cluster::{ClusterTopology, GpuModel, NodeGroup};
+use aiperf::config::{BenchmarkConfig, Engine};
 use aiperf::coordinator::buffer::{ArchBuffer, Candidate};
 use aiperf::coordinator::dispatcher::Dispatcher;
 use aiperf::coordinator::trial::{ActiveTrial, TrialStatus};
@@ -343,6 +345,91 @@ fn prop_trial_early_stopping() {
             .cloned()
             .fold(f64::MIN, f64::max);
         assert!((trial.best_accuracy() - curve_max).abs() < 1e-2 + 1e-3);
+    }
+}
+
+/// Configuration round-trip invariant: `from_text(to_text(cfg))` is the
+/// identity for arbitrary multi-group (heterogeneous) topologies and
+/// arbitrary knob values — every field survives, bit for bit (f64 Display
+/// prints the shortest exactly-round-tripping decimal).
+#[test]
+fn prop_config_text_roundtrip_identity() {
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-config", 0);
+        let n_groups = rng.gen_range_usize(1, 5);
+        let topology = ClusterTopology {
+            groups: (0..n_groups)
+                .map(|i| {
+                    let base = match rng.gen_range_u64(0, 3) {
+                        0 => GpuModel::t4(),
+                        1 => GpuModel::v100(),
+                        _ => GpuModel::ascend910(),
+                    };
+                    let mut g = NodeGroup::new(
+                        &format!("g{i}"),
+                        rng.gen_range_u64(1, 40),
+                        rng.gen_range_u64(1, 17),
+                        base,
+                    );
+                    // Arbitrary per-field overrides, including awkward f64s.
+                    g.gpu.sustained_flops = rng.gen_range_f64(1e11, 9e13);
+                    g.gpu.memory_bytes = rng.gen_range_u64(1 << 30, 1 << 36);
+                    g.gpu.util_half_batch = rng.gen_range_f64(1.0, 200.0);
+                    g.gpu.util_max = rng.gen_range_f64(0.5, 0.999);
+                    g.gpu.step_overhead_s = rng.gen_range_f64(1e-4, 1e-2);
+                    g
+                })
+                .collect(),
+        };
+        let host = aiperf::cluster::HostModel {
+            cpu_cores: rng.gen_range_u64(1, 129),
+            search_seconds: rng.gen_range_f64(0.1, 10.0),
+            ..aiperf::cluster::HostModel::default()
+        };
+        let cfg = BenchmarkConfig {
+            topology,
+            host,
+            batch_per_gpu: rng.gen_range_u64(8, 512),
+            learning_rate: rng.gen_range_f64(1e-4, 1.0),
+            duration_s: rng.gen_range_f64(600.0, 100_000.0),
+            seed: rng.gen_range_u64(0, u64::MAX),
+            sync_interval_s: rng.gen_range_f64(10.0, 5000.0),
+            engine: if rng.gen_bool(0.5) {
+                Engine::Sequential
+            } else {
+                Engine::Parallel
+            },
+            ..BenchmarkConfig::default()
+        };
+        let text = cfg.to_text();
+        let parsed = BenchmarkConfig::from_text(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: reparse failed: {e}\n{text}"));
+        assert_eq!(parsed, cfg, "seed {seed}: round trip not identity");
+    }
+}
+
+/// Legacy flat cluster keys must still parse to an equivalent one-group
+/// topology (backward compatibility with pre-topology config files).
+#[test]
+fn prop_config_legacy_flat_keys_one_group() {
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-config-flat", 0);
+        let nodes = rng.gen_range_u64(1, 100);
+        let gpus = rng.gen_range_u64(1, 17);
+        let flops = rng.gen_range_f64(1e11, 9e13);
+        let text = format!(
+            "nodes = {nodes}\ngpus_per_node = {gpus}\ngpu_sustained_flops = {flops}\n"
+        );
+        let cfg = BenchmarkConfig::from_text(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(cfg.topology.groups.len(), 1, "seed {seed}");
+        let g = &cfg.topology.groups[0];
+        assert_eq!(g.count, nodes);
+        assert_eq!(g.gpus_per_node, gpus);
+        assert_eq!(g.gpu.sustained_flops, flops);
+        assert_eq!(cfg.total_gpus(), nodes * gpus);
+        // And the reparse of its canonical form is still the identity.
+        assert_eq!(BenchmarkConfig::from_text(&cfg.to_text()).unwrap(), cfg);
     }
 }
 

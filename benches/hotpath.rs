@@ -111,12 +111,31 @@ fn main() {
         r.score_series.len()
     );
 
+    // The sub-shard + work-stealing hot path: the heterogeneous preset
+    // runs 8 trial lanes (4 nodes x 2) with per-group batches and the
+    // steal scheduler enabled — the event-queue generation checks and
+    // the victim scan must stay off the critical path.
+    let t0 = Instant::now();
+    let steal_cfg = aiperf::scenarios::get("t4v100-mixed")
+        .expect("mixed preset")
+        .config;
+    let r2 = aiperf::coordinator::run_benchmark(&steal_cfg);
+    let t_steal = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {:>12.3} s  ({} archs, {} steals)",
+        "e2e: t4v100-mixed sub-sharded benchmark",
+        t_steal,
+        r2.architectures_evaluated,
+        r2.groups.iter().map(|g| g.steals).sum::<u64>()
+    );
+
     // Perf targets (EXPERIMENTS.md §Perf): the coordinator must never be
     // the bottleneck — per-trial decision cost ≪ 1 ms, full sim ≪ 10 s.
     assert!(t_lower_count < 1e-3, "per-trial FLOPs count above 1 ms");
     assert!(t_morph < 1e-3, "morph proposal above 1 ms");
     assert!(t_tpe < 5e-3, "TPE suggest above 5 ms");
     assert!(t_e2e < 10.0, "16-node sim above 10 s");
+    assert!(t_steal < 10.0, "sub-sharded mixed sim above 10 s");
     let _ = (t_count, t_lower, t_events);
     println!("\nhotpath OK — all L3 targets met");
 }

@@ -101,6 +101,25 @@ impl GpuModel {
         self.memory_demand(params, activation_elems, batch) <= self.memory_bytes
     }
 
+    /// Largest per-GPU batch at which [`GpuModel::fits`] holds, or `None`
+    /// when even batch 1 does not fit (the candidate cannot train on this
+    /// device at all). Inverts the linear `memory_demand` formula, so the
+    /// memory-adaption loop can clamp to the true fit boundary instead of
+    /// stopping at an arbitrary floor.
+    pub fn max_fitting_batch(&self, params: u64, activation_elems: u64) -> Option<u64> {
+        // Batch-independent residents: optimizer states + framework
+        // overhead (must mirror `memory_demand`).
+        let fixed = params * 4 * 3 + 3 * (1 << 29);
+        let avail = self.memory_bytes.checked_sub(fixed)?;
+        let per_image = activation_elems * 2;
+        if per_image == 0 {
+            // Degenerate graph with no activations: any batch fits.
+            return Some(u64::MAX);
+        }
+        let batch = avail / per_image;
+        (batch >= 1).then_some(batch)
+    }
+
     /// Seconds to process one training step of `batch` images needing
     /// `ops_per_image` analytical ops (compute only — allreduce is charged
     /// by the network model).
@@ -173,6 +192,25 @@ mod tests {
         // T4 is the 16 GB card; the others are 32 GB.
         assert_eq!(GpuModel::t4().memory_bytes, 16 * (1 << 30));
         assert_eq!(GpuModel::ascend910().memory_bytes, 32 * (1 << 30));
+    }
+
+    #[test]
+    fn max_fitting_batch_is_the_fit_boundary() {
+        let g = GpuModel::default();
+        let params = 25_600_000;
+        let act = 11_000_000;
+        let b = g.max_fitting_batch(params, act).expect("resnet fits");
+        assert!(g.fits(params, act, b), "boundary batch must fit");
+        assert!(!g.fits(params, act, b + 1), "boundary + 1 must not fit");
+        // A model whose fixed residents alone exceed device memory can
+        // never fit, at any batch.
+        let huge_params = g.memory_bytes; // 12 B/param of states ≫ memory
+        assert_eq!(g.max_fitting_batch(huge_params, act), None);
+        // Activation-heavy model on the 16 GB card: boundary is lower
+        // than on the 32 GB card.
+        let t4 = GpuModel::t4();
+        let small = t4.max_fitting_batch(params, act).unwrap();
+        assert!(small < b);
     }
 
     #[test]

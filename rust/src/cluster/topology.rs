@@ -27,6 +27,15 @@ pub struct NodeGroup {
     pub gpus_per_node: u64,
     /// The group's accelerator model.
     pub gpu: GpuModel,
+    /// Per-group training batch override. `None` falls back to the global
+    /// `BenchmarkConfig::batch_per_gpu`, so a mixed T4/V100 cluster can
+    /// train each group at its memory-appropriate batch instead of the
+    /// smallest card's.
+    pub batch_per_gpu: Option<u64>,
+    /// Per-group sub-shard override: how many independent trial lanes a
+    /// node's GPUs split into. `None` falls back to the global
+    /// `BenchmarkConfig::subshards_per_node`; must divide `gpus_per_node`.
+    pub subshards_per_node: Option<u64>,
 }
 
 impl NodeGroup {
@@ -36,6 +45,8 @@ impl NodeGroup {
             count,
             gpus_per_node,
             gpu,
+            batch_per_gpu: None,
+            subshards_per_node: None,
         }
     }
 
@@ -114,6 +125,12 @@ impl ClusterTopology {
             first += g.count;
         }
         None
+    }
+
+    /// Global node index of the first node of `group` (nodes are numbered
+    /// in group order).
+    pub fn first_node(&self, group: usize) -> u64 {
+        self.groups[..group].iter().map(|g| g.count).sum()
     }
 
     /// `(group index, global node index)` for every node, in merge order.
@@ -219,6 +236,8 @@ mod tests {
         let t = mixed();
         let nodes: Vec<(usize, usize)> = t.nodes().collect();
         assert_eq!(nodes, vec![(0, 0), (0, 1), (1, 2), (1, 3), (1, 4)]);
+        assert_eq!(t.first_node(0), 0);
+        assert_eq!(t.first_node(1), 2);
         assert_eq!(t.group_of_node(0), Some(0));
         assert_eq!(t.group_of_node(1), Some(0));
         assert_eq!(t.group_of_node(2), Some(1));

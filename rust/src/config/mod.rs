@@ -29,9 +29,21 @@
 //! ```
 //!
 //! Group keys: `count` (required per section), `gpus_per_node`, `gpu`
-//! (named accelerator), and the per-field accelerator overrides
+//! (named accelerator), the per-field accelerator overrides
 //! `gpu_sustained_flops`, `gpu_memory_bytes` (or `gpu_memory_gb`),
-//! `gpu_util_half_batch`, `gpu_util_max`, `gpu_step_overhead_s`.
+//! `gpu_util_half_batch`, `gpu_util_max`, `gpu_step_overhead_s`, and the
+//! per-group scheduling overrides `batch_per_gpu` (this group trains at
+//! its own batch instead of the global one — a mixed T4/V100 site keeps
+//! the V100 group at its memory-appropriate batch) and
+//! `subshards_per_node` (how many independent trial lanes a node's GPUs
+//! split into; must divide `gpus_per_node`).
+//!
+//! The global `subshards_per_node` key is the all-groups default (1 = one
+//! lane per node spanning all its GPUs, the classic layout), and
+//! `work_stealing = true|false` enables the deterministic intra-node
+//! steal scheduler: a lane without runway for another full epoch joins
+//! the most-loaded sibling lane's trial as extra data-parallel devices
+//! (see `coordinator::shard`).
 //!
 //! **Legacy flat shorthand:** the pre-topology keys `nodes`,
 //! `gpus_per_node`, and the `gpu_*` family may still appear at the top
@@ -163,6 +175,16 @@ pub struct BenchmarkConfig {
     /// window and merge into the shared history at each barrier. Both
     /// engines use the same windows, so results are engine-independent.
     pub sync_interval_s: f64,
+    /// How many independent trial lanes (sub-shards) a node's GPUs split
+    /// into, for every group without its own override. 1 = the classic
+    /// layout (one trial at a time spanning all of a node's GPUs); must
+    /// divide each group's `gpus_per_node`.
+    pub subshards_per_node: u64,
+    /// Deterministic intra-node work stealing: a sub-shard lane that
+    /// lacks runway for another full epoch before the benchmark deadline
+    /// joins the most-loaded sibling lane's trial as extra data-parallel
+    /// devices (seed-derived scan order; engine-independent).
+    pub work_stealing: bool,
 }
 
 impl Default for BenchmarkConfig {
@@ -185,6 +207,8 @@ impl Default for BenchmarkConfig {
             precision_bits: 16,
             engine: Engine::default(),
             sync_interval_s: 300.0,
+            subshards_per_node: 1,
+            work_stealing: false,
         }
     }
 }
@@ -206,6 +230,47 @@ impl BenchmarkConfig {
     /// Total GPU count.
     pub fn total_gpus(&self) -> u64 {
         self.topology.total_gpus()
+    }
+
+    /// Effective training batch of a topology group: the group override
+    /// when set, the global `batch_per_gpu` otherwise.
+    pub fn group_batch(&self, group: usize) -> u64 {
+        self.topology.groups[group]
+            .batch_per_gpu
+            .unwrap_or(self.batch_per_gpu)
+    }
+
+    /// Effective sub-shards per node of a topology group: the group
+    /// override when set, the global `subshards_per_node` otherwise.
+    pub fn group_subshards(&self, group: usize) -> u64 {
+        self.topology.groups[group]
+            .subshards_per_node
+            .unwrap_or(self.subshards_per_node)
+    }
+
+    /// Total sub-shard lanes across the cluster (the execution-unit count
+    /// that strides globally unique trial ids).
+    pub fn total_subshards(&self) -> u64 {
+        (0..self.topology.groups.len())
+            .map(|i| self.topology.groups[i].count * self.group_subshards(i))
+            .sum()
+    }
+
+    /// Global index of the first sub-shard lane of global node `node`
+    /// (which lives in topology group `group`). Lanes are numbered like
+    /// nodes: group 0's nodes' lanes first, then group 1's, … — with one
+    /// lane per node this is exactly the node index, preserving the
+    /// pre-sub-shard RNG streams.
+    pub fn subshard_base(&self, group: usize, node: usize) -> u64 {
+        let first = self.topology.first_node(group);
+        debug_assert!(
+            node as u64 >= first,
+            "node {node} is not in group {group} (first node {first})"
+        );
+        let before: u64 = (0..group)
+            .map(|i| self.topology.groups[i].count * self.group_subshards(i))
+            .sum();
+        before + (node as u64 - first) * self.group_subshards(group)
     }
 
     /// Validate the configuration against the paper's fixed rules.
@@ -232,6 +297,27 @@ impl BenchmarkConfig {
         }
         if !(self.telemetry_interval_s > 0.0) {
             return Err("telemetry_interval_s must be positive".into());
+        }
+        if self.subshards_per_node == 0 {
+            return Err("subshards_per_node must be at least 1".into());
+        }
+        for (i, g) in self.topology.groups.iter().enumerate() {
+            let k = self.group_subshards(i);
+            if k == 0 {
+                return Err(format!(
+                    "group `{}`: subshards_per_node must be at least 1",
+                    g.label
+                ));
+            }
+            if g.gpus_per_node % k != 0 {
+                return Err(format!(
+                    "group `{}`: subshards_per_node ({k}) must divide gpus_per_node ({})",
+                    g.label, g.gpus_per_node
+                ));
+            }
+            if g.batch_per_gpu == Some(0) {
+                return Err(format!("group `{}`: batch_per_gpu must be positive", g.label));
+            }
         }
         Ok(())
     }
@@ -270,6 +356,11 @@ impl BenchmarkConfig {
                 "gpu_util_half_batch" => g.gpu.util_half_batch = parse_f64(value)?,
                 "gpu_util_max" => g.gpu.util_max = parse_f64(value)?,
                 "gpu_step_overhead_s" => g.gpu.step_overhead_s = parse_f64(value)?,
+                // Per-group scheduling overrides (inside `[group.*]`
+                // sections only: the same spellings at the top level stay
+                // the global defaults).
+                "batch_per_gpu" => g.batch_per_gpu = Some(parse_u64(value)?),
+                "subshards_per_node" => g.subshards_per_node = Some(parse_u64(value)?),
                 _ => return Ok(false),
             }
             Ok(true)
@@ -380,6 +471,18 @@ impl BenchmarkConfig {
                 "precision_bits" => cfg.precision_bits = parse_u64(value)? as u32,
                 "engine" => cfg.engine = Engine::parse(value).map_err(err)?,
                 "sync_interval_s" => cfg.sync_interval_s = parse_f64(value)?,
+                "subshards_per_node" => cfg.subshards_per_node = parse_u64(value)?,
+                "work_stealing" => {
+                    cfg.work_stealing = match value {
+                        "true" | "on" | "1" => true,
+                        "false" | "off" | "0" => false,
+                        other => {
+                            return Err(err(format!(
+                                "bad boolean `{other}` for work_stealing (expected true/false)"
+                            )))
+                        }
+                    }
+                }
                 "max_params" => cfg.morph_limits.max_params = parse_u64(value)?,
                 "max_depth" => cfg.morph_limits.max_depth = parse_u64(value)? as usize,
                 "max_width" => cfg.morph_limits.max_width = parse_u64(value)?,
@@ -450,7 +553,9 @@ impl BenchmarkConfig {
              search_seconds = {}\n\
              setup_seconds = {}\n\
              engine = {}\n\
-             sync_interval_s = {}\n",
+             sync_interval_s = {}\n\
+             subshards_per_node = {}\n\
+             work_stealing = {}\n",
             self.batch_per_gpu,
             self.learning_rate,
             self.lr_decay_per_epoch,
@@ -474,6 +579,8 @@ impl BenchmarkConfig {
             self.host.setup_seconds,
             self.engine.as_str(),
             self.sync_interval_s,
+            self.subshards_per_node,
+            self.work_stealing,
         );
         for g in &self.topology.groups {
             out.push_str(&format!(
@@ -494,6 +601,14 @@ impl BenchmarkConfig {
                 g.gpu.util_max,
                 g.gpu.step_overhead_s,
             ));
+            // Optional per-group overrides: emitted only when set, so the
+            // round trip preserves `None` exactly.
+            if let Some(b) = g.batch_per_gpu {
+                out.push_str(&format!("batch_per_gpu = {b}\n"));
+            }
+            if let Some(k) = g.subshards_per_node {
+                out.push_str(&format!("subshards_per_node = {k}\n"));
+            }
         }
         out
     }
@@ -653,6 +768,57 @@ mod tests {
         let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
         assert_eq!(c2, c);
         assert!(BenchmarkConfig::from_text("engine = turbo\n").is_err());
+    }
+
+    #[test]
+    fn per_group_batch_and_subshards_parse_and_roundtrip() {
+        let text = "batch_per_gpu = 448\nsubshards_per_node = 1\nwork_stealing = on\n\
+                    [group.t4]\ncount = 2\ngpus_per_node = 8\ngpu = t4\nbatch_per_gpu = 256\n\
+                    [group.v100]\ncount = 2\ngpus_per_node = 8\ngpu = v100\nsubshards_per_node = 2\n";
+        let c = BenchmarkConfig::from_text(text).unwrap();
+        assert!(c.work_stealing);
+        assert_eq!(c.batch_per_gpu, 448);
+        assert_eq!(c.topology.groups[0].batch_per_gpu, Some(256));
+        assert_eq!(c.topology.groups[1].batch_per_gpu, None);
+        assert_eq!(c.topology.groups[1].subshards_per_node, Some(2));
+        // Effective values: group override wins, global is the fallback.
+        assert_eq!(c.group_batch(0), 256);
+        assert_eq!(c.group_batch(1), 448);
+        assert_eq!(c.group_subshards(0), 1);
+        assert_eq!(c.group_subshards(1), 2);
+        assert_eq!(c.total_subshards(), 2 * 1 + 2 * 2);
+        // Lane numbering strides nodes in group order.
+        assert_eq!(c.subshard_base(0, 0), 0);
+        assert_eq!(c.subshard_base(0, 1), 1);
+        assert_eq!(c.subshard_base(1, 2), 2);
+        assert_eq!(c.subshard_base(1, 3), 4);
+        c.validate().unwrap();
+        let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
+        assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn work_stealing_key_rejects_garbage() {
+        assert!(BenchmarkConfig::from_text("work_stealing = maybe\n").is_err());
+        let c = BenchmarkConfig::from_text("work_stealing = off\n").unwrap();
+        assert!(!c.work_stealing);
+    }
+
+    #[test]
+    fn subshards_must_divide_gpus_per_node() {
+        let mut c = BenchmarkConfig::default();
+        c.subshards_per_node = 3; // default group has 8 GPUs per node
+        assert!(c.validate().is_err());
+        c.subshards_per_node = 2;
+        c.validate().unwrap();
+        c.topology.groups[0].subshards_per_node = Some(0);
+        assert!(c.validate().is_err());
+        let mut c = BenchmarkConfig::default();
+        c.subshards_per_node = 0;
+        assert!(c.validate().is_err());
+        let mut c = BenchmarkConfig::default();
+        c.topology.groups[0].batch_per_gpu = Some(0);
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -40,6 +40,10 @@ struct GlobalState {
     cumulative_ops: f64,
     /// Analytical ops attributed to each topology group (index = group).
     group_ops: Vec<f64>,
+    /// Barrier-slack accumulation per group: sum of per-lane overshoots
+    /// past each window boundary, and the sample count (lanes × windows).
+    group_slack_sum: Vec<f64>,
+    group_slack_samples: Vec<u64>,
     next_score_t: f64,
 }
 
@@ -51,6 +55,16 @@ fn merge_window(
     window_end: f64,
     cfg: &BenchmarkConfig,
 ) {
+    // Barrier slack: how far each solo lane's in-flight epoch overshoots
+    // this barrier — the amount a synchronous barrier would stretch
+    // waiting on that lane (work stealing tightens it on victim lanes).
+    for s in shards.iter() {
+        for o in s.barrier_overshoots(window_end) {
+            global.group_slack_sum[s.group] += o;
+            global.group_slack_samples[s.group] += 1;
+        }
+    }
+
     // Completed models: drained in node order, then stably sorted by
     // completion time (ties keep node order) — the order the shared
     // history would have seen them.
@@ -79,18 +93,24 @@ fn merge_window(
     }
     ops_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal));
 
-    // Telemetry: every shard ticks on the same schedule; zip the per-node
-    // readings per tick.
-    let ticks = shards.first().map_or(0, |s| s.readings.len());
+    // Telemetry: every lane of every shard ticks on the same schedule;
+    // zip the per-lane readings per tick (a shard's readings vector holds
+    // its `subshard_count()` lane readings consecutively per tick, in
+    // lane order).
+    let ticks = shards
+        .first()
+        .map_or(0, |s| s.readings.len() / s.subshard_count().max(1));
     for j in 0..ticks {
-        let t = shards[0].readings[j].0;
-        let readings: Vec<NodeReading> = shards
-            .iter()
-            .map(|s| {
-                debug_assert_eq!(s.readings[j].0, t, "telemetry ticks diverged");
-                s.readings[j].1
-            })
-            .collect();
+        let t = shards[0].readings[j * shards[0].subshard_count()].0;
+        let mut readings: Vec<NodeReading> = Vec::new();
+        for s in shards.iter() {
+            let k = s.subshard_count();
+            for u in 0..k {
+                let (rt, r) = s.readings[j * k + u];
+                debug_assert_eq!(rt, t, "telemetry ticks diverged");
+                readings.push(r);
+            }
+        }
         global.telemetry.record(t, &readings);
     }
     for s in shards.iter_mut() {
@@ -151,6 +171,8 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         score_series: Vec::new(),
         cumulative_ops: 0.0,
         group_ops: vec![0.0; cfg.topology.groups.len()],
+        group_slack_sum: vec![0.0; cfg.topology.groups.len()],
+        group_slack_samples: vec![0; cfg.topology.groups.len()],
         next_score_t: cfg.score_interval_s,
     };
     let mut snapshot = HistorySnapshot::default();
@@ -196,12 +218,16 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
 
     let mut nfs_stats = NfsStats::default();
     let mut architectures_evaluated = 0;
+    let mut group_steals = vec![0u64; cfg.topology.groups.len()];
+    let mut group_oom_skips = vec![0u64; cfg.topology.groups.len()];
     for s in &shards {
         nfs_stats.reads += s.nfs.reads;
         nfs_stats.writes += s.nfs.writes;
         nfs_stats.bytes_read += s.nfs.bytes_read;
         nfs_stats.bytes_written += s.nfs.bytes_written;
-        architectures_evaluated += s.dispatcher.total_completed();
+        architectures_evaluated += s.total_completed();
+        group_steals[s.group] += s.steals;
+        group_oom_skips[s.group] += s.oom_skips;
     }
 
     let final_error = global.history.best_measured_error().unwrap_or(1.0 - 1e-9);
@@ -211,13 +237,20 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         .topology
         .groups
         .iter()
-        .zip(&global.group_ops)
-        .map(|(g, &ops)| GroupBreakdown {
+        .enumerate()
+        .map(|(i, g)| GroupBreakdown {
             label: g.label.clone(),
             nodes: g.count,
             gpus_per_node: g.gpus_per_node,
-            ops,
-            ops_per_second: ops / cfg.duration_s,
+            ops: global.group_ops[i],
+            ops_per_second: global.group_ops[i] / cfg.duration_s,
+            steals: group_steals[i],
+            oom_skips: group_oom_skips[i],
+            barrier_slack_s: if global.group_slack_samples[i] > 0 {
+                global.group_slack_sum[i] / global.group_slack_samples[i] as f64
+            } else {
+                0.0
+            },
         })
         .collect();
     BenchmarkReport {
@@ -378,6 +411,105 @@ mod tests {
         assert_eq!(r.groups[0].nodes, 2);
         assert_eq!(r.groups[0].gpus_per_node, 8);
         assert!(r.groups[0].ops_per_second > 0.0);
+    }
+
+    #[test]
+    fn subshards_preserve_report_shape_and_throughput() {
+        let mut cfg = small_cfg(2, 6.0, 4);
+        cfg.subshards_per_node = 2;
+        let r = run_benchmark(&cfg);
+        let base = run_benchmark(&small_cfg(2, 6.0, 4));
+        assert!(r.score_flops > 0.0);
+        assert!(r.architectures_evaluated > 0);
+        assert_eq!(r.groups.len(), 1);
+        assert_eq!(r.groups[0].steals, 0, "stealing is opt-in");
+        // Two half-width lanes per node keep aggregate throughput in the
+        // same ballpark as the classic one-lane layout.
+        let ratio = r.score_flops / base.score_flops;
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "subshard throughput ratio {ratio}"
+        );
+        // Telemetry still zips per tick across all lanes.
+        assert_eq!(r.telemetry.len(), base.telemetry.len());
+    }
+
+    #[test]
+    fn work_stealing_recovers_truncated_tail_ops() {
+        use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
+        use crate::config::WarmupSchedule;
+        // Crafted endgame: two T4 lanes whose identical first trials
+        // (2 epochs ≈ 2.5 modelled hours each) finish just before the
+        // deadline, leaving less than one epoch of runway. Without
+        // stealing, the follow-up trials never complete an epoch (their
+        // ops are lost); with stealing, a drained lane joins its
+        // sibling's trial and the widened ring finishes epochs in time.
+        let run = |stealing: bool, seed: u64| {
+            let mut cfg = BenchmarkConfig {
+                topology: ClusterTopology::single(NodeGroup::new("t4", 1, 8, GpuModel::t4())),
+                batch_per_gpu: 256,
+                subshards_per_node: 2,
+                work_stealing: stealing,
+                warmup: WarmupSchedule {
+                    first_epochs: 2,
+                    step_epochs: 2,
+                    max_epochs: 6,
+                    hpo_start_round: 5,
+                },
+                duration_s: 12_000.0,
+                ..BenchmarkConfig::default()
+            };
+            cfg.seed = seed;
+            run_benchmark(&cfg)
+        };
+        let mut any_steal = false;
+        let mut any_gain = false;
+        for seed in 0..6u64 {
+            let with = run(true, seed);
+            let without = run(false, seed);
+            if with.groups[0].steals > 0 {
+                any_steal = true;
+            }
+            if with.groups[0].ops > without.groups[0].ops {
+                any_gain = true;
+            }
+            // The steal schedule is deterministic: same seed, same count.
+            assert_eq!(with.groups[0].steals, run(true, seed).groups[0].steals);
+        }
+        assert!(any_steal, "steal scheduler never fired across seeds");
+        assert!(
+            any_gain,
+            "stealing never recovered truncated-tail ops across seeds"
+        );
+    }
+
+    #[test]
+    fn per_group_batch_override_raises_mixed_throughput() {
+        use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
+        // The V100 half of a mixed site trained at the T4-friendly batch
+        // understates its utilization; the per-group override recovers it.
+        let mixed = |v100_batch: Option<u64>| {
+            let mut v100 = NodeGroup::new("v100", 2, 8, GpuModel::v100());
+            v100.batch_per_gpu = v100_batch;
+            let mut cfg = BenchmarkConfig {
+                batch_per_gpu: 256,
+                topology: ClusterTopology {
+                    groups: vec![NodeGroup::new("t4", 2, 8, GpuModel::t4()), v100],
+                },
+                ..BenchmarkConfig::default()
+            };
+            cfg.duration_s = 6.0 * 3600.0;
+            run_benchmark(&cfg)
+        };
+        let flat = mixed(None);
+        let tuned = mixed(Some(448));
+        assert!(
+            tuned.groups[1].ops > flat.groups[1].ops,
+            "V100 group at batch 448 must outproduce batch 256: {:e} vs {:e}",
+            tuned.groups[1].ops,
+            flat.groups[1].ops
+        );
+        assert!(tuned.score_flops > flat.score_flops);
     }
 
     #[test]

@@ -1,22 +1,51 @@
-//! Per-slave simulation shard (the parallel scale-out refactor).
+//! Per-slave simulation shard (the parallel scale-out refactor), now at
+//! sub-shard granularity.
 //!
 //! The discrete-event benchmark is sharded by slave node: each
-//! [`SlaveShard`] owns its CPU search loop, TPE optimizer, RNG streams,
-//! candidate buffer, trial dispatcher bookkeeping, and local event queue.
+//! [`SlaveShard`] owns its node's event queue, candidate buffer, and NFS
+//! bookkeeping, and splits the node's GPUs into one or more *sub-shard
+//! lanes* (`BenchmarkConfig::subshards_per_node`, per-group overridable).
+//! Every lane is an independent trial trainer with its own CPU search
+//! loop, TPE optimizer, RNG streams, and dispatcher lane — a node with
+//! `k` lanes trains `k` candidates concurrently, each with synchronous
+//! data parallelism across `gpus_per_node / k` devices. With one lane
+//! per node this reduces exactly to the classic layout (same RNG
+//! streams, same event order, bit-identical results).
+//!
 //! A shard belongs to one topology node group and draws its device
-//! parameters (GPU model, GPUs per node) from that group's
-//! [`crate::sim::timing::TimingModel`], so heterogeneous clusters run
-//! mixed-speed shards side by side.
+//! parameters from that group's [`crate::sim::timing::TimingModel`], so
+//! heterogeneous clusters run mixed-speed shards side by side. Each
+//! group can also train at its own batch (`[group.NAME] batch_per_gpu`),
+//! so a mixed T4/V100 site no longer understates the larger card.
+//!
+//! # Work stealing
+//!
+//! The epoch barrier serializes a window on its slowest lane: a lane
+//! whose remaining runway cannot fit another full epoch before the
+//! benchmark deadline would classically start a doomed trial whose
+//! first epoch never completes — wasted devices, exactly the
+//! fixed-synchronization pitfall AIPerf's elastic design avoids. With
+//! `BenchmarkConfig::work_stealing` on, such a lane instead *steals
+//! queued trial work* from the most-loaded sibling lane in its node
+//! (all lanes of a node belong to the same topology node group and
+//! share its NVLink domain, which is what makes joining a trial's
+//! allreduce ring cheap): it attaches to that trial as extra
+//! data-parallel devices, the victim's remaining epochs re-time with
+//! the wider ring, and the helper is released when the trial
+//! finalizes. Victims are picked by largest remaining work, scanned in
+//! a fixed seed-derived rotation, and the whole exchange happens
+//! inside the node's own event loop — so `Engine::Sequential` and
+//! `Engine::Parallel` remain bit-identical, enforced by
+//! `rust/tests/engine_parity.rs`.
+//!
 //! Shards advance independently inside an epoch-barrier window
 //! (`BenchmarkConfig::sync_interval_s`) against a frozen
 //! [`HistorySnapshot`] of the shared historical model list, then the
 //! coordinator merges their window outputs (completed models, analytical
-//! ops, telemetry readings) in deterministic node order.
-//!
-//! Because a shard's evolution depends only on (its own state, the
-//! snapshot, the window end), executing shards on a thread pool is
-//! bit-identical to executing them sequentially — which is what
-//! `rust/tests/engine_parity.rs` enforces.
+//! ops, telemetry readings, barrier-slack samples) in deterministic node
+//! order. Because a shard's evolution depends only on (its own state,
+//! the snapshot, the window end), executing shards on a thread pool is
+//! bit-identical to executing them sequentially.
 
 use crate::cluster::nfs::NfsStats;
 use crate::config::BenchmarkConfig;
@@ -35,15 +64,20 @@ use crate::sim::engine::EventQueue;
 use crate::sim::timing::TimingModel;
 use crate::util::rng::{derive, Rng};
 
-/// Discrete events local to one shard.
+/// Discrete events local to one shard, tagged with the sub-shard lane
+/// they belong to.
 #[derive(Debug, Clone, Copy)]
 pub enum ShardEvent {
-    /// Node is free: run the search loop and start the next trial.
-    NodeReady,
-    /// Node finished one training epoch (incl. validation).
-    EpochDone,
-    /// Telemetry sampling tick.
-    Telemetry,
+    /// Lane is free: run the search loop and start (or steal) the next
+    /// trial.
+    NodeReady { sub: usize },
+    /// Lane finished one training epoch (incl. validation). `gen` is the
+    /// lane's epoch generation: a steal re-times the pending epoch by
+    /// bumping the generation and scheduling a replacement, so a stale
+    /// event is recognizable and dropped on pop.
+    EpochDone { sub: usize, gen: u64 },
+    /// Telemetry sampling tick for one lane.
+    Telemetry { sub: usize },
 }
 
 /// Immutable per-run context shared (read-only) by every shard.
@@ -56,7 +90,8 @@ pub struct SimContext<'a> {
     pub surrogate: AccuracySurrogate,
     pub policy: SearchPolicy,
     pub initial: Architecture,
-    pub total_nodes: u64,
+    /// Total sub-shard lanes across the cluster (strides trial ids).
+    pub total_units: u64,
 }
 
 impl<'a> SimContext<'a> {
@@ -87,7 +122,7 @@ impl<'a> SimContext<'a> {
                 cfg.dataset.channels,
                 cfg.dataset.num_classes,
             ),
-            total_nodes: cfg.topology.total_nodes(),
+            total_units: cfg.total_subshards(),
         }
     }
 
@@ -111,30 +146,64 @@ pub struct HistorySnapshot {
     pub records: u64,
 }
 
-/// One slave node's complete simulation state.
-pub struct SlaveShard {
-    pub node: usize,
-    /// Topology group this node belongs to (selects its device model).
-    pub group: usize,
+/// One sub-shard lane: an independent trial trainer over a slice of the
+/// node's GPUs.
+struct SubShard {
+    /// Globally unique lane index (fixes RNG streams and trial-id
+    /// striding; equals the node index when `subshards_per_node` is 1).
+    unit: u64,
+    /// Devices this lane trains on when running solo.
+    gpus: u64,
     round: u64,
     tpe: Tpe,
     rng: Rng,
     tele_rng: Rng,
-    queue: EventQueue<ShardEvent>,
-    buffer: ArchBuffer,
-    pub dispatcher: Dispatcher,
-    pub nfs: NfsStats,
+    dispatcher: Dispatcher,
     trial: Option<ActiveTrial>,
     /// Dispatcher-local id of the in-flight trial.
     current_local: u64,
-    /// Seconds per (train + validate) epoch for the current trial.
+    /// Seconds per (train + validate) epoch for the current trial, at the
+    /// lane's *current* effective width (helpers included).
     epoch_seconds: f64,
+    /// Seconds per epoch of this lane's latest trial at its solo width —
+    /// the runway estimate the steal scheduler uses (never sped up by
+    /// helpers, unlike `epoch_seconds`).
+    own_epoch_s: f64,
     /// GPU busy fraction while the current trial trains.
     busy_fraction: f64,
     /// GPU memory utilization fraction for the current trial.
     mem_fraction: f64,
-    /// Until when the node is in inter-trial setup (telemetry dent).
+    /// Until when the lane is in inter-trial setup (telemetry dent).
     setup_until: f64,
+    /// Epoch generation: bumped whenever the pending `EpochDone` is
+    /// superseded (trial start or steal re-timing).
+    epoch_gen: u64,
+    /// Absolute time of the pending `EpochDone` (barrier-slack metric and
+    /// steal re-timing).
+    epoch_end_t: f64,
+    /// Sibling lanes currently lending this lane their devices.
+    helpers: Vec<usize>,
+    /// `Some(victim)` while this lane's devices are lent to a sibling.
+    assisting: Option<usize>,
+}
+
+/// One slave node's complete simulation state: `k` sub-shard lanes over
+/// a shared event queue, candidate buffer, and NFS accounting.
+pub struct SlaveShard {
+    pub node: usize,
+    /// Topology group this node belongs to (selects its device model).
+    pub group: usize,
+    queue: EventQueue<ShardEvent>,
+    buffer: ArchBuffer,
+    pub nfs: NfsStats,
+    /// Seed-derived stream ordering the steal scheduler's victim scan.
+    steal_rng: Rng,
+    work_stealing: bool,
+    /// Steal events performed by this node's lanes (report counter).
+    pub steals: u64,
+    /// Candidates skipped because no batch size fit the accelerator.
+    pub oom_skips: u64,
+    subs: Vec<SubShard>,
     /// Window outputs, drained by the coordinator at each barrier.
     pub completed: Vec<ModelRecord>,
     pub epoch_ops: Vec<(f64, f64)>,
@@ -143,36 +212,93 @@ pub struct SlaveShard {
 
 impl SlaveShard {
     /// A fresh shard for `node` in topology group `group`, with its
-    /// stream-derived RNGs and the SLURM-stagger initial schedule.
+    /// stream-derived RNGs and the SLURM-stagger initial schedule. The
+    /// node's GPUs split evenly across `cfg.group_subshards(group)`
+    /// lanes (validation requires divisibility).
     pub fn new(node: usize, group: usize, cfg: &BenchmarkConfig) -> Self {
+        let k = cfg.group_subshards(group).max(1) as usize;
+        let g = &cfg.topology.groups[group];
+        let lane_gpus = (g.gpus_per_node / k as u64).max(1);
+        let unit0 = cfg.subshard_base(group, node);
         let mut queue = EventQueue::new();
-        // Asynchronous dispatch: SLURM stagger of a few seconds per node.
-        queue.schedule(node as f64 * 2.0, ShardEvent::NodeReady);
-        queue.schedule(cfg.telemetry_interval_s, ShardEvent::Telemetry);
+        let mut subs = Vec::with_capacity(k);
+        for s in 0..k {
+            let unit = unit0 + s as u64;
+            // Asynchronous dispatch: SLURM stagger of a few seconds per
+            // lane (per node in the classic one-lane layout).
+            queue.schedule(unit as f64 * 2.0, ShardEvent::NodeReady { sub: s });
+            subs.push(SubShard {
+                unit,
+                gpus: lane_gpus,
+                round: 0,
+                tpe: Tpe::new(aiperf_space()),
+                rng: derive(cfg.seed, "slave", unit),
+                tele_rng: derive(cfg.seed, "telemetry", unit),
+                dispatcher: Dispatcher::new(),
+                trial: None,
+                current_local: 0,
+                epoch_seconds: 0.0,
+                own_epoch_s: 0.0,
+                busy_fraction: 0.0,
+                mem_fraction: 0.0,
+                setup_until: 0.0,
+                epoch_gen: 0,
+                epoch_end_t: 0.0,
+                helpers: Vec::new(),
+                assisting: None,
+            });
+        }
+        for s in 0..k {
+            queue.schedule(cfg.telemetry_interval_s, ShardEvent::Telemetry { sub: s });
+        }
         SlaveShard {
             node,
             group,
-            round: 0,
-            tpe: Tpe::new(aiperf_space()),
-            rng: derive(cfg.seed, "slave", node as u64),
-            tele_rng: derive(cfg.seed, "telemetry", node as u64),
             queue,
             // Per-shard buffer: the search loop pushes one candidate and
             // the trainer drains it within the same NodeReady event, so a
             // small constant capacity captures the actual invariant.
             buffer: ArchBuffer::new(4),
-            dispatcher: Dispatcher::new(),
             nfs: NfsStats::default(),
-            trial: None,
-            current_local: 0,
-            epoch_seconds: 0.0,
-            busy_fraction: 0.0,
-            mem_fraction: 0.0,
-            setup_until: 0.0,
+            steal_rng: derive(cfg.seed, "steal", node as u64),
+            work_stealing: cfg.work_stealing,
+            steals: 0,
+            oom_skips: 0,
+            subs,
             completed: Vec::new(),
             epoch_ops: Vec::new(),
             readings: Vec::new(),
         }
+    }
+
+    /// Number of sub-shard lanes on this node.
+    pub fn subshard_count(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// Trials completed across all lanes (report counter).
+    pub fn total_completed(&self) -> u64 {
+        self.subs.iter().map(|s| s.dispatcher.total_completed()).sum()
+    }
+
+    /// Per-lane barrier overshoot at a window boundary: how far each
+    /// solo lane's in-flight epoch extends past the barrier — the time
+    /// by which this lane alone would stretch a synchronous epoch
+    /// barrier. Lanes currently lending their devices are not samples
+    /// (their work is accounted on the victim lane); idle lanes sample
+    /// as zero.
+    pub fn barrier_overshoots(&self, window_end: f64) -> Vec<f64> {
+        self.subs
+            .iter()
+            .filter(|s| s.assisting.is_none())
+            .map(|s| {
+                if s.trial.is_some() {
+                    (s.epoch_end_t - window_end).max(0.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect()
     }
 
     /// Advance this shard's local event loop up to (and including)
@@ -184,41 +310,155 @@ impl SlaveShard {
             }
             let (t, ev) = self.queue.pop().expect("peeked event vanished");
             match ev {
-                ShardEvent::NodeReady => self.on_node_ready(t, snapshot, ctx),
-                ShardEvent::EpochDone => self.on_epoch_done(t, ctx),
-                ShardEvent::Telemetry => self.on_telemetry(t, ctx),
+                ShardEvent::NodeReady { sub } => self.on_node_ready(t, sub, snapshot, ctx),
+                ShardEvent::EpochDone { sub, gen } => self.on_epoch_done(t, sub, gen, ctx),
+                ShardEvent::Telemetry { sub } => self.on_telemetry(t, sub, ctx),
             }
         }
     }
 
-    /// The CPU search loop + trial start (paper §4.3 steps 3–5).
-    fn on_node_ready(&mut self, t: f64, snapshot: &HistorySnapshot, ctx: &SimContext) {
-        let local = match self.dispatcher.assign(self.node) {
-            Ok(id) => id,
-            Err(_) => return, // defensive: node already busy
-        };
-        self.current_local = local;
-        // Globally unique, execution-order-independent trial id.
-        let trial_id = local * ctx.total_nodes + self.node as u64;
-        self.round += 1;
+    /// The steal scheduler: when `sub` has no runway for another full
+    /// epoch before the benchmark deadline, attach it to the most-loaded
+    /// sibling lane's trial instead of starting a doomed one. Returns
+    /// `true` when the lane was lent out.
+    fn try_steal(&mut self, t: f64, sub: usize, ctx: &SimContext) -> bool {
+        if !self.work_stealing || self.subs.len() < 2 {
+            return false;
+        }
         let cfg = ctx.cfg;
+        // Runway estimate: this lane's latest solo epoch duration. A lane
+        // that never trained yet (run start) has no estimate and must
+        // start a real trial.
+        let est = self.subs[sub].own_epoch_s;
+        if est <= 0.0 {
+            return false;
+        }
+        let host = &ctx.node(self.group).host;
+        if t + host.search_seconds + host.setup_seconds + est <= cfg.duration_s {
+            return false;
+        }
+        // Victim scan in a fixed seed-derived rotation; the most-loaded
+        // sibling (largest projected remaining trial work) wins, with the
+        // rotation deciding ties deterministically.
+        let k = self.subs.len();
+        let start = self.steal_rng.gen_range_usize(0, k);
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..k {
+            let i = (start + j) % k;
+            if i == sub {
+                continue;
+            }
+            let s = &self.subs[i];
+            let Some(trial) = s.trial.as_ref() else {
+                continue;
+            };
+            let remaining_epochs = trial.epoch_budget.saturating_sub(trial.epoch + 1) as f64;
+            let load = (s.epoch_end_t - t).max(0.0) + remaining_epochs * s.epoch_seconds;
+            let better = match best {
+                None => true,
+                Some((_, l)) => load > l,
+            };
+            if better {
+                best = Some((i, load));
+            }
+        }
+        let Some((victim, _)) = best else {
+            return false;
+        };
+
+        // Attach: the thief's devices join the victim trial's allreduce
+        // ring (all lanes of a node share its NVLink domain).
+        self.subs[victim].helpers.push(sub);
+        self.subs[sub].assisting = Some(victim);
+        self.steals += 1;
+
+        // Re-time the victim's epochs at the widened data-parallel span.
+        let helper_gpus: u64 = self.subs[victim]
+            .helpers
+            .iter()
+            .map(|&h| self.subs[h].gpus)
+            .sum();
+        let gpus_eff = self.subs[victim].gpus + helper_gpus;
+        let (train_ops, val_ops, params, batch) = {
+            let tr = self.subs[victim].trial.as_ref().expect("victim has a trial");
+            (
+                tr.ops.train_per_image(),
+                tr.ops.val_per_image(),
+                tr.params,
+                tr.batch_per_gpu,
+            )
+        };
+        let timing = ctx.timing(self.group);
+        let epoch = timing.epoch_with_gpus(
+            train_ops,
+            params,
+            cfg.dataset.train_images,
+            batch,
+            gpus_eff,
+        );
+        let val_s = timing.validation_with_gpus(val_ops, cfg.dataset.val_images, batch, gpus_eff);
+        let new_epoch_s = epoch.total_s + val_s;
+        let old_epoch_s = self.subs[victim].epoch_seconds;
+        // Only the compute portion of the victim's in-flight epoch speeds
+        // up with extra devices; any leftover search/NFS setup (a first
+        // epoch stolen mid-setup) is width-independent and keeps its
+        // original duration.
+        let remaining = (self.subs[victim].epoch_end_t - t).max(0.0);
+        let setup_left = (self.subs[victim].setup_until - t).max(0.0).min(remaining);
+        let compute_left = remaining - setup_left;
+        let scaled = setup_left
+            + if old_epoch_s > 0.0 {
+                compute_left * new_epoch_s / old_epoch_s
+            } else {
+                compute_left
+            };
+        let v = &mut self.subs[victim];
+        v.epoch_seconds = new_epoch_s;
+        v.busy_fraction =
+            (epoch.compute_s + val_s) / new_epoch_s * epoch.gpu_busy_fraction.max(0.9);
+        v.epoch_gen += 1;
+        v.epoch_end_t = t + scaled;
+        let gen = v.epoch_gen;
+        let (busy, mem) = (v.busy_fraction, v.mem_fraction);
+        self.queue
+            .schedule(t + scaled, ShardEvent::EpochDone { sub: victim, gen });
+        // The helper lane's telemetry mirrors the trial it joined.
+        let me = &mut self.subs[sub];
+        me.busy_fraction = busy;
+        me.mem_fraction = mem;
+        me.setup_until = t;
+        true
+    }
+
+    /// The CPU search loop + trial start (paper §4.3 steps 3–5), or a
+    /// steal when the lane is out of runway.
+    fn on_node_ready(&mut self, t: f64, sub: usize, snapshot: &HistorySnapshot, ctx: &SimContext) {
+        if self.subs[sub].trial.is_some() || self.subs[sub].assisting.is_some() {
+            return; // defensive: lane already busy
+        }
+        if self.try_steal(t, sub, ctx) {
+            return;
+        }
+        let cfg = ctx.cfg;
+        self.subs[sub].round += 1;
+        let round = self.subs[sub].round;
 
         // --- CPU search loop: propose a candidate into the buffer. The
-        // shard ranks the frozen global snapshot plus its own completions
-        // since the last barrier (a node always sees its own results).
-        // The snapshot is only cloned when there are local completions to
-        // append — the common case borrows it directly.
+        // lane ranks the frozen global snapshot plus its node's own
+        // completions since the last barrier (a node always sees its own
+        // results). The snapshot is only cloned when there are local
+        // completions to append — the common case borrows it directly.
         let arch = if snapshot.ranked.is_empty() && self.completed.is_empty() {
             ctx.initial.clone()
         } else if self.completed.is_empty() {
-            ctx.policy.propose(&snapshot.ranked, &mut self.rng).0
+            ctx.policy.propose(&snapshot.ranked, &mut self.subs[sub].rng).0
         } else {
             let mut ranked = snapshot.ranked.clone();
             ranked.extend(self.completed.iter().map(|r| RankedModel {
                 arch: r.arch.clone(),
                 accuracy: r.accuracy,
             }));
-            ctx.policy.propose(&ranked, &mut self.rng).0
+            ctx.policy.propose(&ranked, &mut self.subs[sub].rng).0
         };
         let _ = self.buffer.push(Candidate {
             arch: arch.clone(),
@@ -236,8 +476,9 @@ impl SlaveShard {
         setup += timing.nfs.read_seconds(2048, &mut self.nfs);
 
         // --- Hyperparameters: defaults in warm-up, TPE afterwards.
-        let hp = if cfg.warmup.hpo_active(self.round) {
-            let c = self.tpe.suggest(&mut self.rng);
+        let hp = if cfg.warmup.hpo_active(round) {
+            let lane = &mut self.subs[sub];
+            let c = lane.tpe.suggest(&mut lane.rng);
             HpPoint {
                 dropout: c[0],
                 kernel: c[1],
@@ -247,48 +488,85 @@ impl SlaveShard {
         };
 
         // --- Memory adaption: halve the batch until the model fits this
-        // group's accelerator (a 16 GB T4 adapts sooner than a 32 GB V100).
+        // group's accelerator (a 16 GB T4 adapts sooner than a 32 GB
+        // V100). When the halving ladder bottoms out without fitting,
+        // clamp to the exact largest fitting batch instead of silently
+        // simulating an OOM configuration — and when no batch fits at
+        // all, skip the candidate (charging the wasted search/setup) and
+        // propose a different one.
         let stats = cand.stats(&ctx.weights);
         let (params, act, ops) = (stats.params, stats.activation_elems, stats.ops);
-        let mut batch = cfg.batch_per_gpu;
+        let batch_cfg = cfg.group_batch(self.group);
+        let mut batch = batch_cfg;
         while batch > 8 && !node.gpu.fits(params, act, batch) {
             batch /= 2;
         }
-        let budget = cfg.warmup.epochs_for_round(self.round);
-        let epoch = timing.epoch(
+        if !node.gpu.fits(params, act, batch) {
+            match node.gpu.max_fitting_batch(params, act) {
+                Some(b) => batch = b.min(batch_cfg),
+                None => {
+                    self.oom_skips += 1;
+                    self.subs[sub].round -= 1; // the skipped proposal is not a round
+                    self.queue.schedule(t + setup, ShardEvent::NodeReady { sub });
+                    return;
+                }
+            }
+        }
+        let local = match self.subs[sub].dispatcher.assign(self.node) {
+            Ok(id) => id,
+            Err(_) => return, // defensive: lane already holds a trial
+        };
+        self.subs[sub].current_local = local;
+        // Globally unique, execution-order-independent trial id.
+        let trial_id = local * ctx.total_units + self.subs[sub].unit;
+        let budget = cfg.warmup.epochs_for_round(round);
+        let gpus = self.subs[sub].gpus;
+        let epoch = timing.epoch_with_gpus(
             ops.train_per_image(),
             params,
             cfg.dataset.train_images,
             batch,
+            gpus,
         );
-        let val_s = timing.validation(ops.val_per_image(), cfg.dataset.val_images, batch);
+        let val_s =
+            timing.validation_with_gpus(ops.val_per_image(), cfg.dataset.val_images, batch, gpus);
         let total_epoch_s = epoch.total_s + val_s;
 
-        self.epoch_seconds = total_epoch_s;
-        self.busy_fraction =
-            (epoch.compute_s + val_s) / total_epoch_s * epoch.gpu_busy_fraction.max(0.9);
-        self.mem_fraction = (node.gpu.memory_demand(params, act, batch) as f64
+        let mem_fraction = (node.gpu.memory_demand(params, act, batch) as f64
             / node.gpu.memory_bytes as f64)
             .min(1.0);
-        self.setup_until = t + setup;
-        self.trial = Some(ActiveTrial::new(
+        let lane = &mut self.subs[sub];
+        lane.epoch_seconds = total_epoch_s;
+        lane.own_epoch_s = total_epoch_s;
+        lane.busy_fraction =
+            (epoch.compute_s + val_s) / total_epoch_s * epoch.gpu_busy_fraction.max(0.9);
+        lane.mem_fraction = mem_fraction;
+        lane.setup_until = t + setup;
+        lane.trial = Some(ActiveTrial::new(
             trial_id,
             cand.clone(),
             arch_id(&cand.signature()),
             hp,
             ops,
             batch,
-            self.round,
+            round,
             budget,
         ));
-        self.queue.schedule(t + setup + total_epoch_s, ShardEvent::EpochDone);
+        lane.epoch_gen += 1;
+        lane.epoch_end_t = t + setup + total_epoch_s;
+        let gen = lane.epoch_gen;
+        self.queue
+            .schedule(t + setup + total_epoch_s, ShardEvent::EpochDone { sub, gen });
     }
 
     /// One finished training epoch: account ops, record accuracy, decide
     /// whether to continue, early-stop, or finalize into the history.
-    fn on_epoch_done(&mut self, t: f64, ctx: &SimContext) {
+    fn on_epoch_done(&mut self, t: f64, sub: usize, gen: u64, ctx: &SimContext) {
+        if gen != self.subs[sub].epoch_gen {
+            return; // superseded by a steal re-timing
+        }
         let cfg = ctx.cfg;
-        let Some(trial) = self.trial.as_mut() else {
+        let Some(trial) = self.subs[sub].trial.as_mut() else {
             return;
         };
         // Account analytical ops for the finished epoch.
@@ -303,13 +581,15 @@ impl SlaveShard {
             trial.epoch + 1,
         );
         let status = trial.record_epoch(acc, cfg.patience, cfg.min_delta);
-        let next_epoch_end = t + self.epoch_seconds;
+        let next_epoch_end = t + self.subs[sub].epoch_seconds;
 
         if status == TrialStatus::Continue && next_epoch_end <= cfg.duration_s {
-            self.queue.schedule(next_epoch_end, ShardEvent::EpochDone);
+            self.subs[sub].epoch_end_t = next_epoch_end;
+            self.queue
+                .schedule(next_epoch_end, ShardEvent::EpochDone { sub, gen });
         } else {
             // --- Trial complete: record into the window output.
-            let trial = self.trial.take().unwrap();
+            let trial = self.subs[sub].trial.take().unwrap();
             let warmup_round = !cfg.warmup.hpo_active(trial.round);
             let (accuracy, predicted) = if warmup_round
                 && trial.epoch < cfg.warmup.max_epochs
@@ -326,7 +606,8 @@ impl SlaveShard {
                 + trial.ops.val_per_image() as f64 * cfg.dataset.val_images as f64)
                 * trial.epoch as f64;
             if cfg.warmup.hpo_active(trial.round) {
-                self.tpe.observe(
+                let lane = &mut self.subs[sub];
+                lane.tpe.observe(
                     vec![trial.hp.dropout, trial.hp.kernel],
                     1.0 - trial.best_accuracy(),
                 );
@@ -347,23 +628,35 @@ impl SlaveShard {
                 kernel: trial.hp.kernel,
                 completed_at: t,
             });
-            let _ = self.dispatcher.complete(self.current_local, self.node);
-            debug_assert!(self.dispatcher.check_invariants().is_ok());
-            self.queue.schedule(t, ShardEvent::NodeReady);
+            let local = self.subs[sub].current_local;
+            let _ = self.subs[sub].dispatcher.complete(local, self.node);
+            debug_assert!(self.subs[sub].dispatcher.check_invariants().is_ok());
+            // Release any helper lanes back to their own search loops
+            // before this lane reschedules itself.
+            let helpers: Vec<usize> = std::mem::take(&mut self.subs[sub].helpers);
+            for h in helpers {
+                self.subs[h].assisting = None;
+                self.queue.schedule(t, ShardEvent::NodeReady { sub: h });
+            }
+            self.queue.schedule(t, ShardEvent::NodeReady { sub });
         }
     }
 
-    /// One telemetry tick: sample this node's utilization (per-node jitter
-    /// stream keeps the readings engine-independent).
-    fn on_telemetry(&mut self, t: f64, ctx: &SimContext) {
+    /// One telemetry tick: sample this lane's utilization (per-lane jitter
+    /// stream keeps the readings engine-independent). A lane lending its
+    /// devices to a sibling trial reads as busy with that trial's
+    /// fractions.
+    fn on_telemetry(&mut self, t: f64, sub: usize, ctx: &SimContext) {
         let cfg = ctx.cfg;
         let host = &ctx.node(self.group).host;
-        let training = self.trial.is_some() && t >= self.setup_until;
-        let jitter = self.tele_rng.gen_range_f64(-0.02, 0.02);
+        let lane = &mut self.subs[sub];
+        let training =
+            (lane.trial.is_some() || lane.assisting.is_some()) && t >= lane.setup_until;
+        let jitter = lane.tele_rng.gen_range_f64(-0.02, 0.02);
         let reading = if training {
             NodeReading {
-                gpu_util: (self.busy_fraction + jitter).clamp(0.0, 1.0),
-                gpu_mem_util: self.mem_fraction.clamp(0.0, 1.0),
+                gpu_util: (lane.busy_fraction + jitter).clamp(0.0, 1.0),
+                gpu_mem_util: lane.mem_fraction.clamp(0.0, 1.0),
                 cpu_util: (host.cpu_util_training() + jitter / 4.0).clamp(0.0, 1.0),
                 host_mem_util: host.host_memory_util(30 << 30),
             }
@@ -379,7 +672,7 @@ impl SlaveShard {
         self.readings.push((t, reading));
         if t + cfg.telemetry_interval_s <= cfg.duration_s {
             self.queue
-                .schedule(t + cfg.telemetry_interval_s, ShardEvent::Telemetry);
+                .schedule(t + cfg.telemetry_interval_s, ShardEvent::Telemetry { sub });
         }
     }
 }
@@ -442,27 +735,29 @@ mod tests {
     }
 
     #[test]
-    fn trial_ids_unique_per_node_stride() {
+    fn trial_ids_unique_per_lane_stride() {
         let mut cfg = BenchmarkConfig::homogeneous(3);
         cfg.duration_s = 6.0 * 3600.0;
+        cfg.subshards_per_node = 2;
         let ctx = ctx_for(&cfg);
         let snapshot = HistorySnapshot::default();
         let mut ids = Vec::new();
         for node in 0..3 {
             let mut s = SlaveShard::new(node, 0, &cfg);
             s.run_until(cfg.duration_s, &snapshot, &ctx);
+            assert_eq!(s.subshard_count(), 2);
             ids.extend(s.completed.iter().map(|r| r.id));
         }
         let mut deduped = ids.clone();
         deduped.sort_unstable();
         deduped.dedup();
-        assert_eq!(deduped.len(), ids.len(), "trial ids collide across shards");
+        assert_eq!(deduped.len(), ids.len(), "trial ids collide across lanes");
     }
 
     #[test]
     fn groups_with_different_gpus_diverge() {
-        // Same node index, same seed streams, different device model ⇒
-        // different trial timings and counts.
+        // Different device model ⇒ different trial timings and counts
+        // (the hardware gap dominates any RNG-stream variance).
         use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
         let cfg = BenchmarkConfig {
             duration_s: 4.0 * 3600.0,
@@ -477,16 +772,60 @@ mod tests {
         };
         let ctx = ctx_for(&cfg);
         let snapshot = HistorySnapshot::default();
-        let ops_of = |group: usize| {
-            let mut s = SlaveShard::new(0, group, &cfg);
+        let ops_of = |group: usize, node: usize| {
+            let mut s = SlaveShard::new(node, group, &cfg);
             s.run_until(cfg.duration_s, &snapshot, &ctx);
             s.epoch_ops.iter().map(|e| e.1).sum::<f64>()
         };
-        let slow = ops_of(0);
-        let fast = ops_of(1);
+        let slow = ops_of(0, 0);
+        let fast = ops_of(1, 1);
         assert!(
             fast > 2.0 * slow,
             "ascend shard should finish far more epochs: t4={slow:e} ascend={fast:e}"
         );
+    }
+
+    #[test]
+    fn subshard_lanes_train_concurrently() {
+        // Two lanes over half the GPUs each: both make progress, the
+        // node's total epoch-ops rate stays in the same ballpark as the
+        // one-lane layout, and more architectures are explored.
+        let mut one = BenchmarkConfig::homogeneous(1);
+        one.duration_s = 6.0 * 3600.0;
+        let mut two = one.clone();
+        two.subshards_per_node = 2;
+        let snapshot = HistorySnapshot::default();
+        let run = |cfg: &BenchmarkConfig| {
+            let ctx = ctx_for(cfg);
+            let mut s = SlaveShard::new(0, 0, cfg);
+            s.run_until(cfg.duration_s, &snapshot, &ctx);
+            (
+                s.epoch_ops.iter().map(|e| e.1).sum::<f64>(),
+                s.total_completed(),
+                s.subshard_count(),
+            )
+        };
+        let (ops1, done1, k1) = run(&one);
+        let (ops2, done2, k2) = run(&two);
+        assert_eq!((k1, k2), (1, 2));
+        assert!(done1 > 0 && done2 > 0);
+        assert!(
+            ops2 > 0.4 * ops1 && ops2 < 2.5 * ops1,
+            "sub-sharding should not change aggregate throughput wildly: {ops1:e} vs {ops2:e}"
+        );
+    }
+
+    #[test]
+    fn work_stealing_off_by_default_and_lanes_balanced() {
+        let mut cfg = BenchmarkConfig::homogeneous(1);
+        cfg.duration_s = 4.0 * 3600.0;
+        cfg.subshards_per_node = 2;
+        let ctx = ctx_for(&cfg);
+        let snapshot = HistorySnapshot::default();
+        let mut s = SlaveShard::new(0, 0, &cfg);
+        s.run_until(cfg.duration_s, &snapshot, &ctx);
+        assert_eq!(s.steals, 0, "stealing must be opt-in");
+        // Barrier overshoots report one sample per solo lane.
+        assert_eq!(s.barrier_overshoots(cfg.duration_s).len(), 2);
     }
 }

@@ -20,11 +20,13 @@ aiperf — AIPerf: Automated machine learning as an AI-HPC benchmark (Ren et al.
 USAGE:
     aiperf run   [--scenario NAME] [--nodes N] [--hours H] [--seed S]
                  [--engine sequential|parallel] [--config FILE]
+                 [--subshards K] [--work-stealing [on|off]]
                  [--json OUT] [--csv OUT] [--chart] [--list-scenarios]
         Simulated benchmark on the modelled cluster (Figs 4-6, 9-12).
         Scenario presets reproduce the paper's evaluated systems:
           smoke         2 x 8 V100, 2 h — CI-sized sanity run
           t4v100-mixed  2 x 8 T4 + 2 x 8 V100, 6 h — heterogeneous site
+                        (per-group batch, 2 sub-shards, work stealing)
           t4-32         4 x 8 NVIDIA T4, 12 h (paper: 56.1 Tera-OPS)
           v100-128      16 x 8 V100 NVLink, 12 h (the paper testbed)
           ascend-4096   512 x 8 Ascend 910, 12 h (paper: 194.53 Peta-OPS)
@@ -32,17 +34,23 @@ USAGE:
         exits. A `--config FILE` may describe a heterogeneous cluster
         with `[group.NAME]` sections (see `aiperf config`); the legacy
         flat `nodes`/`gpus_per_node` keys still work as a single-group
-        shorthand. The engine defaults to `parallel` (sharded slave
+        shorthand. `--subshards K` splits every node's GPUs into K
+        independent trial lanes (groups may override per section), and
+        `--work-stealing` lets a lane out of runway join the most-loaded
+        sibling lane's trial instead of starting a doomed one — both
+        deterministic. The engine defaults to `parallel` (sharded slave
         nodes on a thread pool); `sequential` is bit-identical for the
         same seed.
     aiperf sweep [--scenarios A,B,C] [--hours H] [--seed S]
-                 [--engine sequential|parallel]
+                 [--engine sequential|parallel] [--csv OUT]
         Run several scenario presets and print the Fig-4-style scaling
         table: nodes, devices, measured OPS, per-device OPS, and weak-
         scaling efficiency vs the smallest sweep entry with the same
-        accelerator mix (a scenario with a unique mix is its own
-        baseline at 100%), with a per-group breakdown for heterogeneous
-        presets. Defaults to smoke,v100-128,t4v100-mixed.
+        accelerator mix (a scenario whose mix appears only once, or
+        whose baseline scored zero, shows — instead of a fake ratio),
+        with a per-group breakdown for heterogeneous presets. `--csv`
+        writes the same table as CSV (one row per scenario plus one per
+        group). Defaults to smoke,v100-128,t4v100-mixed.
     aiperf scenarios
         List the scenario presets with their cluster topologies.
     aiperf live  [--artifacts DIR] [--trials N] [--epochs E]
@@ -64,9 +72,19 @@ struct Flags {
     pairs: Vec<(String, String)>,
 }
 
-/// Flags that take no value; every other flag still requires one, so a
-/// forgotten value fails up front instead of mid-run.
-const BOOLEAN_FLAGS: &[&str] = &["chart", "list-scenarios"];
+/// Flags that take no value (or an optional on/off); every other flag
+/// still requires one, so a forgotten value fails up front instead of
+/// mid-run.
+const BOOLEAN_FLAGS: &[&str] = &["chart", "list-scenarios", "work-stealing"];
+
+/// Parse an on/off flag value (`--work-stealing`, `--work-stealing on`).
+fn parse_onoff(flag: &str, v: &str) -> Result<bool> {
+    match v {
+        "" | "1" | "true" | "on" => Ok(true),
+        "0" | "false" | "off" => Ok(false),
+        other => bail!("--{flag}: expected on/off, got `{other}`"),
+    }
+}
 
 impl Flags {
     fn parse(args: &[String]) -> Result<Flags> {
@@ -136,7 +154,7 @@ impl Flags {
 fn cmd_run(flags: &Flags) -> Result<()> {
     flags.reject_unknown(&[
         "scenario", "nodes", "hours", "seed", "engine", "config", "json", "csv", "chart",
-        "list-scenarios",
+        "list-scenarios", "subshards", "work-stealing",
     ])?;
     if flags.get("list-scenarios").is_some() {
         cmd_scenarios();
@@ -169,6 +187,15 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     if let Some(engine) = flags.get("engine") {
         cfg.engine = Engine::parse(engine).map_err(|e| anyhow::anyhow!(e))?;
     }
+    if flags.get("subshards").is_some() {
+        // Sets the all-groups default; per-group `[group.NAME]` overrides
+        // from a --config file keep precedence.
+        cfg.subshards_per_node = flags.get_u64("subshards", cfg.subshards_per_node)?;
+    }
+    if let Some(v) = flags.get("work-stealing") {
+        cfg.work_stealing = parse_onoff("work-stealing", v)?;
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
     println!("topology: {}", cfg.topology.summary());
     let report = run_benchmark(&cfg);
@@ -262,9 +289,10 @@ fn cmd_scenarios() {
 
 /// `aiperf sweep`: run several presets and print the Fig-4-style scaling
 /// table (nodes, devices, measured OPS, weak-scaling efficiency vs the
-/// smallest sweep entry of the same accelerator mix).
+/// smallest sweep entry of the same accelerator mix — see
+/// `aiperf::metrics::sweep`), optionally exporting it as CSV.
 fn cmd_sweep(flags: &Flags) -> Result<()> {
-    flags.reject_unknown(&["scenarios", "hours", "seed", "engine"])?;
+    flags.reject_unknown(&["scenarios", "hours", "seed", "engine", "csv"])?;
     // Default list: two scales of the V100 mix (so the efficiency column
     // measures real weak scaling) plus the heterogeneous preset (so the
     // per-group breakdown shows).
@@ -279,7 +307,7 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
     if names.is_empty() {
         bail!("--scenarios needs a comma-separated list of preset names");
     }
-    let mut runs = Vec::new();
+    let mut runs: Vec<aiperf::metrics::sweep::SweepRun> = Vec::new();
     for name in &names {
         let mut preset = aiperf::scenarios::get(name).with_context(|| {
             format!(
@@ -295,87 +323,22 @@ fn cmd_sweep(flags: &Flags) -> Result<()> {
         if let Some(engine) = flags.get("engine") {
             cfg.engine = Engine::parse(engine).map_err(|e| anyhow::anyhow!(e))?;
         }
+        cfg.validate()
+            .map_err(|e| anyhow::anyhow!("scenario `{name}`: {e}"))?;
         eprintln!("[sweep] running {name} ({}) ...", cfg.topology.summary());
         let report = run_benchmark(cfg);
-        runs.push((preset, report));
+        runs.push(aiperf::metrics::sweep::SweepRun {
+            scenario: name.to_string(),
+            report,
+        });
     }
 
-    // Efficiency baseline per accelerator mix: the paper's Fig-4 weak-
-    // scaling efficiency compares scales of the SAME system, so each
-    // scenario is measured against the fewest-device sweep entry sharing
-    // its accelerator composition (a T4 fleet is never scored against a
-    // V100 baseline — that would measure hardware speed, not scaling).
-    let mix = |r: &aiperf::metrics::BenchmarkReport| -> String {
-        let mut labels: Vec<&str> = r.groups.iter().map(|g| g.label.as_str()).collect();
-        labels.sort_unstable();
-        labels.dedup();
-        labels.join("+")
-    };
-    let mut baselines: std::collections::HashMap<String, (u64, f64)> =
-        std::collections::HashMap::new();
-    for (_, r) in &runs {
-        let per_device = r.score_flops / r.total_gpus as f64;
-        let e = baselines
-            .entry(mix(r))
-            .or_insert((r.total_gpus, per_device));
-        if r.total_gpus < e.0 {
-            *e = (r.total_gpus, per_device);
-        }
-    }
-
-    println!(
-        "\nscaling table (stable-window score; efficiency vs the smallest \
-         sweep entry of the same accelerator mix):"
-    );
-    println!(
-        "{:<14} {:>6} {:>8} {:>16} {:>16} {:>11}",
-        "scenario", "nodes", "devices", "score OPS", "OPS/device", "efficiency"
-    );
-    for (preset, r) in &runs {
-        let per_device = r.score_flops / r.total_gpus as f64;
-        let base_per_device = baselines[&mix(r)].1;
-        println!(
-            "{:<14} {:>6} {:>8} {:>16} {:>16} {:>10.1}%",
-            preset.name,
-            r.nodes,
-            r.total_gpus,
-            si_ops(r.score_flops),
-            si_ops(per_device),
-            per_device / base_per_device * 100.0,
-        );
-        if r.groups.len() > 1 {
-            // Group rows allocate the scenario's stable-window score by
-            // each group's share of the run's analytical ops, so the
-            // sub-rows use the same estimator as (and sum to) the parent.
-            let total_ops = r.total_ops();
-            for g in &r.groups {
-                let share = if total_ops > 0.0 { g.ops / total_ops } else { 0.0 };
-                let group_score = r.score_flops * share;
-                println!(
-                    "{:<14} {:>6} {:>8} {:>16} {:>16}",
-                    format!("  .{}", g.label),
-                    g.nodes,
-                    g.gpus(),
-                    si_ops(group_score),
-                    si_ops(group_score / g.gpus() as f64),
-                );
-            }
-        }
+    print!("{}", aiperf::metrics::sweep::render_table(&runs));
+    if let Some(path) = flags.get("csv") {
+        std::fs::write(path, aiperf::metrics::sweep::render_csv(&runs))?;
+        println!("sweep CSV written to {path}");
     }
     Ok(())
-}
-
-/// Format an ops/s quantity with the paper's unit ladder (Tera/Peta).
-fn si_ops(x: f64) -> String {
-    if x >= 1e15 {
-        format!("{:.2} POPS", x / 1e15)
-    } else if x >= 1e12 {
-        format!("{:.2} TOPS", x / 1e12)
-    } else if x >= 1e9 {
-        format!("{:.2} GOPS", x / 1e9)
-    } else {
-        format!("{x:.3e} OPS")
-    }
 }
 
 #[cfg(not(feature = "pjrt"))]

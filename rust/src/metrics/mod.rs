@@ -5,11 +5,14 @@
 //! * [`telemetry`] — time-series sampling of GPU/CPU/memory utilization
 //!   with per-node standard deviations (Figs 9–12);
 //! * [`report`] — the final benchmark report the data-analysis toolkit
-//!   produces at termination.
+//!   produces at termination;
+//! * [`sweep`] — the Fig-4 weak-scaling table over several scenario
+//!   presets, with per-mix efficiency baselines and a CSV exporter.
 
 pub mod chart;
 pub mod report;
 pub mod score;
+pub mod sweep;
 pub mod telemetry;
 
 pub use chart::{ascii_chart, csv};

@@ -20,6 +20,16 @@ pub struct GroupBreakdown {
     pub ops: f64,
     /// Mean analytical ops/second over the whole run.
     pub ops_per_second: f64,
+    /// Work-steal events performed by this group's sub-shard lanes (a
+    /// lane out of runway joining a sibling lane's trial).
+    pub steals: u64,
+    /// Candidates skipped because no batch size fit the accelerator
+    /// (instead of silently simulating an OOM configuration).
+    pub oom_skips: u64,
+    /// Mean barrier slack, seconds: how far a solo lane's in-flight
+    /// epoch overshoots an epoch barrier, averaged over lanes × windows
+    /// — the utilization headroom work stealing recovers.
+    pub barrier_slack_s: f64,
 }
 
 impl GroupBreakdown {
@@ -104,6 +114,9 @@ impl BenchmarkReport {
                             ("gpus_per_node", num(g.gpus_per_node as f64)),
                             ("ops", num(g.ops)),
                             ("ops_per_second", num(g.ops_per_second)),
+                            ("steals", num(g.steals as f64)),
+                            ("oom_skips", num(g.oom_skips as f64)),
+                            ("barrier_slack_s", num(g.barrier_slack_s)),
                         ])
                     })
                     .collect()),
@@ -177,7 +190,7 @@ impl BenchmarkReport {
         let mut out = String::new();
         for g in &self.groups {
             out.push_str(&format!(
-                "  group {:<12} {:>4} nodes x {:<2} GPUs  ops={:.3e}  mean {:.4} PFLOPS  ({:.1}% of total)\n",
+                "  group {:<12} {:>4} nodes x {:<2} GPUs  ops={:.3e}  mean {:.4} PFLOPS  ({:.1}% of total)  slack={:.0}s steals={} oom_skips={}\n",
                 g.label,
                 g.nodes,
                 g.gpus_per_node,
@@ -188,6 +201,9 @@ impl BenchmarkReport {
                 } else {
                     0.0
                 },
+                g.barrier_slack_s,
+                g.steals,
+                g.oom_skips,
             ));
         }
         out

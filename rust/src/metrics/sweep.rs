@@ -1,0 +1,322 @@
+//! `aiperf sweep` scaling-table assembly (the paper's Fig 4 / Table 1
+//! weak-scaling view) and its CSV exporter.
+//!
+//! A sweep runs several scenario presets and compares them with the
+//! paper's methodology: the weak-scaling efficiency of a system is its
+//! per-device score relative to the *smallest sweep entry with the same
+//! accelerator mix* — a T4 fleet is never scored against a V100 baseline
+//! (that would measure hardware speed, not scaling). When a mix appears
+//! only once in the sweep, or its baseline score is zero, the ratio is
+//! meaningless and renders as `—` (and as an empty CSV cell) rather than
+//! a fake 100 %.
+
+use std::collections::HashMap;
+
+use super::report::BenchmarkReport;
+
+/// One sweep entry: a named scenario and its finished report.
+pub struct SweepRun {
+    pub scenario: String,
+    pub report: BenchmarkReport,
+}
+
+/// Format an ops/s quantity with the paper's unit ladder (Tera/Peta).
+pub fn si_ops(x: f64) -> String {
+    if x >= 1e15 {
+        format!("{:.2} POPS", x / 1e15)
+    } else if x >= 1e12 {
+        format!("{:.2} TOPS", x / 1e12)
+    } else if x >= 1e9 {
+        format!("{:.2} GOPS", x / 1e9)
+    } else {
+        format!("{x:.3e} OPS")
+    }
+}
+
+/// Accelerator-mix key of a report: sorted, deduplicated group labels.
+pub fn accelerator_mix(r: &BenchmarkReport) -> String {
+    let mut labels: Vec<&str> = r.groups.iter().map(|g| g.label.as_str()).collect();
+    labels.sort_unstable();
+    labels.dedup();
+    labels.join("+")
+}
+
+/// The efficiency baseline of one accelerator mix.
+pub struct Baseline {
+    /// Device count of the smallest entry of this mix.
+    pub devices: u64,
+    /// Per-device score of that smallest entry.
+    pub per_device: f64,
+    /// How many sweep entries share this mix.
+    pub entries: usize,
+}
+
+/// Baseline per accelerator mix: the fewest-device entry of each mix.
+pub fn baselines(runs: &[SweepRun]) -> HashMap<String, Baseline> {
+    let mut map: HashMap<String, Baseline> = HashMap::new();
+    for run in runs {
+        let r = &run.report;
+        let per_device = r.score_flops / r.total_gpus.max(1) as f64;
+        let e = map.entry(accelerator_mix(r)).or_insert(Baseline {
+            devices: r.total_gpus,
+            per_device,
+            entries: 0,
+        });
+        e.entries += 1;
+        if r.total_gpus < e.devices {
+            e.devices = r.total_gpus;
+            e.per_device = per_device;
+        }
+    }
+    map
+}
+
+/// Weak-scaling efficiency (% of the same-mix baseline's per-device
+/// score), or `None` when the ratio is meaningless: the mix appears only
+/// once in the sweep, or the baseline score is zero / not positive.
+pub fn efficiency_pct(run: &SweepRun, baselines: &HashMap<String, Baseline>) -> Option<f64> {
+    let b = baselines.get(&accelerator_mix(&run.report))?;
+    if b.entries < 2 || !b.per_device.is_finite() || b.per_device <= 0.0 {
+        return None;
+    }
+    let per_device = run.report.score_flops / run.report.total_gpus.max(1) as f64;
+    Some(per_device / b.per_device * 100.0)
+}
+
+/// One per-group breakdown row of a heterogeneous sweep entry.
+pub struct GroupRow {
+    pub label: String,
+    pub nodes: u64,
+    pub devices: u64,
+    /// Slice of the scenario's stable-window score allocated to this
+    /// group by its share of the run's analytical ops — the same
+    /// estimator as (and summing to) the parent row.
+    pub score: f64,
+}
+
+/// Per-group rows of a report (empty for homogeneous entries, which have
+/// no breakdown to show). Both renderers draw from this single
+/// allocation so the table and the CSV artifact cannot drift apart.
+pub fn group_rows(r: &BenchmarkReport) -> Vec<GroupRow> {
+    if r.groups.len() < 2 {
+        return Vec::new();
+    }
+    let total_ops = r.total_ops();
+    r.groups
+        .iter()
+        .map(|g| {
+            let share = if total_ops > 0.0 { g.ops / total_ops } else { 0.0 };
+            GroupRow {
+                label: g.label.clone(),
+                nodes: g.nodes,
+                devices: g.gpus(),
+                score: r.score_flops * share,
+            }
+        })
+        .collect()
+}
+
+/// Render the human-readable scaling table (stable-window scores, with a
+/// per-group breakdown row set under each heterogeneous entry).
+pub fn render_table(runs: &[SweepRun]) -> String {
+    let base = baselines(runs);
+    let mut out = String::new();
+    out.push_str(
+        "\nscaling table (stable-window score; efficiency vs the smallest \
+         sweep entry of the same accelerator mix, \u{2014} when that ratio \
+         is meaningless):\n",
+    );
+    out.push_str(&format!(
+        "{:<14} {:>6} {:>8} {:>16} {:>16} {:>11}\n",
+        "scenario", "nodes", "devices", "score OPS", "OPS/device", "efficiency"
+    ));
+    for run in runs {
+        let r = &run.report;
+        let per_device = r.score_flops / r.total_gpus.max(1) as f64;
+        let eff = match efficiency_pct(run, &base) {
+            Some(e) => format!("{e:>10.1}%"),
+            None => format!("{:>11}", "\u{2014}"),
+        };
+        out.push_str(&format!(
+            "{:<14} {:>6} {:>8} {:>16} {:>16} {}\n",
+            run.scenario,
+            r.nodes,
+            r.total_gpus,
+            si_ops(r.score_flops),
+            si_ops(per_device),
+            eff,
+        ));
+        for g in group_rows(r) {
+            out.push_str(&format!(
+                "{:<14} {:>6} {:>8} {:>16} {:>16}\n",
+                format!("  .{}", g.label),
+                g.nodes,
+                g.devices,
+                si_ops(g.score),
+                si_ops(g.score / g.devices.max(1) as f64),
+            ));
+        }
+    }
+    out
+}
+
+/// Render the sweep as CSV (one total row per scenario; heterogeneous
+/// scenarios add one row per group with the `group` column set). The
+/// efficiency cell is empty exactly when the table renders `—`.
+pub fn render_csv(runs: &[SweepRun]) -> String {
+    let base = baselines(runs);
+    let mut out =
+        String::from("scenario,group,nodes,devices,score_ops,ops_per_device,efficiency_pct\n");
+    for run in runs {
+        let r = &run.report;
+        let per_device = r.score_flops / r.total_gpus.max(1) as f64;
+        let eff = efficiency_pct(run, &base)
+            .map(|e| format!("{e}"))
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "{},,{},{},{},{},{}\n",
+            run.scenario, r.nodes, r.total_gpus, r.score_flops, per_device, eff
+        ));
+        for g in group_rows(r) {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},\n",
+                run.scenario,
+                g.label,
+                g.nodes,
+                g.devices,
+                g.score,
+                g.score / g.devices.max(1) as f64,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::report::GroupBreakdown;
+    use super::super::score::Validity;
+    use super::*;
+
+    /// A minimal report with the given `(label, nodes, gpus_per_node)`
+    /// groups and stable-window score.
+    fn report(groups: &[(&str, u64, u64)], score: f64) -> BenchmarkReport {
+        BenchmarkReport {
+            nodes: groups.iter().map(|g| g.1).sum(),
+            total_gpus: groups.iter().map(|g| g.1 * g.2).sum(),
+            groups: groups
+                .iter()
+                .map(|&(label, nodes, gpus_per_node)| GroupBreakdown {
+                    label: label.to_string(),
+                    nodes,
+                    gpus_per_node,
+                    ops: 1.0,
+                    ops_per_second: 1.0,
+                    steals: 0,
+                    oom_skips: 0,
+                    barrier_slack_s: 0.0,
+                })
+                .collect(),
+            duration_s: 3600.0,
+            score_series: Vec::new(),
+            score_flops: score,
+            final_error: 0.3,
+            regulated_score: score,
+            architectures_evaluated: 1,
+            telemetry: Vec::new(),
+            validity: Validity::Valid,
+            nfs_bytes_read: 0,
+            nfs_bytes_written: 0,
+        }
+    }
+
+    fn run(name: &str, groups: &[(&str, u64, u64)], score: f64) -> SweepRun {
+        SweepRun {
+            scenario: name.to_string(),
+            report: report(groups, score),
+        }
+    }
+
+    #[test]
+    fn same_mix_scales_get_a_real_efficiency() {
+        let runs = vec![
+            run("small", &[("v100", 2, 8)], 16.0e12),
+            run("big", &[("v100", 16, 8)], 115.2e12),
+        ];
+        let base = baselines(&runs);
+        // Baseline row: exactly 100 %.
+        assert_eq!(efficiency_pct(&runs[0], &base), Some(100.0));
+        // 115.2e12/128 per device vs 16e12/16 = 0.9e12 vs 1.0e12 → 90 %.
+        let eff = efficiency_pct(&runs[1], &base).unwrap();
+        assert!((eff - 90.0).abs() < 1e-9, "eff={eff}");
+    }
+
+    #[test]
+    fn unique_mix_has_no_meaningful_efficiency() {
+        let runs = vec![
+            run("v100", &[("v100", 2, 8)], 16.0e12),
+            run("t4", &[("t4", 4, 8)], 2.0e12),
+        ];
+        let base = baselines(&runs);
+        assert_eq!(efficiency_pct(&runs[0], &base), None);
+        assert_eq!(efficiency_pct(&runs[1], &base), None);
+        let table = render_table(&runs);
+        assert!(table.contains('\u{2014}'), "table must render —:\n{table}");
+        assert!(!table.contains("100.0%"), "no fake 100% baselines:\n{table}");
+    }
+
+    #[test]
+    fn zero_score_baseline_guarded() {
+        let runs = vec![
+            run("dead-small", &[("v100", 2, 8)], 0.0),
+            run("dead-big", &[("v100", 4, 8)], 1.0e12),
+        ];
+        let base = baselines(&runs);
+        // The smallest entry scored zero: any ratio against it is
+        // meaningless for every entry of the mix.
+        assert_eq!(efficiency_pct(&runs[0], &base), None);
+        assert_eq!(efficiency_pct(&runs[1], &base), None);
+    }
+
+    #[test]
+    fn mixed_topology_entries_key_on_the_full_mix() {
+        // A heterogeneous entry is its own mix, distinct from its parts.
+        let runs = vec![
+            run("mixed", &[("t4", 2, 8), ("v100", 2, 8)], 10.0e12),
+            run("t4-only", &[("t4", 4, 8)], 2.0e12),
+        ];
+        let base = baselines(&runs);
+        assert!(base.contains_key("t4+v100"));
+        assert!(base.contains_key("t4"));
+        assert_eq!(efficiency_pct(&runs[0], &base), None);
+    }
+
+    #[test]
+    fn csv_has_totals_and_group_rows() {
+        let runs = vec![
+            run("small", &[("v100", 2, 8)], 16.0e12),
+            run("mixed", &[("t4", 2, 8), ("v100", 2, 8)], 10.0e12),
+            run("big", &[("v100", 16, 8)], 115.2e12),
+        ];
+        let csv = render_csv(&runs);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(
+            lines[0],
+            "scenario,group,nodes,devices,score_ops,ops_per_device,efficiency_pct"
+        );
+        // 3 totals + 2 group rows under the heterogeneous entry.
+        assert_eq!(lines.len(), 6);
+        assert!(lines[1].starts_with("small,,2,16,"));
+        assert!(lines[2].starts_with("mixed,,4,32,"));
+        assert!(lines[3].starts_with("mixed,t4,2,16,"));
+        assert!(lines[4].starts_with("mixed,v100,2,16,"));
+        // The unique mix's efficiency cell is empty; same-mix entries get
+        // a number.
+        assert!(lines[2].ends_with(','), "unique mix keeps the cell empty");
+        assert!(lines[1].ends_with("100"), "baseline row reads 100");
+        // Every row has the same column count.
+        for l in &lines[1..] {
+            assert_eq!(l.matches(',').count(), 6, "row {l}");
+        }
+    }
+}

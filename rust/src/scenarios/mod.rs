@@ -17,7 +17,9 @@
 //! The extra `smoke` preset is a down-scaled run for CI, and
 //! `t4v100-mixed` is a heterogeneous two-group topology (the paper's two
 //! NVIDIA systems sharing one cluster) exercising the per-group device
-//! models and the mixed-GPU engine-parity test.
+//! models, per-group batch sizing (`batch_per_gpu` override on the T4
+//! group), the sub-shard trial lanes with deterministic work stealing,
+//! and the mixed-GPU engine-parity test.
 
 use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
 use crate::config::BenchmarkConfig;
@@ -107,20 +109,26 @@ fn ascend_4096() -> ScenarioPreset {
 }
 
 fn t4v100_mixed() -> ScenarioPreset {
+    // Each group trains at its memory-appropriate batch: the 16 GB T4
+    // overrides down to 256 while the 32 GB V100 keeps the Table-5
+    // default of 448 (a single flat batch understated V100 utilization).
+    let mut t4 = NodeGroup::new("t4", 2, 8, GpuModel::t4());
+    t4.batch_per_gpu = Some(256);
     let config = BenchmarkConfig {
         topology: ClusterTopology {
-            groups: vec![
-                NodeGroup::new("t4", 2, 8, GpuModel::t4()),
-                NodeGroup::new("v100", 2, 8, GpuModel::v100()),
-            ],
+            groups: vec![t4, NodeGroup::new("v100", 2, 8, GpuModel::v100())],
         },
         duration_s: 6.0 * 3600.0,
-        batch_per_gpu: 256, // T4-friendly batch across both groups
+        // Two trial lanes per node with deterministic work stealing: the
+        // preset exercising the elastic sub-shard scheduler (and the
+        // mixed-topology engine-parity seeds with stealing enabled).
+        subshards_per_node: 2,
+        work_stealing: true,
         ..BenchmarkConfig::default()
     };
     ScenarioPreset {
         name: "t4v100-mixed",
-        description: "Heterogeneous site: 2 nodes x 8 T4 + 2 nodes x 8 V100 in one run",
+        description: "Heterogeneous site: 2 nodes x 8 T4 + 2 nodes x 8 V100, sub-sharded",
         config,
         wall_clock_budget_s: 300.0,
     }
@@ -180,6 +188,29 @@ mod tests {
         assert_eq!(cfg.topology.groups[1].gpu, GpuModel::v100());
         let s = get("t4v100-mixed").unwrap().topology_summary();
         assert!(s.contains("2x8 t4") && s.contains("2x8 v100"), "{s}");
+    }
+
+    #[test]
+    fn mixed_preset_uses_per_group_batch_subshards_and_stealing() {
+        let cfg = get("t4v100-mixed").unwrap().config;
+        // The 16 GB T4 group overrides down; the V100 group trains at the
+        // Table-5 default.
+        assert_eq!(cfg.topology.groups[0].batch_per_gpu, Some(256));
+        assert_eq!(cfg.topology.groups[1].batch_per_gpu, None);
+        assert_eq!(cfg.group_batch(0), 256);
+        assert_eq!(cfg.group_batch(1), 448);
+        assert_eq!(cfg.subshards_per_node, 2);
+        assert!(cfg.work_stealing);
+        // Both groups' batches fit a ResNet-50-class model in memory.
+        for (i, g) in cfg.topology.groups.iter().enumerate() {
+            assert!(
+                g.gpu.fits(25_600_000, 11_000_000, cfg.group_batch(i)),
+                "group {} batch {} must fit",
+                g.label,
+                cfg.group_batch(i)
+            );
+        }
+        cfg.validate().unwrap();
     }
 
     #[test]

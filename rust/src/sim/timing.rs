@@ -53,9 +53,24 @@ impl TimingModel {
 
     /// Duration of one training epoch of `images` images for a model with
     /// `ops_per_image` (train FP+BP) and `params` parameters, at
-    /// `batch_per_gpu`, on this node.
+    /// `batch_per_gpu`, across all of this node's GPUs.
     pub fn epoch(&self, ops_per_image: u64, params: u64, images: u64, batch_per_gpu: u64) -> EpochTiming {
-        let gpus = self.node.gpus_per_node;
+        self.epoch_with_gpus(ops_per_image, params, images, batch_per_gpu, self.node.gpus_per_node)
+    }
+
+    /// [`TimingModel::epoch`] over an explicit data-parallel width — the
+    /// sub-shard path, where a trial spans a lane of `gpus` devices (a
+    /// fraction of the node, or the lane plus stolen helper lanes) rather
+    /// than the whole node.
+    pub fn epoch_with_gpus(
+        &self,
+        ops_per_image: u64,
+        params: u64,
+        images: u64,
+        batch_per_gpu: u64,
+        gpus: u64,
+    ) -> EpochTiming {
+        let gpus = gpus.max(1);
         let global_batch = batch_per_gpu * gpus;
         let steps = images.div_ceil(global_batch).max(1);
 
@@ -79,8 +94,18 @@ impl TimingModel {
 
     /// Duration of one validation epoch (forward only, no sync).
     pub fn validation(&self, fp_per_image: u64, images: u64, batch_per_gpu: u64) -> f64 {
-        let gpus = self.node.gpus_per_node;
-        let global_batch = batch_per_gpu * gpus;
+        self.validation_with_gpus(fp_per_image, images, batch_per_gpu, self.node.gpus_per_node)
+    }
+
+    /// [`TimingModel::validation`] over an explicit data-parallel width.
+    pub fn validation_with_gpus(
+        &self,
+        fp_per_image: u64,
+        images: u64,
+        batch_per_gpu: u64,
+        gpus: u64,
+    ) -> f64 {
+        let global_batch = batch_per_gpu * gpus.max(1);
         let steps = images.div_ceil(global_batch).max(1);
         self.node.gpu.step_seconds(fp_per_image, batch_per_gpu) * steps as f64
     }
@@ -131,6 +156,24 @@ mod tests {
         assert_eq!(e.steps, 1);
         let e2 = t.epoch(RESNET_TRAIN_OPS, RESNET_PARAMS, 3585, 448);
         assert_eq!(e2.steps, 2);
+    }
+
+    #[test]
+    fn narrower_lane_trains_slower_wider_lane_faster() {
+        // A 4-GPU sub-shard lane halves the global batch: ~2x the steps,
+        // ~2x the epoch. A stolen-helper 16-GPU span goes the other way.
+        let t = TimingModel::default();
+        let full = t.epoch(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 448);
+        let lane = t.epoch_with_gpus(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 448, 4);
+        let wide = t.epoch_with_gpus(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 448, 16);
+        assert!(lane.total_s > 1.8 * full.total_s, "lane={} full={}", lane.total_s, full.total_s);
+        assert!(wide.total_s < full.total_s);
+        // The default-width variant is exactly the classic method.
+        let explicit = t.epoch_with_gpus(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 448, 8);
+        assert_eq!(full, explicit);
+        let v = t.validation(RESNET_FP_OPS, 50_000, 448);
+        let v8 = t.validation_with_gpus(RESNET_FP_OPS, 50_000, 448, 8);
+        assert_eq!(v.to_bits(), v8.to_bits());
     }
 
     #[test]

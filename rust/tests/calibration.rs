@@ -50,6 +50,26 @@ fn ascend_4096_score_within_band_of_194_53_peta_ops() {
 }
 
 #[test]
+fn t4_32_band_holds_with_subshards_and_stealing() {
+    // The sub-shard refactor must not drift the calibrated headline
+    // score: two half-width lanes per node train the same images/s in
+    // aggregate (each lane runs the full dataset per epoch over half the
+    // devices), and the steal scheduler only re-times work the classic
+    // layout would have wasted at the deadline.
+    let mut cfg = scenarios::get("t4-32").expect("t4-32 preset").config;
+    cfg.subshards_per_node = 2;
+    cfg.work_stealing = true;
+    cfg.validate().expect("subshards divide gpus_per_node");
+    let r = run_benchmark(&cfg);
+    assert_in_band(r.score_flops, 56.1e12, "t4-32 subshards");
+    assert_eq!(r.groups.len(), 1);
+    assert!(
+        r.groups[0].barrier_slack_s >= 0.0,
+        "slack metric must be reported"
+    );
+}
+
+#[test]
 fn per_device_throughput_ordering_matches_paper() {
     // Paper Table 1 ordering at the per-device level:
     // T4 (~1.75 T/device) < V100 (~14 T/device) < Ascend (~47.5 T/device).

@@ -33,6 +33,13 @@ fn assert_bit_identical(a: &BenchmarkReport, b: &BenchmarkReport, label: &str) {
             y.ops_per_second.to_bits(),
             "{label}: group {i} ops/s"
         );
+        assert_eq!(x.steals, y.steals, "{label}: group {i} steal count");
+        assert_eq!(x.oom_skips, y.oom_skips, "{label}: group {i} oom skips");
+        assert_eq!(
+            x.barrier_slack_s.to_bits(),
+            y.barrier_slack_s.to_bits(),
+            "{label}: group {i} barrier slack"
+        );
     }
     assert_eq!(
         a.score_flops.to_bits(),
@@ -163,6 +170,31 @@ fn parity_on_heterogeneous_mixed_gpu_topology() {
         let par = run_benchmark_with(&cfg, Engine::Parallel);
         assert_bit_identical(&seq, &par, &format!("t4v100-mixed seed {seed}"));
         assert_eq!(seq.groups.len(), 2, "expected two-group breakdown");
+        assert!(
+            seq.groups.iter().all(|g| g.ops > 0.0),
+            "both groups must contribute ops"
+        );
+    }
+}
+
+#[test]
+fn parity_with_subshards_and_work_stealing_on_mixed_topology() {
+    // The tentpole path: sub-shard lanes (2 per node), per-group batch
+    // overrides, and the steal scheduler all enabled on a heterogeneous
+    // topology. Stealing resolves inside each node's own event loop in a
+    // seed-derived scan order, so it must be invisible to the engine
+    // choice — fresh seeds beyond the classic mixed-parity test.
+    for seed in [3u64, 11] {
+        let mut cfg = aiperf::scenarios::get("t4v100-mixed")
+            .expect("mixed preset")
+            .config;
+        assert!(cfg.work_stealing, "preset enables stealing");
+        assert_eq!(cfg.subshards_per_node, 2, "preset enables sub-shards");
+        cfg.duration_s = 3.0 * 3600.0;
+        cfg.seed = seed;
+        let seq = run_benchmark_with(&cfg, Engine::Sequential);
+        let par = run_benchmark_with(&cfg, Engine::Parallel);
+        assert_bit_identical(&seq, &par, &format!("subshard steal seed {seed}"));
         assert!(
             seq.groups.iter().all(|g| g.ops > 0.0),
             "both groups must contribute ops"

@@ -377,6 +377,14 @@ fn prop_config_text_roundtrip_identity() {
                     g.gpu.util_half_batch = rng.gen_range_f64(1.0, 200.0);
                     g.gpu.util_max = rng.gen_range_f64(0.5, 0.999);
                     g.gpu.step_overhead_s = rng.gen_range_f64(1e-4, 1e-2);
+                    // Optional per-group scheduling overrides: absent and
+                    // present values must both survive the round trip.
+                    if rng.gen_bool(0.5) {
+                        g.batch_per_gpu = Some(rng.gen_range_u64(8, 513));
+                    }
+                    if rng.gen_bool(0.5) {
+                        g.subshards_per_node = Some(rng.gen_range_u64(1, 9));
+                    }
                     g
                 })
                 .collect(),
@@ -399,6 +407,8 @@ fn prop_config_text_roundtrip_identity() {
             } else {
                 Engine::Parallel
             },
+            subshards_per_node: rng.gen_range_u64(1, 5),
+            work_stealing: rng.gen_bool(0.5),
             ..BenchmarkConfig::default()
         };
         let text = cfg.to_text();
@@ -431,6 +441,48 @@ fn prop_config_legacy_flat_keys_one_group() {
         // And the reparse of its canonical form is still the identity.
         assert_eq!(BenchmarkConfig::from_text(&cfg.to_text()).unwrap(), cfg);
     }
+}
+
+/// Steal-schedule invariant: with sub-shards and work stealing enabled
+/// on a heterogeneous topology, the whole run — steal counts, barrier
+/// slack, and the full machine-readable report — is a pure function of
+/// the seed (the victim scan order is seed-derived, not time- or
+/// thread-dependent).
+#[test]
+fn prop_steal_schedule_deterministic_per_seed() {
+    use aiperf::coordinator::run_benchmark;
+    let mut jsons = Vec::new();
+    for seed in 0..4u64 {
+        let mut t4 = NodeGroup::new("t4", 1, 8, GpuModel::t4());
+        t4.batch_per_gpu = Some(256);
+        let mut cfg = BenchmarkConfig {
+            topology: ClusterTopology {
+                groups: vec![t4, NodeGroup::new("v100", 1, 8, GpuModel::v100())],
+            },
+            subshards_per_node: 2,
+            work_stealing: true,
+            ..BenchmarkConfig::default()
+        };
+        cfg.duration_s = 2.5 * 3600.0;
+        cfg.seed = seed;
+        cfg.validate().unwrap();
+        let a = run_benchmark(&cfg);
+        let b = run_benchmark(&cfg);
+        let (ja, jb) = (a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(ja, jb, "seed {seed}: report not a pure function of seed");
+        assert_eq!(
+            a.groups.iter().map(|g| g.steals).collect::<Vec<_>>(),
+            b.groups.iter().map(|g| g.steals).collect::<Vec<_>>(),
+            "seed {seed}: steal schedule diverged"
+        );
+        for g in &a.groups {
+            assert!(g.barrier_slack_s >= 0.0, "seed {seed}: negative slack");
+        }
+        jsons.push(ja);
+    }
+    // Different seeds must not all collapse onto one trajectory.
+    jsons.dedup();
+    assert!(jsons.len() > 1, "all seeds produced identical runs");
 }
 
 /// Score invariants: regulated score is monotone decreasing in error and

@@ -58,6 +58,15 @@ impl NetworkModel {
     pub fn gradient_sync_seconds(&self, workers: u64, params: u64, crosses_nodes: bool) -> f64 {
         self.ring_allreduce_seconds(workers, params * 4, crosses_nodes)
     }
+
+    /// Extra per-step gradient-sync cost a migrated trial pays because its
+    /// allreduce ring leaves the NVLink domain and runs over InfiniBand
+    /// instead — the network half of the cross-group migration overhead
+    /// (the other half is NFS checkpoint staging).
+    pub fn migration_sync_penalty_seconds(&self, workers: u64, params: u64) -> f64 {
+        self.gradient_sync_seconds(workers, params, true)
+            - self.gradient_sync_seconds(workers, params, false)
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +101,20 @@ mod tests {
         let n = NetworkModel::default();
         let t = n.gradient_sync_seconds(8, 25_600_000, false);
         assert!(t < 0.1, "t={t}");
+    }
+
+    #[test]
+    fn migration_penalty_positive_and_vanishes_for_one_worker() {
+        let n = NetworkModel::default();
+        // 25.6 M params over a 4-GPU lane: IB must cost strictly more
+        // than NVLink, and the penalty is exactly the difference.
+        let p = n.migration_sync_penalty_seconds(4, 25_600_000);
+        assert!(p > 0.0, "penalty={p}");
+        let direct = n.gradient_sync_seconds(4, 25_600_000, true)
+            - n.gradient_sync_seconds(4, 25_600_000, false);
+        assert_eq!(p.to_bits(), direct.to_bits());
+        // A single worker has no ring at all, hence no penalty.
+        assert_eq!(n.migration_sync_penalty_seconds(1, 25_600_000), 0.0);
     }
 
     #[test]

@@ -34,18 +34,39 @@ pub struct NfsStats {
 }
 
 impl NfsModel {
+    /// Pure transfer cost of moving `bytes` through NFS, without touching
+    /// any counters — the probe the migration scheduler uses to evaluate
+    /// a candidate destination before committing to it.
+    pub fn transfer_seconds(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth
+    }
+
     /// Seconds to read `bytes` (also bumps the counters).
     pub fn read_seconds(&self, bytes: u64, stats: &mut NfsStats) -> f64 {
         stats.reads += 1;
         stats.bytes_read += bytes;
-        self.latency_s + bytes as f64 / self.bandwidth
+        self.transfer_seconds(bytes)
     }
 
     /// Seconds to write `bytes`.
     pub fn write_seconds(&self, bytes: u64, stats: &mut NfsStats) -> f64 {
         stats.writes += 1;
         stats.bytes_written += bytes;
-        self.latency_s + bytes as f64 / self.bandwidth
+        self.transfer_seconds(bytes)
+    }
+
+    /// Checkpoint stage-out of a migrating trial (source side): the
+    /// proposing node serializes the candidate's initial state to NFS so
+    /// any other node can pick it up. Cost model = one write.
+    pub fn stage_out_seconds(&self, bytes: u64, stats: &mut NfsStats) -> f64 {
+        self.write_seconds(bytes, stats)
+    }
+
+    /// Checkpoint stage-in of a migrating trial (destination side): the
+    /// adopting node loads the staged state from NFS before training.
+    /// Cost model = one read.
+    pub fn stage_in_seconds(&self, bytes: u64, stats: &mut NfsStats) -> f64 {
+        self.read_seconds(bytes, stats)
     }
 
     /// Per-epoch input-pipeline cost for streaming `images` of `bytes_per
@@ -86,6 +107,37 @@ mod tests {
         assert_eq!(s.writes, 2);
         assert_eq!(s.bytes_written, 300);
         assert_eq!(s.reads, 1);
+    }
+
+    #[test]
+    fn transfer_probe_matches_charged_cost_without_counters() {
+        let n = NfsModel::default();
+        let mut s = NfsStats::default();
+        let probe = n.transfer_seconds(10_000_000);
+        let charged = n.read_seconds(10_000_000, &mut s);
+        assert_eq!(probe.to_bits(), charged.to_bits());
+        // Probing never touches the counters.
+        assert_eq!(s.reads, 1);
+        let _ = n.transfer_seconds(1 << 30);
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.bytes_read, 10_000_000);
+    }
+
+    #[test]
+    fn checkpoint_staging_charges_both_sides() {
+        let n = NfsModel::default();
+        let mut src = NfsStats::default();
+        let mut dst = NfsStats::default();
+        let bytes = 8 * 25_600_000; // 8 B/param on a ResNet-50-class model
+        let out = n.stage_out_seconds(bytes, &mut src);
+        let inn = n.stage_in_seconds(bytes, &mut dst);
+        assert_eq!(src.writes, 1);
+        assert_eq!(src.bytes_written, bytes);
+        assert_eq!(dst.reads, 1);
+        assert_eq!(dst.bytes_read, bytes);
+        // ~205 MB over 1.2 GB/s: fractions of a second, both directions.
+        assert!(out > 0.0 && out < 1.0, "out={out}");
+        assert_eq!(out.to_bits(), inn.to_bits());
     }
 
     #[test]

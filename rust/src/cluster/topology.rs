@@ -36,6 +36,12 @@ pub struct NodeGroup {
     /// node's GPUs split into. `None` falls back to the global
     /// `BenchmarkConfig::subshards_per_node`; must divide `gpus_per_node`.
     pub subshards_per_node: Option<u64>,
+    /// Whether this group's idle lanes may adopt trials migrated from
+    /// other groups (`[group.NAME] accepts_migrants`). Defaults to true;
+    /// only consulted when `BenchmarkConfig::migration` is enabled. A
+    /// group can opt out (e.g. a production partition that must not run
+    /// foreign checkpoints) without disabling migration cluster-wide.
+    pub accepts_migrants: bool,
 }
 
 impl NodeGroup {
@@ -47,6 +53,7 @@ impl NodeGroup {
             gpu,
             batch_per_gpu: None,
             subshards_per_node: None,
+            accepts_migrants: true,
         }
     }
 
@@ -283,6 +290,15 @@ mod tests {
         assert!(s.contains("2x8 t4"), "{s}");
         assert!(s.contains("3x4 v100"), "{s}");
         assert!(s.contains("28 GPUs"), "{s}");
+    }
+
+    #[test]
+    fn groups_accept_migrants_by_default() {
+        let t = mixed();
+        assert!(t.groups.iter().all(|g| g.accepts_migrants));
+        let mut t = mixed();
+        t.groups[0].accepts_migrants = false;
+        t.validate().unwrap();
     }
 
     #[test]

@@ -34,16 +34,23 @@
 //! `gpu_util_half_batch`, `gpu_util_max`, `gpu_step_overhead_s`, and the
 //! per-group scheduling overrides `batch_per_gpu` (this group trains at
 //! its own batch instead of the global one — a mixed T4/V100 site keeps
-//! the V100 group at its memory-appropriate batch) and
+//! the V100 group at its memory-appropriate batch),
 //! `subshards_per_node` (how many independent trial lanes a node's GPUs
-//! split into; must divide `gpus_per_node`).
+//! split into; must divide `gpus_per_node`), and `accepts_migrants`
+//! (whether this group's idle lanes may adopt trials migrated from other
+//! groups; defaults to true).
 //!
 //! The global `subshards_per_node` key is the all-groups default (1 = one
-//! lane per node spanning all its GPUs, the classic layout), and
+//! lane per node spanning all its GPUs, the classic layout),
 //! `work_stealing = true|false` enables the deterministic intra-node
-//! steal scheduler: a lane without runway for another full epoch joins
-//! the most-loaded sibling lane's trial as extra data-parallel devices
-//! (see `coordinator::shard`).
+//! steal scheduler (a lane without runway for another full epoch joins
+//! the most-loaded sibling lane's trial as extra data-parallel devices),
+//! and `migration = true|false` enables the cluster-wide elastic pass on
+//! top: a candidate proposed on a lane with no runway and no sibling to
+//! steal from is staged to NFS (`migration_nfs_bytes_per_param` bytes
+//! per model parameter) and adopted at the next epoch barrier by the
+//! least-loaded idle lane of another accepting group (see
+//! `coordinator::sched`).
 //!
 //! **Legacy flat shorthand:** the pre-topology keys `nodes`,
 //! `gpus_per_node`, and the `gpu_*` family may still appear at the top
@@ -185,6 +192,18 @@ pub struct BenchmarkConfig {
     /// joins the most-loaded sibling lane's trial as extra data-parallel
     /// devices (seed-derived scan order; engine-independent).
     pub work_stealing: bool,
+    /// Deterministic inter-group trial migration: a candidate proposed on
+    /// a lane with no runway left in its own group (and no sibling to
+    /// steal from) is staged to NFS and, at the next epoch barrier,
+    /// adopted by the least-loaded idle lane of another node group that
+    /// `accepts_migrants` — re-timed under the destination group's device
+    /// model and batch, with its gradient ring over InfiniBand (see
+    /// `coordinator::sched`). Off by default; with it off the elastic
+    /// scheduler reproduces the pure steal schedules exactly.
+    pub migration: bool,
+    /// Checkpoint bytes staged through NFS per model parameter when a
+    /// trial migrates (fp32 weights + optimizer state ≈ 8 B/param).
+    pub migration_nfs_bytes_per_param: u64,
 }
 
 impl Default for BenchmarkConfig {
@@ -209,6 +228,8 @@ impl Default for BenchmarkConfig {
             sync_interval_s: 300.0,
             subshards_per_node: 1,
             work_stealing: false,
+            migration: false,
+            migration_nfs_bytes_per_param: 8,
         }
     }
 }
@@ -328,6 +349,19 @@ impl BenchmarkConfig {
     /// are an error — configuration typos must not silently fall back to
     /// defaults. Unlisted keys keep their default.
     pub fn from_text(s: &str) -> Result<Self, String> {
+        /// Parse a boolean knob value (`true/on/1`, `false/off/0`) —
+        /// shared by every boolean key so the accepted spellings cannot
+        /// drift between them.
+        fn parse_flag(key: &str, value: &str) -> Result<bool, String> {
+            match value {
+                "true" | "on" | "1" => Ok(true),
+                "false" | "off" | "0" => Ok(false),
+                other => Err(format!(
+                    "bad boolean `{other}` for {key} (expected true/false)"
+                )),
+            }
+        }
+
         /// Apply one cluster-group key to `g`; `Ok(false)` means the key
         /// is not a group key. Shared by the `[group.*]` branch and the
         /// legacy flat branch so the two dialects cannot drift.
@@ -361,6 +395,7 @@ impl BenchmarkConfig {
                 // the global defaults).
                 "batch_per_gpu" => g.batch_per_gpu = Some(parse_u64(value)?),
                 "subshards_per_node" => g.subshards_per_node = Some(parse_u64(value)?),
+                "accepts_migrants" => g.accepts_migrants = parse_flag(key, value)?,
                 _ => return Ok(false),
             }
             Ok(true)
@@ -472,16 +507,10 @@ impl BenchmarkConfig {
                 "engine" => cfg.engine = Engine::parse(value).map_err(err)?,
                 "sync_interval_s" => cfg.sync_interval_s = parse_f64(value)?,
                 "subshards_per_node" => cfg.subshards_per_node = parse_u64(value)?,
-                "work_stealing" => {
-                    cfg.work_stealing = match value {
-                        "true" | "on" | "1" => true,
-                        "false" | "off" | "0" => false,
-                        other => {
-                            return Err(err(format!(
-                                "bad boolean `{other}` for work_stealing (expected true/false)"
-                            )))
-                        }
-                    }
+                "work_stealing" => cfg.work_stealing = parse_flag(key, value).map_err(&err)?,
+                "migration" => cfg.migration = parse_flag(key, value).map_err(&err)?,
+                "migration_nfs_bytes_per_param" => {
+                    cfg.migration_nfs_bytes_per_param = parse_u64(value)?
                 }
                 "max_params" => cfg.morph_limits.max_params = parse_u64(value)?,
                 "max_depth" => cfg.morph_limits.max_depth = parse_u64(value)? as usize,
@@ -555,7 +584,9 @@ impl BenchmarkConfig {
              engine = {}\n\
              sync_interval_s = {}\n\
              subshards_per_node = {}\n\
-             work_stealing = {}\n",
+             work_stealing = {}\n\
+             migration = {}\n\
+             migration_nfs_bytes_per_param = {}\n",
             self.batch_per_gpu,
             self.learning_rate,
             self.lr_decay_per_epoch,
@@ -581,6 +612,8 @@ impl BenchmarkConfig {
             self.sync_interval_s,
             self.subshards_per_node,
             self.work_stealing,
+            self.migration,
+            self.migration_nfs_bytes_per_param,
         );
         for g in &self.topology.groups {
             out.push_str(&format!(
@@ -608,6 +641,11 @@ impl BenchmarkConfig {
             }
             if let Some(k) = g.subshards_per_node {
                 out.push_str(&format!("subshards_per_node = {k}\n"));
+            }
+            // `accepts_migrants` defaults to true; emitting it only when
+            // false keeps old configs byte-stable and still round-trips.
+            if !g.accepts_migrants {
+                out.push_str("accepts_migrants = false\n");
             }
         }
         out
@@ -802,6 +840,33 @@ mod tests {
         assert!(BenchmarkConfig::from_text("work_stealing = maybe\n").is_err());
         let c = BenchmarkConfig::from_text("work_stealing = off\n").unwrap();
         assert!(!c.work_stealing);
+    }
+
+    #[test]
+    fn migration_keys_parse_and_roundtrip() {
+        let text = "work_stealing = on\nmigration = on\nmigration_nfs_bytes_per_param = 12\n\
+                    [group.t4]\ncount = 2\ngpus_per_node = 8\ngpu = t4\n\
+                    [group.v100]\ncount = 2\ngpus_per_node = 8\ngpu = v100\naccepts_migrants = false\n";
+        let c = BenchmarkConfig::from_text(text).unwrap();
+        assert!(c.migration);
+        assert_eq!(c.migration_nfs_bytes_per_param, 12);
+        assert!(c.topology.groups[0].accepts_migrants);
+        assert!(!c.topology.groups[1].accepts_migrants);
+        c.validate().unwrap();
+        let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
+        assert_eq!(c2, c);
+        // Bad values error instead of silently defaulting.
+        assert!(BenchmarkConfig::from_text("migration = maybe\n").is_err());
+        assert!(
+            BenchmarkConfig::from_text("[group.x]\ncount = 1\naccepts_migrants = sure\n")
+                .is_err()
+        );
+        // `accepts_migrants` is a group key, not a global one.
+        assert!(BenchmarkConfig::from_text("accepts_migrants = true\n").is_err());
+        // Migration is off by default and absent keys keep defaults.
+        let d = BenchmarkConfig::from_text("seed = 1\n").unwrap();
+        assert!(!d.migration);
+        assert_eq!(d.migration_nfs_bytes_per_param, 8);
     }
 
     #[test]

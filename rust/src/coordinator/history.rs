@@ -25,6 +25,12 @@ pub struct ModelRecord {
     /// Fig 5 plots as "achievable error".
     pub measured_accuracy: f64,
     pub predicted: bool,
+    /// OOM-penalty marker: the candidate fit no batch size on its
+    /// group's accelerator and was never trained. Penalty entries rank
+    /// (teaching the search the memory boundary) but are never selected
+    /// as morph parents while real records exist, and their error of
+    /// 100 % never wins the achieved-error series.
+    pub penalty: bool,
     pub node: usize,
     pub round: u64,
     pub epochs_trained: u64,
@@ -71,22 +77,24 @@ impl HistoryList {
         &self.records
     }
 
-    /// Best achieved error so far. Every record counts with its *measured*
-    /// accuracy; Appendix-C predictions only influence ranking, never the
-    /// achieved-error series.
+    /// Best achieved error so far. Every trained record counts with its
+    /// *measured* accuracy; Appendix-C predictions only influence
+    /// ranking, never the achieved-error series — and OOM-penalty
+    /// entries were never trained at all, so they are excluded outright.
     pub fn best_measured_error(&self) -> Option<f64> {
         self.records
             .iter()
+            .filter(|r| !r.penalty)
             .map(|r| r.error())
             .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
     }
 
-    /// Best error among records completed by time `t` (for the Fig 5
-    /// time series).
+    /// Best error among trained records completed by time `t` (for the
+    /// Fig 5 time series).
     pub fn best_measured_error_at(&self, t: f64) -> Option<f64> {
         self.records
             .iter()
-            .filter(|r| r.completed_at <= t)
+            .filter(|r| !r.penalty && r.completed_at <= t)
             .map(|r| r.error())
             .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
     }
@@ -99,6 +107,7 @@ impl HistoryList {
             .map(|r| RankedModel {
                 arch: r.arch.clone(),
                 accuracy: r.accuracy,
+                penalty: r.penalty,
             })
             .collect()
     }
@@ -123,6 +132,7 @@ mod tests {
             accuracy: acc,
             measured_accuracy: acc,
             predicted,
+            penalty: false,
             node: 0,
             round: 1,
             epochs_trained: 10,
@@ -162,6 +172,24 @@ mod tests {
         h.push(rec(0, 0.4, true, 1.0));
         h.push(rec(1, 0.6, false, 2.0));
         assert_eq!(h.ranked_view().len(), 2);
+    }
+
+    #[test]
+    fn penalty_records_rank_but_never_set_the_error_series() {
+        let mut h = HistoryList::new();
+        let mut p = rec(0, 0.0, true, 1.0);
+        p.penalty = true;
+        p.measured_accuracy = 0.0;
+        h.push(p);
+        // Only a penalty so far: no achieved error exists yet.
+        assert!(h.best_measured_error().is_none());
+        assert!(h.best_measured_error_at(5.0).is_none());
+        h.push(rec(1, 0.6, false, 2.0));
+        assert!((h.best_measured_error().unwrap() - 0.4).abs() < 1e-12);
+        // The penalty still ranks (search feedback)…
+        let view = h.ranked_view();
+        assert_eq!(view.len(), 2);
+        assert!(view[0].penalty && !view[1].penalty);
     }
 
     #[test]

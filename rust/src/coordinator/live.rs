@@ -284,6 +284,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveResult> {
             accuracy: acc as f64,
             measured_accuracy: acc as f64,
             predicted: false,
+            penalty: false,
             node: 0,
             round: trial_idx + 1,
             epochs_trained: cfg.epochs_per_trial,

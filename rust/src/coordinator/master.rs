@@ -27,8 +27,9 @@ use std::cmp::Ordering;
 use crate::cluster::nfs::NfsStats;
 use crate::config::{BenchmarkConfig, Engine};
 use crate::coordinator::history::HistoryList;
+use crate::coordinator::sched::ElasticScheduler;
 use crate::coordinator::shard::{HistorySnapshot, SimContext, SlaveShard};
-use crate::metrics::report::{BenchmarkReport, GroupBreakdown};
+use crate::metrics::report::{BenchmarkReport, GroupBreakdown, LaneUtil};
 use crate::metrics::score::{validate_result, ScoreSample};
 use crate::metrics::telemetry::{NodeReading, Telemetry};
 
@@ -165,6 +166,10 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         .nodes()
         .map(|(group, node)| SlaveShard::new(node, group, cfg))
         .collect();
+    // The cluster-wide elastic scheduler: owns the lane registry and the
+    // inter-group migration pass, run at every barrier (the per-node
+    // steal pass it also owns was handed to each shard at construction).
+    let mut sched = ElasticScheduler::new(cfg);
     let mut global = GlobalState {
         history: HistoryList::new(),
         telemetry: Telemetry::new(cfg.telemetry_interval_s),
@@ -214,12 +219,20 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
             }
         }
         merge_window(&mut global, &mut shards, window_end, cfg);
+        // Inter-group migration: place staged candidates onto idle lanes
+        // of other groups. Runs single-threaded at the barrier in both
+        // engines, so the placements are engine-independent.
+        sched.barrier_pass(window_end, &mut shards, &ctx);
     }
 
     let mut nfs_stats = NfsStats::default();
     let mut architectures_evaluated = 0;
     let mut group_steals = vec![0u64; cfg.topology.groups.len()];
     let mut group_oom_skips = vec![0u64; cfg.topology.groups.len()];
+    let mut group_migrations_in = vec![0u64; cfg.topology.groups.len()];
+    let mut group_migrations_out = vec![0u64; cfg.topology.groups.len()];
+    let mut group_migration_overhead = vec![0.0f64; cfg.topology.groups.len()];
+    let mut lane_util: Vec<LaneUtil> = Vec::new();
     for s in &shards {
         nfs_stats.reads += s.nfs.reads;
         nfs_stats.writes += s.nfs.writes;
@@ -228,6 +241,17 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         architectures_evaluated += s.total_completed();
         group_steals[s.group] += s.steals;
         group_oom_skips[s.group] += s.oom_skips;
+        group_migrations_in[s.group] += s.migrations_in;
+        group_migrations_out[s.group] += s.migrations_out;
+        group_migration_overhead[s.group] += s.migration_overhead_s;
+        for (lane, busy) in s.lane_busy_fractions(cfg.duration_s).into_iter().enumerate() {
+            lane_util.push(LaneUtil {
+                group: cfg.topology.groups[s.group].label.clone(),
+                node: s.node as u64,
+                lane: lane as u64,
+                busy_fraction: busy,
+            });
+        }
     }
 
     let final_error = global.history.best_measured_error().unwrap_or(1.0 - 1e-9);
@@ -246,6 +270,9 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
             ops_per_second: global.group_ops[i] / cfg.duration_s,
             steals: group_steals[i],
             oom_skips: group_oom_skips[i],
+            migrations_in: group_migrations_in[i],
+            migrations_out: group_migrations_out[i],
+            migration_overhead_s: group_migration_overhead[i],
             barrier_slack_s: if global.group_slack_samples[i] > 0 {
                 global.group_slack_sum[i] / global.group_slack_samples[i] as f64
             } else {
@@ -257,6 +284,7 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         nodes: cfg.topology.total_nodes(),
         total_gpus: cfg.topology.total_gpus(),
         groups,
+        lane_util,
         duration_s: cfg.duration_s,
         score_series: global.score_series,
         score_flops,

@@ -12,6 +12,9 @@
 //! * [`trial`] — per-trial training state: epoch budget, early stopping;
 //! * [`shard`] — one slave node's simulation shard: search loop, TPE,
 //!   RNG streams, local event queue (the parallel scale-out unit);
+//! * [`sched`] — the elastic scheduler: lane registry, intra-node steal
+//!   pass, and the cluster-wide inter-group migration pass (every
+//!   placement policy, extracted out of shard/master mechanics);
 //! * [`master`] — the simulated end-to-end benchmark run (sharded
 //!   discrete-event loops with deterministic epoch-barrier merges)
 //!   producing a [`crate::metrics::BenchmarkReport`];
@@ -25,6 +28,7 @@ pub mod history;
 #[cfg(feature = "pjrt")]
 pub mod live;
 pub mod master;
+pub mod sched;
 pub mod shard;
 pub mod trial;
 
@@ -32,5 +36,6 @@ pub use buffer::ArchBuffer;
 pub use dispatcher::Dispatcher;
 pub use history::{HistoryList, ModelRecord};
 pub use master::{run_benchmark, run_benchmark_with};
+pub use sched::ElasticScheduler;
 pub use shard::SlaveShard;
 pub use trial::{ActiveTrial, TrialStatus};

@@ -1,0 +1,94 @@
+//! The elastic scheduler subsystem: every placement policy of the
+//! simulated benchmark, extracted from the shard/master mechanics.
+//!
+//! AIPerf's near-linear weak scaling rests on keeping every accelerator
+//! busy. Three layers of elasticity serve that goal, in increasing
+//! radius, and this module owns all of them:
+//!
+//! * [`registry`] — the cluster-wide lane registry: one deterministic,
+//!   flat view of every sub-shard trial lane (group, node, lane, unit,
+//!   width);
+//! * [`steal`] — the intra-node steal pass: runway predicate +
+//!   seed-derived victim scan; a lane out of runway lends its devices to
+//!   the most-loaded sibling trial inside the NVLink domain;
+//! * [`elastic`] — the inter-group migration pass: a candidate proposed
+//!   on a lane with no runway and no sibling to steal into is staged to
+//!   NFS and adopted, at an epoch barrier, by the least-loaded idle lane
+//!   of another accepting group — re-timed under the destination group's
+//!   device model with its gradient ring over InfiniBand.
+//!
+//! The scheduler decides; [`crate::coordinator::shard`] executes (event
+//! scheduling, epoch re-timing, NFS charging) and
+//! [`crate::coordinator::master`] merges. Decisions during a window are
+//! node-local and decisions at a barrier are single-threaded, so both
+//! execution engines stay bit-identical per seed — with migration off,
+//! the whole subsystem reproduces the pure steal schedules exactly.
+
+pub mod elastic;
+pub mod registry;
+pub mod steal;
+
+pub use elastic::{ElasticScheduler, MigrantCandidate, MigrantFit};
+pub use registry::{LaneRegistry, LaneSlot};
+pub use steal::{LaneLoad, StealScheduler};
+
+use crate::cluster::GpuModel;
+
+/// Memory adaption (paper §4.2): halve the requested per-GPU batch until
+/// the candidate fits the accelerator; when the halving ladder bottoms
+/// out without fitting, clamp to the exact largest fitting batch; `None`
+/// when no batch fits at all. One policy shared by native trial starts
+/// and migration placement, so a migrant is re-adapted against its
+/// *destination* device exactly like a local candidate would be.
+pub fn adapted_batch(
+    gpu: &GpuModel,
+    params: u64,
+    activation_elems: u64,
+    requested: u64,
+) -> Option<u64> {
+    let mut batch = requested;
+    while batch > 8 && !gpu.fits(params, activation_elems, batch) {
+        batch /= 2;
+    }
+    if gpu.fits(params, activation_elems, batch) {
+        Some(batch)
+    } else {
+        gpu.max_fitting_batch(params, activation_elems)
+            .map(|b| b.min(requested))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PARAMS: u64 = 25_600_000;
+    const ACT: u64 = 11_000_000;
+
+    #[test]
+    fn adapted_batch_keeps_fitting_requests() {
+        let gpu = GpuModel::v100();
+        assert_eq!(adapted_batch(&gpu, PARAMS, ACT, 448), Some(448));
+    }
+
+    #[test]
+    fn adapted_batch_halves_to_fit_then_clamps_exactly() {
+        let gpu = GpuModel::t4();
+        // Find a model that fits at some power-of-two rung below the
+        // request: the ladder must land on a fitting batch ≤ request.
+        let b = adapted_batch(&gpu, PARAMS, 40_000_000, 448).expect("fits at some batch");
+        assert!(b <= 448);
+        assert!(gpu.fits(PARAMS, 40_000_000, b));
+        // When even batch 8 does not fit, the exact boundary is used.
+        let heavy_act = 2_000_000_000;
+        match adapted_batch(&gpu, PARAMS, heavy_act, 448) {
+            Some(b) => {
+                assert!(gpu.fits(PARAMS, heavy_act, b));
+                assert!(!gpu.fits(PARAMS, heavy_act, b + 1));
+            }
+            None => assert!(gpu.max_fitting_batch(PARAMS, heavy_act).is_none()),
+        }
+        // A model whose fixed residents exceed memory fits nowhere.
+        assert_eq!(adapted_batch(&gpu, gpu.memory_bytes, ACT, 448), None);
+    }
+}

@@ -1,0 +1,123 @@
+//! Cluster-wide lane registry.
+//!
+//! The elastic scheduler reasons about *lanes* — the sub-shard trial
+//! trainers of every node — across the whole cluster, so it needs one
+//! flat, deterministically ordered view of them. [`LaneRegistry`]
+//! materializes that view from the validated configuration: one
+//! [`LaneSlot`] per lane, in global unit order (group 0's nodes' lanes
+//! first, then group 1's, … — the same numbering that fixes RNG streams
+//! and the coordinator's merge order, see
+//! [`crate::config::BenchmarkConfig::subshard_base`]).
+
+use crate::config::BenchmarkConfig;
+
+/// One sub-shard lane's static placement facts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneSlot {
+    /// Topology group the lane's node belongs to.
+    pub group: usize,
+    /// Global node index (equals the owning shard's index in the
+    /// coordinator's shard vector).
+    pub node: usize,
+    /// Lane index within its node (`0..subshards_per_node`).
+    pub sub: usize,
+    /// Globally unique lane id (the RNG-stream / trial-id stride unit).
+    pub unit: u64,
+    /// Devices the lane trains on when running solo.
+    pub gpus: u64,
+}
+
+/// Flat, deterministically ordered view of every lane in the cluster.
+pub struct LaneRegistry {
+    lanes: Vec<LaneSlot>,
+}
+
+impl LaneRegistry {
+    /// Build the registry from a (validated) configuration. Lane order is
+    /// ascending `unit`.
+    pub fn new(cfg: &BenchmarkConfig) -> Self {
+        let mut lanes = Vec::with_capacity(cfg.total_subshards() as usize);
+        for (group, node) in cfg.topology.nodes() {
+            let k = cfg.group_subshards(group).max(1) as usize;
+            let g = &cfg.topology.groups[group];
+            let lane_gpus = (g.gpus_per_node / k as u64).max(1);
+            let base = cfg.subshard_base(group, node);
+            for sub in 0..k {
+                lanes.push(LaneSlot {
+                    group,
+                    node,
+                    sub,
+                    unit: base + sub as u64,
+                    gpus: lane_gpus,
+                });
+            }
+        }
+        debug_assert!(
+            lanes.windows(2).all(|w| w[0].unit + 1 == w[1].unit),
+            "lane units must be dense and ascending"
+        );
+        LaneRegistry { lanes }
+    }
+
+    /// Every lane, in global unit order.
+    pub fn lanes(&self) -> &[LaneSlot] {
+        &self.lanes
+    }
+
+    /// Total lanes across the cluster.
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
+
+    #[test]
+    fn registry_matches_config_unit_numbering() {
+        let mut v100 = NodeGroup::new("v100", 2, 8, GpuModel::v100());
+        v100.subshards_per_node = Some(2);
+        let cfg = BenchmarkConfig {
+            topology: ClusterTopology {
+                groups: vec![NodeGroup::new("t4", 2, 8, GpuModel::t4()), v100],
+            },
+            subshards_per_node: 1,
+            ..BenchmarkConfig::default()
+        };
+        cfg.validate().unwrap();
+        let reg = LaneRegistry::new(&cfg);
+        assert_eq!(reg.len() as u64, cfg.total_subshards());
+        assert_eq!(reg.len(), 2 * 1 + 2 * 2);
+        // Units are dense, ascending, and agree with subshard_base.
+        for (i, lane) in reg.lanes().iter().enumerate() {
+            assert_eq!(lane.unit, i as u64);
+            assert_eq!(
+                lane.unit,
+                cfg.subshard_base(lane.group, lane.node) + lane.sub as u64
+            );
+        }
+        // Node indices are global (group 0's nodes first) and lane widths
+        // split each node's devices.
+        assert_eq!(reg.lanes()[0], LaneSlot { group: 0, node: 0, sub: 0, unit: 0, gpus: 8 });
+        assert_eq!(reg.lanes()[2], LaneSlot { group: 1, node: 2, sub: 0, unit: 2, gpus: 4 });
+        assert_eq!(reg.lanes()[5], LaneSlot { group: 1, node: 3, sub: 1, unit: 5, gpus: 4 });
+    }
+
+    #[test]
+    fn single_group_single_lane_is_node_numbering() {
+        let cfg = BenchmarkConfig::homogeneous(3);
+        let reg = LaneRegistry::new(&cfg);
+        assert_eq!(reg.len(), 3);
+        for (i, lane) in reg.lanes().iter().enumerate() {
+            assert_eq!((lane.node, lane.sub, lane.unit), (i, 0, i as u64));
+            assert_eq!(lane.gpus, 8);
+        }
+        assert!(!reg.is_empty());
+    }
+}

@@ -1,0 +1,172 @@
+//! Intra-node steal pass: the per-node placement decisions of the
+//! elastic scheduler.
+//!
+//! A sub-shard lane whose remaining runway cannot fit another full epoch
+//! before the benchmark deadline would classically start a doomed trial
+//! whose first epoch never completes. The steal pass instead lends the
+//! lane's devices to the most-loaded sibling lane's trial (all lanes of
+//! a node share its NVLink domain, which is what makes joining the
+//! allreduce ring cheap). The *decision* lives here — runway predicate
+//! and seed-derived victim scan — while the shard applies it (epoch
+//! re-timing, helper bookkeeping), so `coordinator::sched` owns every
+//! placement policy and `coordinator::shard` stays pure mechanics.
+//!
+//! Determinism: one `StealScheduler` per node, seeded from
+//! `derive(seed, "steal", node)`, draws exactly one rotation offset per
+//! eligible steal attempt — the same stream and call sequence as the
+//! pre-extraction scheduler, so schedules are bit-identical to PR 3's.
+
+use crate::config::BenchmarkConfig;
+use crate::util::rng::{derive, Rng};
+
+/// A sibling lane's load as seen by the victim scan.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneLoad {
+    /// Whether the lane currently trains a trial (only busy lanes can be
+    /// stolen from).
+    pub busy: bool,
+    /// Whether that trial was adopted from another group — migrated
+    /// trials already sync over InfiniBand and are not re-timed by the
+    /// NVLink-domain steal pass, so they are never victims.
+    pub migrated: bool,
+    /// Absolute end time of the lane's in-flight epoch.
+    pub epoch_end_t: f64,
+    /// Seconds per epoch at the lane's current effective width.
+    pub epoch_seconds: f64,
+    /// Full epochs remaining after the in-flight one.
+    pub remaining_epochs: f64,
+}
+
+/// Per-node steal decision state: the seed-derived rotation stream.
+pub struct StealScheduler {
+    rng: Rng,
+    /// Whether stealing is enabled at all (`BenchmarkConfig::work_stealing`).
+    pub enabled: bool,
+}
+
+impl StealScheduler {
+    /// The scheduler for global node `node` — same stream the
+    /// pre-extraction shard used.
+    pub fn new(cfg: &BenchmarkConfig, node: usize) -> Self {
+        StealScheduler {
+            rng: derive(cfg.seed, "steal", node as u64),
+            enabled: cfg.work_stealing,
+        }
+    }
+
+    /// Whether a lane whose latest solo epoch took `own_epoch_s` has no
+    /// runway for another full trial epoch (search + setup + one epoch)
+    /// before `duration_s`. A lane that never trained (`own_epoch_s <= 0`)
+    /// has no estimate and must start a real trial.
+    pub fn out_of_runway(
+        t: f64,
+        search_seconds: f64,
+        setup_seconds: f64,
+        own_epoch_s: f64,
+        duration_s: f64,
+    ) -> bool {
+        own_epoch_s > 0.0 && t + search_seconds + setup_seconds + own_epoch_s > duration_s
+    }
+
+    /// The victim scan: pick the most-loaded busy sibling of `thief`
+    /// (largest projected remaining trial work), scanned in a fixed
+    /// seed-derived rotation that decides ties deterministically.
+    ///
+    /// Draws exactly one rotation offset per call — callers must gate on
+    /// [`StealScheduler::enabled`], lane count, and
+    /// [`StealScheduler::out_of_runway`] first, preserving the historic
+    /// stream alignment.
+    pub fn pick_victim(&mut self, thief: usize, t: f64, lanes: &[LaneLoad]) -> Option<usize> {
+        let k = lanes.len();
+        let start = self.rng.gen_range_usize(0, k);
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..k {
+            let i = (start + j) % k;
+            if i == thief {
+                continue;
+            }
+            let l = &lanes[i];
+            if !l.busy || l.migrated {
+                continue;
+            }
+            let load = (l.epoch_end_t - t).max(0.0) + l.remaining_epochs * l.epoch_seconds;
+            let better = match best {
+                None => true,
+                Some((_, b)) => load > b,
+            };
+            if better {
+                best = Some((i, load));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy(epoch_end_t: f64, epoch_seconds: f64, remaining: f64) -> LaneLoad {
+        LaneLoad {
+            busy: true,
+            migrated: false,
+            epoch_end_t,
+            epoch_seconds,
+            remaining_epochs: remaining,
+        }
+    }
+
+    fn idle() -> LaneLoad {
+        LaneLoad {
+            busy: false,
+            migrated: false,
+            epoch_end_t: 0.0,
+            epoch_seconds: 0.0,
+            remaining_epochs: 0.0,
+        }
+    }
+
+    #[test]
+    fn runway_predicate_matches_deadline_arithmetic() {
+        // 100 s in, 5 s search + 10 s setup, 80 s epochs, 200 s budget:
+        // 100+5+10+80 = 195 ≤ 200 → still has runway.
+        assert!(!StealScheduler::out_of_runway(100.0, 5.0, 10.0, 80.0, 200.0));
+        assert!(StealScheduler::out_of_runway(110.0, 5.0, 10.0, 80.0, 200.0));
+        // No estimate yet ⇒ never "out of runway".
+        assert!(!StealScheduler::out_of_runway(199.0, 5.0, 10.0, 0.0, 200.0));
+    }
+
+    #[test]
+    fn picks_most_loaded_busy_sibling() {
+        let cfg = BenchmarkConfig::default();
+        let mut s = StealScheduler::new(&cfg, 0);
+        // Lane 2 has 5 epochs of 100 s left; lane 1 only one.
+        let lanes = vec![idle(), busy(50.0, 100.0, 0.0), busy(50.0, 100.0, 4.0)];
+        assert_eq!(s.pick_victim(0, 40.0, &lanes), Some(2));
+        // Idle-only siblings: no victim.
+        let lanes = vec![idle(), idle()];
+        assert_eq!(s.pick_victim(0, 40.0, &lanes), None);
+    }
+
+    #[test]
+    fn migrated_trials_are_never_victims() {
+        let cfg = BenchmarkConfig::default();
+        let mut s = StealScheduler::new(&cfg, 0);
+        let mut m = busy(50.0, 100.0, 9.0);
+        m.migrated = true;
+        let lanes = vec![idle(), m, busy(50.0, 100.0, 1.0)];
+        assert_eq!(s.pick_victim(0, 40.0, &lanes), Some(2));
+        let lanes = vec![idle(), m];
+        assert_eq!(s.pick_victim(0, 40.0, &lanes), None);
+    }
+
+    #[test]
+    fn scan_is_deterministic_per_node_seed() {
+        let cfg = BenchmarkConfig::default();
+        let lanes = vec![busy(10.0, 5.0, 1.0), busy(10.0, 5.0, 1.0), idle()];
+        let picks: Vec<Option<usize>> = (0..8)
+            .map(|_| StealScheduler::new(&cfg, 3).pick_victim(2, 0.0, &lanes))
+            .collect();
+        assert!(picks.windows(2).all(|w| w[0] == w[1]));
+    }
+}

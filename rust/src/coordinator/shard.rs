@@ -18,25 +18,37 @@
 //! group can also train at its own batch (`[group.NAME] batch_per_gpu`),
 //! so a mixed T4/V100 site no longer understates the larger card.
 //!
-//! # Work stealing
+//! # Elasticity
 //!
 //! The epoch barrier serializes a window on its slowest lane: a lane
 //! whose remaining runway cannot fit another full epoch before the
 //! benchmark deadline would classically start a doomed trial whose
 //! first epoch never completes — wasted devices, exactly the
-//! fixed-synchronization pitfall AIPerf's elastic design avoids. With
-//! `BenchmarkConfig::work_stealing` on, such a lane instead *steals
-//! queued trial work* from the most-loaded sibling lane in its node
-//! (all lanes of a node belong to the same topology node group and
-//! share its NVLink domain, which is what makes joining a trial's
-//! allreduce ring cheap): it attaches to that trial as extra
-//! data-parallel devices, the victim's remaining epochs re-time with
-//! the wider ring, and the helper is released when the trial
-//! finalizes. Victims are picked by largest remaining work, scanned in
-//! a fixed seed-derived rotation, and the whole exchange happens
-//! inside the node's own event loop — so `Engine::Sequential` and
-//! `Engine::Parallel` remain bit-identical, enforced by
-//! `rust/tests/engine_parity.rs`.
+//! fixed-synchronization pitfall AIPerf's elastic design avoids. The
+//! placement *policies* that recover that tail live in
+//! [`crate::coordinator::sched`]; this shard only executes them:
+//!
+//! * **Work stealing** (`BenchmarkConfig::work_stealing`): the lane
+//!   attaches to the most-loaded sibling lane's trial as extra
+//!   data-parallel devices (all lanes of a node share its NVLink
+//!   domain, which is what makes joining the allreduce ring cheap);
+//!   the victim's remaining epochs re-time with the wider ring and the
+//!   helper is released at trial finalize. Victims come from the
+//!   seed-derived scan of [`crate::coordinator::sched::StealScheduler`],
+//!   resolved inside the node's own event loop — so `Engine::Sequential`
+//!   and `Engine::Parallel` remain bit-identical, enforced by
+//!   `rust/tests/engine_parity.rs`.
+//! * **Inter-group migration** (`BenchmarkConfig::migration`): when no
+//!   sibling has a trial to steal into, the lane still runs its search
+//!   loop, stages the proposed candidate's checkpoint to NFS, posts it
+//!   into the shard's migrant outbox, and *parks*. At the next epoch
+//!   barrier the cluster-wide
+//!   [`crate::coordinator::sched::ElasticScheduler`] may dispatch the
+//!   candidate to an idle lane of another node group, which adopts it
+//!   via [`SlaveShard::accept_migrant`] — re-timed under the
+//!   destination group's device model with its gradient ring over
+//!   InfiniBand. A parked lane idles (visible in the per-lane busy
+//!   fractions) until it adopts a migrant itself.
 //!
 //! Shards advance independently inside an epoch-barrier window
 //! (`BenchmarkConfig::sync_interval_s`) against a frozen
@@ -52,6 +64,9 @@ use crate::config::BenchmarkConfig;
 use crate::coordinator::buffer::{ArchBuffer, Candidate};
 use crate::coordinator::dispatcher::Dispatcher;
 use crate::coordinator::history::ModelRecord;
+use crate::coordinator::sched::{
+    adapted_batch, LaneLoad, MigrantCandidate, MigrantFit, StealScheduler,
+};
 use crate::coordinator::trial::{ActiveTrial, TrialStatus};
 use crate::flops::OpWeights;
 use crate::hpo::{aiperf_space, Optimizer, Tpe};
@@ -185,6 +200,23 @@ struct SubShard {
     helpers: Vec<usize>,
     /// `Some(victim)` while this lane's devices are lent to a sibling.
     assisting: Option<usize>,
+    /// Out of runway with nothing to steal: the lane posted its proposed
+    /// candidate into the migrant outbox and idles until the elastic
+    /// scheduler hands it a migrated trial (or the run ends).
+    parked: bool,
+    /// The current trial was adopted from another group: it syncs over
+    /// InfiniBand, is never a steal victim, and skips the lane-local TPE
+    /// feedback at finalize (the hyperparameters were the source lane's).
+    migrated: bool,
+    /// Cross-node sync penalty per completed epoch of the migrated trial
+    /// (accrued into the shard's migration-overhead counter).
+    migrant_epoch_overhead_s: f64,
+    /// When the lane last became busy (trial start, steal attach, or
+    /// migrant adoption); `None` while idle.
+    busy_since: Option<f64>,
+    /// Accumulated busy seconds over the run (per-lane utilization
+    /// telemetry — the recovered tail the elastic passes make visible).
+    busy_s: f64,
 }
 
 /// One slave node's complete simulation state: `k` sub-shard lanes over
@@ -196,13 +228,34 @@ pub struct SlaveShard {
     queue: EventQueue<ShardEvent>,
     buffer: ArchBuffer,
     pub nfs: NfsStats,
-    /// Seed-derived stream ordering the steal scheduler's victim scan.
-    steal_rng: Rng,
-    work_stealing: bool,
+    /// This node's slice of the elastic scheduler: the seed-derived
+    /// intra-node steal pass (see `coordinator::sched::steal`).
+    steal: StealScheduler,
+    /// Whether this node can migrate work out at all: migration is
+    /// enabled cluster-wide AND at least one *other* group accepts
+    /// migrants. Without an eligible destination, staging a checkpoint
+    /// and parking would strand the lane and charge overhead that can
+    /// never place — the lane keeps the classic behavior instead.
+    migration: bool,
     /// Steal events performed by this node's lanes (report counter).
     pub steals: u64,
     /// Candidates skipped because no batch size fit the accelerator.
     pub oom_skips: u64,
+    /// Count of penalty records fed back for OOM-skipped candidates
+    /// (strides their synthetic record ids).
+    oom_penalties: u64,
+    /// Trials this node's lanes dispatched to other groups (placed by the
+    /// elastic scheduler at a barrier).
+    pub migrations_out: u64,
+    /// Trials this node's lanes adopted from other groups.
+    pub migrations_in: u64,
+    /// Seconds of migration overhead charged on this node: NFS checkpoint
+    /// staging (both directions) plus the cross-node gradient-sync
+    /// penalty of adopted trials' completed epochs.
+    pub migration_overhead_s: f64,
+    /// Candidates staged for cross-group adoption, drained by the elastic
+    /// scheduler at each epoch barrier.
+    pub migrant_outbox: Vec<MigrantCandidate>,
     subs: Vec<SubShard>,
     /// Window outputs, drained by the coordinator at each barrier.
     pub completed: Vec<ModelRecord>,
@@ -246,6 +299,11 @@ impl SlaveShard {
                 epoch_end_t: 0.0,
                 helpers: Vec::new(),
                 assisting: None,
+                parked: false,
+                migrated: false,
+                migrant_epoch_overhead_s: 0.0,
+                busy_since: None,
+                busy_s: 0.0,
             });
         }
         for s in 0..k {
@@ -260,10 +318,21 @@ impl SlaveShard {
             // small constant capacity captures the actual invariant.
             buffer: ArchBuffer::new(4),
             nfs: NfsStats::default(),
-            steal_rng: derive(cfg.seed, "steal", node as u64),
-            work_stealing: cfg.work_stealing,
+            steal: StealScheduler::new(cfg, node),
+            migration: cfg.migration
+                && cfg
+                    .topology
+                    .groups
+                    .iter()
+                    .enumerate()
+                    .any(|(i, g)| i != group && g.accepts_migrants),
             steals: 0,
             oom_skips: 0,
+            oom_penalties: 0,
+            migrations_out: 0,
+            migrations_in: 0,
+            migration_overhead_s: 0.0,
+            migrant_outbox: Vec::new(),
             subs,
             completed: Vec::new(),
             epoch_ops: Vec::new(),
@@ -301,6 +370,140 @@ impl SlaveShard {
             .collect()
     }
 
+    /// Whether lane `sub` is parked — idle after a migrate-out, awaiting
+    /// an adopted trial or the end of the run. The destination predicate
+    /// of the elastic scheduler's migration pass.
+    pub fn lane_parked(&self, sub: usize) -> bool {
+        let s = &self.subs[sub];
+        s.parked && s.trial.is_none() && s.assisting.is_none()
+    }
+
+    /// Accumulated busy seconds of lane `sub` — the migration pass's
+    /// least-loaded metric (open intervals of in-flight trials are not
+    /// yet included).
+    pub fn lane_busy_seconds(&self, sub: usize) -> f64 {
+        self.subs[sub].busy_s
+    }
+
+    /// Counter hook for the elastic scheduler: one of this node's staged
+    /// candidates was dispatched to another group.
+    pub fn note_migration_out(&mut self) {
+        self.migrations_out += 1;
+    }
+
+    /// Per-lane busy fraction over a run of `duration_s` seconds: time
+    /// holding a trial (setup included, doomed trials too — the devices
+    /// are occupied either way), assisting a sibling, or training an
+    /// adopted migrant. Search-only gaps and parked tails read as idle —
+    /// exactly the headroom the steal/migration passes recover. Lanes
+    /// still busy at the cutoff accrue up to `duration_s`.
+    pub fn lane_busy_fractions(&self, duration_s: f64) -> Vec<f64> {
+        self.subs
+            .iter()
+            .map(|s| {
+                let mut busy = s.busy_s;
+                if let Some(b) = s.busy_since {
+                    busy += (duration_s - b).max(0.0);
+                }
+                if duration_s > 0.0 {
+                    (busy / duration_s).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Adopt a migrated trial on lane `sub` (elastic-scheduler dispatch
+    /// at an epoch barrier, time `t`): charge the NFS checkpoint
+    /// stage-in, re-time the trial under this group's device model and
+    /// batch with its gradient ring over InfiniBand, and schedule its
+    /// first epoch. `fit` is the scheduler's priced evaluation of this
+    /// exact destination ([`MigrantCandidate::fit_on`]). Returns whether
+    /// the lane actually adopted the trial — the defensive refusal path
+    /// charges nothing, so the scheduler's counters stay conserved.
+    pub fn accept_migrant(
+        &mut self,
+        t: f64,
+        sub: usize,
+        m: &MigrantCandidate,
+        fit: &MigrantFit,
+        ctx: &SimContext,
+    ) -> bool {
+        debug_assert!(self.lane_parked(sub), "migrant dispatched to a busy lane");
+        debug_assert_ne!(self.group, m.from_group, "migration is inter-group");
+        let cfg = ctx.cfg;
+        let timing = ctx.timing(self.group);
+        let node = &timing.node;
+        let local = match self.subs[sub].dispatcher.assign(self.node) {
+            Ok(id) => id,
+            Err(_) => return false, // defensive: lane already holds a trial
+        };
+        self.subs[sub].current_local = local;
+        // Stage-in, counters charged here (the placement probe priced the
+        // identical transfer without charging them).
+        let stage = timing
+            .nfs
+            .stage_in_seconds(m.checkpoint_bytes(cfg), &mut self.nfs);
+        debug_assert_eq!(stage.to_bits(), fit.stage_s.to_bits());
+        let trial_id = local * ctx.total_units + self.subs[sub].unit;
+        let gpus = self.subs[sub].gpus;
+        let epoch = timing.epoch_spanning(
+            m.ops.train_per_image(),
+            m.params,
+            cfg.dataset.train_images,
+            fit.batch,
+            gpus,
+            true,
+        );
+        let val_s = timing.validation_with_gpus(
+            m.ops.val_per_image(),
+            cfg.dataset.val_images,
+            fit.batch,
+            gpus,
+        );
+        let total_epoch_s = epoch.total_s + val_s;
+        // The IB-vs-NVLink sync delta this trial pays per epoch, accrued
+        // into the overhead counter as epochs actually complete.
+        let penalty_per_epoch =
+            timing.network.migration_sync_penalty_seconds(gpus, m.params) * epoch.steps as f64;
+        // Same association as the placement probe's runway check, so the
+        // scheduled first epoch lands exactly where the probe priced it.
+        let end_t = t + stage + fit.setup_s + total_epoch_s;
+        let mem_fraction = (node.gpu.memory_demand(m.params, m.activation_elems, fit.batch) as f64
+            / node.gpu.memory_bytes as f64)
+            .min(1.0);
+        let lane = &mut self.subs[sub];
+        lane.parked = false;
+        lane.migrated = true;
+        lane.migrant_epoch_overhead_s = penalty_per_epoch;
+        debug_assert!(lane.busy_since.is_none(), "adopting lane was already busy");
+        lane.busy_since = Some(t);
+        lane.epoch_seconds = total_epoch_s;
+        lane.own_epoch_s = total_epoch_s;
+        lane.busy_fraction =
+            (epoch.compute_s + val_s) / total_epoch_s * epoch.gpu_busy_fraction.max(0.9);
+        lane.mem_fraction = mem_fraction;
+        lane.setup_until = t + stage + fit.setup_s;
+        lane.trial = Some(ActiveTrial::new(
+            trial_id,
+            m.arch.clone(),
+            arch_id(&m.arch.signature()),
+            m.hp,
+            m.ops,
+            fit.batch,
+            m.round,
+            m.budget,
+        ));
+        lane.epoch_gen += 1;
+        lane.epoch_end_t = end_t;
+        let gen = lane.epoch_gen;
+        self.queue.schedule(end_t, ShardEvent::EpochDone { sub, gen });
+        self.migrations_in += 1;
+        self.migration_overhead_s += stage;
+        true
+    }
+
     /// Advance this shard's local event loop up to (and including)
     /// `window_end`. Events past the benchmark duration stay unpopped.
     pub fn run_until(&mut self, window_end: f64, snapshot: &HistorySnapshot, ctx: &SimContext) {
@@ -317,12 +520,14 @@ impl SlaveShard {
         }
     }
 
-    /// The steal scheduler: when `sub` has no runway for another full
-    /// epoch before the benchmark deadline, attach it to the most-loaded
-    /// sibling lane's trial instead of starting a doomed one. Returns
+    /// The intra-node steal pass: when `sub` has no runway for another
+    /// full epoch before the benchmark deadline, attach it to the
+    /// most-loaded sibling lane's trial instead of starting a doomed
+    /// one. The decision (runway predicate + seed-derived victim scan)
+    /// belongs to [`StealScheduler`]; this method applies it. Returns
     /// `true` when the lane was lent out.
     fn try_steal(&mut self, t: f64, sub: usize, ctx: &SimContext) -> bool {
-        if !self.work_stealing || self.subs.len() < 2 {
+        if !self.steal.enabled || self.subs.len() < 2 {
             return false;
         }
         let cfg = ctx.cfg;
@@ -330,39 +535,31 @@ impl SlaveShard {
         // that never trained yet (run start) has no estimate and must
         // start a real trial.
         let est = self.subs[sub].own_epoch_s;
-        if est <= 0.0 {
-            return false;
-        }
         let host = &ctx.node(self.group).host;
-        if t + host.search_seconds + host.setup_seconds + est <= cfg.duration_s {
+        if !StealScheduler::out_of_runway(
+            t,
+            host.search_seconds,
+            host.setup_seconds,
+            est,
+            cfg.duration_s,
+        ) {
             return false;
         }
-        // Victim scan in a fixed seed-derived rotation; the most-loaded
-        // sibling (largest projected remaining trial work) wins, with the
-        // rotation deciding ties deterministically.
-        let k = self.subs.len();
-        let start = self.steal_rng.gen_range_usize(0, k);
-        let mut best: Option<(usize, f64)> = None;
-        for j in 0..k {
-            let i = (start + j) % k;
-            if i == sub {
-                continue;
-            }
-            let s = &self.subs[i];
-            let Some(trial) = s.trial.as_ref() else {
-                continue;
-            };
-            let remaining_epochs = trial.epoch_budget.saturating_sub(trial.epoch + 1) as f64;
-            let load = (s.epoch_end_t - t).max(0.0) + remaining_epochs * s.epoch_seconds;
-            let better = match best {
-                None => true,
-                Some((_, l)) => load > l,
-            };
-            if better {
-                best = Some((i, load));
-            }
-        }
-        let Some((victim, _)) = best else {
+        let loads: Vec<LaneLoad> = self
+            .subs
+            .iter()
+            .map(|s| LaneLoad {
+                busy: s.trial.is_some(),
+                migrated: s.migrated,
+                epoch_end_t: s.epoch_end_t,
+                epoch_seconds: s.epoch_seconds,
+                remaining_epochs: s
+                    .trial
+                    .as_ref()
+                    .map_or(0.0, |tr| tr.epoch_budget.saturating_sub(tr.epoch + 1) as f64),
+            })
+            .collect();
+        let Some(victim) = self.steal.pick_victim(sub, t, &loads) else {
             return false;
         };
 
@@ -427,27 +624,32 @@ impl SlaveShard {
         me.busy_fraction = busy;
         me.mem_fraction = mem;
         me.setup_until = t;
+        debug_assert!(me.busy_since.is_none(), "helper lane was already busy");
+        me.busy_since = Some(t);
         true
     }
 
-    /// The CPU search loop + trial start (paper §4.3 steps 3–5), or a
-    /// steal when the lane is out of runway.
-    fn on_node_ready(&mut self, t: f64, sub: usize, snapshot: &HistorySnapshot, ctx: &SimContext) {
-        if self.subs[sub].trial.is_some() || self.subs[sub].assisting.is_some() {
-            return; // defensive: lane already busy
-        }
-        if self.try_steal(t, sub, ctx) {
-            return;
-        }
+    /// The CPU search loop (paper §4.3 steps 3–4): advance the lane's
+    /// round, propose a candidate from the frozen snapshot plus the
+    /// node's own completions since the last barrier (a node always sees
+    /// its own results), push/drain it through the buffer, charge the
+    /// search + NFS setup time, and suggest hyperparameters (defaults in
+    /// warm-up, TPE afterwards). Shared by the native trial start and
+    /// the migrate-out path so the two cannot drift — same RNG draws,
+    /// same NFS charges. Returns `(candidate, setup seconds, hp, round)`.
+    fn search_and_setup(
+        &mut self,
+        t: f64,
+        sub: usize,
+        snapshot: &HistorySnapshot,
+        ctx: &SimContext,
+    ) -> (Architecture, f64, HpPoint, u64) {
         let cfg = ctx.cfg;
         self.subs[sub].round += 1;
         let round = self.subs[sub].round;
 
-        // --- CPU search loop: propose a candidate into the buffer. The
-        // lane ranks the frozen global snapshot plus its node's own
-        // completions since the last barrier (a node always sees its own
-        // results). The snapshot is only cloned when there are local
-        // completions to append — the common case borrows it directly.
+        // The snapshot is only cloned when there are local completions to
+        // append — the common case borrows it directly.
         let arch = if snapshot.ranked.is_empty() && self.completed.is_empty() {
             ctx.initial.clone()
         } else if self.completed.is_empty() {
@@ -457,6 +659,7 @@ impl SlaveShard {
             ranked.extend(self.completed.iter().map(|r| RankedModel {
                 arch: r.arch.clone(),
                 accuracy: r.accuracy,
+                penalty: r.penalty,
             }));
             ctx.policy.propose(&ranked, &mut self.subs[sub].rng).0
         };
@@ -475,7 +678,6 @@ impl SlaveShard {
         setup += timing.nfs.write_seconds(2048, &mut self.nfs);
         setup += timing.nfs.read_seconds(2048, &mut self.nfs);
 
-        // --- Hyperparameters: defaults in warm-up, TPE afterwards.
         let hp = if cfg.warmup.hpo_active(round) {
             let lane = &mut self.subs[sub];
             let c = lane.tpe.suggest(&mut lane.rng);
@@ -486,32 +688,143 @@ impl SlaveShard {
         } else {
             HpPoint::default()
         };
+        (cand, setup, hp, round)
+    }
+
+    /// The migrate-out path: `sub` is out of runway and found no sibling
+    /// trial to steal into. With migration enabled, run the same search
+    /// loop a native start would, stage the candidate's checkpoint out
+    /// to NFS, post it into the migrant outbox for the elastic
+    /// scheduler's next barrier pass, and park the lane. Returns `true`
+    /// when the lane parked.
+    fn try_migrate_out(
+        &mut self,
+        t: f64,
+        sub: usize,
+        snapshot: &HistorySnapshot,
+        ctx: &SimContext,
+    ) -> bool {
+        if !self.migration {
+            return false;
+        }
+        let cfg = ctx.cfg;
+        let est = self.subs[sub].own_epoch_s;
+        let host = &ctx.node(self.group).host;
+        if !StealScheduler::out_of_runway(
+            t,
+            host.search_seconds,
+            host.setup_seconds,
+            est,
+            cfg.duration_s,
+        ) {
+            return false;
+        }
+        let (cand, _setup, hp, round) = self.search_and_setup(t, sub, snapshot, ctx);
+        let stats = cand.stats(&ctx.weights);
+        let m = MigrantCandidate {
+            arch: cand,
+            hp,
+            params: stats.params,
+            activation_elems: stats.activation_elems,
+            ops: stats.ops,
+            round,
+            budget: cfg.warmup.epochs_for_round(round),
+            from_node: self.node,
+            from_group: self.group,
+            posted_at: t,
+        };
+        let stage = ctx
+            .timing(self.group)
+            .nfs
+            .stage_out_seconds(m.checkpoint_bytes(cfg), &mut self.nfs);
+        self.migration_overhead_s += stage;
+        self.migrant_outbox.push(m);
+        let lane = &mut self.subs[sub];
+        lane.parked = true;
+        lane.setup_until = t; // telemetry reads the idle dent from here on
+        true
+    }
+
+    /// Feed an OOM-skipped candidate back into the ranked history as a
+    /// zero-accuracy penalty entry, so parent selection learns the
+    /// memory boundary instead of re-proposing the same unfittable
+    /// neighborhood (the record merges into the shared history at the
+    /// next barrier; `SearchPolicy` never selects penalty entries as
+    /// parents while real ones exist). The synthetic id lives in the
+    /// top-bit range so it can never collide with a dispatched trial id.
+    fn push_oom_penalty(
+        &mut self,
+        t: f64,
+        arch: Architecture,
+        params: u64,
+        hp: HpPoint,
+        round: u64,
+        ctx: &SimContext,
+    ) {
+        let id = (1u64 << 63) | (self.oom_penalties * ctx.total_units + self.node as u64);
+        self.oom_penalties += 1;
+        self.completed.push(ModelRecord {
+            id,
+            signature: arch.signature(),
+            params,
+            measured_accuracy: 0.0,
+            arch,
+            accuracy: 0.0,
+            predicted: true,
+            penalty: true,
+            node: self.node,
+            round,
+            epochs_trained: 0,
+            ops: 0.0,
+            dropout: hp.dropout,
+            kernel: hp.kernel,
+            completed_at: t,
+        });
+    }
+
+    /// The CPU search loop + trial start (paper §4.3 steps 3–5), or a
+    /// steal / migrate-out when the lane is out of runway.
+    fn on_node_ready(&mut self, t: f64, sub: usize, snapshot: &HistorySnapshot, ctx: &SimContext) {
+        if self.subs[sub].trial.is_some()
+            || self.subs[sub].assisting.is_some()
+            || self.subs[sub].parked
+        {
+            return; // defensive: lane already busy or parked
+        }
+        if self.try_steal(t, sub, ctx) {
+            return;
+        }
+        if self.try_migrate_out(t, sub, snapshot, ctx) {
+            return;
+        }
+        let cfg = ctx.cfg;
+        let (cand, setup, hp, round) = self.search_and_setup(t, sub, snapshot, ctx);
 
         // --- Memory adaption: halve the batch until the model fits this
         // group's accelerator (a 16 GB T4 adapts sooner than a 32 GB
-        // V100). When the halving ladder bottoms out without fitting,
-        // clamp to the exact largest fitting batch instead of silently
-        // simulating an OOM configuration — and when no batch fits at
-        // all, skip the candidate (charging the wasted search/setup) and
-        // propose a different one.
+        // V100), clamping to the exact fit boundary when the ladder
+        // bottoms out (`sched::adapted_batch` — the same policy the
+        // migration pass re-runs against a destination device). When no
+        // batch fits at all, skip the candidate (charging the wasted
+        // search/setup), feed a penalty into the ranked history and the
+        // TPE loss so the search learns the memory boundary, and propose
+        // a different candidate.
         let stats = cand.stats(&ctx.weights);
         let (params, act, ops) = (stats.params, stats.activation_elems, stats.ops);
+        let timing = ctx.timing(self.group);
+        let node = &timing.node;
         let batch_cfg = cfg.group_batch(self.group);
-        let mut batch = batch_cfg;
-        while batch > 8 && !node.gpu.fits(params, act, batch) {
-            batch /= 2;
-        }
-        if !node.gpu.fits(params, act, batch) {
-            match node.gpu.max_fitting_batch(params, act) {
-                Some(b) => batch = b.min(batch_cfg),
-                None => {
-                    self.oom_skips += 1;
-                    self.subs[sub].round -= 1; // the skipped proposal is not a round
-                    self.queue.schedule(t + setup, ShardEvent::NodeReady { sub });
-                    return;
-                }
+        let Some(batch) = adapted_batch(&node.gpu, params, act, batch_cfg) else {
+            self.oom_skips += 1;
+            if cfg.warmup.hpo_active(round) {
+                let lane = &mut self.subs[sub];
+                lane.tpe.observe(vec![hp.dropout, hp.kernel], 1.0);
             }
-        }
+            self.push_oom_penalty(t, cand, params, hp, round, ctx);
+            self.subs[sub].round -= 1; // the skipped proposal is not a round
+            self.queue.schedule(t + setup, ShardEvent::NodeReady { sub });
+            return;
+        };
         let local = match self.subs[sub].dispatcher.assign(self.node) {
             Ok(id) => id,
             Err(_) => return, // defensive: lane already holds a trial
@@ -542,6 +855,8 @@ impl SlaveShard {
             (epoch.compute_s + val_s) / total_epoch_s * epoch.gpu_busy_fraction.max(0.9);
         lane.mem_fraction = mem_fraction;
         lane.setup_until = t + setup;
+        debug_assert!(lane.busy_since.is_none(), "starting lane was already busy");
+        lane.busy_since = Some(t);
         lane.trial = Some(ActiveTrial::new(
             trial_id,
             cand.clone(),
@@ -566,6 +881,8 @@ impl SlaveShard {
             return; // superseded by a steal re-timing
         }
         let cfg = ctx.cfg;
+        let migrated = self.subs[sub].migrated;
+        let migrant_overhead = self.subs[sub].migrant_epoch_overhead_s;
         let Some(trial) = self.subs[sub].trial.as_mut() else {
             return;
         };
@@ -573,6 +890,11 @@ impl SlaveShard {
         let epoch_ops = trial.ops.train_per_image() as f64 * cfg.dataset.train_images as f64
             + trial.ops.val_per_image() as f64 * cfg.dataset.val_images as f64;
         self.epoch_ops.push((t, epoch_ops));
+        if migrated {
+            // Each completed epoch of an adopted trial paid the IB-ring
+            // sync penalty over its steps.
+            self.migration_overhead_s += migrant_overhead;
+        }
 
         let acc = ctx.surrogate.accuracy(
             trial.arch_id,
@@ -605,7 +927,10 @@ impl SlaveShard {
                 * cfg.dataset.train_images as f64
                 + trial.ops.val_per_image() as f64 * cfg.dataset.val_images as f64)
                 * trial.epoch as f64;
-            if cfg.warmup.hpo_active(trial.round) {
+            // An adopted trial's hyperparameters came from the source
+            // lane's TPE; feeding them into this lane's model would
+            // corrupt its stream, so only native trials observe.
+            if cfg.warmup.hpo_active(trial.round) && !migrated {
                 let lane = &mut self.subs[sub];
                 lane.tpe.observe(
                     vec![trial.hp.dropout, trial.hp.kernel],
@@ -620,6 +945,7 @@ impl SlaveShard {
                 arch: trial.arch,
                 accuracy,
                 predicted,
+                penalty: false,
                 node: self.node,
                 round: trial.round,
                 epochs_trained: trial.epoch,
@@ -631,11 +957,23 @@ impl SlaveShard {
             let local = self.subs[sub].current_local;
             let _ = self.subs[sub].dispatcher.complete(local, self.node);
             debug_assert!(self.subs[sub].dispatcher.check_invariants().is_ok());
+            // Close the lane's busy interval and clear any migration
+            // markers before it reschedules itself.
+            let lane = &mut self.subs[sub];
+            lane.migrated = false;
+            lane.migrant_epoch_overhead_s = 0.0;
+            lane.parked = false;
+            if let Some(b) = lane.busy_since.take() {
+                lane.busy_s += t - b;
+            }
             // Release any helper lanes back to their own search loops
             // before this lane reschedules itself.
             let helpers: Vec<usize> = std::mem::take(&mut self.subs[sub].helpers);
             for h in helpers {
                 self.subs[h].assisting = None;
+                if let Some(b) = self.subs[h].busy_since.take() {
+                    self.subs[h].busy_s += t - b;
+                }
                 self.queue.schedule(t, ShardEvent::NodeReady { sub: h });
             }
             self.queue.schedule(t, ShardEvent::NodeReady { sub });

@@ -112,6 +112,7 @@ impl SlaveWorker {
                     .map(|m| RankedModel {
                         arch: self.rebuild(m),
                         accuracy: m.accuracy,
+                        penalty: false,
                     })
                     .collect();
                 policy.propose(&ranked, &mut rng).0

@@ -21,12 +21,16 @@ USAGE:
     aiperf run   [--scenario NAME] [--nodes N] [--hours H] [--seed S]
                  [--engine sequential|parallel] [--config FILE]
                  [--subshards K] [--work-stealing [on|off]]
+                 [--migration [on|off]]
                  [--json OUT] [--csv OUT] [--chart] [--list-scenarios]
         Simulated benchmark on the modelled cluster (Figs 4-6, 9-12).
         Scenario presets reproduce the paper's evaluated systems:
           smoke         2 x 8 V100, 2 h — CI-sized sanity run
+          elastic-mixed 2 x 8 T4 + 2 x 8 V100, imbalanced deadline —
+                        cross-group migration showcase
           t4v100-mixed  2 x 8 T4 + 2 x 8 V100, 6 h — heterogeneous site
-                        (per-group batch, 2 sub-shards, work stealing)
+                        (per-group batch, 2 sub-shards, stealing +
+                        migration)
           t4-32         4 x 8 NVIDIA T4, 12 h (paper: 56.1 Tera-OPS)
           v100-128      16 x 8 V100 NVLink, 12 h (the paper testbed)
           ascend-4096   512 x 8 Ascend 910, 12 h (paper: 194.53 Peta-OPS)
@@ -38,7 +42,16 @@ USAGE:
         independent trial lanes (groups may override per section), and
         `--work-stealing` lets a lane out of runway join the most-loaded
         sibling lane's trial instead of starting a doomed one — both
-        deterministic. The engine defaults to `parallel` (sharded slave
+        deterministic. `--migration` adds the cluster-wide elastic pass:
+        a lane with no runway and no sibling to steal from stages its
+        proposed candidate to NFS, and at the next epoch barrier an idle
+        lane of another node group adopts it (unless that group sets
+        `accepts_migrants = false`), re-timed under the destination's
+        device model with its gradient ring over InfiniBand. A run with
+        no other accepting group is unaffected by the flag. Per-group
+        migrations in/out and overhead seconds appear in the summary,
+        JSON, and sweep CSV, and the JSON report adds per-lane busy
+        fractions. The engine defaults to `parallel` (sharded slave
         nodes on a thread pool); `sequential` is bit-identical for the
         same seed.
     aiperf sweep [--scenarios A,B,C] [--hours H] [--seed S]
@@ -75,7 +88,7 @@ struct Flags {
 /// Flags that take no value (or an optional on/off); every other flag
 /// still requires one, so a forgotten value fails up front instead of
 /// mid-run.
-const BOOLEAN_FLAGS: &[&str] = &["chart", "list-scenarios", "work-stealing"];
+const BOOLEAN_FLAGS: &[&str] = &["chart", "list-scenarios", "work-stealing", "migration"];
 
 /// Parse an on/off flag value (`--work-stealing`, `--work-stealing on`).
 fn parse_onoff(flag: &str, v: &str) -> Result<bool> {
@@ -154,7 +167,7 @@ impl Flags {
 fn cmd_run(flags: &Flags) -> Result<()> {
     flags.reject_unknown(&[
         "scenario", "nodes", "hours", "seed", "engine", "config", "json", "csv", "chart",
-        "list-scenarios", "subshards", "work-stealing",
+        "list-scenarios", "subshards", "work-stealing", "migration",
     ])?;
     if flags.get("list-scenarios").is_some() {
         cmd_scenarios();
@@ -194,6 +207,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     }
     if let Some(v) = flags.get("work-stealing") {
         cfg.work_stealing = parse_onoff("work-stealing", v)?;
+    }
+    if let Some(v) = flags.get("migration") {
+        cfg.migration = parse_onoff("migration", v)?;
     }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 

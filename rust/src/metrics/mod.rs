@@ -16,6 +16,6 @@ pub mod sweep;
 pub mod telemetry;
 
 pub use chart::{ascii_chart, csv};
-pub use report::{BenchmarkReport, GroupBreakdown};
+pub use report::{BenchmarkReport, GroupBreakdown, LaneUtil};
 pub use score::{regulated_score, validate_result, ScoreSample, Validity};
 pub use telemetry::{Telemetry, TelemetrySample};

@@ -26,6 +26,16 @@ pub struct GroupBreakdown {
     /// Candidates skipped because no batch size fit the accelerator
     /// (instead of silently simulating an OOM configuration).
     pub oom_skips: u64,
+    /// Trials this group's lanes adopted from other groups (the elastic
+    /// scheduler's inter-group migration pass).
+    pub migrations_in: u64,
+    /// Trials this group's lanes proposed that were dispatched to other
+    /// groups.
+    pub migrations_out: u64,
+    /// Seconds of migration overhead charged in this group: NFS
+    /// checkpoint staging (both directions) plus the InfiniBand
+    /// gradient-sync penalty of adopted trials' completed epochs.
+    pub migration_overhead_s: f64,
     /// Mean barrier slack, seconds: how far a solo lane's in-flight
     /// epoch overshoots an epoch barrier, averaged over lanes × windows
     /// — the utilization headroom work stealing recovers.
@@ -39,6 +49,23 @@ impl GroupBreakdown {
     }
 }
 
+/// Busy fraction of one sub-shard trial lane over the whole run — the
+/// per-lane utilization view: node aggregates hide the truncated tail a
+/// lane spends idle (parked, or waiting out the deadline), which is
+/// exactly what the steal/migration passes recover.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneUtil {
+    /// Topology group label of the lane's node.
+    pub group: String,
+    /// Global node index.
+    pub node: u64,
+    /// Lane index within its node.
+    pub lane: u64,
+    /// Fraction of the run the lane spent training, assisting a sibling,
+    /// or running an adopted migrant.
+    pub busy_fraction: f64,
+}
+
 #[derive(Debug, Clone)]
 pub struct BenchmarkReport {
     /// Cluster shape: total slave nodes and devices across all groups.
@@ -46,6 +73,9 @@ pub struct BenchmarkReport {
     pub total_gpus: u64,
     /// Per-group OPS contributions, in topology order.
     pub groups: Vec<GroupBreakdown>,
+    /// Per-lane busy fractions, in global lane order (nodes in topology
+    /// order, lanes within each node).
+    pub lane_util: Vec<LaneUtil>,
     /// Run length, seconds.
     pub duration_s: f64,
     /// Hourly score samples (Figs 4–6 series).
@@ -116,7 +146,25 @@ impl BenchmarkReport {
                             ("ops_per_second", num(g.ops_per_second)),
                             ("steals", num(g.steals as f64)),
                             ("oom_skips", num(g.oom_skips as f64)),
+                            ("migrations_in", num(g.migrations_in as f64)),
+                            ("migrations_out", num(g.migrations_out as f64)),
+                            ("migration_overhead_s", num(g.migration_overhead_s)),
                             ("barrier_slack_s", num(g.barrier_slack_s)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "lanes",
+                arr(self
+                    .lane_util
+                    .iter()
+                    .map(|l| {
+                        obj(vec![
+                            ("group", s(l.group.clone())),
+                            ("node", num(l.node as f64)),
+                            ("lane", num(l.lane as f64)),
+                            ("busy_fraction", num(l.busy_fraction)),
                         ])
                     })
                     .collect()),
@@ -185,12 +233,18 @@ impl BenchmarkReport {
     }
 
     /// Per-group OPS breakdown as indented table lines (one per group),
-    /// printed under the summary for heterogeneous runs.
+    /// printed under the summary for heterogeneous runs. Migration
+    /// columns appear whenever the run paid any migration cost —
+    /// including stage-outs whose candidates were never placed — so the
+    /// summary can never hide overhead the JSON/CSV artifacts report.
     pub fn group_table(&self) -> String {
+        let migrated = self.groups.iter().any(|g| {
+            g.migrations_in > 0 || g.migrations_out > 0 || g.migration_overhead_s > 0.0
+        });
         let mut out = String::new();
         for g in &self.groups {
             out.push_str(&format!(
-                "  group {:<12} {:>4} nodes x {:<2} GPUs  ops={:.3e}  mean {:.4} PFLOPS  ({:.1}% of total)  slack={:.0}s steals={} oom_skips={}\n",
+                "  group {:<12} {:>4} nodes x {:<2} GPUs  ops={:.3e}  mean {:.4} PFLOPS  ({:.1}% of total)  slack={:.0}s steals={} oom_skips={}",
                 g.label,
                 g.nodes,
                 g.gpus_per_node,
@@ -205,6 +259,13 @@ impl BenchmarkReport {
                 g.steals,
                 g.oom_skips,
             ));
+            if migrated {
+                out.push_str(&format!(
+                    " migrations={}in/{}out overhead={:.1}s",
+                    g.migrations_in, g.migrations_out, g.migration_overhead_s,
+                ));
+            }
+            out.push('\n');
         }
         out
     }

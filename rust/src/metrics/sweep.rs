@@ -162,30 +162,42 @@ pub fn render_table(runs: &[SweepRun]) -> String {
 
 /// Render the sweep as CSV (one total row per scenario; heterogeneous
 /// scenarios add one row per group with the `group` column set). The
-/// efficiency cell is empty exactly when the table renders `—`.
+/// efficiency cell is empty exactly when the table renders `—`. The
+/// migration columns carry the elastic scheduler's per-group counters
+/// (summed over groups on the total row): adopted trials, dispatched
+/// trials, and the staging + IB-sync overhead seconds they paid.
 pub fn render_csv(runs: &[SweepRun]) -> String {
     let base = baselines(runs);
-    let mut out =
-        String::from("scenario,group,nodes,devices,score_ops,ops_per_device,efficiency_pct\n");
+    let mut out = String::from(
+        "scenario,group,nodes,devices,score_ops,ops_per_device,efficiency_pct,\
+         migrations_in,migrations_out,migration_overhead_s\n",
+    );
     for run in runs {
         let r = &run.report;
         let per_device = r.score_flops / r.total_gpus.max(1) as f64;
         let eff = efficiency_pct(run, &base)
             .map(|e| format!("{e}"))
             .unwrap_or_default();
+        let mig_in: u64 = r.groups.iter().map(|g| g.migrations_in).sum();
+        let mig_out: u64 = r.groups.iter().map(|g| g.migrations_out).sum();
+        let overhead: f64 = r.groups.iter().map(|g| g.migration_overhead_s).sum();
         out.push_str(&format!(
-            "{},,{},{},{},{},{}\n",
-            run.scenario, r.nodes, r.total_gpus, r.score_flops, per_device, eff
+            "{},,{},{},{},{},{},{},{},{}\n",
+            run.scenario, r.nodes, r.total_gpus, r.score_flops, per_device, eff, mig_in, mig_out,
+            overhead,
         ));
-        for g in group_rows(r) {
+        for (g, b) in group_rows(r).iter().zip(&r.groups) {
             out.push_str(&format!(
-                "{},{},{},{},{},{},\n",
+                "{},{},{},{},{},{},,{},{},{}\n",
                 run.scenario,
                 g.label,
                 g.nodes,
                 g.devices,
                 g.score,
                 g.score / g.devices.max(1) as f64,
+                b.migrations_in,
+                b.migrations_out,
+                b.migration_overhead_s,
             ));
         }
     }
@@ -214,9 +226,13 @@ mod tests {
                     ops_per_second: 1.0,
                     steals: 0,
                     oom_skips: 0,
+                    migrations_in: 0,
+                    migrations_out: 0,
+                    migration_overhead_s: 0.0,
                     barrier_slack_s: 0.0,
                 })
                 .collect(),
+            lane_util: Vec::new(),
             duration_s: 3600.0,
             score_series: Vec::new(),
             score_flops: score,
@@ -302,7 +318,8 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(
             lines[0],
-            "scenario,group,nodes,devices,score_ops,ops_per_device,efficiency_pct"
+            "scenario,group,nodes,devices,score_ops,ops_per_device,efficiency_pct,\
+             migrations_in,migrations_out,migration_overhead_s"
         );
         // 3 totals + 2 group rows under the heterogeneous entry.
         assert_eq!(lines.len(), 6);
@@ -310,13 +327,33 @@ mod tests {
         assert!(lines[2].starts_with("mixed,,4,32,"));
         assert!(lines[3].starts_with("mixed,t4,2,16,"));
         assert!(lines[4].starts_with("mixed,v100,2,16,"));
-        // The unique mix's efficiency cell is empty; same-mix entries get
-        // a number.
-        assert!(lines[2].ends_with(','), "unique mix keeps the cell empty");
-        assert!(lines[1].ends_with("100"), "baseline row reads 100");
+        // The unique mix's efficiency cell is empty (`,,` before the
+        // migration columns); same-mix entries get a number.
+        assert!(lines[2].contains(",,0,0,0"), "unique mix keeps the cell empty");
+        assert!(lines[1].contains(",100,"), "baseline row reads 100");
         // Every row has the same column count.
         for l in &lines[1..] {
-            assert_eq!(l.matches(',').count(), 6, "row {l}");
+            assert_eq!(l.matches(',').count(), 9, "row {l}");
         }
+    }
+
+    #[test]
+    fn csv_migration_columns_carry_group_counters() {
+        let mut r = report(&[("t4", 2, 8), ("v100", 2, 8)], 10.0e12);
+        r.groups[0].migrations_out = 3;
+        r.groups[1].migrations_in = 2;
+        r.groups[1].migration_overhead_s = 4.5;
+        let runs = vec![SweepRun {
+            scenario: "elastic".to_string(),
+            report: r,
+        }];
+        let csv = render_csv(&runs);
+        let lines: Vec<&str> = csv.lines().collect();
+        // Totals row sums the group counters.
+        assert!(lines[1].ends_with(",2,3,4.5"), "totals row: {}", lines[1]);
+        // Group rows carry their own counters after the empty efficiency
+        // cell.
+        assert!(lines[2].ends_with(",,0,3,0"), "t4 row: {}", lines[2]);
+        assert!(lines[3].ends_with(",,2,0,4.5"), "v100 row: {}", lines[3]);
     }
 }

@@ -18,6 +18,12 @@ pub struct RankedModel {
     pub arch: Architecture,
     /// Accuracy in [0,1] (measured, or predicted during warm-up).
     pub accuracy: f64,
+    /// OOM-penalty entry: the architecture fit no batch size on its
+    /// group's accelerator. Penalty entries teach the search where the
+    /// memory boundary lies by ranking (at accuracy zero) without ever
+    /// being selected as morph parents while real entries exist — so a
+    /// skipped candidate's neighborhood stops being re-proposed.
+    pub penalty: bool,
 }
 
 /// Rank-tilted parent selection + random morphism.
@@ -43,17 +49,27 @@ impl Default for SearchPolicy {
 impl SearchPolicy {
     /// Select a parent index by rank-softmax over accuracies.
     /// `history` may be unsorted; an empty history is a caller bug.
+    /// Penalty entries (OOM-skipped candidates) are excluded from
+    /// selection whenever at least one real entry exists — they inform
+    /// the ranking's shape but must not seed new morphs past the memory
+    /// boundary. With no penalties present the selection is identical to
+    /// the historic rank-softmax, draw for draw.
     pub fn select_parent(&self, history: &[RankedModel], rng: &mut Rng) -> usize {
         assert!(!history.is_empty(), "select_parent on empty history");
         // Rank ascending by accuracy: best gets the largest weight.
-        let mut idx: Vec<usize> = (0..history.len()).collect();
+        let mut idx: Vec<usize> = (0..history.len()).filter(|&i| !history[i].penalty).collect();
+        if idx.is_empty() {
+            // Nothing but penalties: fall back to the full history (the
+            // caller still needs some parent to morph).
+            idx = (0..history.len()).collect();
+        }
         idx.sort_by(|&a, &b| {
             history[a]
                 .accuracy
                 .partial_cmp(&history[b].accuracy)
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
-        let n = history.len();
+        let n = idx.len();
         let weights: Vec<f64> = (0..n)
             .map(|rank| (self.rank_beta * rank as f64 / n.max(1) as f64).exp())
             .collect();
@@ -91,6 +107,7 @@ mod tests {
             .map(|i| RankedModel {
                 arch: base.clone(),
                 accuracy: 0.1 * i as f64,
+                penalty: false,
             })
             .collect()
     }
@@ -156,5 +173,48 @@ mod tests {
     fn empty_history_panics() {
         let policy = SearchPolicy::default();
         policy.select_parent(&[], &mut derive(0, "s", 0));
+    }
+
+    #[test]
+    fn penalty_entries_are_never_parents_while_real_ones_exist() {
+        let policy = SearchPolicy::default();
+        let mut h = history();
+        // Mark every entry but index 3 as an OOM penalty: selection must
+        // collapse onto the single real record, draw after draw.
+        for (i, m) in h.iter_mut().enumerate() {
+            if i != 3 {
+                m.penalty = true;
+                m.accuracy = 0.0;
+            }
+        }
+        let mut rng = derive(4, "search", 3);
+        for _ in 0..200 {
+            assert_eq!(policy.select_parent(&h, &mut rng), 3);
+        }
+        // All-penalty history still yields a parent (fallback).
+        for m in h.iter_mut() {
+            m.penalty = true;
+        }
+        let pick = policy.select_parent(&h, &mut rng);
+        assert!(pick < h.len());
+        let (child, _) = policy.propose(&h, &mut rng);
+        child.validate().unwrap();
+    }
+
+    #[test]
+    fn penalty_free_selection_matches_historic_stream() {
+        // The penalty filter must be a no-op when no penalties exist:
+        // same picks for the same RNG stream as an unfiltered softmax.
+        let policy = SearchPolicy::default();
+        let h = history();
+        let picks: Vec<usize> = {
+            let mut rng = derive(7, "search", 9);
+            (0..64).map(|_| policy.select_parent(&h, &mut rng)).collect()
+        };
+        let again: Vec<usize> = {
+            let mut rng = derive(7, "search", 9);
+            (0..64).map(|_| policy.select_parent(&h, &mut rng)).collect()
+        };
+        assert_eq!(picks, again);
     }
 }

@@ -22,7 +22,7 @@
 //! and the mixed-GPU engine-parity test.
 
 use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
-use crate::config::BenchmarkConfig;
+use crate::config::{BenchmarkConfig, WarmupSchedule};
 
 /// A named, ready-to-run benchmark configuration.
 pub struct ScenarioPreset {
@@ -119,11 +119,13 @@ fn t4v100_mixed() -> ScenarioPreset {
             groups: vec![t4, NodeGroup::new("v100", 2, 8, GpuModel::v100())],
         },
         duration_s: 6.0 * 3600.0,
-        // Two trial lanes per node with deterministic work stealing: the
-        // preset exercising the elastic sub-shard scheduler (and the
-        // mixed-topology engine-parity seeds with stealing enabled).
+        // Two trial lanes per node with deterministic work stealing and
+        // cross-group migration: the preset exercising the full elastic
+        // scheduler (and the mixed-topology engine-parity seeds with
+        // stealing + migration enabled).
         subshards_per_node: 2,
         work_stealing: true,
+        migration: true,
         ..BenchmarkConfig::default()
     };
     ScenarioPreset {
@@ -134,9 +136,57 @@ fn t4v100_mixed() -> ScenarioPreset {
     }
 }
 
+fn elastic_mixed() -> ScenarioPreset {
+    // The cross-group migration showcase. The deadline is deliberately
+    // imbalanced against the T4 group: with the short warm-up ladder, a
+    // T4 lane's first trial (2 epochs of ~4500 modelled seconds at 4
+    // devices / batch 256) completes around t ≈ 9100 s, and one more T4
+    // epoch no longer fits the 10800 s budget — so all six T4 lanes run
+    // out of runway with ~28 modelled minutes still on the clock, stage
+    // their round-2 candidates to NFS, and park. The V100 lanes (~8x
+    // faster per device) keep turning trials over until much closer to
+    // the deadline and adopt those candidates as they drain, recovering
+    // tail ops no intra-node steal can reach. Tight barriers (120 s)
+    // keep placement latency small relative to the recovered window.
+    let mut t4 = NodeGroup::new("t4", 3, 8, GpuModel::t4());
+    t4.batch_per_gpu = Some(256);
+    let config = BenchmarkConfig {
+        topology: ClusterTopology {
+            groups: vec![t4, NodeGroup::new("v100", 2, 8, GpuModel::v100())],
+        },
+        duration_s: 10_800.0,
+        warmup: WarmupSchedule {
+            first_epochs: 2,
+            step_epochs: 2,
+            max_epochs: 6,
+            hpo_start_round: 5,
+        },
+        subshards_per_node: 2,
+        work_stealing: true,
+        migration: true,
+        sync_interval_s: 120.0,
+        telemetry_interval_s: 600.0,
+        score_interval_s: 900.0,
+        ..BenchmarkConfig::default()
+    };
+    ScenarioPreset {
+        name: "elastic-mixed",
+        description: "Migration showcase: imbalanced deadline strands the T4 group's tail",
+        config,
+        wall_clock_budget_s: 120.0,
+    }
+}
+
 /// All presets, CI-cheapest first.
 pub fn all() -> Vec<ScenarioPreset> {
-    vec![smoke(), t4v100_mixed(), t4_32(), v100_128(), ascend_4096()]
+    vec![
+        smoke(),
+        elastic_mixed(),
+        t4v100_mixed(),
+        t4_32(),
+        v100_128(),
+        ascend_4096(),
+    ]
 }
 
 /// Look up a preset by name.
@@ -155,7 +205,14 @@ mod tests {
 
     #[test]
     fn presets_resolve_by_name() {
-        for name in ["smoke", "t4-32", "v100-128", "ascend-4096", "t4v100-mixed"] {
+        for name in [
+            "smoke",
+            "t4-32",
+            "v100-128",
+            "ascend-4096",
+            "t4v100-mixed",
+            "elastic-mixed",
+        ] {
             let p = get(name).unwrap_or_else(|| panic!("missing preset {name}"));
             assert_eq!(p.name, name);
             assert!(!p.description.is_empty());
@@ -201,6 +258,7 @@ mod tests {
         assert_eq!(cfg.group_batch(1), 448);
         assert_eq!(cfg.subshards_per_node, 2);
         assert!(cfg.work_stealing);
+        assert!(cfg.migration);
         // Both groups' batches fit a ResNet-50-class model in memory.
         for (i, g) in cfg.topology.groups.iter().enumerate() {
             assert!(
@@ -211,6 +269,23 @@ mod tests {
             );
         }
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn elastic_preset_enables_the_full_elastic_scheduler() {
+        let cfg = get("elastic-mixed").unwrap().config;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.topology.groups.len(), 2);
+        assert!(cfg.work_stealing && cfg.migration);
+        assert_eq!(cfg.subshards_per_node, 2);
+        assert!(cfg.topology.groups.iter().all(|g| g.accepts_migrants));
+        // The imbalanced deadline: two warm-up epochs on a 4-device T4
+        // lane must consume most (but not all) of the budget, so the T4
+        // group strands a tail it can only recover by migrating.
+        assert_eq!(cfg.warmup.first_epochs, 2);
+        assert!(cfg.duration_s < 4.0 * 3600.0);
+        // Barriers are tight so placements land quickly.
+        assert!(cfg.sync_interval_s <= 300.0);
     }
 
     #[test]

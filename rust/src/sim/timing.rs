@@ -61,7 +61,7 @@ impl TimingModel {
     /// [`TimingModel::epoch`] over an explicit data-parallel width — the
     /// sub-shard path, where a trial spans a lane of `gpus` devices (a
     /// fraction of the node, or the lane plus stolen helper lanes) rather
-    /// than the whole node.
+    /// than the whole node. The ring stays inside the NVLink domain.
     pub fn epoch_with_gpus(
         &self,
         ops_per_image: u64,
@@ -69,6 +69,24 @@ impl TimingModel {
         images: u64,
         batch_per_gpu: u64,
         gpus: u64,
+    ) -> EpochTiming {
+        self.epoch_spanning(ops_per_image, params, images, batch_per_gpu, gpus, false)
+    }
+
+    /// [`TimingModel::epoch_with_gpus`] with an explicit allreduce link
+    /// choice: `crosses_nodes` re-times the trial with its gradient ring
+    /// over InfiniBand instead of NVLink — the cross-group migration
+    /// path, where a trial adopted by another node group keeps syncing
+    /// through the cluster fabric (its candidate state and data pipeline
+    /// stay rooted on NFS outside the adopting node's NVLink domain).
+    pub fn epoch_spanning(
+        &self,
+        ops_per_image: u64,
+        params: u64,
+        images: u64,
+        batch_per_gpu: u64,
+        gpus: u64,
+        crosses_nodes: bool,
     ) -> EpochTiming {
         let gpus = gpus.max(1);
         let global_batch = batch_per_gpu * gpus;
@@ -78,7 +96,9 @@ impl TimingModel {
         let input_step = self
             .nfs
             .epoch_input_seconds(global_batch, self.bytes_per_image, gpus);
-        let sync_step = self.network.gradient_sync_seconds(gpus, params, false);
+        let sync_step = self
+            .network
+            .gradient_sync_seconds(gpus, params, crosses_nodes);
 
         let step = compute_step.max(input_step) + sync_step;
         let total = step * steps as f64;
@@ -174,6 +194,23 @@ mod tests {
         let v = t.validation(RESNET_FP_OPS, 50_000, 448);
         let v8 = t.validation_with_gpus(RESNET_FP_OPS, 50_000, 448, 8);
         assert_eq!(v.to_bits(), v8.to_bits());
+    }
+
+    #[test]
+    fn cross_node_ring_slows_the_epoch_by_the_sync_delta() {
+        // A migrated trial syncs over IB: strictly slower than the same
+        // trial inside the NVLink domain, by exactly the allreduce delta
+        // (compute and input are link-independent).
+        let t = TimingModel::default();
+        let local = t.epoch_spanning(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 448, 4, false);
+        let cross = t.epoch_spanning(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 448, 4, true);
+        assert!(cross.total_s > local.total_s);
+        assert_eq!(cross.steps, local.steps);
+        assert_eq!(cross.compute_s.to_bits(), local.compute_s.to_bits());
+        assert!(cross.allreduce_s > local.allreduce_s);
+        // The NVLink-domain variant is exactly the classic method.
+        let classic = t.epoch_with_gpus(RESNET_TRAIN_OPS, RESNET_PARAMS, 1_281_167, 448, 4);
+        assert_eq!(local, classic);
     }
 
     #[test]

@@ -36,9 +36,37 @@ fn assert_bit_identical(a: &BenchmarkReport, b: &BenchmarkReport, label: &str) {
         assert_eq!(x.steals, y.steals, "{label}: group {i} steal count");
         assert_eq!(x.oom_skips, y.oom_skips, "{label}: group {i} oom skips");
         assert_eq!(
+            x.migrations_in, y.migrations_in,
+            "{label}: group {i} migrations in"
+        );
+        assert_eq!(
+            x.migrations_out, y.migrations_out,
+            "{label}: group {i} migrations out"
+        );
+        assert_eq!(
+            x.migration_overhead_s.to_bits(),
+            y.migration_overhead_s.to_bits(),
+            "{label}: group {i} migration overhead"
+        );
+        assert_eq!(
             x.barrier_slack_s.to_bits(),
             y.barrier_slack_s.to_bits(),
             "{label}: group {i} barrier slack"
+        );
+    }
+    assert_eq!(
+        a.lane_util.len(),
+        b.lane_util.len(),
+        "{label}: lane utilization length"
+    );
+    for (i, (x, y)) in a.lane_util.iter().zip(&b.lane_util).enumerate() {
+        assert_eq!(x.group, y.group, "{label}: lane {i} group");
+        assert_eq!(x.node, y.node, "{label}: lane {i} node");
+        assert_eq!(x.lane, y.lane, "{label}: lane {i} index");
+        assert_eq!(
+            x.busy_fraction.to_bits(),
+            y.busy_fraction.to_bits(),
+            "{label}: lane {i} busy fraction"
         );
     }
     assert_eq!(
@@ -179,16 +207,19 @@ fn parity_on_heterogeneous_mixed_gpu_topology() {
 
 #[test]
 fn parity_with_subshards_and_work_stealing_on_mixed_topology() {
-    // The tentpole path: sub-shard lanes (2 per node), per-group batch
-    // overrides, and the steal scheduler all enabled on a heterogeneous
-    // topology. Stealing resolves inside each node's own event loop in a
-    // seed-derived scan order, so it must be invisible to the engine
-    // choice — fresh seeds beyond the classic mixed-parity test.
+    // The elastic path: sub-shard lanes (2 per node), per-group batch
+    // overrides, the steal scheduler, and cross-group migration all
+    // enabled on a heterogeneous topology. Stealing resolves inside each
+    // node's own event loop in a seed-derived scan order and migration
+    // resolves single-threaded at the barriers, so both must be
+    // invisible to the engine choice — fresh seeds beyond the classic
+    // mixed-parity test.
     for seed in [3u64, 11] {
         let mut cfg = aiperf::scenarios::get("t4v100-mixed")
             .expect("mixed preset")
             .config;
         assert!(cfg.work_stealing, "preset enables stealing");
+        assert!(cfg.migration, "preset enables migration");
         assert_eq!(cfg.subshards_per_node, 2, "preset enables sub-shards");
         cfg.duration_s = 3.0 * 3600.0;
         cfg.seed = seed;
@@ -199,6 +230,23 @@ fn parity_with_subshards_and_work_stealing_on_mixed_topology() {
             seq.groups.iter().all(|g| g.ops > 0.0),
             "both groups must contribute ops"
         );
+    }
+}
+
+#[test]
+fn parity_on_elastic_mixed_migration_preset() {
+    // The migration showcase at its full crafted duration: staged
+    // candidates, barrier placements, adopted trials re-timed over IB —
+    // all of it must be a pure function of (seed, config), independent
+    // of the engine. A fresh seed set beyond the other mixed tests.
+    for seed in [0u64, 5, 9] {
+        let mut cfg = aiperf::scenarios::get("elastic-mixed")
+            .expect("elastic preset")
+            .config;
+        cfg.seed = seed;
+        let seq = run_benchmark_with(&cfg, Engine::Sequential);
+        let par = run_benchmark_with(&cfg, Engine::Parallel);
+        assert_bit_identical(&seq, &par, &format!("elastic-mixed seed {seed}"));
     }
 }
 

@@ -385,6 +385,7 @@ fn prop_config_text_roundtrip_identity() {
                     if rng.gen_bool(0.5) {
                         g.subshards_per_node = Some(rng.gen_range_u64(1, 9));
                     }
+                    g.accepts_migrants = rng.gen_bool(0.5);
                     g
                 })
                 .collect(),
@@ -409,6 +410,8 @@ fn prop_config_text_roundtrip_identity() {
             },
             subshards_per_node: rng.gen_range_u64(1, 5),
             work_stealing: rng.gen_bool(0.5),
+            migration: rng.gen_bool(0.5),
+            migration_nfs_bytes_per_param: rng.gen_range_u64(1, 64),
             ..BenchmarkConfig::default()
         };
         let text = cfg.to_text();
@@ -478,6 +481,60 @@ fn prop_steal_schedule_deterministic_per_seed() {
         for g in &a.groups {
             assert!(g.barrier_slack_s >= 0.0, "seed {seed}: negative slack");
         }
+        jsons.push(ja);
+    }
+    // Different seeds must not all collapse onto one trajectory.
+    jsons.dedup();
+    assert!(jsons.len() > 1, "all seeds produced identical runs");
+}
+
+/// Migration-schedule invariant: with sub-shards, work stealing, AND
+/// cross-group migration enabled on the heterogeneous preset, the whole
+/// run — migration counters, overhead seconds, per-lane busy fractions,
+/// and the full machine-readable report — is a pure function of the seed
+/// (staging happens inside each shard's own event loop; placement
+/// happens single-threaded at the barriers in deterministic lane order).
+#[test]
+fn prop_migration_schedule_deterministic_per_seed() {
+    use aiperf::coordinator::run_benchmark;
+    let mut jsons = Vec::new();
+    for seed in 0..4u64 {
+        let mut cfg = aiperf::scenarios::get("t4v100-mixed")
+            .expect("mixed preset")
+            .config;
+        assert!(cfg.work_stealing && cfg.migration, "preset enables both");
+        cfg.duration_s = 2.5 * 3600.0;
+        cfg.seed = seed;
+        cfg.validate().unwrap();
+        let a = run_benchmark(&cfg);
+        let b = run_benchmark(&cfg);
+        let (ja, jb) = (a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(ja, jb, "seed {seed}: report not a pure function of seed");
+        assert_eq!(
+            a.groups
+                .iter()
+                .map(|g| (g.migrations_in, g.migrations_out))
+                .collect::<Vec<_>>(),
+            b.groups
+                .iter()
+                .map(|g| (g.migrations_in, g.migrations_out))
+                .collect::<Vec<_>>(),
+            "seed {seed}: migration schedule diverged"
+        );
+        // Conservation: every adopted trial was dispatched by someone.
+        let inn: u64 = a.groups.iter().map(|g| g.migrations_in).sum();
+        let out: u64 = a.groups.iter().map(|g| g.migrations_out).sum();
+        assert_eq!(inn, out, "seed {seed}: migrations in/out must balance");
+        for g in &a.groups {
+            assert!(g.migration_overhead_s >= 0.0, "seed {seed}: negative overhead");
+        }
+        // Per-lane telemetry is present and well-formed: one entry per
+        // sub-shard lane, fractions in [0, 1].
+        assert_eq!(a.lane_util.len() as u64, cfg.total_subshards());
+        assert!(a
+            .lane_util
+            .iter()
+            .all(|l| (0.0..=1.0).contains(&l.busy_fraction)));
         jsons.push(ja);
     }
     // Different seeds must not all collapse onto one trajectory.

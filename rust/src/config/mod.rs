@@ -50,7 +50,11 @@
 //! steal from is staged to NFS (`migration_nfs_bytes_per_param` bytes
 //! per model parameter) and adopted at the next epoch barrier by the
 //! least-loaded idle lane of another accepting group (see
-//! `coordinator::sched`).
+//! `coordinator::sched`). `feedback_routing = true|false` (default on)
+//! closes the search-feedback loop on top of migration: migrated-trial
+//! observations are routed back to the source lane's TPE at a barrier,
+//! OOM penalties are scoped per node group, and a parked sibling lane
+//! may join an adopted migrant's InfiniBand gradient ring.
 //!
 //! **Legacy flat shorthand:** the pre-topology keys `nodes`,
 //! `gpus_per_node`, and the `gpu_*` family may still appear at the top
@@ -204,6 +208,17 @@ pub struct BenchmarkConfig {
     /// Checkpoint bytes staged through NFS per model parameter when a
     /// trial migrates (fp32 weights + optimizer state ≈ 8 B/param).
     pub migration_nfs_bytes_per_param: u64,
+    /// Close the elastic search-feedback loop (on by default): a migrated
+    /// trial's `(hyperparameters, accuracy)` observation is routed back
+    /// through the shard outbox to the *source* lane's TPE at the next
+    /// epoch barrier instead of being dropped; OOM penalty entries are
+    /// scoped to the node group whose accelerator the candidate failed to
+    /// fit (a model too big for a 16 GB T4 stays a valid morph parent for
+    /// 32 GB V100 lanes); and a parked sibling lane may join an adopted
+    /// migrant's gradient ring (steal-into-migrant, re-timed over
+    /// InfiniBand). With this off the scheduler reproduces the
+    /// pre-feedback schedules exactly (see `coordinator::sched::feedback`).
+    pub feedback_routing: bool,
 }
 
 impl Default for BenchmarkConfig {
@@ -230,6 +245,7 @@ impl Default for BenchmarkConfig {
             work_stealing: false,
             migration: false,
             migration_nfs_bytes_per_param: 8,
+            feedback_routing: true,
         }
     }
 }
@@ -512,6 +528,9 @@ impl BenchmarkConfig {
                 "migration_nfs_bytes_per_param" => {
                     cfg.migration_nfs_bytes_per_param = parse_u64(value)?
                 }
+                "feedback_routing" => {
+                    cfg.feedback_routing = parse_flag(key, value).map_err(&err)?
+                }
                 "max_params" => cfg.morph_limits.max_params = parse_u64(value)?,
                 "max_depth" => cfg.morph_limits.max_depth = parse_u64(value)? as usize,
                 "max_width" => cfg.morph_limits.max_width = parse_u64(value)?,
@@ -586,7 +605,8 @@ impl BenchmarkConfig {
              subshards_per_node = {}\n\
              work_stealing = {}\n\
              migration = {}\n\
-             migration_nfs_bytes_per_param = {}\n",
+             migration_nfs_bytes_per_param = {}\n\
+             feedback_routing = {}\n",
             self.batch_per_gpu,
             self.learning_rate,
             self.lr_decay_per_epoch,
@@ -614,6 +634,7 @@ impl BenchmarkConfig {
             self.work_stealing,
             self.migration,
             self.migration_nfs_bytes_per_param,
+            self.feedback_routing,
         );
         for g in &self.topology.groups {
             out.push_str(&format!(
@@ -867,6 +888,21 @@ mod tests {
         let d = BenchmarkConfig::from_text("seed = 1\n").unwrap();
         assert!(!d.migration);
         assert_eq!(d.migration_nfs_bytes_per_param, 8);
+    }
+
+    #[test]
+    fn feedback_routing_parses_and_roundtrips() {
+        // On by default; both spellings parse; `off` survives the round
+        // trip (the knob must be explicit in the canonical text so a
+        // disabled loop stays disabled on reparse).
+        let d = BenchmarkConfig::from_text("seed = 1\n").unwrap();
+        assert!(d.feedback_routing);
+        let c = BenchmarkConfig::from_text("feedback_routing = off\n").unwrap();
+        assert!(!c.feedback_routing);
+        let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
+        assert_eq!(c2, c);
+        assert!(!c2.feedback_routing);
+        assert!(BenchmarkConfig::from_text("feedback_routing = maybe\n").is_err());
     }
 
     #[test]

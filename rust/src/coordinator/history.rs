@@ -31,7 +31,14 @@ pub struct ModelRecord {
     /// as morph parents while real records exist, and their error of
     /// 100 % never wins the achieved-error series.
     pub penalty: bool,
+    /// Node that proposed this candidate. For migrated trials with
+    /// feedback routing on, this is the *source* lane's node — the search
+    /// loop the candidate came from — not the node that executed it.
     pub node: usize,
+    /// Topology group of `node`. Scopes the OOM-penalty parent filter:
+    /// the memory boundary a penalty records belongs to this group's
+    /// accelerator only (see `SearchPolicy::select_parent_on`).
+    pub group: usize,
     pub round: u64,
     pub epochs_trained: u64,
     /// Analytical ops spent training+validating this model.
@@ -108,6 +115,7 @@ impl HistoryList {
                 arch: r.arch.clone(),
                 accuracy: r.accuracy,
                 penalty: r.penalty,
+                group: r.group,
             })
             .collect()
     }
@@ -134,6 +142,7 @@ mod tests {
             predicted,
             penalty: false,
             node: 0,
+            group: 0,
             round: 1,
             epochs_trained: 10,
             ops: 1e12,

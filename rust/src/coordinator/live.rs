@@ -286,6 +286,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveResult> {
             predicted: false,
             penalty: false,
             node: 0,
+            group: 0,
             round: trial_idx + 1,
             epochs_trained: cfg.epochs_per_trial,
             ops,

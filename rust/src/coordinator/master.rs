@@ -232,6 +232,8 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
     let mut group_migrations_in = vec![0u64; cfg.topology.groups.len()];
     let mut group_migrations_out = vec![0u64; cfg.topology.groups.len()];
     let mut group_migration_overhead = vec![0.0f64; cfg.topology.groups.len()];
+    let mut group_feedback_routed = vec![0u64; cfg.topology.groups.len()];
+    let mut group_ring_joins = vec![0u64; cfg.topology.groups.len()];
     let mut lane_util: Vec<LaneUtil> = Vec::new();
     for s in &shards {
         nfs_stats.reads += s.nfs.reads;
@@ -244,6 +246,8 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         group_migrations_in[s.group] += s.migrations_in;
         group_migrations_out[s.group] += s.migrations_out;
         group_migration_overhead[s.group] += s.migration_overhead_s;
+        group_feedback_routed[s.group] += s.feedback_routed;
+        group_ring_joins[s.group] += s.migrant_ring_joins;
         for (lane, busy) in s.lane_busy_fractions(cfg.duration_s).into_iter().enumerate() {
             lane_util.push(LaneUtil {
                 group: cfg.topology.groups[s.group].label.clone(),
@@ -273,6 +277,8 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
             migrations_in: group_migrations_in[i],
             migrations_out: group_migrations_out[i],
             migration_overhead_s: group_migration_overhead[i],
+            feedback_routed: group_feedback_routed[i],
+            migrant_ring_joins: group_ring_joins[i],
             barrier_slack_s: if global.group_slack_samples[i] > 0 {
                 global.group_slack_sum[i] / global.group_slack_samples[i] as f64
             } else {

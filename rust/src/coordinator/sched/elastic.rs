@@ -38,8 +38,9 @@ use crate::flops::count::GraphOps;
 use crate::nas::graph::Architecture;
 use crate::sim::accuracy::HpPoint;
 
-use super::adapted_batch;
+use super::feedback::FeedbackRouter;
 use super::registry::LaneRegistry;
+use super::{adapted_batch, migrant_ring};
 
 /// A candidate trial staged for cross-group adoption: everything the
 /// destination lane needs to train it, plus provenance for the report
@@ -57,6 +58,9 @@ pub struct MigrantCandidate {
     pub budget: u64,
     /// Global node index of the proposing shard.
     pub from_node: usize,
+    /// Lane index within the proposing shard — the address feedback
+    /// routing delivers the trial's observation back to.
+    pub from_sub: usize,
     /// Topology group of the proposing shard (migration is inter-group).
     pub from_group: usize,
     /// Simulation time the candidate was staged out.
@@ -98,25 +102,12 @@ impl MigrantCandidate {
             cfg.group_batch(group),
         )?;
         let timing = ctx.timing(group);
-        let epoch = timing.epoch_spanning(
-            self.ops.train_per_image(),
-            self.params,
-            cfg.dataset.train_images,
-            batch,
-            gpus,
-            true,
-        );
-        let val_s = timing.validation_with_gpus(
-            self.ops.val_per_image(),
-            cfg.dataset.val_images,
-            batch,
-            gpus,
-        );
+        let ring = migrant_ring(timing, &self.ops, self.params, &cfg.dataset, batch, gpus);
         Some(MigrantFit {
             batch,
             stage_s: timing.nfs.transfer_seconds(self.checkpoint_bytes(cfg)),
             setup_s: node.host.setup_seconds,
-            epoch_s: epoch.total_s + val_s,
+            epoch_s: ring.total_s,
         })
     }
 }
@@ -129,6 +120,9 @@ pub struct ElasticScheduler {
     registry: LaneRegistry,
     enabled: bool,
     pending: Vec<MigrantCandidate>,
+    /// The barrier-time search-feedback router riding the same pass
+    /// (inert when `feedback_routing` is off).
+    feedback: FeedbackRouter,
 }
 
 impl ElasticScheduler {
@@ -137,6 +131,7 @@ impl ElasticScheduler {
             registry: LaneRegistry::new(cfg),
             enabled: cfg.migration,
             pending: Vec::new(),
+            feedback: FeedbackRouter::new(cfg),
         }
     }
 
@@ -151,8 +146,10 @@ impl ElasticScheduler {
     }
 
     /// The inter-group migration pass, run at every epoch barrier (time
-    /// `t`, single-threaded in both engines): drain every shard's
-    /// outbox in shard order, then try to place each pending migrant.
+    /// `t`, single-threaded in both engines): route finished migrated
+    /// trials' observations back to their source lanes, drain every
+    /// shard's migrant outbox in shard order, then try to place each
+    /// pending migrant.
     pub fn barrier_pass(&mut self, t: f64, shards: &mut [SlaveShard], ctx: &SimContext) {
         if !self.enabled {
             return;
@@ -161,6 +158,9 @@ impl ElasticScheduler {
             shards.iter().enumerate().all(|(i, s)| s.node == i),
             "shard vector must be indexed by global node"
         );
+        // Feedback first: observations belong to trials that finalized
+        // during the window just merged, before any new placement.
+        self.feedback.barrier_pass(shards);
         for s in shards.iter_mut() {
             self.pending.append(&mut s.migrant_outbox);
         }
@@ -256,6 +256,7 @@ mod tests {
             round: 1,
             budget: 2,
             from_node: 0,
+            from_sub: 0,
             from_group,
             posted_at: 0.0,
         }

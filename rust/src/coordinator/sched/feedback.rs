@@ -1,0 +1,162 @@
+//! Barrier-time search-feedback routing: closing the elastic loop.
+//!
+//! Migration (see [`super::elastic`]) moves a *trial* to another node
+//! group, but the search state it came from — the source lane's TPE
+//! optimizer — stays behind. Pre-feedback, a migrated trial's result was
+//! recorded into the shared history and then dropped on the optimizer
+//! side: the destination lane must not observe foreign hyperparameters
+//! (they came from the source lane's TPE stream), and the source lane
+//! never heard back. Exactly the heterogeneous scenarios migration
+//! exists for ran with a degraded search.
+//!
+//! [`FeedbackRouter`] closes that loop. When a migrated trial finalizes,
+//! the destination shard posts a [`RoutedObservation`] — the source
+//! lane's coordinates plus the trial's `(hyperparameters, loss)` — into
+//! its feedback outbox, exactly when a native trial of that round would
+//! have observed its own TPE. At the next epoch barrier the router
+//! drains every shard's outbox in shard order (the same flat node order
+//! as [`super::registry::LaneRegistry`] — shards are indexed by global
+//! node) and injects each observation into the source lane's TPE, in
+//! posting order. The pass runs single-threaded at the barrier, between
+//! the windows the engines parallelize, so `Engine::Sequential` and
+//! `Engine::Parallel` stay bit-identical with routing enabled — and with
+//! `feedback_routing = false` no observation is ever posted, reproducing
+//! the pre-feedback schedules exactly.
+//!
+//! The same `feedback_routing` knob gates the two siblings of this
+//! subsystem that ride on the same provenance plumbing:
+//!
+//! * **group-scoped OOM penalties** — penalty records carry the group
+//!   whose accelerator the candidate failed to fit, and
+//!   `SearchPolicy::select_parent_on` only disqualifies parenthood for
+//!   proposals on that group (`ModelRecord::group`);
+//! * **steal-into-migrant** — a sibling lane out of runway (parked or
+//!   not) may join an adopted migrant's gradient ring, re-timed with the
+//!   combined device count over InfiniBand via the single-sourced
+//!   [`super::migrant_ring`] helper, so steal and migration compose.
+
+use crate::config::BenchmarkConfig;
+use crate::coordinator::shard::SlaveShard;
+use crate::sim::accuracy::HpPoint;
+
+/// One migrated trial's optimizer feedback, addressed back to the source
+/// lane that proposed it.
+#[derive(Debug, Clone, Copy)]
+pub struct RoutedObservation {
+    /// Global node index of the source lane's shard.
+    pub to_node: usize,
+    /// Lane index within the source shard.
+    pub to_sub: usize,
+    /// The hyperparameters the source lane's TPE suggested.
+    pub hp: HpPoint,
+    /// TPE loss: `1 − best validation accuracy` of the migrated trial.
+    pub loss: f64,
+}
+
+/// The barrier-time router: drains destination-side feedback outboxes
+/// and injects each observation into its source lane's TPE.
+pub struct FeedbackRouter {
+    enabled: bool,
+}
+
+impl FeedbackRouter {
+    pub fn new(cfg: &BenchmarkConfig) -> Self {
+        FeedbackRouter {
+            enabled: cfg.feedback_routing,
+        }
+    }
+
+    /// Whether the loop is closed at all (`feedback_routing`).
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The routing pass, run at every epoch barrier (single-threaded in
+    /// both engines): drain every shard's feedback outbox in shard order
+    /// — the registry's flat node order — then deliver each observation
+    /// to its source lane in posting order. Returns the number of
+    /// observations delivered.
+    pub fn barrier_pass(&self, shards: &mut [SlaveShard]) -> u64 {
+        if !self.enabled {
+            debug_assert!(
+                shards.iter().all(|s| s.feedback_outbox.is_empty()),
+                "observations posted with feedback routing off"
+            );
+            return 0;
+        }
+        let mut routed: Vec<RoutedObservation> = Vec::new();
+        for s in shards.iter_mut() {
+            routed.append(&mut s.feedback_outbox);
+        }
+        let n = routed.len() as u64;
+        for obs in routed {
+            shards[obs.to_node].inject_feedback(&obs);
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
+
+    fn mixed_cfg(feedback: bool) -> BenchmarkConfig {
+        let mut t4 = NodeGroup::new("t4", 1, 8, GpuModel::t4());
+        t4.batch_per_gpu = Some(256);
+        BenchmarkConfig {
+            topology: ClusterTopology {
+                groups: vec![t4, NodeGroup::new("v100", 1, 8, GpuModel::v100())],
+            },
+            subshards_per_node: 2,
+            migration: true,
+            feedback_routing: feedback,
+            ..BenchmarkConfig::default()
+        }
+    }
+
+    fn shards(cfg: &BenchmarkConfig) -> Vec<SlaveShard> {
+        let mut shards = Vec::new();
+        for (group, node) in cfg.topology.nodes() {
+            shards.push(SlaveShard::new(node, group, cfg));
+        }
+        shards
+    }
+
+    #[test]
+    fn routes_posted_observations_to_the_source_lane() {
+        let cfg = mixed_cfg(true);
+        cfg.validate().unwrap();
+        let router = FeedbackRouter::new(&cfg);
+        assert!(router.enabled());
+        let mut sh = shards(&cfg);
+        // Destination shard 1 finished two migrated trials proposed by
+        // shard 0's lanes.
+        for (sub, loss) in [(0usize, 0.4f64), (1, 0.3)] {
+            sh[1].feedback_outbox.push(RoutedObservation {
+                to_node: 0,
+                to_sub: sub,
+                hp: HpPoint::default(),
+                loss,
+            });
+        }
+        assert_eq!(router.barrier_pass(&mut sh), 2);
+        assert_eq!(sh[0].feedback_routed, 2, "source shard counts the landings");
+        assert_eq!(sh[1].feedback_routed, 0);
+        assert!(sh[1].feedback_outbox.is_empty(), "outbox drained");
+        // A second pass with nothing posted delivers nothing.
+        assert_eq!(router.barrier_pass(&mut sh), 0);
+        assert_eq!(sh[0].feedback_routed, 2);
+    }
+
+    #[test]
+    fn disabled_router_is_inert() {
+        let cfg = mixed_cfg(false);
+        cfg.validate().unwrap();
+        let router = FeedbackRouter::new(&cfg);
+        assert!(!router.enabled());
+        let mut sh = shards(&cfg);
+        assert_eq!(router.barrier_pass(&mut sh), 0);
+        assert!(sh.iter().all(|s| s.feedback_routed == 0));
+    }
+}

@@ -15,7 +15,12 @@
 //!   on a lane with no runway and no sibling to steal into is staged to
 //!   NFS and adopted, at an epoch barrier, by the least-loaded idle lane
 //!   of another accepting group — re-timed under the destination group's
-//!   device model with its gradient ring over InfiniBand.
+//!   device model with its gradient ring over InfiniBand;
+//! * [`feedback`] — the barrier-time search-feedback router: a migrated
+//!   trial's `(hyperparameters, loss)` observation travels back to the
+//!   source lane's TPE instead of being dropped, OOM penalties scope to
+//!   the group whose accelerator refused the candidate, and sibling
+//!   lanes may steal into an adopted migrant's InfiniBand ring.
 //!
 //! The scheduler decides; [`crate::coordinator::shard`] executes (event
 //! scheduling, epoch re-timing, NFS charging) and
@@ -25,14 +30,19 @@
 //! the whole subsystem reproduces the pure steal schedules exactly.
 
 pub mod elastic;
+pub mod feedback;
 pub mod registry;
 pub mod steal;
 
 pub use elastic::{ElasticScheduler, MigrantCandidate, MigrantFit};
+pub use feedback::{FeedbackRouter, RoutedObservation};
 pub use registry::{LaneRegistry, LaneSlot};
 pub use steal::{LaneLoad, StealScheduler};
 
 use crate::cluster::GpuModel;
+use crate::data::DatasetDescriptor;
+use crate::flops::count::GraphOps;
+use crate::sim::timing::{EpochTiming, TimingModel};
 
 /// Memory adaption (paper §4.2): halve the requested per-GPU batch until
 /// the candidate fits the accelerator; when the halving ladder bottoms
@@ -55,6 +65,51 @@ pub fn adapted_batch(
     } else {
         gpu.max_fitting_batch(params, activation_elems)
             .map(|b| b.min(requested))
+    }
+}
+
+/// Timing of a gradient ring that crosses the NVLink boundary — an
+/// adopted migrant's allreduce runs over InfiniBand whatever its width.
+#[derive(Debug, Clone, Copy)]
+pub struct RingTiming {
+    /// One training epoch over the cross-node ring.
+    pub epoch: EpochTiming,
+    /// One validation epoch at the same width.
+    pub val_s: f64,
+    /// Full (train + validation) epoch seconds.
+    pub total_s: f64,
+    /// IB-vs-NVLink sync delta the ring pays per completed epoch
+    /// (accrued into the migration-overhead counter as epochs finish).
+    pub sync_penalty_s: f64,
+}
+
+/// The single source of the InfiniBand re-timing every migrant ring uses
+/// — the placement probe ([`MigrantCandidate::fit_on`]), the adopting
+/// shard, and the steal-into-migrant widening all price an epoch through
+/// this one function, so the three can never drift.
+pub fn migrant_ring(
+    timing: &TimingModel,
+    ops: &GraphOps,
+    params: u64,
+    dataset: &DatasetDescriptor,
+    batch: u64,
+    gpus: u64,
+) -> RingTiming {
+    let epoch = timing.epoch_spanning(
+        ops.train_per_image(),
+        params,
+        dataset.train_images,
+        batch,
+        gpus,
+        true,
+    );
+    let val_s = timing.validation_with_gpus(ops.val_per_image(), dataset.val_images, batch, gpus);
+    RingTiming {
+        epoch,
+        val_s,
+        total_s: epoch.total_s + val_s,
+        sync_penalty_s: timing.network.migration_sync_penalty_seconds(gpus, params)
+            * epoch.steps as f64,
     }
 }
 
@@ -90,5 +145,29 @@ mod tests {
         }
         // A model whose fixed residents exceed memory fits nowhere.
         assert_eq!(adapted_batch(&gpu, gpu.memory_bytes, ACT, 448), None);
+    }
+
+    #[test]
+    fn migrant_ring_prices_above_the_nvlink_epoch_and_widens_down() {
+        use crate::flops::OpWeights;
+        use crate::nas::graph::Architecture;
+        let timing = TimingModel::default();
+        let dataset = DatasetDescriptor::imagenet();
+        let stats = Architecture::initial(dataset.image, dataset.channels, dataset.num_classes)
+            .stats(&OpWeights::default());
+        let ring4 = migrant_ring(&timing, &stats.ops, stats.params, &dataset, 448, 4);
+        // Cross-node ring: strictly above the NVLink-domain epoch of the
+        // same width, by more than zero sync penalty.
+        let train = stats.ops.train_per_image();
+        let local = timing
+            .epoch_with_gpus(train, stats.params, dataset.train_images, 448, 4)
+            .total_s
+            + timing.validation_with_gpus(stats.ops.val_per_image(), dataset.val_images, 448, 4);
+        assert!(ring4.total_s > local);
+        assert!(ring4.sync_penalty_s > 0.0);
+        assert_eq!(ring4.total_s.to_bits(), (ring4.epoch.total_s + ring4.val_s).to_bits());
+        // Steal-into-migrant widening: more devices, shorter epoch.
+        let ring8 = migrant_ring(&timing, &stats.ops, stats.params, &dataset, 448, 8);
+        assert!(ring8.total_s < ring4.total_s);
     }
 }

@@ -25,9 +25,12 @@ pub struct LaneLoad {
     /// Whether the lane currently trains a trial (only busy lanes can be
     /// stolen from).
     pub busy: bool,
-    /// Whether that trial was adopted from another group — migrated
-    /// trials already sync over InfiniBand and are not re-timed by the
-    /// NVLink-domain steal pass, so they are never victims.
+    /// Whether that trial was adopted from another group. Migrated trials
+    /// sync over InfiniBand, so the NVLink-domain re-timing does not
+    /// apply: they are only victims when [`StealScheduler::into_migrants`]
+    /// is on (feedback routing), and the shard then re-times the widened
+    /// ring through the single-sourced IB helper
+    /// ([`crate::coordinator::sched::migrant_ring`]).
     pub migrated: bool,
     /// Absolute end time of the lane's in-flight epoch.
     pub epoch_end_t: f64,
@@ -42,6 +45,11 @@ pub struct StealScheduler {
     rng: Rng,
     /// Whether stealing is enabled at all (`BenchmarkConfig::work_stealing`).
     pub enabled: bool,
+    /// Steal-into-migrant (`BenchmarkConfig::feedback_routing`): adopted
+    /// migrants become eligible victims, so a stranded sibling joins
+    /// their InfiniBand ring instead of idling. Off keeps the historic
+    /// never-a-victim rule, filter for filter.
+    pub into_migrants: bool,
 }
 
 impl StealScheduler {
@@ -51,6 +59,7 @@ impl StealScheduler {
         StealScheduler {
             rng: derive(cfg.seed, "steal", node as u64),
             enabled: cfg.work_stealing,
+            into_migrants: cfg.feedback_routing,
         }
     }
 
@@ -86,7 +95,7 @@ impl StealScheduler {
                 continue;
             }
             let l = &lanes[i];
-            if !l.busy || l.migrated {
+            if !l.busy || (l.migrated && !self.into_migrants) {
                 continue;
             }
             let load = (l.epoch_end_t - t).max(0.0) + l.remaining_epochs * l.epoch_seconds;
@@ -149,15 +158,36 @@ mod tests {
     }
 
     #[test]
-    fn migrated_trials_are_never_victims() {
-        let cfg = BenchmarkConfig::default();
+    fn migrated_trials_are_never_victims_without_feedback_routing() {
+        let cfg = BenchmarkConfig {
+            feedback_routing: false,
+            ..BenchmarkConfig::default()
+        };
         let mut s = StealScheduler::new(&cfg, 0);
+        assert!(!s.into_migrants);
         let mut m = busy(50.0, 100.0, 9.0);
         m.migrated = true;
         let lanes = vec![idle(), m, busy(50.0, 100.0, 1.0)];
         assert_eq!(s.pick_victim(0, 40.0, &lanes), Some(2));
         let lanes = vec![idle(), m];
         assert_eq!(s.pick_victim(0, 40.0, &lanes), None);
+    }
+
+    #[test]
+    fn feedback_routing_makes_migrants_eligible_victims() {
+        // Steal-into-migrant: with the loop closed (the default), an
+        // adopted migrant is an eligible victim like any busy sibling —
+        // here it is also the most loaded, so the scan picks it.
+        let cfg = BenchmarkConfig::default();
+        let mut s = StealScheduler::new(&cfg, 0);
+        assert!(s.into_migrants, "feedback routing defaults on");
+        let mut m = busy(50.0, 100.0, 9.0);
+        m.migrated = true;
+        let lanes = vec![idle(), m, busy(50.0, 100.0, 1.0)];
+        assert_eq!(s.pick_victim(0, 40.0, &lanes), Some(1));
+        // A lone migrated sibling is enough to join.
+        let lanes = vec![idle(), m];
+        assert_eq!(s.pick_victim(0, 40.0, &lanes), Some(1));
     }
 
     #[test]

@@ -65,7 +65,8 @@ use crate::coordinator::buffer::{ArchBuffer, Candidate};
 use crate::coordinator::dispatcher::Dispatcher;
 use crate::coordinator::history::ModelRecord;
 use crate::coordinator::sched::{
-    adapted_batch, LaneLoad, MigrantCandidate, MigrantFit, StealScheduler,
+    adapted_batch, migrant_ring, LaneLoad, MigrantCandidate, MigrantFit, RoutedObservation,
+    StealScheduler,
 };
 use crate::coordinator::trial::{ActiveTrial, TrialStatus};
 use crate::flops::OpWeights;
@@ -130,6 +131,10 @@ impl<'a> SimContext<'a> {
             },
             policy: SearchPolicy {
                 limits: cfg.morph_limits,
+                // Feedback routing scopes OOM penalties to the group whose
+                // accelerator refused the candidate (the memory boundary
+                // is per-device, not cluster-wide).
+                group_scoped_penalties: cfg.feedback_routing,
                 ..SearchPolicy::default()
             },
             initial: Architecture::initial(
@@ -205,9 +210,15 @@ struct SubShard {
     /// scheduler hands it a migrated trial (or the run ends).
     parked: bool,
     /// The current trial was adopted from another group: it syncs over
-    /// InfiniBand, is never a steal victim, and skips the lane-local TPE
-    /// feedback at finalize (the hyperparameters were the source lane's).
+    /// InfiniBand and skips the lane-local TPE feedback at finalize (the
+    /// hyperparameters were the source lane's — with feedback routing on
+    /// the observation travels back to that lane instead, and sibling
+    /// lanes may steal into this trial's IB ring).
     migrated: bool,
+    /// Source coordinates of the adopted trial: `(node, sub, group)` of
+    /// the lane whose search loop proposed it — the address feedback
+    /// routing posts the finalize observation back to.
+    migrant_from: Option<(usize, usize, usize)>,
     /// Cross-node sync penalty per completed epoch of the migrated trial
     /// (accrued into the shard's migration-overhead counter).
     migrant_epoch_overhead_s: f64,
@@ -256,6 +267,16 @@ pub struct SlaveShard {
     /// Candidates staged for cross-group adoption, drained by the elastic
     /// scheduler at each epoch barrier.
     pub migrant_outbox: Vec<MigrantCandidate>,
+    /// Finished migrated trials' optimizer observations, addressed to
+    /// their source lanes — drained by the feedback router at each epoch
+    /// barrier (`coordinator::sched::feedback`).
+    pub feedback_outbox: Vec<RoutedObservation>,
+    /// Observations routed back into this shard's lanes' TPEs (the
+    /// source side of the feedback loop; report counter).
+    pub feedback_routed: u64,
+    /// Steal events whose victim was an adopted migrant (steal-into-
+    /// migrant ring joins; subset of `steals`).
+    pub migrant_ring_joins: u64,
     subs: Vec<SubShard>,
     /// Window outputs, drained by the coordinator at each barrier.
     pub completed: Vec<ModelRecord>,
@@ -301,6 +322,7 @@ impl SlaveShard {
                 assisting: None,
                 parked: false,
                 migrated: false,
+                migrant_from: None,
                 migrant_epoch_overhead_s: 0.0,
                 busy_since: None,
                 busy_s: 0.0,
@@ -333,6 +355,9 @@ impl SlaveShard {
             migrations_in: 0,
             migration_overhead_s: 0.0,
             migrant_outbox: Vec::new(),
+            feedback_outbox: Vec::new(),
+            feedback_routed: 0,
+            migrant_ring_joins: 0,
             subs,
             completed: Vec::new(),
             epoch_ops: Vec::new(),
@@ -389,6 +414,16 @@ impl SlaveShard {
     /// candidates was dispatched to another group.
     pub fn note_migration_out(&mut self) {
         self.migrations_out += 1;
+    }
+
+    /// Deliver a migrated trial's observation back into the source
+    /// lane's TPE (feedback-router dispatch at an epoch barrier): the
+    /// lane's optimizer sees the result of its own suggestion exactly as
+    /// if the trial had trained locally.
+    pub fn inject_feedback(&mut self, obs: &RoutedObservation) {
+        let lane = &mut self.subs[obs.to_sub];
+        lane.tpe.observe(vec![obs.hp.dropout, obs.hp.kernel], obs.loss);
+        self.feedback_routed += 1;
     }
 
     /// Per-lane busy fraction over a run of `duration_s` seconds: time
@@ -448,25 +483,13 @@ impl SlaveShard {
         debug_assert_eq!(stage.to_bits(), fit.stage_s.to_bits());
         let trial_id = local * ctx.total_units + self.subs[sub].unit;
         let gpus = self.subs[sub].gpus;
-        let epoch = timing.epoch_spanning(
-            m.ops.train_per_image(),
-            m.params,
-            cfg.dataset.train_images,
-            fit.batch,
-            gpus,
-            true,
-        );
-        let val_s = timing.validation_with_gpus(
-            m.ops.val_per_image(),
-            cfg.dataset.val_images,
-            fit.batch,
-            gpus,
-        );
-        let total_epoch_s = epoch.total_s + val_s;
+        // The single-sourced IB ring timing (same helper as the placement
+        // probe and the steal-into-migrant widening).
+        let ring = migrant_ring(timing, &m.ops, m.params, &cfg.dataset, fit.batch, gpus);
+        let total_epoch_s = ring.total_s;
         // The IB-vs-NVLink sync delta this trial pays per epoch, accrued
         // into the overhead counter as epochs actually complete.
-        let penalty_per_epoch =
-            timing.network.migration_sync_penalty_seconds(gpus, m.params) * epoch.steps as f64;
+        let penalty_per_epoch = ring.sync_penalty_s;
         // Same association as the placement probe's runway check, so the
         // scheduled first epoch lands exactly where the probe priced it.
         let end_t = t + stage + fit.setup_s + total_epoch_s;
@@ -476,13 +499,14 @@ impl SlaveShard {
         let lane = &mut self.subs[sub];
         lane.parked = false;
         lane.migrated = true;
+        lane.migrant_from = Some((m.from_node, m.from_sub, m.from_group));
         lane.migrant_epoch_overhead_s = penalty_per_epoch;
         debug_assert!(lane.busy_since.is_none(), "adopting lane was already busy");
         lane.busy_since = Some(t);
         lane.epoch_seconds = total_epoch_s;
         lane.own_epoch_s = total_epoch_s;
-        lane.busy_fraction =
-            (epoch.compute_s + val_s) / total_epoch_s * epoch.gpu_busy_fraction.max(0.9);
+        lane.busy_fraction = (ring.epoch.compute_s + ring.val_s) / total_epoch_s
+            * ring.epoch.gpu_busy_fraction.max(0.9);
         lane.mem_fraction = mem_fraction;
         lane.setup_until = t + stage + fit.setup_s;
         lane.trial = Some(ActiveTrial::new(
@@ -501,6 +525,17 @@ impl SlaveShard {
         self.queue.schedule(end_t, ShardEvent::EpochDone { sub, gen });
         self.migrations_in += 1;
         self.migration_overhead_s += stage;
+        // Steal-into-migrant: parked siblings get a fresh chance to join
+        // this trial's IB ring instead of idling out the run (their
+        // NodeReady lands in the next window; the parked branch of
+        // `on_node_ready` only ever steals, never proposes again).
+        if ctx.cfg.feedback_routing && self.steal.enabled {
+            for s in 0..self.subs.len() {
+                if s != sub && self.lane_parked(s) {
+                    self.queue.schedule(t, ShardEvent::NodeReady { sub: s });
+                }
+            }
+        }
         true
     }
 
@@ -564,10 +599,15 @@ impl SlaveShard {
         };
 
         // Attach: the thief's devices join the victim trial's allreduce
-        // ring (all lanes of a node share its NVLink domain).
+        // ring (all lanes of a node share its NVLink domain; an adopted
+        // migrant's ring runs over InfiniBand at any width).
+        let victim_migrated = self.subs[victim].migrated;
         self.subs[victim].helpers.push(sub);
         self.subs[sub].assisting = Some(victim);
         self.steals += 1;
+        if victim_migrated {
+            self.migrant_ring_joins += 1;
+        }
 
         // Re-time the victim's epochs at the widened data-parallel span.
         let helper_gpus: u64 = self.subs[victim]
@@ -576,24 +616,33 @@ impl SlaveShard {
             .map(|&h| self.subs[h].gpus)
             .sum();
         let gpus_eff = self.subs[victim].gpus + helper_gpus;
-        let (train_ops, val_ops, params, batch) = {
+        let (ops, params, batch) = {
             let tr = self.subs[victim].trial.as_ref().expect("victim has a trial");
-            (
-                tr.ops.train_per_image(),
-                tr.ops.val_per_image(),
-                tr.params,
-                tr.batch_per_gpu,
-            )
+            (tr.ops, tr.params, tr.batch_per_gpu)
         };
         let timing = ctx.timing(self.group);
-        let epoch = timing.epoch_with_gpus(
-            train_ops,
-            params,
-            cfg.dataset.train_images,
-            batch,
-            gpus_eff,
-        );
-        let val_s = timing.validation_with_gpus(val_ops, cfg.dataset.val_images, batch, gpus_eff);
+        // Migrated victims re-time through the single-sourced IB helper
+        // (steal and migration compose); native victims keep the NVLink
+        // ring. The sync penalty per epoch tracks the widened ring.
+        let (epoch, val_s, sync_penalty_s) = if victim_migrated {
+            let ring = migrant_ring(timing, &ops, params, &cfg.dataset, batch, gpus_eff);
+            (ring.epoch, ring.val_s, ring.sync_penalty_s)
+        } else {
+            let epoch = timing.epoch_with_gpus(
+                ops.train_per_image(),
+                params,
+                cfg.dataset.train_images,
+                batch,
+                gpus_eff,
+            );
+            let val_s = timing.validation_with_gpus(
+                ops.val_per_image(),
+                cfg.dataset.val_images,
+                batch,
+                gpus_eff,
+            );
+            (epoch, val_s, 0.0)
+        };
         let new_epoch_s = epoch.total_s + val_s;
         let old_epoch_s = self.subs[victim].epoch_seconds;
         // Only the compute portion of the victim's in-flight epoch speeds
@@ -613,6 +662,9 @@ impl SlaveShard {
         v.epoch_seconds = new_epoch_s;
         v.busy_fraction =
             (epoch.compute_s + val_s) / new_epoch_s * epoch.gpu_busy_fraction.max(0.9);
+        if victim_migrated {
+            v.migrant_epoch_overhead_s = sync_penalty_s;
+        }
         v.epoch_gen += 1;
         v.epoch_end_t = t + scaled;
         let gen = v.epoch_gen;
@@ -650,18 +702,25 @@ impl SlaveShard {
 
         // The snapshot is only cloned when there are local completions to
         // append — the common case borrows it directly.
+        // Proposals carry this shard's group so the penalty filter knows
+        // which accelerator's memory boundary applies (scoping itself is
+        // gated by `SearchPolicy::group_scoped_penalties`).
+        let on_group = Some(self.group);
         let arch = if snapshot.ranked.is_empty() && self.completed.is_empty() {
             ctx.initial.clone()
         } else if self.completed.is_empty() {
-            ctx.policy.propose(&snapshot.ranked, &mut self.subs[sub].rng).0
+            ctx.policy
+                .propose_on(&snapshot.ranked, on_group, &mut self.subs[sub].rng)
+                .0
         } else {
             let mut ranked = snapshot.ranked.clone();
             ranked.extend(self.completed.iter().map(|r| RankedModel {
                 arch: r.arch.clone(),
                 accuracy: r.accuracy,
                 penalty: r.penalty,
+                group: r.group,
             }));
-            ctx.policy.propose(&ranked, &mut self.subs[sub].rng).0
+            ctx.policy.propose_on(&ranked, on_group, &mut self.subs[sub].rng).0
         };
         let _ = self.buffer.push(Candidate {
             arch: arch.clone(),
@@ -730,6 +789,7 @@ impl SlaveShard {
             round,
             budget: cfg.warmup.epochs_for_round(round),
             from_node: self.node,
+            from_sub: sub,
             from_group: self.group,
             posted_at: t,
         };
@@ -773,6 +833,7 @@ impl SlaveShard {
             predicted: true,
             penalty: true,
             node: self.node,
+            group: self.group,
             round,
             epochs_trained: 0,
             ops: 0.0,
@@ -785,11 +846,18 @@ impl SlaveShard {
     /// The CPU search loop + trial start (paper §4.3 steps 3–5), or a
     /// steal / migrate-out when the lane is out of runway.
     fn on_node_ready(&mut self, t: f64, sub: usize, snapshot: &HistorySnapshot, ctx: &SimContext) {
-        if self.subs[sub].trial.is_some()
-            || self.subs[sub].assisting.is_some()
-            || self.subs[sub].parked
-        {
-            return; // defensive: lane already busy or parked
+        if self.subs[sub].trial.is_some() || self.subs[sub].assisting.is_some() {
+            return; // defensive: lane already busy
+        }
+        if self.subs[sub].parked {
+            // A parked lane already staged its candidate out; it never
+            // proposes again, but with the feedback loop closed it may
+            // still lend its devices — typically joining an adopted
+            // migrant's IB ring (steal-into-migrant).
+            if ctx.cfg.feedback_routing {
+                self.try_steal(t, sub, ctx);
+            }
+            return;
         }
         if self.try_steal(t, sub, ctx) {
             return;
@@ -912,6 +980,7 @@ impl SlaveShard {
         } else {
             // --- Trial complete: record into the window output.
             let trial = self.subs[sub].trial.take().unwrap();
+            let migrant_from = self.subs[sub].migrant_from.take();
             let warmup_round = !cfg.warmup.hpo_active(trial.round);
             let (accuracy, predicted) = if warmup_round
                 && trial.epoch < cfg.warmup.max_epochs
@@ -929,14 +998,33 @@ impl SlaveShard {
                 * trial.epoch as f64;
             // An adopted trial's hyperparameters came from the source
             // lane's TPE; feeding them into this lane's model would
-            // corrupt its stream, so only native trials observe.
+            // corrupt its stream, so only native trials observe locally.
+            // With feedback routing on, the observation instead travels
+            // back to the source lane at the next barrier — exactly when
+            // a native trial of that round would have observed.
             if cfg.warmup.hpo_active(trial.round) && !migrated {
                 let lane = &mut self.subs[sub];
                 lane.tpe.observe(
                     vec![trial.hp.dropout, trial.hp.kernel],
                     1.0 - trial.best_accuracy(),
                 );
+            } else if migrated && cfg.feedback_routing && cfg.warmup.hpo_active(trial.round) {
+                let (to_node, to_sub, _) =
+                    migrant_from.expect("migrated trial lost its source coordinates");
+                self.feedback_outbox.push(RoutedObservation {
+                    to_node,
+                    to_sub,
+                    hp: trial.hp,
+                    loss: 1.0 - trial.best_accuracy(),
+                });
             }
+            // Record provenance: with the loop closed, a migrated trial
+            // belongs to the search that proposed it — the source lane's
+            // node and group — not to the hardware that executed it.
+            let (rec_node, rec_group) = match migrant_from {
+                Some((n, _, g)) if cfg.feedback_routing => (n, g),
+                _ => (self.node, self.group),
+            };
             self.completed.push(ModelRecord {
                 id: trial.trial_id,
                 signature: trial.arch.signature(),
@@ -946,7 +1034,8 @@ impl SlaveShard {
                 accuracy,
                 predicted,
                 penalty: false,
-                node: self.node,
+                node: rec_node,
+                group: rec_group,
                 round: trial.round,
                 epochs_trained: trial.epoch,
                 ops: ops_spent,

@@ -113,6 +113,7 @@ impl SlaveWorker {
                         arch: self.rebuild(m),
                         accuracy: m.accuracy,
                         penalty: false,
+                        group: 0,
                     })
                     .collect();
                 policy.propose(&ranked, &mut rng).0

@@ -21,7 +21,7 @@ USAGE:
     aiperf run   [--scenario NAME] [--nodes N] [--hours H] [--seed S]
                  [--engine sequential|parallel] [--config FILE]
                  [--subshards K] [--work-stealing [on|off]]
-                 [--migration [on|off]]
+                 [--migration [on|off]] [--feedback-routing [on|off]]
                  [--json OUT] [--csv OUT] [--chart] [--list-scenarios]
         Simulated benchmark on the modelled cluster (Figs 4-6, 9-12).
         Scenario presets reproduce the paper's evaluated systems:
@@ -48,10 +48,22 @@ USAGE:
         lane of another node group adopts it (unless that group sets
         `accepts_migrants = false`), re-timed under the destination's
         device model with its gradient ring over InfiniBand. A run with
-        no other accepting group is unaffected by the flag. Per-group
-        migrations in/out and overhead seconds appear in the summary,
-        JSON, and sweep CSV, and the JSON report adds per-lane busy
-        fractions. The engine defaults to `parallel` (sharded slave
+        no other accepting group is unaffected by the flag. The staged
+        checkpoint size is `migration_nfs_bytes_per_param` bytes per
+        model parameter (config key, default 8), and a group opts out of
+        adopting with `accepts_migrants = false` in its section.
+        `--feedback-routing` (config key `feedback_routing`, ON by
+        default) closes the search-feedback loop over migration: a
+        migrated trial's TPE observation is routed back to the lane that
+        proposed it at the next epoch barrier instead of being dropped,
+        OOM penalties only bar parenthood on the node group whose
+        accelerator refused the candidate, and a stranded sibling lane
+        may steal into an adopted migrant's InfiniBand gradient ring.
+        Turning it off reproduces the pre-feedback schedules exactly.
+        Per-group migrations in/out, overhead seconds, routed-feedback
+        and ring-join counters appear in the summary and JSON, and the
+        JSON report adds per-lane busy fractions (rendered as ASCII bars
+        under --chart). The engine defaults to `parallel` (sharded slave
         nodes on a thread pool); `sequential` is bit-identical for the
         same seed.
     aiperf sweep [--scenarios A,B,C] [--hours H] [--seed S]
@@ -88,7 +100,8 @@ struct Flags {
 /// Flags that take no value (or an optional on/off); every other flag
 /// still requires one, so a forgotten value fails up front instead of
 /// mid-run.
-const BOOLEAN_FLAGS: &[&str] = &["chart", "list-scenarios", "work-stealing", "migration"];
+const BOOLEAN_FLAGS: &[&str] =
+    &["chart", "list-scenarios", "work-stealing", "migration", "feedback-routing"];
 
 /// Parse an on/off flag value (`--work-stealing`, `--work-stealing on`).
 fn parse_onoff(flag: &str, v: &str) -> Result<bool> {
@@ -167,7 +180,7 @@ impl Flags {
 fn cmd_run(flags: &Flags) -> Result<()> {
     flags.reject_unknown(&[
         "scenario", "nodes", "hours", "seed", "engine", "config", "json", "csv", "chart",
-        "list-scenarios", "subshards", "work-stealing", "migration",
+        "list-scenarios", "subshards", "work-stealing", "migration", "feedback-routing",
     ])?;
     if flags.get("list-scenarios").is_some() {
         cmd_scenarios();
@@ -211,6 +224,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     if let Some(v) = flags.get("migration") {
         cfg.migration = parse_onoff("migration", v)?;
     }
+    if let Some(v) = flags.get("feedback-routing") {
+        cfg.feedback_routing = parse_onoff("feedback-routing", v)?;
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
     println!("topology: {}", cfg.topology.summary());
@@ -242,6 +258,19 @@ fn cmd_run(flags: &Flags) -> Result<()> {
                 &xs,
                 &[("score", score.clone()), ("error", err.clone()), ("regulated", reg.clone())],
                 12,
+            )
+        );
+        // The Figs 9–12 pipeline's lane-level complement: the node
+        // aggregates above hide the parked/stranded tails the steal and
+        // migration schedulers recover; one bar per sub-shard lane shows
+        // them.
+        println!();
+        print!(
+            "{}",
+            aiperf::metrics::lane_util_chart(
+                "per-lane busy fraction over the run (idle tails read as -)",
+                &report.lane_util,
+                40,
             )
         );
     }

@@ -68,6 +68,45 @@ pub fn ascii_chart(
     out
 }
 
+/// Render the per-lane busy fractions (the JSON report's `lanes` array)
+/// as horizontal ASCII bars — the lane-level complement of the Figs 9–12
+/// node-aggregate utilization charts. Node aggregates hide the parked or
+/// stranded tail a single lane spends idle; one bar per lane makes the
+/// headroom the steal/migration passes recover directly visible in the
+/// terminal.
+pub fn lane_util_chart(title: &str, lanes: &[super::report::LaneUtil], width: usize) -> String {
+    assert!(width >= 4);
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    if lanes.is_empty() {
+        out.push_str("  (no lanes)\n");
+        return out;
+    }
+    let label_w = lanes.iter().map(|l| l.group.len()).max().unwrap_or(0).max(5);
+    for l in lanes {
+        let busy = l.busy_fraction.clamp(0.0, 1.0);
+        let filled = (busy * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {:<label_w$} n{:<3} lane{:<2} |{}{}| {:>5.1}%\n",
+            l.group,
+            l.node,
+            l.lane,
+            "#".repeat(filled.min(width)),
+            "-".repeat(width - filled.min(width)),
+            busy * 100.0,
+        ));
+    }
+    let mean = lanes.iter().map(|l| l.busy_fraction).sum::<f64>() / lanes.len() as f64;
+    out.push_str(&format!(
+        "  {:<label_w$} {} lanes, mean busy {:>5.1}%\n",
+        "all",
+        lanes.len(),
+        mean * 100.0,
+    ));
+    out
+}
+
 /// Render aligned series as CSV with a header row.
 pub fn csv(xs_name: &str, xs: &[f64], series: &[(&str, Vec<f64>)]) -> String {
     let mut out = String::new();
@@ -123,6 +162,30 @@ mod tests {
         let ys = vec![5.0, 5.0, 5.0];
         let chart = ascii_chart("flat", &xs, &[("c", ys)], 3);
         assert!(chart.contains('*'));
+    }
+
+    #[test]
+    fn lane_chart_one_bar_per_lane_scaled_to_busy_fraction() {
+        use crate::metrics::report::LaneUtil;
+        let lanes = vec![
+            LaneUtil { group: "t4".into(), node: 0, lane: 0, busy_fraction: 1.0 },
+            LaneUtil { group: "t4".into(), node: 0, lane: 1, busy_fraction: 0.5 },
+            LaneUtil { group: "v100".into(), node: 1, lane: 0, busy_fraction: 0.0 },
+        ];
+        let chart = lane_util_chart("lanes", &lanes, 10);
+        let rows: Vec<&str> = chart.lines().collect();
+        assert_eq!(rows[0], "lanes");
+        // One bar row per lane plus the mean footer.
+        assert_eq!(rows.len(), 1 + lanes.len() + 1);
+        assert!(rows[1].contains("##########") && rows[1].contains("100.0%"));
+        assert!(rows[2].contains("#####-----") && rows[2].contains("50.0%"));
+        assert!(rows[3].contains("----------") && rows[3].contains("0.0%"));
+        assert!(rows[4].contains("3 lanes") && rows[4].contains("50.0%"));
+        // Out-of-range fractions clamp instead of panicking.
+        let odd = vec![LaneUtil { group: "g".into(), node: 0, lane: 0, busy_fraction: 1.7 }];
+        assert!(lane_util_chart("t", &odd, 10).contains("##########"));
+        // Empty lane lists render a placeholder.
+        assert!(lane_util_chart("t", &[], 10).contains("no lanes"));
     }
 
     #[test]

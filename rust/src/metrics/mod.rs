@@ -15,7 +15,7 @@ pub mod score;
 pub mod sweep;
 pub mod telemetry;
 
-pub use chart::{ascii_chart, csv};
+pub use chart::{ascii_chart, csv, lane_util_chart};
 pub use report::{BenchmarkReport, GroupBreakdown, LaneUtil};
 pub use score::{regulated_score, validate_result, ScoreSample, Validity};
 pub use telemetry::{Telemetry, TelemetrySample};

@@ -36,6 +36,14 @@ pub struct GroupBreakdown {
     /// checkpoint staging (both directions) plus the InfiniBand
     /// gradient-sync penalty of adopted trials' completed epochs.
     pub migration_overhead_s: f64,
+    /// Migrated-trial observations routed back into this group's lanes'
+    /// TPE optimizers at epoch barriers (the source side of the
+    /// search-feedback loop — `coordinator::sched::feedback`).
+    pub feedback_routed: u64,
+    /// Steal events whose victim was an adopted migrant: a sibling lane
+    /// joined the migrant's InfiniBand gradient ring (subset of
+    /// `steals`).
+    pub migrant_ring_joins: u64,
     /// Mean barrier slack, seconds: how far a solo lane's in-flight
     /// epoch overshoots an epoch barrier, averaged over lanes × windows
     /// — the utilization headroom work stealing recovers.
@@ -149,6 +157,8 @@ impl BenchmarkReport {
                             ("migrations_in", num(g.migrations_in as f64)),
                             ("migrations_out", num(g.migrations_out as f64)),
                             ("migration_overhead_s", num(g.migration_overhead_s)),
+                            ("feedback_routed", num(g.feedback_routed as f64)),
+                            ("migrant_ring_joins", num(g.migrant_ring_joins as f64)),
                             ("barrier_slack_s", num(g.barrier_slack_s)),
                         ])
                     })
@@ -261,8 +271,12 @@ impl BenchmarkReport {
             ));
             if migrated {
                 out.push_str(&format!(
-                    " migrations={}in/{}out overhead={:.1}s",
-                    g.migrations_in, g.migrations_out, g.migration_overhead_s,
+                    " migrations={}in/{}out overhead={:.1}s feedback_routed={} ring_joins={}",
+                    g.migrations_in,
+                    g.migrations_out,
+                    g.migration_overhead_s,
+                    g.feedback_routed,
+                    g.migrant_ring_joins,
                 ));
             }
             out.push('\n');

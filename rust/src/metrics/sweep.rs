@@ -229,6 +229,8 @@ mod tests {
                     migrations_in: 0,
                     migrations_out: 0,
                     migration_overhead_s: 0.0,
+                    feedback_routed: 0,
+                    migrant_ring_joins: 0,
                     barrier_slack_s: 0.0,
                 })
                 .collect(),

@@ -24,6 +24,11 @@ pub struct RankedModel {
     /// being selected as morph parents while real entries exist — so a
     /// skipped candidate's neighborhood stops being re-proposed.
     pub penalty: bool,
+    /// Topology node group of the node that recorded this entry. The
+    /// memory boundary is per-accelerator, so a penalty only disqualifies
+    /// parenthood for proposals that would run on this same group (when
+    /// [`SearchPolicy::group_scoped_penalties`] is on).
+    pub group: usize,
 }
 
 /// Rank-tilted parent selection + random morphism.
@@ -34,6 +39,12 @@ pub struct SearchPolicy {
     pub rank_beta: f64,
     /// Proposal retries before giving up on morphing a parent.
     pub morph_tries: usize,
+    /// Scope OOM penalties to the node group where the candidate failed
+    /// to fit (`BenchmarkConfig::feedback_routing`): a penalty recorded on
+    /// a 16 GB T4 group stops disqualifying parenthood for proposals on a
+    /// 32 GB V100 group. Off reproduces the global (pre-feedback) filter
+    /// exactly, draw for draw.
+    pub group_scoped_penalties: bool,
 }
 
 impl Default for SearchPolicy {
@@ -42,22 +53,46 @@ impl Default for SearchPolicy {
             limits: MorphLimits::default(),
             rank_beta: 1.0,
             morph_tries: 16,
+            group_scoped_penalties: false,
         }
     }
 }
 
 impl SearchPolicy {
-    /// Select a parent index by rank-softmax over accuracies.
+    /// Select a parent index by rank-softmax over accuracies, without a
+    /// proposing-group context (penalties filter globally).
+    pub fn select_parent(&self, history: &[RankedModel], rng: &mut Rng) -> usize {
+        self.select_parent_on(history, None, rng)
+    }
+
+    /// Select a parent index by rank-softmax over accuracies, for a
+    /// proposal that would run on topology group `on_group`.
     /// `history` may be unsorted; an empty history is a caller bug.
     /// Penalty entries (OOM-skipped candidates) are excluded from
     /// selection whenever at least one real entry exists — they inform
     /// the ranking's shape but must not seed new morphs past the memory
-    /// boundary. With no penalties present the selection is identical to
-    /// the historic rank-softmax, draw for draw.
-    pub fn select_parent(&self, history: &[RankedModel], rng: &mut Rng) -> usize {
+    /// boundary. With [`SearchPolicy::group_scoped_penalties`] on and a
+    /// proposing group given, only penalties recorded on *that* group
+    /// disqualify: the memory boundary is per-accelerator, so a candidate
+    /// too big for one group's card stays a legal (bottom-ranked) parent
+    /// on groups with more memory. With no penalties present the
+    /// selection is identical to the historic rank-softmax, draw for
+    /// draw.
+    pub fn select_parent_on(
+        &self,
+        history: &[RankedModel],
+        on_group: Option<usize>,
+        rng: &mut Rng,
+    ) -> usize {
         assert!(!history.is_empty(), "select_parent on empty history");
         // Rank ascending by accuracy: best gets the largest weight.
-        let mut idx: Vec<usize> = (0..history.len()).filter(|&i| !history[i].penalty).collect();
+        let mut idx: Vec<usize> = (0..history.len())
+            .filter(|&i| {
+                let m = &history[i];
+                !m.penalty
+                    || (self.group_scoped_penalties && on_group.is_some_and(|g| m.group != g))
+            })
+            .collect();
         if idx.is_empty() {
             // Nothing but penalties: fall back to the full history (the
             // caller still needs some parent to morph).
@@ -91,7 +126,19 @@ impl SearchPolicy {
         history: &[RankedModel],
         rng: &mut Rng,
     ) -> (Architecture, Option<Morph>) {
-        let parent = &history[self.select_parent(history, rng)].arch;
+        self.propose_on(history, None, rng)
+    }
+
+    /// [`SearchPolicy::propose`] for a proposal that would run on
+    /// topology group `on_group` — the group scopes the penalty filter of
+    /// [`SearchPolicy::select_parent_on`].
+    pub fn propose_on(
+        &self,
+        history: &[RankedModel],
+        on_group: Option<usize>,
+        rng: &mut Rng,
+    ) -> (Architecture, Option<Morph>) {
+        let parent = &history[self.select_parent_on(history, on_group, rng)].arch;
         random_legal_morph(parent, &self.limits, rng, self.morph_tries)
     }
 }
@@ -108,6 +155,7 @@ mod tests {
                 arch: base.clone(),
                 accuracy: 0.1 * i as f64,
                 penalty: false,
+                group: 0,
             })
             .collect()
     }
@@ -199,6 +247,59 @@ mod tests {
         assert!(pick < h.len());
         let (child, _) = policy.propose(&h, &mut rng);
         child.validate().unwrap();
+    }
+
+    #[test]
+    fn group_scoped_penalty_is_a_parent_on_other_groups_only() {
+        // The per-group memory boundary: an entry OOM-penalized on group
+        // 0 (say a 16 GB T4) must stay a legal morph parent for group-1
+        // proposals (a 32 GB V100) — and vice versa stays excluded.
+        let policy = SearchPolicy {
+            rank_beta: 0.0, // uniform over the eligible set
+            group_scoped_penalties: true,
+            ..Default::default()
+        };
+        let mut h = history();
+        h[0].penalty = true;
+        h[0].accuracy = 0.0;
+        h[0].group = 0;
+        let mut rng = derive(11, "search", 5);
+        let mut on_own = vec![0usize; h.len()];
+        let mut on_other = vec![0usize; h.len()];
+        for _ in 0..2000 {
+            on_own[policy.select_parent_on(&h, Some(0), &mut rng)] += 1;
+            on_other[policy.select_parent_on(&h, Some(1), &mut rng)] += 1;
+        }
+        assert_eq!(on_own[0], 0, "penalty picked on its own group: {on_own:?}");
+        assert!(
+            on_other[0] > 0,
+            "penalty never picked on the other group: {on_other:?}"
+        );
+    }
+
+    #[test]
+    fn group_scoping_off_keeps_the_global_filter() {
+        // With the knob off (feedback_routing disabled), a group context
+        // changes nothing: penalties are excluded everywhere, and the
+        // draws match the context-free selection stream exactly.
+        let policy = SearchPolicy::default();
+        assert!(!policy.group_scoped_penalties);
+        let mut h = history();
+        h[0].penalty = true;
+        h[0].accuracy = 0.0;
+        h[0].group = 0;
+        let scoped: Vec<usize> = {
+            let mut rng = derive(12, "search", 6);
+            (0..256)
+                .map(|_| policy.select_parent_on(&h, Some(1), &mut rng))
+                .collect()
+        };
+        let global: Vec<usize> = {
+            let mut rng = derive(12, "search", 6);
+            (0..256).map(|_| policy.select_parent(&h, &mut rng)).collect()
+        };
+        assert_eq!(scoped, global);
+        assert!(scoped.iter().all(|&i| i != 0), "penalty must stay excluded");
     }
 
     #[test]

@@ -148,6 +148,13 @@ fn elastic_mixed() -> ScenarioPreset {
     // the deadline and adopt those candidates as they drain, recovering
     // tail ops no intra-node steal can reach. Tight barriers (120 s)
     // keep placement latency small relative to the recovered window.
+    //
+    // HPO starts at round 2 — the round the stranded T4 lanes stage out
+    // in — so migrated candidates carry TPE-suggested hyperparameters
+    // and their finalize observations route back to the source lanes'
+    // optimizers (`feedback_routing`, on by default): the preset
+    // exercises all three closed-loop paths (observation routing,
+    // group-scoped penalties, steal-into-migrant).
     let mut t4 = NodeGroup::new("t4", 3, 8, GpuModel::t4());
     t4.batch_per_gpu = Some(256);
     let config = BenchmarkConfig {
@@ -159,7 +166,7 @@ fn elastic_mixed() -> ScenarioPreset {
             first_epochs: 2,
             step_epochs: 2,
             max_epochs: 6,
-            hpo_start_round: 5,
+            hpo_start_round: 2,
         },
         subshards_per_node: 2,
         work_stealing: true,
@@ -284,6 +291,11 @@ mod tests {
         // group strands a tail it can only recover by migrating.
         assert_eq!(cfg.warmup.first_epochs, 2);
         assert!(cfg.duration_s < 4.0 * 3600.0);
+        // HPO is live by the stage-out round, so migrated trials carry
+        // TPE suggestions and the feedback router has observations to
+        // deliver (the routing knob defaults on).
+        assert!(cfg.warmup.hpo_active(2));
+        assert!(cfg.feedback_routing);
         // Barriers are tight so placements land quickly.
         assert!(cfg.sync_interval_s <= 300.0);
     }

@@ -49,6 +49,14 @@ fn assert_bit_identical(a: &BenchmarkReport, b: &BenchmarkReport, label: &str) {
             "{label}: group {i} migration overhead"
         );
         assert_eq!(
+            x.feedback_routed, y.feedback_routed,
+            "{label}: group {i} feedback routed"
+        );
+        assert_eq!(
+            x.migrant_ring_joins, y.migrant_ring_joins,
+            "{label}: group {i} migrant ring joins"
+        );
+        assert_eq!(
             x.barrier_slack_s.to_bits(),
             y.barrier_slack_s.to_bits(),
             "{label}: group {i} barrier slack"
@@ -236,18 +244,42 @@ fn parity_with_subshards_and_work_stealing_on_mixed_topology() {
 #[test]
 fn parity_on_elastic_mixed_migration_preset() {
     // The migration showcase at its full crafted duration: staged
-    // candidates, barrier placements, adopted trials re-timed over IB —
-    // all of it must be a pure function of (seed, config), independent
-    // of the engine. A fresh seed set beyond the other mixed tests.
+    // candidates, barrier placements, adopted trials re-timed over IB,
+    // and the closed feedback loop (observation routing, group-scoped
+    // penalties, steal-into-migrant — all on by default) — all of it
+    // must be a pure function of (seed, config), independent of the
+    // engine. A fresh seed set beyond the other mixed tests.
     for seed in [0u64, 5, 9] {
         let mut cfg = aiperf::scenarios::get("elastic-mixed")
             .expect("elastic preset")
             .config;
+        assert!(cfg.feedback_routing, "preset closes the feedback loop");
         cfg.seed = seed;
         let seq = run_benchmark_with(&cfg, Engine::Sequential);
         let par = run_benchmark_with(&cfg, Engine::Parallel);
         assert_bit_identical(&seq, &par, &format!("elastic-mixed seed {seed}"));
     }
+}
+
+#[test]
+fn parity_on_elastic_mixed_with_feedback_routing_off() {
+    // The pre-feedback schedule (PR 4's) must also stay engine-parity
+    // clean: with the knob off the router, penalty scoping, and
+    // steal-into-migrant are all inert, and the counters read zero.
+    let mut cfg = aiperf::scenarios::get("elastic-mixed")
+        .expect("elastic preset")
+        .config;
+    cfg.feedback_routing = false;
+    cfg.seed = 1;
+    let seq = run_benchmark_with(&cfg, Engine::Sequential);
+    let par = run_benchmark_with(&cfg, Engine::Parallel);
+    assert_bit_identical(&seq, &par, "elastic-mixed feedback off");
+    assert!(
+        seq.groups
+            .iter()
+            .all(|g| g.feedback_routed == 0 && g.migrant_ring_joins == 0),
+        "feedback counters must be zero with routing off"
+    );
 }
 
 #[test]

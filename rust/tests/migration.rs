@@ -47,6 +47,10 @@ fn migration_off_keeps_the_pure_steal_schedule() {
 
     let mut alt = base.clone();
     alt.migration_nfs_bytes_per_param = 4096;
+    // Feedback routing only acts through migrated trials (and through
+    // penalties, which the preset cannot produce), so with migration off
+    // flipping it must be invisible too.
+    alt.feedback_routing = false;
     for g in alt.topology.groups.iter_mut() {
         g.accepts_migrants = false;
     }
@@ -264,6 +268,217 @@ fn oom_skips_feed_penalties_into_the_ranked_history() {
     assert!(
         any_skip,
         "the memory cliff never produced an OOM skip across seeds"
+    );
+}
+
+fn feedback_routed(r: &BenchmarkReport) -> u64 {
+    r.groups.iter().map(|g| g.feedback_routed).sum()
+}
+
+fn ring_joins(r: &BenchmarkReport) -> u64 {
+    r.groups.iter().map(|g| g.migrant_ring_joins).sum()
+}
+
+#[test]
+fn feedback_routing_off_reproduces_the_pre_feedback_schedule() {
+    // The PR 4 regression: with `feedback_routing = false` the router,
+    // the group-scoped penalty filter, and steal-into-migrant are all
+    // inert — the elastic scheduler produces the pre-feedback schedules
+    // exactly. Checked two ways: the counters read zero on the migration
+    // showcase, and on a run where migration never fires the knob's two
+    // settings are byte-identical (the loop only ever acts through
+    // migrated trials and OOM penalties).
+    let mut off = aiperf::scenarios::get("elastic-mixed")
+        .expect("elastic preset")
+        .config;
+    off.seed = 3;
+    off.feedback_routing = false;
+    let r = run_benchmark(&off);
+    assert_eq!(feedback_routed(&r), 0, "router must be inert with the knob off");
+    assert_eq!(ring_joins(&r), 0, "steal-into-migrant must be off with the knob off");
+    assert_eq!(
+        r.to_json().to_string(),
+        run_benchmark(&off).to_json().to_string(),
+        "the pre-feedback schedule stays a pure function of the seed"
+    );
+
+    // Homogeneous topology: migration can never fire, so the knob must
+    // be invisible bit for bit.
+    let mut on = BenchmarkConfig::homogeneous(2);
+    on.duration_s = 2.0 * 3600.0;
+    on.seed = 7;
+    on.subshards_per_node = 2;
+    on.work_stealing = true;
+    on.migration = true;
+    on.feedback_routing = true;
+    let mut knob_off = on.clone();
+    knob_off.feedback_routing = false;
+    assert_eq!(
+        run_benchmark(&on).to_json().to_string(),
+        run_benchmark(&knob_off).to_json().to_string(),
+        "feedback routing must be a no-op when nothing ever migrates"
+    );
+}
+
+#[test]
+fn elastic_mixed_routes_feedback_and_joins_migrant_rings() {
+    // The closed-loop acceptance contract on the migration showcase:
+    // across a seed scan, migrated trials' observations land back in
+    // their source lanes' optimizers (nonzero feedback_routed), at least
+    // one stranded sibling joins an adopted migrant's IB ring (nonzero
+    // migrant_ring_joins), and closing the loop actually changes the
+    // schedule relative to the same run with the knob off.
+    let mut any_feedback = false;
+    let mut any_ring_join = false;
+    let mut any_schedule_change = false;
+    for seed in 0..8u64 {
+        let mut on = aiperf::scenarios::get("elastic-mixed")
+            .expect("elastic preset")
+            .config;
+        on.seed = seed;
+        assert!(on.feedback_routing, "preset closes the loop by default");
+        let mut off = on.clone();
+        off.feedback_routing = false;
+        let r_on = run_benchmark(&on);
+        let r_off = run_benchmark(&off);
+
+        // Per-seed invariants: conservation still holds with the loop
+        // closed; an observation can only come from an adopted trial; a
+        // ring join is a steal; the off-run routes nothing.
+        assert_eq!(
+            migrations_in(&r_on),
+            migrations_out(&r_on),
+            "seed {seed}: migrations must balance with feedback on"
+        );
+        assert!(
+            feedback_routed(&r_on) <= migrations_in(&r_on),
+            "seed {seed}: at most one routed observation per adoption"
+        );
+        let steals: u64 = r_on.groups.iter().map(|g| g.steals).sum();
+        assert!(
+            ring_joins(&r_on) <= steals,
+            "seed {seed}: ring joins are a subset of steals"
+        );
+        assert_eq!(feedback_routed(&r_off), 0, "seed {seed}: off-run routed");
+        assert_eq!(ring_joins(&r_off), 0, "seed {seed}: off-run joined a ring");
+
+        if feedback_routed(&r_on) > 0 {
+            any_feedback = true;
+        }
+        if ring_joins(&r_on) > 0 {
+            any_ring_join = true;
+        }
+        if r_on.to_json().to_string() != r_off.to_json().to_string() {
+            any_schedule_change = true;
+        }
+    }
+    assert!(
+        any_feedback,
+        "no migrated-trial observation ever routed back across seeds"
+    );
+    assert!(
+        any_ring_join,
+        "no stranded lane ever joined an adopted migrant's ring across seeds"
+    );
+    assert!(
+        any_schedule_change,
+        "closing the feedback loop never changed the schedule across seeds"
+    );
+}
+
+/// Heterogeneous memory cliff: the `cliff` group's accelerator fits the
+/// initial architecture with ~1 MB to spare, while the V100 group has
+/// room for every morph the limits allow — so OOM penalties are recorded
+/// on (and only on) the cliff group, and with the loop closed they stop
+/// disqualifying parenthood for the V100 group's proposals.
+fn heterogeneous_cliff_cfg(seed: u64) -> BenchmarkConfig {
+    let stats = Architecture::initial_imagenet().stats(&OpWeights::default());
+    let fixed = stats.params * 12 + 3 * (1 << 29);
+    let cliff_gpu = GpuModel {
+        memory_bytes: fixed + stats.activation_elems * 2 * 4 + (1 << 20),
+        ..GpuModel::v100()
+    };
+    let mut cfg = BenchmarkConfig {
+        topology: ClusterTopology {
+            groups: vec![
+                NodeGroup::new("cliff", 1, 8, cliff_gpu),
+                NodeGroup::new("big", 1, 8, GpuModel::v100()),
+            ],
+        },
+        batch_per_gpu: 4,
+        warmup: WarmupSchedule {
+            first_epochs: 1,
+            step_epochs: 1,
+            max_epochs: 2,
+            hpo_start_round: 5,
+        },
+        duration_s: 4.0 * 3600.0,
+        ..BenchmarkConfig::default()
+    };
+    cfg.dataset.train_images = 100_000;
+    cfg.dataset.val_images = 10_000;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn oom_penalties_carry_their_group_and_stay_on_it() {
+    // Shard-level provenance: every penalty record a cliff-group shard
+    // emits carries the cliff group, and the V100 group's shard — same
+    // run, same shared snapshot mechanics — never skips at all.
+    let mut any_skip = false;
+    for seed in 0..4u64 {
+        let cfg = heterogeneous_cliff_cfg(seed);
+        cfg.validate().unwrap();
+        let ctx = SimContext::new(&cfg);
+        let snapshot = HistorySnapshot::default();
+        let mut cliff = SlaveShard::new(0, 0, &cfg);
+        let mut big = SlaveShard::new(1, 1, &cfg);
+        cliff.run_until(cfg.duration_s, &snapshot, &ctx);
+        big.run_until(cfg.duration_s, &snapshot, &ctx);
+        for r in cliff.completed.iter().filter(|r| r.penalty) {
+            assert_eq!(r.group, 0, "seed {seed}: penalty must carry the cliff group");
+            assert_eq!(r.node, 0, "seed {seed}: penalty must carry the cliff node");
+        }
+        assert_eq!(big.oom_skips, 0, "seed {seed}: the V100 shard fits everything");
+        assert!(big.completed.iter().all(|r| !r.penalty), "seed {seed}");
+        if cliff.oom_skips > 0 {
+            any_skip = true;
+        }
+    }
+    assert!(any_skip, "the cliff group never hit its memory boundary");
+}
+
+#[test]
+fn group_scoped_penalties_change_the_heterogeneous_search() {
+    // End to end: with the loop closed, a candidate OOM-skipped on the
+    // cliff group remains a legal morph parent for the V100 group, so
+    // the scoped and global filters must diverge on some seed — while
+    // each stays deterministic, completes, and scores.
+    let mut any_divergence = false;
+    for seed in 0..4u64 {
+        let scoped_cfg = heterogeneous_cliff_cfg(seed);
+        assert!(scoped_cfg.feedback_routing, "scoping rides the default-on knob");
+        let mut global_cfg = scoped_cfg.clone();
+        global_cfg.feedback_routing = false;
+        let scoped = run_benchmark(&scoped_cfg);
+        let global = run_benchmark(&global_cfg);
+        for r in [&scoped, &global] {
+            assert!(r.score_flops > 0.0, "seed {seed}");
+            assert!(r.architectures_evaluated >= 1, "seed {seed}");
+        }
+        assert_eq!(
+            scoped.to_json().to_string(),
+            run_benchmark(&scoped_cfg).to_json().to_string(),
+            "seed {seed}: scoped run must be a pure function of the seed"
+        );
+        if scoped.to_json().to_string() != global.to_json().to_string() {
+            any_divergence = true;
+        }
+    }
+    assert!(
+        any_divergence,
+        "per-group penalty scoping never changed a heterogeneous schedule"
     );
 }
 

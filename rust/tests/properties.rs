@@ -412,6 +412,7 @@ fn prop_config_text_roundtrip_identity() {
             work_stealing: rng.gen_bool(0.5),
             migration: rng.gen_bool(0.5),
             migration_nfs_bytes_per_param: rng.gen_range_u64(1, 64),
+            feedback_routing: rng.gen_bool(0.5),
             ..BenchmarkConfig::default()
         };
         let text = cfg.to_text();

@@ -6,7 +6,22 @@
 //! paper the list lives on NFS; here it is the master-owned source of
 //! truth the simulated nodes read (with an NFS latency charge) and the
 //! live runner shares behind a lock.
+//!
+//! Everything the barrier hot path needs is maintained incrementally on
+//! `push`, so taking a snapshot is O(new records) amortized instead of
+//! O(all records) per window:
+//!
+//! * a ranked view whose entries share `Arc<Architecture>`s with the
+//!   records (no deep clones — at exascale the old per-window rebuild
+//!   cloned every recorded architecture every barrier);
+//! * a stable accuracy-ascending index over that view, extended by
+//!   merging each window's sorted delta (bit-equal to a full stable
+//!   sort, which is what the selection math replays);
+//! * a running best error and a per-record prefix-min series, so the
+//!   score ticks' `best_measured_error_at` is a binary search, not a
+//!   scan of the whole list per sample.
 
+use std::sync::Arc;
 
 use crate::nas::graph::Architecture;
 use crate::nas::search::RankedModel;
@@ -15,7 +30,8 @@ use crate::nas::search::RankedModel;
 #[derive(Debug, Clone)]
 pub struct ModelRecord {
     pub id: u64,
-    pub arch: Architecture,
+    /// Shared with every ranked view that includes this record.
+    pub arch: Arc<Architecture>,
     pub signature: String,
     pub params: u64,
     /// Ranking accuracy: the Appendix-C prediction during warm-up rounds,
@@ -58,9 +74,46 @@ impl ModelRecord {
 }
 
 /// Append-only ranked model list.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct HistoryList {
     records: Vec<ModelRecord>,
+    /// Ranked view of every record, `Arc`-shared so barrier snapshots
+    /// are O(1) to hand out. `Arc::make_mut` keeps pushes in-place
+    /// whenever no snapshot is outstanding (the master drops its frozen
+    /// view before merging a window).
+    ranked: Arc<Vec<RankedModel>>,
+    /// Stable accuracy-ascending order of `ranked[..sorted_len]`;
+    /// refreshed lazily by [`HistoryList::sorted_shared`].
+    sorted: Arc<Vec<u32>>,
+    sorted_len: usize,
+    /// Penalty entries in `ranked` (lets selection prove its filter
+    /// inert without rescanning).
+    penalties: u64,
+    /// Running best over all non-penalty records (order-independent).
+    best_error: Option<f64>,
+    /// `(completed_at, prefix-min error)` per non-penalty record —
+    /// valid while pushes arrive in nondecreasing completion order,
+    /// which the coordinator guarantees (windows are merged in time
+    /// order and each window's completions are sorted before pushing).
+    prefix_min: Vec<(f64, f64)>,
+    /// Cleared the moment an out-of-order push invalidates
+    /// `prefix_min`; queries then fall back to the naive scan.
+    time_ordered: bool,
+}
+
+impl Default for HistoryList {
+    fn default() -> Self {
+        HistoryList {
+            records: Vec::new(),
+            ranked: Arc::new(Vec::new()),
+            sorted: Arc::new(Vec::new()),
+            sorted_len: 0,
+            penalties: 0,
+            best_error: None,
+            prefix_min: Vec::new(),
+            time_ordered: true,
+        }
+    }
 }
 
 impl HistoryList {
@@ -69,6 +122,41 @@ impl HistoryList {
     }
 
     pub fn push(&mut self, rec: ModelRecord) {
+        if rec.penalty {
+            self.penalties += 1;
+        } else {
+            let e = rec.error();
+            let better = match self.best_error {
+                Some(b) => e < b,
+                None => true,
+            };
+            if better {
+                self.best_error = Some(e);
+            }
+            if self.time_ordered {
+                match self.prefix_min.last() {
+                    Some(&(last_t, last_min)) => {
+                        if rec.completed_at < last_t {
+                            // Out-of-order push (test/tooling path): the
+                            // prefix series no longer answers time
+                            // queries; fall back to scanning.
+                            self.time_ordered = false;
+                            self.prefix_min.clear();
+                        } else {
+                            let m = if e < last_min { e } else { last_min };
+                            self.prefix_min.push((rec.completed_at, m));
+                        }
+                    }
+                    None => self.prefix_min.push((rec.completed_at, e)),
+                }
+            }
+        }
+        Arc::make_mut(&mut self.ranked).push(RankedModel {
+            arch: Arc::clone(&rec.arch),
+            accuracy: rec.accuracy,
+            penalty: rec.penalty,
+            group: rec.group,
+        });
         self.records.push(rec);
     }
 
@@ -89,35 +177,89 @@ impl HistoryList {
     /// ranking, never the achieved-error series — and OOM-penalty
     /// entries were never trained at all, so they are excluded outright.
     pub fn best_measured_error(&self) -> Option<f64> {
-        self.records
-            .iter()
-            .filter(|r| !r.penalty)
-            .map(|r| r.error())
-            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+        self.best_error
     }
 
     /// Best error among trained records completed by time `t` (for the
-    /// Fig 5 time series).
+    /// Fig 5 time series). A binary search over the prefix-min series on
+    /// the coordinator's time-ordered push path; a full scan otherwise.
     pub fn best_measured_error_at(&self, t: f64) -> Option<f64> {
-        self.records
-            .iter()
-            .filter(|r| !r.penalty && r.completed_at <= t)
-            .map(|r| r.error())
-            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+        if self.time_ordered {
+            let idx = self.prefix_min.partition_point(|&(ct, _)| ct <= t);
+            if idx == 0 {
+                None
+            } else {
+                Some(self.prefix_min[idx - 1].1)
+            }
+        } else {
+            self.records
+                .iter()
+                .filter(|r| !r.penalty && r.completed_at <= t)
+                .map(|r| r.error())
+                .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+        }
     }
 
     /// View for the NAS search policy (all records rank, predicted too —
     /// that is the point of warm-up prediction).
-    pub fn ranked_view(&self) -> Vec<RankedModel> {
-        self.records
-            .iter()
-            .map(|r| RankedModel {
-                arch: r.arch.clone(),
-                accuracy: r.accuracy,
-                penalty: r.penalty,
-                group: r.group,
-            })
-            .collect()
+    pub fn ranked_view(&self) -> &[RankedModel] {
+        &self.ranked
+    }
+
+    /// The `Arc`-shared ranked view — what barrier snapshots hold.
+    pub fn ranked_shared(&self) -> Arc<Vec<RankedModel>> {
+        Arc::clone(&self.ranked)
+    }
+
+    /// The `Arc`-shared stable accuracy order of the ranked view,
+    /// bringing it up to date first (amortized O(new records) per
+    /// window: the delta is sorted alone, then merged).
+    pub fn sorted_shared(&mut self) -> Arc<Vec<u32>> {
+        self.flush_sorted();
+        Arc::clone(&self.sorted)
+    }
+
+    /// Penalty entries recorded so far.
+    pub fn penalty_count(&self) -> u64 {
+        self.penalties
+    }
+
+    /// Extend `sorted` over any records pushed since the last flush.
+    /// Merging the old order with the stable-sorted delta (ties keep the
+    /// older element first) yields exactly the permutation a full stable
+    /// sort of all entries produces — the property the selection math's
+    /// bit-exact replay rests on.
+    fn flush_sorted(&mut self) {
+        let ranked = Arc::clone(&self.ranked);
+        let len = ranked.len();
+        if self.sorted_len == len {
+            return;
+        }
+        let mut delta: Vec<u32> = (self.sorted_len as u32..len as u32).collect();
+        delta.sort_by(|&a, &b| {
+            ranked[a as usize]
+                .accuracy
+                .partial_cmp(&ranked[b as usize].accuracy)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let old = Arc::clone(&self.sorted);
+        let mut merged = Vec::with_capacity(len);
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < old.len() && j < delta.len() {
+            let a = ranked[old[i] as usize].accuracy;
+            let b = ranked[delta[j] as usize].accuracy;
+            if b < a {
+                merged.push(delta[j]);
+                j += 1;
+            } else {
+                merged.push(old[i]);
+                i += 1;
+            }
+        }
+        merged.extend_from_slice(&old[i..]);
+        merged.extend_from_slice(&delta[j..]);
+        self.sorted = Arc::new(merged);
+        self.sorted_len = len;
     }
 
     /// Serialized size estimate for the NFS charge (the paper stores the
@@ -134,7 +276,7 @@ mod tests {
     fn rec(id: u64, acc: f64, predicted: bool, t: f64) -> ModelRecord {
         ModelRecord {
             id,
-            arch: Architecture::initial(32, 3, 10),
+            arch: Arc::new(Architecture::initial(32, 3, 10)),
             signature: format!("sig{id}"),
             params: 1000,
             accuracy: acc,
@@ -176,6 +318,21 @@ mod tests {
     }
 
     #[test]
+    fn out_of_order_pushes_fall_back_to_the_scan() {
+        // Completion times arriving backwards invalidate the prefix-min
+        // series; answers must stay correct through the fallback.
+        let mut h = HistoryList::new();
+        h.push(rec(0, 0.5, false, 100.0));
+        h.push(rec(1, 0.9, false, 10.0)); // earlier than the last push
+        h.push(rec(2, 0.7, false, 50.0));
+        assert!((h.best_measured_error_at(20.0).unwrap() - 0.1).abs() < 1e-12);
+        assert!((h.best_measured_error_at(60.0).unwrap() - 0.1).abs() < 1e-12);
+        assert!((h.best_measured_error_at(200.0).unwrap() - 0.1).abs() < 1e-12);
+        assert!(h.best_measured_error_at(5.0).is_none());
+        assert!((h.best_measured_error().unwrap() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
     fn ranked_view_includes_all() {
         let mut h = HistoryList::new();
         h.push(rec(0, 0.4, true, 1.0));
@@ -199,6 +356,44 @@ mod tests {
         let view = h.ranked_view();
         assert_eq!(view.len(), 2);
         assert!(view[0].penalty && !view[1].penalty);
+        assert_eq!(h.penalty_count(), 1);
+    }
+
+    #[test]
+    fn incremental_sort_matches_a_full_stable_sort() {
+        // Push in window-sized bursts with plenty of accuracy ties,
+        // flushing between bursts: the merged order must equal a single
+        // stable sort of everything (crate::nas::search::sorted_order is
+        // the reference permutation).
+        let mut h = HistoryList::new();
+        let accs = [
+            0.5, 0.2, 0.5, 0.9, 0.2, 0.2, 0.7, 0.5, 0.1, 0.9, 0.5, 0.2,
+        ];
+        let mut pushed = 0u64;
+        for burst in accs.chunks(3) {
+            for &a in burst {
+                h.push(rec(pushed, a, false, pushed as f64));
+                pushed += 1;
+            }
+            let incremental = h.sorted_shared();
+            let reference = crate::nas::search::sorted_order(h.ranked_view());
+            assert_eq!(*incremental, reference, "after {pushed} pushes");
+        }
+    }
+
+    #[test]
+    fn shared_snapshot_survives_later_pushes() {
+        // A frozen Arc view must keep its contents while the list grows
+        // (copy-on-write kicks in only when a snapshot is outstanding).
+        let mut h = HistoryList::new();
+        h.push(rec(0, 0.4, false, 1.0));
+        let frozen = h.ranked_shared();
+        let frozen_sorted = h.sorted_shared();
+        h.push(rec(1, 0.8, false, 2.0));
+        assert_eq!(frozen.len(), 1);
+        assert_eq!(frozen_sorted.len(), 1);
+        assert_eq!(h.ranked_view().len(), 2);
+        assert_eq!(h.sorted_shared().len(), 2);
     }
 
     #[test]

@@ -278,7 +278,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveResult> {
         tpe.observe(lr_cfg, 1.0 - acc as f64);
         history.push(ModelRecord {
             id: trial_idx,
-            arch: grid_arch(&variant),
+            arch: std::sync::Arc::new(grid_arch(&variant)),
             signature: variant.name.clone(),
             params: variant.total_param_elems() as u64,
             accuracy: acc as f64,

@@ -45,7 +45,11 @@ struct GlobalState {
     /// past each window boundary, and the sample count (lanes × windows).
     group_slack_sum: Vec<f64>,
     group_slack_samples: Vec<u64>,
-    next_score_t: f64,
+    /// Index of the next score boundary: tick `i` samples at
+    /// `i * score_interval_s`. An index (rather than an accumulated
+    /// `next_score_t += interval`) keeps boundaries drift-free over the
+    /// hundreds of thousands of ticks an exascale run emits.
+    next_score_idx: u64,
 }
 
 /// Merge one window's shard outputs into the global state, in
@@ -97,10 +101,23 @@ fn merge_window(
     // Telemetry: every lane of every shard ticks on the same schedule;
     // zip the per-lane readings per tick (a shard's readings vector holds
     // its `subshard_count()` lane readings consecutively per tick, in
-    // lane order).
+    // lane order). The tick count is a real cross-shard invariant —
+    // checked in release builds too, because a shard emitting a
+    // different tick count would otherwise zip readings from different
+    // instants (or index out of bounds) silently.
     let ticks = shards
         .first()
         .map_or(0, |s| s.readings.len() / s.subshard_count().max(1));
+    for s in shards.iter() {
+        let k = s.subshard_count().max(1);
+        assert_eq!(
+            s.readings.len(),
+            ticks * k,
+            "telemetry tick count diverged: node {} has {} readings across {k} lanes, expected {ticks} ticks",
+            s.node,
+            s.readings.len(),
+        );
+    }
     for j in 0..ticks {
         let t = shards[0].readings[j * shards[0].subshard_count()].0;
         let mut readings: Vec<NodeReading> = Vec::new();
@@ -108,7 +125,12 @@ fn merge_window(
             let k = s.subshard_count();
             for u in 0..k {
                 let (rt, r) = s.readings[j * k + u];
-                debug_assert_eq!(rt, t, "telemetry ticks diverged");
+                assert_eq!(
+                    rt.to_bits(),
+                    t.to_bits(),
+                    "telemetry ticks diverged: node {} lane {u} sampled at {rt}, expected {t}",
+                    s.node
+                );
                 readings.push(r);
             }
         }
@@ -118,10 +140,15 @@ fn merge_window(
         s.readings.clear();
     }
 
-    // Score samples due in this window (hourly in the paper).
+    // Score samples due in this window (hourly in the paper). Boundaries
+    // are exact multiples of the interval — accumulating `t += interval`
+    // drifts at exascale tick counts.
     let mut op_i = 0;
-    while global.next_score_t <= window_end {
-        let ts = global.next_score_t;
+    loop {
+        let ts = global.next_score_idx as f64 * cfg.score_interval_s;
+        if ts > window_end {
+            break;
+        }
         while op_i < ops_events.len() && ops_events[op_i].0 <= ts {
             global.cumulative_ops += ops_events[op_i].1;
             op_i += 1;
@@ -133,7 +160,7 @@ fn merge_window(
         global
             .score_series
             .push(ScoreSample::new(ts, global.cumulative_ops, best));
-        global.next_score_t += cfg.score_interval_s;
+        global.next_score_idx += 1;
     }
     while op_i < ops_events.len() {
         global.cumulative_ops += ops_events[op_i].1;
@@ -144,11 +171,22 @@ fn merge_window(
 /// Epoch-barrier boundaries: multiples of `sync_interval_s`, closed with
 /// the benchmark duration.
 fn window_ends(cfg: &BenchmarkConfig) -> Vec<f64> {
+    // Boundaries as exact multiples of the interval: the accumulated
+    // `t += interval` form drifts at high window counts — an exa-scale
+    // run with a short sync interval could emit a near-duplicate final
+    // window (boundary at duration − ε, then duration) or shift every
+    // barrier by the accumulated error. For the integer-valued intervals
+    // of the pinned presets, `i * interval` is bit-equal to the old
+    // accumulation, so their schedules are unchanged.
     let mut ends = Vec::new();
-    let mut t = cfg.sync_interval_s;
-    while t < cfg.duration_s {
+    let mut i = 1u64;
+    loop {
+        let t = i as f64 * cfg.sync_interval_s;
+        if t >= cfg.duration_s {
+            break;
+        }
         ends.push(t);
-        t += cfg.sync_interval_s;
+        i += 1;
     }
     ends.push(cfg.duration_s);
     ends
@@ -178,18 +216,21 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         group_ops: vec![0.0; cfg.topology.groups.len()],
         group_slack_sum: vec![0.0; cfg.topology.groups.len()],
         group_slack_samples: vec![0; cfg.topology.groups.len()],
-        next_score_t: cfg.score_interval_s,
+        next_score_idx: 1,
     };
     let mut snapshot = HistorySnapshot::default();
 
     for (window, window_end) in window_ends(cfg).into_iter().enumerate() {
         // Refresh the frozen history view from the previous barrier's
-        // merge (done lazily here so the final merge skips the rebuild —
-        // ranked_view clones every recorded architecture).
+        // merge — O(1): the ranked list and its sort order are Arc-shared
+        // with the history, which extends both incrementally. (Lazy here
+        // so the final merge skips even that.)
         if window > 0 {
             snapshot = HistorySnapshot {
-                ranked: global.history.ranked_view(),
+                ranked: global.history.ranked_shared(),
+                sorted: global.history.sorted_shared(),
                 records: global.history.len() as u64,
+                penalties: global.history.penalty_count(),
             };
         }
         match engine {
@@ -204,13 +245,35 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
                     .unwrap_or(1)
                     .min(shards.len())
                     .max(1);
-                let chunk = shards.len().div_ceil(workers);
+                // Small batches behind a shared claim counter rather than
+                // one static chunk per worker: a static split serializes
+                // each window on its slowest chunk, which at 10k+ shards
+                // of uneven cost forfeits most of the pool. ~4 batches
+                // per worker keeps everyone busy; the per-batch Mutex is
+                // uncontended (each batch is claimed exactly once) and
+                // only exists to hand `&mut` chunks across threads
+                // safely. Determinism is untouched: a shard's evolution
+                // depends only on (its own state, the frozen snapshot,
+                // the window end), and merging stays in node order.
+                let batch = (shards.len() / (workers * 4)).max(1);
+                let batches: Vec<std::sync::Mutex<&mut [SlaveShard]>> = shards
+                    .chunks_mut(batch)
+                    .map(std::sync::Mutex::new)
+                    .collect();
+                let next = std::sync::atomic::AtomicUsize::new(0);
                 let snap = &snapshot;
                 let ctx_ref = &ctx;
+                let batches_ref = &batches;
+                let next_ref = &next;
                 std::thread::scope(|scope| {
-                    for group in shards.chunks_mut(chunk) {
-                        scope.spawn(move || {
-                            for s in group {
+                    for _ in 0..workers {
+                        scope.spawn(move || loop {
+                            let i = next_ref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            let Some(cell) = batches_ref.get(i) else {
+                                break;
+                            };
+                            let mut guard = cell.lock().expect("shard batch lock poisoned");
+                            for s in guard.iter_mut() {
                                 s.run_until(window_end, snap, ctx_ref);
                             }
                         });
@@ -218,6 +281,11 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
                 });
             }
         }
+        // Release the frozen view before merging: with no snapshot
+        // outstanding the history is the ranked list's sole owner, so
+        // this window's completions append in place instead of forcing a
+        // copy-on-write of the whole list.
+        snapshot = HistorySnapshot::default();
         merge_window(&mut global, &mut shards, window_end, cfg);
         // Inter-group migration: place staged candidates onto idle lanes
         // of other groups. Runs single-threaded at the barrier in both
@@ -563,5 +631,73 @@ mod tests {
         assert_eq!(window_ends(&cfg), vec![3600.0]);
         cfg.sync_interval_s = 1800.0; // exact divisor: no duplicate end
         assert_eq!(window_ends(&cfg), vec![1800.0, 3600.0]);
+    }
+
+    #[test]
+    fn window_boundaries_do_not_drift_at_high_window_counts() {
+        // 100k windows of a non-dyadic interval: repeated `t += 0.1`
+        // accumulates ~1e-10 of drift per step, enough for the old
+        // accumulation to emit a near-duplicate final window (a boundary
+        // at duration − ε followed by duration). Multiples stay exact.
+        let mut cfg = small_cfg(1, 1.0, 0);
+        cfg.duration_s = 10_000.0;
+        cfg.sync_interval_s = 0.1;
+        let ends = window_ends(&cfg);
+        assert_eq!(ends.len(), 100_000);
+        assert_eq!(*ends.last().unwrap(), 10_000.0);
+        for (i, w) in ends.iter().enumerate().take(ends.len() - 1) {
+            assert_eq!(
+                w.to_bits(),
+                ((i + 1) as f64 * 0.1).to_bits(),
+                "window {i} drifted: {w}"
+            );
+        }
+        // Strictly increasing with no near-duplicate final window — the
+        // failure mode of the accumulated form.
+        assert!(ends.windows(2).all(|w| w[1] > w[0]));
+        let final_gap = ends[ends.len() - 1] - ends[ends.len() - 2];
+        assert!(
+            final_gap > 0.05,
+            "near-duplicate final window: gap {final_gap:e}"
+        );
+    }
+
+    #[test]
+    fn telemetry_zips_across_heterogeneous_subshard_counts() {
+        use crate::cluster::{ClusterTopology, GpuModel, NodeGroup};
+        // Per-group lane counts differ (1 vs 2 lanes per node): the
+        // telemetry merge must zip per tick across shards with different
+        // per-shard reading strides, and its tick-count invariant must
+        // hold window after window.
+        let mut one_lane = NodeGroup::new("t4", 2, 8, GpuModel::t4());
+        one_lane.subshards_per_node = Some(1);
+        let mut two_lane = NodeGroup::new("v100", 2, 8, GpuModel::v100());
+        two_lane.subshards_per_node = Some(2);
+        let mut cfg = BenchmarkConfig {
+            batch_per_gpu: 256,
+            topology: ClusterTopology {
+                groups: vec![one_lane, two_lane],
+            },
+            ..BenchmarkConfig::default()
+        };
+        cfg.duration_s = 4.0 * 3600.0;
+        cfg.seed = 3;
+        let seq = run_benchmark_with(&cfg, Engine::Sequential);
+        let par = run_benchmark_with(&cfg, Engine::Parallel);
+        assert!(!seq.telemetry.is_empty());
+        assert_eq!(seq.telemetry.len(), par.telemetry.len());
+        for (x, y) in seq.telemetry.iter().zip(&par.telemetry) {
+            assert_eq!(x.t.to_bits(), y.t.to_bits());
+            assert_eq!(x.gpu_util_mean.to_bits(), y.gpu_util_mean.to_bits());
+        }
+        // Ticks are cluster-wide instants on the telemetry schedule.
+        for (i, s) in seq.telemetry.iter().enumerate() {
+            assert_eq!(
+                s.t.to_bits(),
+                ((i + 1) as f64 * cfg.telemetry_interval_s).to_bits(),
+                "tick {i} off-schedule at {}",
+                s.t
+            );
+        }
     }
 }

@@ -59,6 +59,8 @@
 //! the snapshot, the window end), executing shards on a thread pool is
 //! bit-identical to executing them sequentially.
 
+use std::sync::Arc;
+
 use crate::cluster::nfs::NfsStats;
 use crate::config::BenchmarkConfig;
 use crate::coordinator::buffer::{ArchBuffer, Candidate};
@@ -157,13 +159,20 @@ impl<'a> SimContext<'a> {
     }
 }
 
-/// Frozen view of the shared historical model list, rebuilt at each
-/// epoch barrier. `records` is the global record count (drives the NFS
-/// read charge exactly like `HistoryList::nfs_bytes`).
-#[derive(Default)]
+/// Frozen view of the shared historical model list, refreshed at each
+/// epoch barrier. The ranked list and its stable accuracy-ascending
+/// order are `Arc`-shared with the master's [`super::HistoryList`], so a
+/// refresh is O(1) and never clones an architecture (the entries share
+/// `Arc<Architecture>`s with the records themselves). `records` is the
+/// global record count (drives the NFS read charge exactly like
+/// `HistoryList::nfs_bytes`); `penalties` counts penalty entries so the
+/// selection fast path can prove its filter inert without a scan.
+#[derive(Default, Clone)]
 pub struct HistorySnapshot {
-    pub ranked: Vec<RankedModel>,
+    pub ranked: Arc<Vec<RankedModel>>,
+    pub sorted: Arc<Vec<u32>>,
     pub records: u64,
+    pub penalties: u64,
 }
 
 /// One sub-shard lane: an independent trial trainer over a slice of the
@@ -299,8 +308,17 @@ impl SlaveShard {
         for s in 0..k {
             let unit = unit0 + s as u64;
             // Asynchronous dispatch: SLURM stagger of a few seconds per
-            // lane (per node in the classic one-lane layout).
-            queue.schedule(unit as f64 * 2.0, ShardEvent::NodeReady { sub: s });
+            // lane (per node in the classic one-lane layout). The stagger
+            // wraps past STAGGER_PERIOD lanes: an unwrapped `unit * 2 s`
+            // would push lane 100k's first event out to t ≈ 56 h — past
+            // any benchmark duration, leaving most of an exascale cluster
+            // permanently idle. Every pinned preset has at most 1024
+            // lanes, so their schedules are untouched by the wrap.
+            const STAGGER_PERIOD: u64 = 2048;
+            queue.schedule(
+                (unit % STAGGER_PERIOD) as f64 * 2.0,
+                ShardEvent::NodeReady { sub: s },
+            );
             subs.push(SubShard {
                 unit,
                 gpus: lane_gpus,
@@ -700,27 +718,38 @@ impl SlaveShard {
         self.subs[sub].round += 1;
         let round = self.subs[sub].round;
 
-        // The snapshot is only cloned when there are local completions to
-        // append — the common case borrows it directly.
+        // The node's local completions since the barrier ride along as a
+        // small extras tail, merged into the frozen snapshot's sorted
+        // order on the fly — the snapshot is never cloned or re-sorted,
+        // and the draws replay the historic concatenate-and-sort form
+        // bit for bit (see `SearchPolicy::propose_merged`).
         // Proposals carry this shard's group so the penalty filter knows
         // which accelerator's memory boundary applies (scoping itself is
         // gated by `SearchPolicy::group_scoped_penalties`).
         let on_group = Some(self.group);
         let arch = if snapshot.ranked.is_empty() && self.completed.is_empty() {
             ctx.initial.clone()
-        } else if self.completed.is_empty() {
-            ctx.policy
-                .propose_on(&snapshot.ranked, on_group, &mut self.subs[sub].rng)
-                .0
         } else {
-            let mut ranked = snapshot.ranked.clone();
-            ranked.extend(self.completed.iter().map(|r| RankedModel {
-                arch: r.arch.clone(),
-                accuracy: r.accuracy,
-                penalty: r.penalty,
-                group: r.group,
-            }));
-            ctx.policy.propose_on(&ranked, on_group, &mut self.subs[sub].rng).0
+            let extras: Vec<RankedModel> = self
+                .completed
+                .iter()
+                .map(|r| RankedModel {
+                    arch: Arc::clone(&r.arch),
+                    accuracy: r.accuracy,
+                    penalty: r.penalty,
+                    group: r.group,
+                })
+                .collect();
+            ctx.policy
+                .propose_merged(
+                    &snapshot.ranked,
+                    &snapshot.sorted,
+                    snapshot.penalties,
+                    &extras,
+                    on_group,
+                    &mut self.subs[sub].rng,
+                )
+                .0
         };
         let _ = self.buffer.push(Candidate {
             arch: arch.clone(),
@@ -828,7 +857,7 @@ impl SlaveShard {
             signature: arch.signature(),
             params,
             measured_accuracy: 0.0,
-            arch,
+            arch: Arc::new(arch),
             accuracy: 0.0,
             predicted: true,
             penalty: true,
@@ -1030,7 +1059,7 @@ impl SlaveShard {
                 signature: trial.arch.signature(),
                 params: trial.params,
                 measured_accuracy: trial.best_accuracy(),
-                arch: trial.arch,
+                arch: Arc::new(trial.arch),
                 accuracy,
                 predicted,
                 penalty: false,

@@ -9,6 +9,7 @@
 //! real training per trial (the live runner does exactly that in-process).
 
 use std::net::TcpStream;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -110,7 +111,7 @@ impl SlaveWorker {
                 let ranked: Vec<RankedModel> = history
                     .iter()
                     .map(|m| RankedModel {
-                        arch: self.rebuild(m),
+                        arch: Arc::new(self.rebuild(m)),
                         accuracy: m.accuracy,
                         penalty: false,
                         group: 0,

@@ -6,16 +6,43 @@
 //! measured) accuracy and the parent is drawn with probability
 //! exponentially tilted toward the best — exploration comes from the
 //! random morph on top of the chosen parent.
+//!
+//! Two selection entry points coexist:
+//!
+//! * [`SearchPolicy::select_parent_on`] — the historic form over one
+//!   contiguous slice, re-sorting per call. Still the reference
+//!   semantics, and what small callers (the live runner, tests) use.
+//! * [`SearchPolicy::select_parent_merged`] — the hot-path form over a
+//!   frozen pre-sorted base (the barrier snapshot) plus a small unsorted
+//!   tail of local completions. For histories up to
+//!   [`EXACT_SOFTMAX_MAX`] entries, or whenever penalties are present,
+//!   it performs the *identical* float operations in the identical
+//!   order, so its draws are bit-equal to the historic form. Past that
+//!   size with no penalties it switches to a closed-form inversion of
+//!   the geometric rank CDF — same distribution, O(log n) instead of
+//!   O(n log n) per proposal, which is what makes 100k-lane simulations
+//!   tractable.
+
+use std::sync::Arc;
 
 use crate::util::rng::Rng;
 
 use super::graph::Architecture;
 use super::morphism::{random_legal_morph, Morph, MorphLimits};
 
+/// Largest history for which the merged selection replays the historic
+/// per-call sort + subtract-scan bit for bit. Every pinned preset tops
+/// out well below this (ascend-4096 records ~4k models), so their RNG
+/// streams — and every determinism gate over them — are unchanged; only
+/// aspirational exascale runs cross into the closed-form path.
+pub const EXACT_SOFTMAX_MAX: usize = 8192;
+
 /// Scored history entry the policy selects from.
 #[derive(Debug, Clone)]
 pub struct RankedModel {
-    pub arch: Architecture,
+    /// Shared with the history's `ModelRecord`: snapshots and proposals
+    /// never deep-clone an architecture.
+    pub arch: Arc<Architecture>,
     /// Accuracy in [0,1] (measured, or predicted during warm-up).
     pub accuracy: f64,
     /// OOM-penalty entry: the architecture fit no batch size on its
@@ -29,6 +56,84 @@ pub struct RankedModel {
     /// parenthood for proposals that would run on this same group (when
     /// [`SearchPolicy::group_scoped_penalties`] is on).
     pub group: usize,
+}
+
+/// Stable accuracy-ascending order of `models` — the same comparator
+/// (and therefore the same permutation) as the historic per-call sort in
+/// [`SearchPolicy::select_parent_on`]. Ties keep input order.
+pub fn sorted_order(models: &[RankedModel]) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..models.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        models[a as usize]
+            .accuracy
+            .partial_cmp(&models[b as usize].accuracy)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+/// Two-pointer walk over a pre-sorted base order and a sorted extras
+/// order, yielding `(is_extra, index)` in exactly the order a stable
+/// sort of `base ++ extras` by accuracy visits them: ties resolve
+/// base-first (lower position in the concatenation), then insertion
+/// order within each side. This is the invariant that lets the frozen
+/// snapshot path reproduce the historic per-call sort bit for bit.
+struct MergeWalk<'a> {
+    base: &'a [RankedModel],
+    base_sorted: &'a [u32],
+    extras: &'a [RankedModel],
+    extras_sorted: &'a [u32],
+    bi: usize,
+    ei: usize,
+}
+
+impl<'a> MergeWalk<'a> {
+    fn new(
+        base: &'a [RankedModel],
+        base_sorted: &'a [u32],
+        extras: &'a [RankedModel],
+        extras_sorted: &'a [u32],
+    ) -> Self {
+        MergeWalk {
+            base,
+            base_sorted,
+            extras,
+            extras_sorted,
+            bi: 0,
+            ei: 0,
+        }
+    }
+}
+
+impl Iterator for MergeWalk<'_> {
+    type Item = (bool, u32);
+
+    fn next(&mut self) -> Option<(bool, u32)> {
+        let take_base = match (
+            self.bi < self.base_sorted.len(),
+            self.ei < self.extras_sorted.len(),
+        ) {
+            (true, true) => {
+                let ba = self.base[self.base_sorted[self.bi] as usize].accuracy;
+                let ea = self.extras[self.extras_sorted[self.ei] as usize].accuracy;
+                // Tie → base: the base entry sits earlier in the
+                // concatenation, so a stable sort keeps it first.
+                !(ea < ba)
+            }
+            (true, false) => true,
+            (false, true) => false,
+            (false, false) => return None,
+        };
+        if take_base {
+            let i = self.base_sorted[self.bi];
+            self.bi += 1;
+            Some((false, i))
+        } else {
+            let i = self.extras_sorted[self.ei];
+            self.ei += 1;
+            Some((true, i))
+        }
+    }
 }
 
 /// Rank-tilted parent selection + random morphism.
@@ -65,6 +170,11 @@ impl SearchPolicy {
         self.select_parent_on(history, None, rng)
     }
 
+    /// The per-entry eligibility filter of [`Self::select_parent_on`].
+    fn eligible(&self, m: &RankedModel, on_group: Option<usize>) -> bool {
+        !m.penalty || (self.group_scoped_penalties && on_group.is_some_and(|g| m.group != g))
+    }
+
     /// Select a parent index by rank-softmax over accuracies, for a
     /// proposal that would run on topology group `on_group`.
     /// `history` may be unsorted; an empty history is a caller bug.
@@ -87,11 +197,7 @@ impl SearchPolicy {
         assert!(!history.is_empty(), "select_parent on empty history");
         // Rank ascending by accuracy: best gets the largest weight.
         let mut idx: Vec<usize> = (0..history.len())
-            .filter(|&i| {
-                let m = &history[i];
-                !m.penalty
-                    || (self.group_scoped_penalties && on_group.is_some_and(|g| m.group != g))
-            })
+            .filter(|&i| self.eligible(&history[i], on_group))
             .collect();
         if idx.is_empty() {
             // Nothing but penalties: fall back to the full history (the
@@ -119,6 +225,107 @@ impl SearchPolicy {
         *idx.last().unwrap()
     }
 
+    /// Rank-softmax selection over a frozen pre-sorted `base` (the
+    /// barrier snapshot, with `base_sorted` its stable accuracy order and
+    /// `base_penalties` its penalty-entry count) merged with a small
+    /// unsorted `extras` tail (a lane's local completions since the
+    /// barrier). Returns `(is_extra, index)` into the respective slice.
+    ///
+    /// Semantically this selects from the concatenation
+    /// `base ++ extras` exactly as [`Self::select_parent_on`] would —
+    /// and for histories within [`EXACT_SOFTMAX_MAX`] entries (or with
+    /// any penalties present) the draws are bit-equal, because the
+    /// merged walk visits eligible entries in precisely the order the
+    /// historic stable sort produces and the weight/total/scan float
+    /// operations are identical. Beyond that size with no penalties, the
+    /// geometric weight series is inverted in closed form: same
+    /// distribution, one RNG draw either way, O(log n) per call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn select_parent_merged(
+        &self,
+        base: &[RankedModel],
+        base_sorted: &[u32],
+        base_penalties: u64,
+        extras: &[RankedModel],
+        extras_sorted: &[u32],
+        on_group: Option<usize>,
+        rng: &mut Rng,
+    ) -> (bool, usize) {
+        let total_len = base.len() + extras.len();
+        assert!(total_len > 0, "select_parent on empty history");
+        debug_assert_eq!(base_sorted.len(), base.len(), "stale snapshot sort order");
+        debug_assert_eq!(extras_sorted.len(), extras.len(), "stale extras sort order");
+        let no_penalties = base_penalties == 0 && extras.iter().all(|m| !m.penalty);
+        if no_penalties && total_len > EXACT_SOFTMAX_MAX {
+            let rank = self.closed_form_rank(total_len, rng);
+            return merged_rank_to_item(base, base_sorted, extras, extras_sorted, rank);
+        }
+
+        // Historic path: the same filter, rank order, weights, and
+        // subtract-scan as `select_parent_on` over the concatenation.
+        let mut n = base.iter().filter(|m| self.eligible(m, on_group)).count()
+            + extras.iter().filter(|m| self.eligible(m, on_group)).count();
+        let all = n == 0;
+        if all {
+            n = total_len;
+        }
+        let weight = |rank: usize| (self.rank_beta * rank as f64 / n.max(1) as f64).exp();
+        // Identical accumulation order to `weights.iter().sum()`.
+        let mut total = 0.0f64;
+        for rank in 0..n {
+            total += weight(rank);
+        }
+        let mut u = rng.gen_range_f64(0.0, total);
+        let mut rank = 0usize;
+        let mut last = None;
+        for (is_extra, i) in MergeWalk::new(base, base_sorted, extras, extras_sorted) {
+            let m = if is_extra {
+                &extras[i as usize]
+            } else {
+                &base[i as usize]
+            };
+            if !all && !self.eligible(m, on_group) {
+                continue;
+            }
+            u -= weight(rank);
+            if u <= 0.0 {
+                return (is_extra, i as usize);
+            }
+            last = Some((is_extra, i as usize));
+            rank += 1;
+        }
+        last.expect("eligible set cannot be empty here")
+    }
+
+    /// Closed-form draw of a rank in `0..n` (ascending accuracy, so rank
+    /// 0 carries the smallest weight) from the geometric weight series
+    /// `w(r) = e^{β·r/n}`: with `x = β/n`, the prefix sums are
+    /// `S(k) = expm1(x·k) / expm1(x)` and the subtract-scan's stopping
+    /// rule — the smallest `r` with `S(r+1) ≥ u` — inverts analytically.
+    /// A short fix-up walk absorbs any FP residue of the inversion, so
+    /// the result matches a literal scan of `S` exactly.
+    fn closed_form_rank(&self, n: usize, rng: &mut Rng) -> usize {
+        debug_assert!(n > 0);
+        let x = self.rank_beta / n as f64;
+        if x == 0.0 || !x.is_finite() {
+            // β = 0 (or degenerate): every weight is 1, total is n.
+            let u = rng.gen_range_f64(0.0, n as f64);
+            return ((u.ceil() as i64) - 1).clamp(0, n as i64 - 1) as usize;
+        }
+        let denom = f64::exp_m1(x);
+        let total = f64::exp_m1(self.rank_beta) / denom;
+        let u = rng.gen_range_f64(0.0, total);
+        let s = |k: usize| f64::exp_m1(x * k as f64) / denom;
+        let mut r = ((f64::ln_1p(u * denom) / x).ceil() as i64 - 1).clamp(0, n as i64 - 1) as usize;
+        while r > 0 && s(r) >= u {
+            r -= 1;
+        }
+        while r + 1 < n && s(r + 1) < u {
+            r += 1;
+        }
+        r
+    }
+
     /// Generate one child architecture from the history (the unit of work a
     /// slave-node CPU performs before pushing into the buffer).
     pub fn propose(
@@ -141,6 +348,67 @@ impl SearchPolicy {
         let parent = &history[self.select_parent_on(history, on_group, rng)].arch;
         random_legal_morph(parent, &self.limits, rng, self.morph_tries)
     }
+
+    /// [`SearchPolicy::propose_on`] over a frozen snapshot plus local
+    /// extras — see [`SearchPolicy::select_parent_merged`]. Sorting the
+    /// handful of extras consumes no RNG, so the draw stream (one
+    /// selection draw, then the morph draws) is identical to the
+    /// historic concatenate-and-propose form.
+    pub fn propose_merged(
+        &self,
+        base: &[RankedModel],
+        base_sorted: &[u32],
+        base_penalties: u64,
+        extras: &[RankedModel],
+        on_group: Option<usize>,
+        rng: &mut Rng,
+    ) -> (Architecture, Option<Morph>) {
+        let extras_sorted = sorted_order(extras);
+        let (is_extra, i) = self.select_parent_merged(
+            base,
+            base_sorted,
+            base_penalties,
+            extras,
+            &extras_sorted,
+            on_group,
+            rng,
+        );
+        let parent: &Architecture = if is_extra {
+            &extras[i].arch
+        } else {
+            &base[i].arch
+        };
+        random_legal_morph(parent, &self.limits, rng, self.morph_tries)
+    }
+}
+
+/// Locate the element at merged-sorted position `rank` in the stable
+/// accuracy order of `base ++ extras`. Each sorted extra lands at the
+/// count of base entries ordered before it (ties base-first) plus the
+/// extras already inserted; base entries fill the remaining positions in
+/// `base_sorted` order.
+fn merged_rank_to_item(
+    base: &[RankedModel],
+    base_sorted: &[u32],
+    extras: &[RankedModel],
+    extras_sorted: &[u32],
+    rank: usize,
+) -> (bool, usize) {
+    let mut before = 0usize; // extras at merged positions < rank
+    for (j, &e) in extras_sorted.iter().enumerate() {
+        let acc = extras[e as usize].accuracy;
+        let ub = base_sorted.partition_point(|&b| base[b as usize].accuracy <= acc);
+        let pos = ub + j;
+        if pos == rank {
+            return (true, e as usize);
+        }
+        if pos < rank {
+            before += 1;
+        } else {
+            break;
+        }
+    }
+    (false, base_sorted[rank - before] as usize)
 }
 
 #[cfg(test)]
@@ -149,11 +417,25 @@ mod tests {
     use crate::util::rng::derive;
 
     fn history() -> Vec<RankedModel> {
-        let base = Architecture::initial(32, 3, 10);
+        let base = Arc::new(Architecture::initial(32, 3, 10));
         (0..8)
             .map(|i| RankedModel {
-                arch: base.clone(),
+                arch: Arc::clone(&base),
                 accuracy: 0.1 * i as f64,
+                penalty: false,
+                group: 0,
+            })
+            .collect()
+    }
+
+    /// `n` penalty-free entries with distinct ascending accuracies, all
+    /// sharing one architecture (selection only reads accuracy/penalty).
+    fn big_history(n: usize) -> Vec<RankedModel> {
+        let arch = Arc::new(Architecture::initial(32, 3, 10));
+        (0..n)
+            .map(|i| RankedModel {
+                arch: Arc::clone(&arch),
+                accuracy: i as f64 / n as f64,
                 penalty: false,
                 group: 0,
             })
@@ -317,5 +599,260 @@ mod tests {
             (0..64).map(|_| policy.select_parent(&h, &mut rng)).collect()
         };
         assert_eq!(picks, again);
+    }
+
+    /// Map a merged pick back to its index in the concatenation
+    /// `base ++ extras`, for comparison against the historic form.
+    fn concat_index(pick: (bool, usize), base_len: usize) -> usize {
+        if pick.0 {
+            base_len + pick.1
+        } else {
+            pick.1
+        }
+    }
+
+    #[test]
+    fn merged_selection_is_bit_equal_to_concat_on_the_exact_path() {
+        // The frozen-snapshot form must replay the historic sort +
+        // subtract-scan draw for draw: interleaved accuracies, ties
+        // across the base/extras boundary, penalties on and off, group
+        // scoping on and off.
+        for (scoped, on_group) in [(false, None), (false, Some(1)), (true, Some(1))] {
+            let policy = SearchPolicy {
+                group_scoped_penalties: scoped,
+                ..Default::default()
+            };
+            let arch = Arc::new(Architecture::initial(32, 3, 10));
+            let rm = |accuracy: f64, penalty: bool, group: usize| RankedModel {
+                arch: Arc::clone(&arch),
+                accuracy,
+                penalty,
+                group,
+            };
+            let base = vec![
+                rm(0.5, false, 0),
+                rm(0.2, false, 1),
+                rm(0.2, true, 0), // ties with base[1] and extras[0]
+                rm(0.9, false, 0),
+                rm(0.4, false, 1),
+            ];
+            let extras = vec![rm(0.2, false, 0), rm(0.9, true, 1), rm(0.05, false, 0)];
+            let concat: Vec<RankedModel> = base.iter().chain(&extras).cloned().collect();
+            let base_sorted = sorted_order(&base);
+            let extras_sorted = sorted_order(&extras);
+            let penalties = base.iter().filter(|m| m.penalty).count() as u64;
+
+            let merged: Vec<usize> = {
+                let mut rng = derive(21, "merged", 0);
+                (0..400)
+                    .map(|_| {
+                        concat_index(
+                            policy.select_parent_merged(
+                                &base,
+                                &base_sorted,
+                                penalties,
+                                &extras,
+                                &extras_sorted,
+                                on_group,
+                                &mut rng,
+                            ),
+                            base.len(),
+                        )
+                    })
+                    .collect()
+            };
+            let historic: Vec<usize> = {
+                let mut rng = derive(21, "merged", 0);
+                (0..400)
+                    .map(|_| policy.select_parent_on(&concat, on_group, &mut rng))
+                    .collect()
+            };
+            assert_eq!(merged, historic, "scoped={scoped} on_group={on_group:?}");
+        }
+    }
+
+    #[test]
+    fn merged_with_empty_base_matches_plain_selection() {
+        // A lane's very first window: no snapshot yet, only local
+        // completions. The merged form must equal selection over the
+        // extras alone.
+        let policy = SearchPolicy::default();
+        let extras = history();
+        let extras_sorted = sorted_order(&extras);
+        let merged: Vec<usize> = {
+            let mut rng = derive(22, "merged", 1);
+            (0..128)
+                .map(|_| {
+                    let (is_extra, i) = policy.select_parent_merged(
+                        &[],
+                        &[],
+                        0,
+                        &extras,
+                        &extras_sorted,
+                        None,
+                        &mut rng,
+                    );
+                    assert!(is_extra);
+                    i
+                })
+                .collect()
+        };
+        let plain: Vec<usize> = {
+            let mut rng = derive(22, "merged", 1);
+            (0..128)
+                .map(|_| policy.select_parent(&extras, &mut rng))
+                .collect()
+        };
+        assert_eq!(merged, plain);
+    }
+
+    #[test]
+    fn propose_merged_matches_concat_propose_stream() {
+        // End to end through the morph: same children, same morph ops as
+        // concatenating and calling the historic propose.
+        let policy = SearchPolicy::default();
+        let base = history();
+        let extras: Vec<RankedModel> = history()
+            .into_iter()
+            .map(|mut m| {
+                m.accuracy += 0.05;
+                m
+            })
+            .take(3)
+            .collect();
+        let concat: Vec<RankedModel> = base.iter().chain(&extras).cloned().collect();
+        let base_sorted = sorted_order(&base);
+        let mut rng_a = derive(23, "merged", 2);
+        let mut rng_b = derive(23, "merged", 2);
+        for _ in 0..64 {
+            let a = policy.propose_merged(&base, &base_sorted, 0, &extras, None, &mut rng_a);
+            let b = policy.propose_on(&concat, None, &mut rng_b);
+            assert_eq!(a.0.signature(), b.0.signature());
+            assert_eq!(a.1, b.1);
+        }
+    }
+
+    #[test]
+    fn exact_path_holds_at_the_threshold_boundary() {
+        // n == EXACT_SOFTMAX_MAX must still take the bit-exact path.
+        let policy = SearchPolicy::default();
+        let h = big_history(EXACT_SOFTMAX_MAX);
+        let sorted = sorted_order(&h);
+        let merged = {
+            let mut rng = derive(24, "merged", 3);
+            concat_index(
+                policy.select_parent_merged(&h, &sorted, 0, &[], &[], None, &mut rng),
+                h.len(),
+            )
+        };
+        let historic = {
+            let mut rng = derive(24, "merged", 3);
+            policy.select_parent_on(&h, None, &mut rng)
+        };
+        assert_eq!(merged, historic);
+    }
+
+    #[test]
+    fn closed_form_rank_matches_a_literal_prefix_scan() {
+        // Past the threshold the inversion must land on exactly the rank
+        // a literal scan of the prefix sums S(k) stops at — the fix-up
+        // walk absorbs all FP residue.
+        let n = EXACT_SOFTMAX_MAX + 1808; // 10_000
+        for (case, beta) in [(0u64, 1.0f64), (1, 4.0), (2, 0.25), (3, -1.5)] {
+            let policy = SearchPolicy {
+                rank_beta: beta,
+                ..Default::default()
+            };
+            for draw in 0..300u64 {
+                let mut rng = derive(case, "closed-form", draw);
+                let got = policy.closed_form_rank(n, &mut rng);
+                // Replay the identical draw and scan literally.
+                let mut replay = derive(case, "closed-form", draw);
+                let x = beta / n as f64;
+                let denom = f64::exp_m1(x);
+                let total = f64::exp_m1(beta) / denom;
+                let u = replay.gen_range_f64(0.0, total);
+                let s = |k: usize| f64::exp_m1(x * k as f64) / denom;
+                let mut want = n - 1;
+                for r in 0..n {
+                    if s(r + 1) >= u {
+                        want = r;
+                        break;
+                    }
+                }
+                assert_eq!(got, want, "beta {beta} draw {draw}");
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_zero_beta_is_roughly_uniform() {
+        let policy = SearchPolicy {
+            rank_beta: 0.0,
+            ..Default::default()
+        };
+        let n = EXACT_SOFTMAX_MAX * 2;
+        let mut rng = derive(31, "closed-form", 0);
+        let mut below = 0usize;
+        let draws = 4000;
+        for _ in 0..draws {
+            let r = policy.closed_form_rank(n, &mut rng);
+            assert!(r < n);
+            if r < n / 2 {
+                below += 1;
+            }
+        }
+        let frac = below as f64 / draws as f64;
+        assert!((frac - 0.5).abs() < 0.05, "bottom-half fraction {frac}");
+    }
+
+    #[test]
+    fn closed_form_prefers_high_ranks_at_positive_beta() {
+        // β = 1 tilts toward the top of the ranking, exactly like the
+        // literal softmax does at small n.
+        let policy = SearchPolicy::default();
+        let h = big_history(EXACT_SOFTMAX_MAX * 2);
+        let sorted = sorted_order(&h);
+        let mut rng = derive(32, "closed-form", 1);
+        let mut top = 0usize;
+        let draws = 4000;
+        for _ in 0..draws {
+            let (is_extra, i) =
+                policy.select_parent_merged(&h, &sorted, 0, &[], &[], None, &mut rng);
+            assert!(!is_extra);
+            // Distinct ascending accuracies: index == rank.
+            if i >= h.len() / 2 {
+                top += 1;
+            }
+        }
+        let frac = top as f64 / draws as f64;
+        // Top half holds e/(1+e) ≈ 73% of the geometric mass at β = 1.
+        assert!(frac > 0.6, "top-half fraction {frac}");
+    }
+
+    #[test]
+    fn merged_rank_maps_extras_into_their_sorted_slots() {
+        // Walk every rank of a small merged set and check the mapping
+        // agrees with MergeWalk's order (the ground truth).
+        let arch = Arc::new(Architecture::initial(32, 3, 10));
+        let rm = |accuracy: f64| RankedModel {
+            arch: Arc::clone(&arch),
+            accuracy,
+            penalty: false,
+            group: 0,
+        };
+        let base = vec![rm(0.1), rm(0.5), rm(0.5), rm(0.8)];
+        let extras = vec![rm(0.5), rm(0.05), rm(0.9)];
+        let base_sorted = sorted_order(&base);
+        let extras_sorted = sorted_order(&extras);
+        let walked: Vec<(bool, usize)> =
+            MergeWalk::new(&base, &base_sorted, &extras, &extras_sorted)
+                .map(|(e, i)| (e, i as usize))
+                .collect();
+        assert_eq!(walked.len(), base.len() + extras.len());
+        for (rank, want) in walked.iter().enumerate() {
+            let got = merged_rank_to_item(&base, &base_sorted, &extras, &extras_sorted, rank);
+            assert_eq!(got, *want, "rank {rank}");
+        }
     }
 }

@@ -184,6 +184,38 @@ fn elastic_mixed() -> ScenarioPreset {
     }
 }
 
+fn exa_100k() -> ScenarioPreset {
+    // Aspirational exascale — a machine the paper could never book time
+    // on: 12,800 nodes of 8 Ascend 910s, one trial lane per device, for
+    // 102,400 concurrent lanes (25x the paper's largest system). This is
+    // the preset the hot-path engine work is sized against: incremental
+    // history snapshots, the arena event queue, the closed-form
+    // rank-softmax draw, and dynamic shard batching all earn their keep
+    // here. Simulated end to end it completes in minutes on one host;
+    // the truncated-duration engine-parity seed and the checked-in bench
+    // trajectory (BENCH_6.json) keep it honest.
+    let config = BenchmarkConfig {
+        topology: uniform("ascend910", 12_800, GpuModel::ascend910()),
+        duration_s: 12.0 * 3600.0,
+        // One lane per device: 8 lanes per node, 1 GPU each.
+        subshards_per_node: 8,
+        // Coarse cadences: every barrier merges ~100k lane outputs and
+        // every telemetry tick records ~100k readings, so hourly-class
+        // intervals keep the run fast and the report compact while still
+        // producing full score/telemetry series.
+        sync_interval_s: 1800.0,
+        telemetry_interval_s: 3600.0,
+        score_interval_s: 3600.0,
+        ..BenchmarkConfig::default()
+    };
+    ScenarioPreset {
+        name: "exa-100k",
+        description: "Aspirational exascale: 12800 nodes x 8 Ascend 910, 102400 trial lanes",
+        config,
+        wall_clock_budget_s: 3600.0,
+    }
+}
+
 /// All presets, CI-cheapest first.
 pub fn all() -> Vec<ScenarioPreset> {
     vec![
@@ -193,6 +225,7 @@ pub fn all() -> Vec<ScenarioPreset> {
         t4_32(),
         v100_128(),
         ascend_4096(),
+        exa_100k(),
     ]
 }
 
@@ -219,6 +252,7 @@ mod tests {
             "ascend-4096",
             "t4v100-mixed",
             "elastic-mixed",
+            "exa-100k",
         ] {
             let p = get(name).unwrap_or_else(|| panic!("missing preset {name}"));
             assert_eq!(p.name, name);
@@ -242,6 +276,20 @@ mod tests {
         assert_eq!(get("v100-128").unwrap().config.total_gpus(), 128);
         assert_eq!(get("ascend-4096").unwrap().config.total_gpus(), 4096);
         assert_eq!(get("t4v100-mixed").unwrap().config.total_gpus(), 32);
+    }
+
+    #[test]
+    fn exa_preset_shape_and_lane_count() {
+        let cfg = get("exa-100k").unwrap().config;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.total_gpus(), 102_400);
+        // One lane per device: 12,800 nodes x 8 sub-shards.
+        assert_eq!(cfg.subshards_per_node, 8);
+        assert_eq!(cfg.total_subshards(), 102_400);
+        // Coarse cadences keep the barrier/telemetry volume tractable at
+        // this lane count.
+        assert!(cfg.sync_interval_s >= 1800.0);
+        assert!(cfg.telemetry_interval_s >= 3600.0);
     }
 
     #[test]

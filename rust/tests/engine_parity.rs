@@ -291,3 +291,24 @@ fn parity_on_t4_preset_shortened() {
     let par = run_benchmark_with(&cfg, Engine::Parallel);
     assert_bit_identical(&seq, &par, "t4-32 short");
 }
+
+#[test]
+fn parity_on_exa_100k_truncated() {
+    // The aspirational exascale preset, truncated to three barrier
+    // windows (5400 s at the preset's 1800 s sync interval). 102,400
+    // trial lanes: the first window seeds every lane, the ~10^4-record
+    // merge lands before the final window, so window-3 proposals select
+    // against a big penalty-free snapshot — the closed-form rank path —
+    // while this test pins it bit-identical across engines.
+    let mut cfg = aiperf::scenarios::get("exa-100k").expect("exa preset").config;
+    assert_eq!(cfg.total_subshards(), 102_400, "preset lane count");
+    cfg.duration_s = 5400.0;
+    cfg.seed = 42;
+    let seq = run_benchmark_with(&cfg, Engine::Sequential);
+    let par = run_benchmark_with(&cfg, Engine::Parallel);
+    assert_bit_identical(&seq, &par, "exa-100k truncated");
+    assert!(
+        seq.architectures_evaluated > 0,
+        "truncated exa run must complete trials"
+    );
+}

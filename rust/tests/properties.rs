@@ -560,3 +560,80 @@ fn prop_regulated_score_shape() {
         assert!((b / a - k).abs() < 1e-9);
     }
 }
+
+/// The incremental best-error state (running min + prefix-min series)
+/// must answer exactly like a naive scan over the records — on the
+/// coordinator's time-ordered push path *and* after an out-of-order
+/// push demotes the list to the scanning fallback.
+#[test]
+fn prop_incremental_best_error_matches_naive_scan() {
+    use aiperf::coordinator::{HistoryList, ModelRecord};
+    use std::sync::Arc;
+
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-best-error", 0);
+        let n = rng.gen_range_usize(1, 61);
+        let mut recs: Vec<(f64, f64, bool)> = (0..n)
+            .map(|_| {
+                let t = rng.gen_range_f64(0.0, 1000.0);
+                let acc = rng.gen_range_f64(0.0, 1.0);
+                let penalty = rng.gen_range_f64(0.0, 1.0) < 0.2;
+                (t, acc, penalty)
+            })
+            .collect();
+        // Even seeds exercise the fast path (nondecreasing completion
+        // times, as the coordinator pushes); odd seeds keep the random
+        // order, which almost surely trips the out-of-order fallback.
+        if seed % 2 == 0 {
+            recs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        }
+
+        let arch = Arc::new(Architecture::initial(32, 3, 10));
+        let mut h = HistoryList::new();
+        for (i, &(t, acc, penalty)) in recs.iter().enumerate() {
+            h.push(ModelRecord {
+                id: i as u64,
+                arch: Arc::clone(&arch),
+                signature: format!("m{i}"),
+                params: 1000,
+                accuracy: acc,
+                measured_accuracy: if penalty { 0.0 } else { acc },
+                predicted: false,
+                penalty,
+                node: 0,
+                group: 0,
+                round: 1,
+                epochs_trained: 1,
+                ops: 1.0,
+                dropout: 0.0,
+                kernel: 3.0,
+                completed_at: t,
+            });
+        }
+
+        let naive_best = recs
+            .iter()
+            .filter(|r| !r.2)
+            .map(|r| 1.0 - r.1)
+            .min_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(
+            h.best_measured_error(),
+            naive_best,
+            "seed {seed}: overall best diverged"
+        );
+
+        for _ in 0..40 {
+            let t = rng.gen_range_f64(-10.0, 1100.0);
+            let naive = recs
+                .iter()
+                .filter(|r| !r.2 && r.0 <= t)
+                .map(|r| 1.0 - r.1)
+                .min_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(
+                h.best_measured_error_at(t),
+                naive,
+                "seed {seed}: best-at({t}) diverged"
+            );
+        }
+    }
+}

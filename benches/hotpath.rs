@@ -11,9 +11,14 @@
 //! * event-queue throughput (the DES core, arena-backed);
 //! * end-to-end simulations: the 16-node/12-h testbed, the sub-sharded
 //!   mixed preset, the full-duration `ascend-4096` system, and a
-//!   truncated `exa-100k` (102,400 lanes).
+//!   truncated `exa-100k` (102,400 lanes) run both buffered and with
+//!   the streaming NDJSON report (`--stream-report`). The streamed run
+//!   must reconstruct bit-identically, and a counting global allocator
+//!   gates its report-serialization peak at a small fraction of the
+//!   buffered whole-tree `to_json()` peak — the constant-memory claim
+//!   as an assertion, not prose.
 //!
-//! With `--json PATH` the results are written as a `BENCH_6.json`
+//! With `--json PATH` the results are written as a `BENCH_7.json`
 //! perf-trajectory file; with `--baseline PATH` each case's best-of-N
 //! ns/op (and each e2e's seconds) is gated against the checked-in
 //! baseline, failing on a regression beyond `AIPERF_BENCH_TOLERANCE`
@@ -21,18 +26,78 @@
 //! means on shared CI boxes are noise. Relative paths resolve against
 //! the repository root, independent of the invocation directory.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
-use aiperf::config::BenchmarkConfig;
-use aiperf::coordinator::run_benchmark;
+use aiperf::config::{BenchmarkConfig, Engine};
+use aiperf::coordinator::{run_benchmark, run_benchmark_streaming};
 use aiperf::flops::{graph_ops_per_image, OpWeights};
 use aiperf::hpo::{aiperf_space, Optimizer, Tpe};
+use aiperf::metrics::stream::{reconstruct_summary, write_report};
+use aiperf::metrics::BenchmarkReport;
 use aiperf::nas::graph::Architecture;
 use aiperf::nas::morphism::{random_legal_morph, MorphLimits};
 use aiperf::sim::engine::EventQueue;
 use aiperf::util::json::{self, Json};
 use aiperf::util::rng::derive;
+
+// ---------------------------------------------------------------- alloc
+// Counting wrapper over the system allocator, used to *measure* (not
+// merely claim) that the streaming report path allocates a small
+// fraction of the buffered whole-tree serialization. `LIVE` tracks
+// currently-outstanding bytes; `PEAK` is the high-water mark since the
+// last `peak_during` reset. Relaxed ordering is fine — the gated
+// sections run single-threaded, and a torn peak on a concurrent run
+// could only make the assertion stricter for the tree side.
+
+struct CountingAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                let grow = new_size - layout.size();
+                let live = LIVE.fetch_add(grow, Ordering::Relaxed) + grow;
+                PEAK.fetch_max(live, Ordering::Relaxed);
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Peak allocation (bytes above entry live) while `f` runs.
+fn peak_during<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let before = LIVE.load(Ordering::Relaxed);
+    PEAK.store(before, Ordering::Relaxed);
+    let r = f();
+    let peak = PEAK.load(Ordering::Relaxed).saturating_sub(before);
+    (peak, r)
+}
 
 /// Per-op timing of one case: mean across samples and best-of-N.
 #[derive(Clone, Copy)]
@@ -90,7 +155,7 @@ fn repo_path(p: &str) -> PathBuf {
     }
 }
 
-fn timed_e2e(label: &str, cfg: &BenchmarkConfig, detail: &str) -> f64 {
+fn timed_e2e(label: &str, cfg: &BenchmarkConfig, detail: &str) -> (f64, BenchmarkReport) {
     let t0 = Instant::now();
     let r = run_benchmark(cfg);
     let secs = t0.elapsed().as_secs_f64();
@@ -100,7 +165,7 @@ fn timed_e2e(label: &str, cfg: &BenchmarkConfig, detail: &str) -> f64 {
         r.score_series.len()
     );
     assert!(r.architectures_evaluated > 0, "{label}: no architectures");
-    secs
+    (secs, r)
 }
 
 fn main() {
@@ -190,21 +255,21 @@ fn main() {
     // --- End-to-end simulations.
     let mut e2e_cfg = BenchmarkConfig::homogeneous(16);
     e2e_cfg.duration_s = 12.0 * 3600.0;
-    let t_e2e = timed_e2e("e2e: 16-node / 12-h simulated benchmark", &e2e_cfg, "");
+    let (t_e2e, _) = timed_e2e("e2e: 16-node / 12-h simulated benchmark", &e2e_cfg, "");
 
     // The sub-shard + work-stealing hot path: 8 trial lanes (4 nodes x 2)
     // with per-group batches and the steal scheduler enabled.
     let steal_cfg = aiperf::scenarios::get("t4v100-mixed")
         .expect("mixed preset")
         .config;
-    let t_steal = timed_e2e("e2e: t4v100-mixed sub-sharded benchmark", &steal_cfg, "");
+    let (t_steal, _) = timed_e2e("e2e: t4v100-mixed sub-sharded benchmark", &steal_cfg, "");
 
     // The paper's largest evaluated system, full modelled duration —
     // the tentpole target: single-digit seconds.
     let ascend_cfg = aiperf::scenarios::get("ascend-4096")
         .expect("ascend preset")
         .config;
-    let t_ascend = timed_e2e("e2e: ascend-4096 full 12-h benchmark", &ascend_cfg, "");
+    let (t_ascend, _) = timed_e2e("e2e: ascend-4096 full 12-h benchmark", &ascend_cfg, "");
 
     // Aspirational exascale, truncated to three barrier windows — the
     // same truncation as the engine-parity seed (102,400 lanes; the
@@ -214,7 +279,62 @@ fn main() {
         .expect("exa preset")
         .config;
     exa_cfg.duration_s = 5400.0;
-    let t_exa = timed_e2e("e2e: exa-100k truncated (1.5 modelled h)", &exa_cfg, "");
+    let (t_exa, exa_report) = timed_e2e("e2e: exa-100k truncated (1.5 modelled h)", &exa_cfg, "");
+
+    // The same truncated exascale run with the streaming NDJSON report:
+    // records go to an in-memory sink as they occur, the returned report
+    // carries empty series, and the summary reconstructed from the
+    // stream must match the buffered run bit for bit.
+    let t0 = Instant::now();
+    let mut ndjson = Vec::new();
+    let streamed = run_benchmark_streaming(&exa_cfg, Engine::Parallel, &mut ndjson);
+    let t_exa_stream = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {t_exa_stream:>12.3} s  ({} archs, {} NDJSON bytes)",
+        "e2e: exa-100k truncated, streamed report",
+        streamed.architectures_evaluated,
+        ndjson.len()
+    );
+    assert!(streamed.score_series.is_empty(), "streamed run buffered its series");
+    assert!(streamed.lane_util.is_empty(), "streamed run buffered lane utilization");
+    assert_eq!(
+        streamed.score_flops.to_bits(),
+        exa_report.score_flops.to_bits(),
+        "streamed exa score diverged from buffered"
+    );
+    let text = String::from_utf8(ndjson).expect("stream is UTF-8");
+    let summary = reconstruct_summary(&text).expect("exa stream reconstructs");
+    assert_eq!(
+        summary.regulated_score.to_bits(),
+        exa_report.regulated_score.to_bits(),
+        "reconstructed exa summary diverged from buffered"
+    );
+    assert_eq!(summary.lanes as usize, exa_report.lane_util.len());
+    drop(text);
+
+    // The constant-memory claim, as a measured gate: serializing the
+    // buffered report builds the whole JSON tree (O(samples + lanes)
+    // values, dominated by 102,400 lane records), while the streaming
+    // writer re-uses one line buffer — O(groups + open windows) state.
+    // Peak allocation of the streamed serialization must come in far
+    // under the tree build; 8x is a conservative floor (observed gap is
+    // orders of magnitude).
+    let (tree_peak, tree_bytes) = peak_during(|| exa_report.to_json().to_string().len());
+    let (stream_peak, _) = peak_during(|| {
+        write_report(std::io::sink(), &exa_report).expect("streamed serialization")
+    });
+    println!(
+        "{:<44} tree peak {} KiB ({} KiB of JSON), stream peak {} KiB",
+        "alloc: report serialization",
+        tree_peak / 1024,
+        tree_bytes / 1024,
+        stream_peak / 1024
+    );
+    assert!(
+        stream_peak * 8 < tree_peak,
+        "streaming serialization peak ({stream_peak} B) not well under \
+         whole-tree peak ({tree_peak} B)"
+    );
 
     // Perf targets: the coordinator must never be the bottleneck —
     // per-trial decision cost ≪ 1 ms, full sims in seconds. E2e budgets
@@ -228,6 +348,10 @@ fn main() {
     assert!(t_steal < e2e_budget, "sub-sharded mixed sim above {e2e_budget} s");
     assert!(t_ascend < e2e_budget, "ascend-4096 sim above {e2e_budget} s");
     assert!(t_exa < exa_budget, "truncated exa-100k sim above {exa_budget} s");
+    assert!(
+        t_exa_stream < exa_budget,
+        "streamed truncated exa-100k sim above {exa_budget} s"
+    );
 
     let cases: Vec<(&str, Stat)> = vec![
         ("flops_count", t_count),
@@ -245,6 +369,7 @@ fn main() {
         ("t4v100-mixed", t_steal),
         ("ascend-4096", t_ascend),
         ("exa-100k-truncated", t_exa),
+        ("exa-100k-streamed", t_exa_stream),
     ];
 
     let report = json::obj(vec![

@@ -219,6 +219,13 @@ pub struct BenchmarkConfig {
     /// InfiniBand). With this off the scheduler reproduces the
     /// pre-feedback schedules exactly (see `coordinator::sched::feedback`).
     pub feedback_routing: bool,
+    /// Stream the report to this NDJSON file as the run executes
+    /// (`--stream-report` / `stream_report`): records are written the
+    /// moment they merge, and the in-RAM report keeps only O(groups)
+    /// state — the constant-memory output mode for 100k-lane runs (see
+    /// `metrics::stream`). `None` (the default) is the classic buffered
+    /// report, byte-identical to before this knob existed.
+    pub stream_report: Option<String>,
 }
 
 impl Default for BenchmarkConfig {
@@ -246,6 +253,7 @@ impl Default for BenchmarkConfig {
             migration: false,
             migration_nfs_bytes_per_param: 8,
             feedback_routing: true,
+            stream_report: None,
         }
     }
 }
@@ -531,6 +539,12 @@ impl BenchmarkConfig {
                 "feedback_routing" => {
                     cfg.feedback_routing = parse_flag(key, value).map_err(&err)?
                 }
+                "stream_report" => {
+                    if value.is_empty() {
+                        return Err(err("stream_report needs a file path".into()));
+                    }
+                    cfg.stream_report = Some(value.to_string());
+                }
                 "max_params" => cfg.morph_limits.max_params = parse_u64(value)?,
                 "max_depth" => cfg.morph_limits.max_depth = parse_u64(value)? as usize,
                 "max_width" => cfg.morph_limits.max_width = parse_u64(value)?,
@@ -636,6 +650,11 @@ impl BenchmarkConfig {
             self.migration_nfs_bytes_per_param,
             self.feedback_routing,
         );
+        // Emitted only when set, so configs from before the knob existed
+        // round-trip byte-identically.
+        if let Some(path) = &self.stream_report {
+            out.push_str(&format!("stream_report = {path}\n"));
+        }
         for g in &self.topology.groups {
             out.push_str(&format!(
                 "\n[group.{}]\n\
@@ -903,6 +922,22 @@ mod tests {
         assert_eq!(c2, c);
         assert!(!c2.feedback_routing);
         assert!(BenchmarkConfig::from_text("feedback_routing = maybe\n").is_err());
+    }
+
+    #[test]
+    fn stream_report_parses_and_roundtrips() {
+        // Off (None) by default, and absent from the canonical text so
+        // pre-knob configs stay byte-identical.
+        let d = BenchmarkConfig::from_text("seed = 1\n").unwrap();
+        assert_eq!(d.stream_report, None);
+        assert!(!d.to_text().contains("stream_report"));
+        let c = BenchmarkConfig::from_text("stream_report = out/run.ndjson\n").unwrap();
+        assert_eq!(c.stream_report.as_deref(), Some("out/run.ndjson"));
+        let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
+        assert_eq!(c2, c);
+        // An empty path is a config error, not a silent no-op.
+        assert!(BenchmarkConfig::from_text("stream_report =\n").is_err());
+        assert!(BenchmarkConfig::from_text("stream_report = \n").is_err());
     }
 
     #[test]

@@ -22,16 +22,40 @@
 //! hardware gate — DESIGN.md §2); every decision the framework makes —
 //! routing, ranking, morphing, HPO, stopping — executes for real.
 
-use std::cmp::Ordering;
-
 use crate::cluster::nfs::NfsStats;
 use crate::config::{BenchmarkConfig, Engine};
-use crate::coordinator::history::HistoryList;
+use crate::coordinator::history::{HistoryList, ModelRecord};
+use crate::coordinator::merge::merge_by_time;
 use crate::coordinator::sched::ElasticScheduler;
 use crate::coordinator::shard::{HistorySnapshot, SimContext, SlaveShard};
 use crate::metrics::report::{BenchmarkReport, GroupBreakdown, LaneUtil};
 use crate::metrics::score::{validate_result, ScoreSample};
-use crate::metrics::telemetry::{NodeReading, Telemetry};
+use crate::metrics::stream::{OnlineScores, ReportStream};
+use crate::metrics::telemetry::{self, GroupTelemetry, NodeReading, Telemetry};
+
+/// Where merged window events land.
+///
+/// `Buffered` is the classic path: score samples, telemetry ticks, and
+/// lane rows accumulate in [`GlobalState`] and ship inside the final
+/// [`BenchmarkReport`]. `Streaming` writes each record to the NDJSON
+/// stream the moment it is merged and keeps only O(groups) running
+/// state, so a 102,400-lane run's report memory does not grow with
+/// ticks × lanes; the returned report then carries empty series (the
+/// stream holds them) but bit-identical scalars.
+enum ReportSink<W: std::io::Write> {
+    Buffered,
+    Streaming(StreamState<W>),
+}
+
+/// O(groups) running state of the streaming sink.
+struct StreamState<W: std::io::Write> {
+    stream: ReportStream<W>,
+    /// Per-group online utilization stats (index = topology group).
+    groups: Vec<GroupTelemetry>,
+    /// Online stable-window score fold, bit-identical to the buffered
+    /// [`BenchmarkReport::stable_scores`].
+    scores: OnlineScores,
+}
 
 /// Mutable global state merged at every epoch barrier.
 struct GlobalState {
@@ -54,11 +78,13 @@ struct GlobalState {
 
 /// Merge one window's shard outputs into the global state, in
 /// deterministic node order, then emit any score samples due.
-fn merge_window(
+fn merge_window<W: std::io::Write>(
     global: &mut GlobalState,
     shards: &mut [SlaveShard],
+    window_idx: u64,
     window_end: f64,
     cfg: &BenchmarkConfig,
+    sink: &mut ReportSink<W>,
 ) {
     // Barrier slack: how far each solo lane's in-flight epoch overshoots
     // this barrier — the amount a synchronous barrier would stretch
@@ -70,33 +96,34 @@ fn merge_window(
         }
     }
 
-    // Completed models: drained in node order, then stably sorted by
-    // completion time (ties keep node order) — the order the shared
-    // history would have seen them.
-    let mut completions = Vec::new();
-    for s in shards.iter_mut() {
-        completions.append(&mut s.completed);
-    }
-    completions.sort_by(|a, b| {
-        a.completed_at
-            .partial_cmp(&b.completed_at)
-            .unwrap_or(Ordering::Equal)
-    });
+    // Completed models: each shard's window delta is already time-sorted
+    // (completions push at event-pop time), so a k-way heap merge in
+    // node order reproduces — exactly — the order the historic full
+    // re-sort gave the shared history (ties older node first).
+    let deltas: Vec<Vec<ModelRecord>> = shards
+        .iter_mut()
+        .map(|s| std::mem::take(&mut s.completed))
+        .collect();
+    let completions = merge_by_time(deltas, |r: &ModelRecord| r.completed_at);
+    let window_completions = completions.len() as u64;
     for rec in completions {
+        if let ReportSink::Streaming(st) = sink {
+            st.stream.trial(&rec).expect("stream report write failed");
+        }
         global.history.push(rec);
     }
 
     // Analytical-ops events, same deterministic order. Summation order is
     // fixed so the f64 accumulation is engine-independent — the per-group
     // attribution too (shard order, then within-shard event order).
-    let mut ops_events: Vec<(f64, f64)> = Vec::new();
+    let mut ops_deltas: Vec<Vec<(f64, f64)>> = Vec::with_capacity(shards.len());
     for s in shards.iter_mut() {
         for &(_, ops) in &s.epoch_ops {
             global.group_ops[s.group] += ops;
         }
-        ops_events.append(&mut s.epoch_ops);
+        ops_deltas.push(std::mem::take(&mut s.epoch_ops));
     }
-    ops_events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal));
+    let ops_events = merge_by_time(ops_deltas, |e: &(f64, f64)| e.0);
 
     // Telemetry: every lane of every shard ticks on the same schedule;
     // zip the per-lane readings per tick (a shard's readings vector holds
@@ -120,6 +147,9 @@ fn merge_window(
     }
     for j in 0..ticks {
         let t = shards[0].readings[j * shards[0].subshard_count()].0;
+        // The flat per-tick vector is O(lanes) and transient in both
+        // modes — the cross-node mean/std math reads it identically, so
+        // the aggregated sample is bit-equal on either sink.
         let mut readings: Vec<NodeReading> = Vec::new();
         for s in shards.iter() {
             let k = s.subshard_count();
@@ -131,10 +161,20 @@ fn merge_window(
                     "telemetry ticks diverged: node {} lane {u} sampled at {rt}, expected {t}",
                     s.node
                 );
+                if let ReportSink::Streaming(st) = &mut *sink {
+                    st.groups[s.group].push(&r);
+                }
                 readings.push(r);
             }
         }
-        global.telemetry.record(t, &readings);
+        let sample = telemetry::aggregate(t, &readings);
+        match sink {
+            ReportSink::Buffered => global.telemetry.push_sample(sample),
+            ReportSink::Streaming(st) => st
+                .stream
+                .telemetry(&sample)
+                .expect("stream report write failed"),
+        }
     }
     for s in shards.iter_mut() {
         s.readings.clear();
@@ -157,14 +197,24 @@ fn merge_window(
             .history
             .best_measured_error_at(ts)
             .unwrap_or(1.0 - 1e-9);
-        global
-            .score_series
-            .push(ScoreSample::new(ts, global.cumulative_ops, best));
+        let sample = ScoreSample::new(ts, global.cumulative_ops, best);
+        match sink {
+            ReportSink::Buffered => global.score_series.push(sample),
+            ReportSink::Streaming(st) => {
+                st.stream.score(&sample).expect("stream report write failed");
+                st.scores.push(&sample);
+            }
+        }
         global.next_score_idx += 1;
     }
     while op_i < ops_events.len() {
         global.cumulative_ops += ops_events[op_i].1;
         op_i += 1;
+    }
+    if let ReportSink::Streaming(st) = sink {
+        st.stream
+            .window(window_idx, window_end, window_completions)
+            .expect("stream report write failed");
     }
 }
 
@@ -193,7 +243,46 @@ fn window_ends(cfg: &BenchmarkConfig) -> Vec<f64> {
 }
 
 /// Run the full simulated benchmark with an explicit engine.
+///
+/// With `cfg.stream_report` unset this is the buffered path, unchanged
+/// byte for byte. With it set, every record streams to the named NDJSON
+/// file as it is merged and the returned report carries empty
+/// series/lane vectors (the stream holds them) but identical scalars.
 pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkReport {
+    match &cfg.stream_report {
+        None => run_with_sink::<std::io::Sink>(cfg, engine, ReportSink::Buffered),
+        Some(path) => {
+            let file = std::fs::File::create(path)
+                .unwrap_or_else(|e| panic!("cannot create stream report {path}: {e}"));
+            run_benchmark_streaming(cfg, engine, std::io::BufWriter::new(file))
+        }
+    }
+}
+
+/// Run the benchmark streaming the NDJSON report into `out` (ignores
+/// `cfg.stream_report` — the caller owns the destination). Used by the
+/// CLI via [`run_benchmark_with`], and directly by tests/benches that
+/// stream into memory.
+pub fn run_benchmark_streaming<W: std::io::Write>(
+    cfg: &BenchmarkConfig,
+    engine: Engine,
+    out: W,
+) -> BenchmarkReport {
+    let mut stream = ReportStream::new(out);
+    stream.header(cfg).expect("stream report write failed");
+    let st = StreamState {
+        stream,
+        groups: vec![GroupTelemetry::default(); cfg.topology.groups.len()],
+        scores: OnlineScores::new(cfg.duration_s),
+    };
+    run_with_sink(cfg, engine, ReportSink::Streaming(st))
+}
+
+fn run_with_sink<W: std::io::Write>(
+    cfg: &BenchmarkConfig,
+    engine: Engine,
+    mut sink: ReportSink<W>,
+) -> BenchmarkReport {
     cfg.validate().expect("invalid benchmark configuration");
     let ctx = SimContext::new(cfg);
 
@@ -286,7 +375,14 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         // this window's completions append in place instead of forcing a
         // copy-on-write of the whole list.
         snapshot = HistorySnapshot::default();
-        merge_window(&mut global, &mut shards, window_end, cfg);
+        merge_window(
+            &mut global,
+            &mut shards,
+            window as u64,
+            window_end,
+            cfg,
+            &mut sink,
+        );
         // Inter-group migration: place staged candidates onto idle lanes
         // of other groups. Runs single-threaded at the barrier in both
         // engines, so the placements are engine-independent.
@@ -317,18 +413,33 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         group_feedback_routed[s.group] += s.feedback_routed;
         group_ring_joins[s.group] += s.migrant_ring_joins;
         for (lane, busy) in s.lane_busy_fractions(cfg.duration_s).into_iter().enumerate() {
-            lane_util.push(LaneUtil {
-                group: cfg.topology.groups[s.group].label.clone(),
-                node: s.node as u64,
-                lane: lane as u64,
-                busy_fraction: busy,
-            });
+            match &mut sink {
+                ReportSink::Buffered => lane_util.push(LaneUtil {
+                    group: cfg.topology.groups[s.group].label.clone(),
+                    node: s.node as u64,
+                    lane: lane as u64,
+                    busy_fraction: busy,
+                }),
+                ReportSink::Streaming(st) => st
+                    .stream
+                    .lane(
+                        &cfg.topology.groups[s.group].label,
+                        s.node as u64,
+                        lane as u64,
+                        busy,
+                    )
+                    .expect("stream report write failed"),
+            }
         }
     }
 
     let final_error = global.history.best_measured_error().unwrap_or(1.0 - 1e-9);
-    let (score_flops, regulated) =
-        BenchmarkReport::stable_scores(&global.score_series, cfg.duration_s);
+    let (score_flops, regulated) = match &sink {
+        ReportSink::Buffered => {
+            BenchmarkReport::stable_scores(&global.score_series, cfg.duration_s)
+        }
+        ReportSink::Streaming(st) => st.scores.stable_scores(),
+    };
     let groups: Vec<GroupBreakdown> = cfg
         .topology
         .groups
@@ -354,7 +465,7 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
             },
         })
         .collect();
-    BenchmarkReport {
+    let report = BenchmarkReport {
         nodes: cfg.topology.total_nodes(),
         total_gpus: cfg.topology.total_gpus(),
         groups,
@@ -374,7 +485,17 @@ pub fn run_benchmark_with(cfg: &BenchmarkConfig, engine: Engine) -> BenchmarkRep
         ),
         nfs_bytes_read: nfs_stats.bytes_read,
         nfs_bytes_written: nfs_stats.bytes_written,
+    };
+    if let ReportSink::Streaming(mut st) = sink {
+        for (i, g) in cfg.topology.groups.iter().enumerate() {
+            st.stream
+                .group_telemetry(i as u64, &g.label, &st.groups[i])
+                .expect("stream report write failed");
+        }
+        st.stream.summary(&report).expect("stream report write failed");
+        st.stream.flush().expect("stream report flush failed");
     }
+    report
 }
 
 /// Run the full simulated benchmark with the engine from the config.

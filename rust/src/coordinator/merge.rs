@@ -1,0 +1,154 @@
+//! K-way merge of per-lane, time-sorted event deltas.
+//!
+//! Every barrier window the master drains each shard's completion and
+//! ops deltas. Those vectors are appended at event-pop time, so each is
+//! already nondecreasing in time — re-sorting the whole concatenation
+//! (the historic path) costs O(n log n) per window for work that is
+//! k-way-merge-shaped. [`merge_by_time`] merges them with a small heap
+//! in O(n log k), and reproduces the historic order *exactly*: the
+//! stable sort of the node-order concatenation orders ties by lane,
+//! then by within-lane position, which is precisely what a min-heap
+//! keyed on `(t, lane)` with FIFO consumption per lane emits.
+//! `rust/tests/properties.rs` pins the equivalence across seeds and
+//! heterogeneous lane counts.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One lane's current front item. Ordering is reversed on `(t, lane)`
+/// so `BinaryHeap` (a max-heap) pops the earliest time, ties to the
+/// lowest lane — the stable-sort tie order of the node-order concat.
+struct Head<T> {
+    t: f64,
+    lane: usize,
+    item: T,
+}
+
+impl<T> PartialEq for Head<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Head<T> {}
+
+impl<T> PartialOrd for Head<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Head<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // `completed_at` is never NaN in practice; `unwrap_or(Equal)`
+        // matches the defensive comparator of the historic full sort.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.lane.cmp(&self.lane))
+    }
+}
+
+fn is_time_sorted<T>(xs: &[T], time: &impl Fn(&T) -> f64) -> bool {
+    for w in xs.windows(2) {
+        if time(&w[0]) > time(&w[1]) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Merge per-lane deltas into one time-ordered vector, ties older lane
+/// first, FIFO within a lane — byte-identical output order to stably
+/// sorting the lane-order concatenation by time.
+///
+/// Deltas are expected pre-sorted (shards push at event-pop time); a
+/// delta that is not is stably sorted first, which keeps the overall
+/// result exactly equal to the historic full re-sort even then.
+pub fn merge_by_time<T>(mut lanes: Vec<Vec<T>>, time: impl Fn(&T) -> f64) -> Vec<T> {
+    for lane in lanes.iter_mut() {
+        if !is_time_sorted(lane, &time) {
+            lane.sort_by(|a, b| time(a).partial_cmp(&time(b)).unwrap_or(Ordering::Equal));
+        }
+    }
+    let total: usize = lanes.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut cursors: Vec<std::vec::IntoIter<T>> =
+        lanes.into_iter().map(Vec::into_iter).collect();
+    let mut heap: BinaryHeap<Head<T>> = BinaryHeap::with_capacity(cursors.len());
+    for (lane, cursor) in cursors.iter_mut().enumerate() {
+        if let Some(item) = cursor.next() {
+            heap.push(Head { t: time(&item), lane, item });
+        }
+    }
+    while let Some(Head { lane, item, .. }) = heap.pop() {
+        out.push(item);
+        if let Some(next) = cursors[lane].next() {
+            heap.push(Head { t: time(&next), lane, item: next });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sorted_concat(lanes: &[Vec<(f64, usize)>]) -> Vec<(f64, usize)> {
+        let mut all: Vec<(f64, usize)> = lanes.iter().flatten().copied().collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal));
+        all
+    }
+
+    #[test]
+    fn merges_sorted_lanes_in_time_order() {
+        let lanes = vec![vec![(1.0, 0), (4.0, 0)], vec![(2.0, 1), (3.0, 1)]];
+        let merged = merge_by_time(lanes.clone(), |x| x.0);
+        assert_eq!(merged, sorted_concat(&lanes));
+    }
+
+    #[test]
+    fn ties_break_to_the_older_lane_then_fifo() {
+        // Three lanes all emitting at t=1.0 and t=2.0: the stable sort of
+        // the concat keeps lane order within a tie, and within a lane the
+        // earlier-pushed item first.
+        let lanes: Vec<Vec<(f64, usize)>> = (0..3)
+            .map(|lane| vec![(1.0, lane), (1.0, lane + 10), (2.0, lane)])
+            .collect();
+        let merged = merge_by_time(lanes.clone(), |x| x.0);
+        assert_eq!(merged, sorted_concat(&lanes));
+        assert_eq!(
+            merged,
+            vec![
+                (1.0, 0),
+                (1.0, 10),
+                (1.0, 1),
+                (1.0, 11),
+                (1.0, 2),
+                (1.0, 12),
+                (2.0, 0),
+                (2.0, 1),
+                (2.0, 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_lanes_are_skipped() {
+        let lanes = vec![vec![], vec![(1.0, 1)], vec![], vec![(0.5, 3)]];
+        let merged = merge_by_time(lanes, |x: &(f64, usize)| x.0);
+        assert_eq!(merged, vec![(0.5, 3), (1.0, 1)]);
+        assert!(merge_by_time(Vec::<Vec<(f64, usize)>>::new(), |x| x.0).is_empty());
+    }
+
+    #[test]
+    fn unsorted_delta_falls_back_to_full_sort_equivalence() {
+        // Defensive path: an out-of-order lane is stably pre-sorted, so
+        // the merge still equals the historic sort of the concat.
+        let lanes = vec![vec![(3.0, 0), (1.0, 1)], vec![(2.0, 2)]];
+        let mut expect: Vec<(f64, usize)> = lanes.iter().flatten().copied().collect();
+        expect.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        assert_eq!(merge_by_time(lanes, |x| x.0), expect);
+    }
+}

@@ -15,6 +15,9 @@
 //! * [`sched`] — the elastic scheduler: lane registry, intra-node steal
 //!   pass, and the cluster-wide inter-group migration pass (every
 //!   placement policy, extracted out of shard/master mechanics);
+//! * [`merge`] — the k-way heap merge of per-lane time-sorted event
+//!   deltas used at every epoch barrier (O(n log k), order-identical
+//!   to the historic full re-sort);
 //! * [`master`] — the simulated end-to-end benchmark run (sharded
 //!   discrete-event loops with deterministic epoch-barrier merges)
 //!   producing a [`crate::metrics::BenchmarkReport`];
@@ -28,6 +31,7 @@ pub mod history;
 #[cfg(feature = "pjrt")]
 pub mod live;
 pub mod master;
+pub mod merge;
 pub mod sched;
 pub mod shard;
 pub mod trial;
@@ -35,7 +39,8 @@ pub mod trial;
 pub use buffer::ArchBuffer;
 pub use dispatcher::Dispatcher;
 pub use history::{HistoryList, ModelRecord};
-pub use master::{run_benchmark, run_benchmark_with};
+pub use master::{run_benchmark, run_benchmark_streaming, run_benchmark_with};
+pub use merge::merge_by_time;
 pub use sched::ElasticScheduler;
 pub use shard::SlaveShard;
 pub use trial::{ActiveTrial, TrialStatus};

@@ -22,6 +22,7 @@ USAGE:
                  [--engine sequential|parallel] [--config FILE]
                  [--subshards K] [--work-stealing [on|off]]
                  [--migration [on|off]] [--feedback-routing [on|off]]
+                 [--stream-report OUT.ndjson]
                  [--json OUT] [--csv OUT] [--chart] [--list-scenarios]
         Simulated benchmark on the modelled cluster (Figs 4-6, 9-12).
         Scenario presets reproduce the paper's evaluated systems:
@@ -63,9 +64,14 @@ USAGE:
         Per-group migrations in/out, overhead seconds, routed-feedback
         and ring-join counters appear in the summary and JSON, and the
         JSON report adds per-lane busy fractions (rendered as ASCII bars
-        under --chart). The engine defaults to `parallel` (sharded slave
-        nodes on a thread pool); `sequential` is bit-identical for the
-        same seed.
+        under --chart). `--stream-report OUT.ndjson` (config key
+        `stream_report`) streams every score/telemetry/trial/lane record
+        to the named NDJSON file as it occurs instead of buffering the
+        series in RAM — the constant-memory output mode for 100k-lane
+        runs; the printed summary is unchanged, the per-sample series
+        live in the stream (schema in USAGE.md). The engine defaults to
+        `parallel` (sharded slave nodes on a thread pool); `sequential`
+        is bit-identical for the same seed.
     aiperf sweep [--scenarios A,B,C] [--hours H] [--seed S]
                  [--engine sequential|parallel] [--csv OUT]
         Run several scenario presets and print the Fig-4-style scaling
@@ -181,6 +187,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     flags.reject_unknown(&[
         "scenario", "nodes", "hours", "seed", "engine", "config", "json", "csv", "chart",
         "list-scenarios", "subshards", "work-stealing", "migration", "feedback-routing",
+        "stream-report",
     ])?;
     if flags.get("list-scenarios").is_some() {
         cmd_scenarios();
@@ -227,11 +234,20 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     if let Some(v) = flags.get("feedback-routing") {
         cfg.feedback_routing = parse_onoff("feedback-routing", v)?;
     }
+    if let Some(path) = flags.get("stream-report") {
+        if path.is_empty() {
+            bail!("--stream-report needs a file path");
+        }
+        cfg.stream_report = Some(path.to_string());
+    }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
     println!("topology: {}", cfg.topology.summary());
     let report = run_benchmark(&cfg);
     println!("{}", report.summary());
+    if let Some(path) = &cfg.stream_report {
+        println!("NDJSON report streamed to {path}");
+    }
     if report.groups.len() > 1 {
         print!("{}", report.group_table());
     }

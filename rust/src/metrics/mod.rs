@@ -6,16 +6,21 @@
 //!   with per-node standard deviations (Figs 9–12);
 //! * [`report`] — the final benchmark report the data-analysis toolkit
 //!   produces at termination;
+//! * [`stream`] — the constant-memory NDJSON streaming report pipeline
+//!   (`--stream-report`): records written as they occur, summary
+//!   reconstructed from the stream;
 //! * [`sweep`] — the Fig-4 weak-scaling table over several scenario
 //!   presets, with per-mix efficiency baselines and a CSV exporter.
 
 pub mod chart;
 pub mod report;
 pub mod score;
+pub mod stream;
 pub mod sweep;
 pub mod telemetry;
 
 pub use chart::{ascii_chart, csv, lane_util_chart};
 pub use report::{BenchmarkReport, GroupBreakdown, LaneUtil};
 pub use score::{regulated_score, validate_result, ScoreSample, Validity};
+pub use stream::{reconstruct_summary, ReportStream, StreamError, StreamSummary};
 pub use telemetry::{Telemetry, TelemetrySample};

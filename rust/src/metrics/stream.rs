@@ -1,0 +1,703 @@
+//! Streaming NDJSON report pipeline (`--stream-report <path>`).
+//!
+//! The buffered [`BenchmarkReport`] holds every score sample, telemetry
+//! tick, and lane row in RAM and then serializes the whole tree at once
+//! — fine at 16 nodes, the memory bottleneck at 102,400 lanes. This
+//! module is the constant-memory alternative: [`ReportStream`] writes
+//! one small record per line *as events occur* (through
+//! [`crate::util::json::NdjsonWriter`], no whole-tree construction),
+//! and [`reconstruct_summary`] post-processes a stream one record at a
+//! time via [`crate::util::ndjson`].
+//!
+//! Record schema (each line is one object tagged by its `record` key):
+//!
+//! | `record`          | fields                                                        |
+//! |-------------------|---------------------------------------------------------------|
+//! | `header`          | `schema` (1), cluster shape, seed, intervals, `duration_s`    |
+//! | `trial`           | one merged completion: `t`, `id`, `node`, `group`, `round`, `epochs_trained`, `ops`, `accuracy`, `penalty` |
+//! | `window`          | one epoch barrier: `idx`, `t`, `completions`                  |
+//! | `score`           | one score tick: `t`, `cumulative_ops`, `flops`, `best_error`, `regulated` |
+//! | `telemetry`       | one telemetry tick: `t` + cross-node mean/std per metric      |
+//! | `telemetry_group` | end-of-run per-group online stats (count/mean/min/max/last)   |
+//! | `lane`            | one lane's busy fraction: `group`, `node`, `lane`, `busy_fraction` |
+//! | `summary`         | trailer: the report scalars + per-group breakdown + `records` (count of records before this line) |
+//!
+//! The `records` count in the trailer is the truncation detector: a
+//! stream without a matching trailer was cut short and
+//! [`reconstruct_summary`] says so instead of crashing.
+
+use std::io;
+
+use crate::config::BenchmarkConfig;
+use crate::coordinator::history::ModelRecord;
+use crate::metrics::report::BenchmarkReport;
+use crate::metrics::score::ScoreSample;
+use crate::metrics::telemetry::{GroupTelemetry, OnlineStat, TelemetrySample};
+use crate::util::json::{arr, num, obj, s, Json, NdjsonWriter};
+use crate::util::ndjson::NdjsonReader;
+use crate::util::stats::mean;
+
+/// Typed writer for the streaming report: one method per record kind,
+/// each serializing a single small object and appending it as one
+/// NDJSON line. State is the output handle and a record counter —
+/// nothing scales with run length.
+pub struct ReportStream<W: io::Write> {
+    w: NdjsonWriter<W>,
+}
+
+impl<W: io::Write> ReportStream<W> {
+    pub fn new(out: W) -> Self {
+        ReportStream { w: NdjsonWriter::new(out) }
+    }
+
+    /// Records written so far.
+    pub fn records(&self) -> u64 {
+        self.w.records()
+    }
+
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+
+    pub fn header(&mut self, cfg: &BenchmarkConfig) -> io::Result<()> {
+        self.w.record(&obj(vec![
+            ("record", s("header")),
+            ("schema", num(1.0)),
+            ("nodes", num(cfg.topology.total_nodes() as f64)),
+            ("total_gpus", num(cfg.topology.total_gpus() as f64)),
+            (
+                "groups",
+                arr(cfg
+                    .topology
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        obj(vec![
+                            ("label", s(g.label.clone())),
+                            ("nodes", num(g.count as f64)),
+                            ("gpus_per_node", num(g.gpus_per_node as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            ("duration_s", num(cfg.duration_s)),
+            ("seed", num(cfg.seed as f64)),
+            ("sync_interval_s", num(cfg.sync_interval_s)),
+            ("telemetry_interval_s", num(cfg.telemetry_interval_s)),
+            ("score_interval_s", num(cfg.score_interval_s)),
+        ]))
+    }
+
+    pub fn trial(&mut self, rec: &ModelRecord) -> io::Result<()> {
+        self.w.record(&obj(vec![
+            ("record", s("trial")),
+            ("t", num(rec.completed_at)),
+            ("id", num(rec.id as f64)),
+            ("node", num(rec.node as f64)),
+            ("group", num(rec.group as f64)),
+            ("round", num(rec.round as f64)),
+            ("epochs_trained", num(rec.epochs_trained as f64)),
+            ("ops", num(rec.ops)),
+            ("accuracy", num(rec.measured_accuracy)),
+            ("penalty", Json::Bool(rec.penalty)),
+        ]))
+    }
+
+    pub fn window(&mut self, idx: u64, t: f64, completions: u64) -> io::Result<()> {
+        self.w.record(&obj(vec![
+            ("record", s("window")),
+            ("idx", num(idx as f64)),
+            ("t", num(t)),
+            ("completions", num(completions as f64)),
+        ]))
+    }
+
+    pub fn score(&mut self, p: &ScoreSample) -> io::Result<()> {
+        self.w.record(&obj(vec![
+            ("record", s("score")),
+            ("t", num(p.t)),
+            ("cumulative_ops", num(p.cumulative_ops)),
+            ("flops", num(p.flops)),
+            ("best_error", num(p.best_error)),
+            ("regulated", num(p.regulated)),
+        ]))
+    }
+
+    pub fn telemetry(&mut self, p: &TelemetrySample) -> io::Result<()> {
+        self.w.record(&obj(vec![
+            ("record", s("telemetry")),
+            ("t", num(p.t)),
+            ("gpu_util_mean", num(p.gpu_util_mean)),
+            ("gpu_util_std", num(p.gpu_util_std)),
+            ("gpu_mem_mean", num(p.gpu_mem_mean)),
+            ("gpu_mem_std", num(p.gpu_mem_std)),
+            ("cpu_util_mean", num(p.cpu_util_mean)),
+            ("cpu_util_std", num(p.cpu_util_std)),
+            ("host_mem_mean", num(p.host_mem_mean)),
+            ("host_mem_std", num(p.host_mem_std)),
+        ]))
+    }
+
+    pub fn group_telemetry(
+        &mut self,
+        group: u64,
+        label: &str,
+        g: &GroupTelemetry,
+    ) -> io::Result<()> {
+        fn metric(prefix: &str, st: &OnlineStat) -> Vec<(String, Json)> {
+            vec![
+                (format!("{prefix}_count"), num(st.count as f64)),
+                (format!("{prefix}_mean"), num(st.mean())),
+                (format!("{prefix}_min"), num(st.min)),
+                (format!("{prefix}_max"), num(st.max)),
+                (format!("{prefix}_last"), num(st.last)),
+            ]
+        }
+        let mut pairs = vec![
+            ("record".to_string(), s("telemetry_group")),
+            ("group".to_string(), num(group as f64)),
+            ("label".to_string(), s(label)),
+        ];
+        pairs.extend(metric("gpu_util", &g.gpu_util));
+        pairs.extend(metric("gpu_mem", &g.gpu_mem));
+        pairs.extend(metric("cpu_util", &g.cpu_util));
+        pairs.extend(metric("host_mem", &g.host_mem));
+        let value = Json::Obj(pairs.into_iter().collect());
+        self.w.record(&value)
+    }
+
+    pub fn lane(&mut self, group: &str, node: u64, lane: u64, busy_fraction: f64) -> io::Result<()> {
+        self.w.record(&obj(vec![
+            ("record", s("lane")),
+            ("group", s(group)),
+            ("node", num(node as f64)),
+            ("lane", num(lane as f64)),
+            ("busy_fraction", num(busy_fraction)),
+        ]))
+    }
+
+    /// The trailer: report scalars, the per-group breakdown, and the
+    /// count of records written before this line (the truncation
+    /// detector).
+    pub fn summary(&mut self, report: &BenchmarkReport) -> io::Result<()> {
+        let records = self.w.records();
+        self.w.record(&obj(vec![
+            ("record", s("summary")),
+            ("records", num(records as f64)),
+            ("nodes", num(report.nodes as f64)),
+            ("total_gpus", num(report.total_gpus as f64)),
+            ("duration_s", num(report.duration_s)),
+            ("score_flops", num(report.score_flops)),
+            ("final_error", num(report.final_error)),
+            ("regulated_score", num(report.regulated_score)),
+            (
+                "architectures_evaluated",
+                num(report.architectures_evaluated as f64),
+            ),
+            ("validity", s(format!("{:?}", report.validity))),
+            ("nfs_bytes_read", num(report.nfs_bytes_read as f64)),
+            ("nfs_bytes_written", num(report.nfs_bytes_written as f64)),
+            (
+                "groups",
+                arr(report
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        obj(vec![
+                            ("label", s(g.label.clone())),
+                            ("nodes", num(g.nodes as f64)),
+                            ("gpus_per_node", num(g.gpus_per_node as f64)),
+                            ("ops", num(g.ops)),
+                            ("ops_per_second", num(g.ops_per_second)),
+                            ("steals", num(g.steals as f64)),
+                            ("oom_skips", num(g.oom_skips as f64)),
+                            ("migrations_in", num(g.migrations_in as f64)),
+                            ("migrations_out", num(g.migrations_out as f64)),
+                            ("migration_overhead_s", num(g.migration_overhead_s)),
+                            ("feedback_routed", num(g.feedback_routed as f64)),
+                            ("migrant_ring_joins", num(g.migrant_ring_joins as f64)),
+                            ("barrier_slack_s", num(g.barrier_slack_s)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ]))
+    }
+}
+
+/// Serialize a buffered report as the equivalent NDJSON stream (score,
+/// telemetry, and lane records, then the summary trailer). Used by the
+/// hotpath bench to compare the allocation profile of record-at-a-time
+/// serialization against the whole-tree `to_json()` path on identical
+/// data. Returns the number of records written.
+pub fn write_report<W: io::Write>(out: W, report: &BenchmarkReport) -> io::Result<u64> {
+    let mut stream = ReportStream::new(out);
+    for p in &report.score_series {
+        stream.score(p)?;
+    }
+    for p in &report.telemetry {
+        stream.telemetry(p)?;
+    }
+    for l in &report.lane_util {
+        stream.lane(&l.group, l.node, l.lane, l.busy_fraction)?;
+    }
+    stream.summary(report)?;
+    stream.flush()?;
+    Ok(stream.records())
+}
+
+/// Online replacement for [`BenchmarkReport::stable_scores`]: folds
+/// score samples as they occur, O(1) state, and returns bit-identical
+/// (score, regulated) — same left-fold summation order as
+/// `util::stats::mean` over the same window filter.
+#[derive(Debug, Clone, Copy)]
+pub struct OnlineScores {
+    t0: f64,
+    t1: f64,
+    win_flops: f64,
+    win_reg: f64,
+    win_n: u64,
+    all_flops: f64,
+    all_reg: f64,
+    all_n: u64,
+}
+
+impl OnlineScores {
+    pub fn new(duration_s: f64) -> Self {
+        let (t0, t1) = BenchmarkReport::stable_window(duration_s);
+        OnlineScores {
+            t0,
+            t1,
+            win_flops: 0.0,
+            win_reg: 0.0,
+            win_n: 0,
+            all_flops: 0.0,
+            all_reg: 0.0,
+            all_n: 0,
+        }
+    }
+
+    pub fn push(&mut self, p: &ScoreSample) {
+        self.all_flops += p.flops;
+        self.all_reg += p.regulated;
+        self.all_n += 1;
+        if p.t >= self.t0 && p.t <= self.t1 {
+            self.win_flops += p.flops;
+            self.win_reg += p.regulated;
+            self.win_n += 1;
+        }
+    }
+
+    /// (score_flops, regulated_score) with the buffered fallback: the
+    /// stable window if it caught any samples, else the whole series,
+    /// else zeros (`mean` of an empty slice).
+    pub fn stable_scores(&self) -> (f64, f64) {
+        if self.win_n > 0 {
+            (
+                self.win_flops / self.win_n as f64,
+                self.win_reg / self.win_n as f64,
+            )
+        } else if self.all_n > 0 {
+            (
+                self.all_flops / self.all_n as f64,
+                self.all_reg / self.all_n as f64,
+            )
+        } else {
+            (0.0, 0.0)
+        }
+    }
+}
+
+/// A streaming-report read failure. Every malformed or cut-short input
+/// maps to one of these — the reader never panics (`tests/fuzz.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamError {
+    /// A line failed to parse as JSON (typically a stream cut
+    /// mid-record).
+    Parse { line: usize, msg: String },
+    /// The stream ended without a summary trailer: the run was cut
+    /// short after `records_seen` complete records.
+    Truncated { records_seen: u64 },
+    /// A structurally invalid record: missing/mistyped fields, an
+    /// unknown record tag, data after the trailer, or a trailer whose
+    /// counts or scores disagree with the records before it.
+    Malformed { line: usize, msg: String },
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::Parse { line, msg } => write!(f, "stream line {line}: {msg}"),
+            StreamError::Truncated { records_seen } => write!(
+                f,
+                "stream truncated: no summary trailer after {records_seen} records"
+            ),
+            StreamError::Malformed { line, msg } => {
+                write!(f, "malformed stream record at line {line}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// The summary reconstructed from a complete stream: the trailer's
+/// scalars plus the record counts actually observed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSummary {
+    pub nodes: u64,
+    pub total_gpus: u64,
+    pub duration_s: f64,
+    pub score_flops: f64,
+    pub final_error: f64,
+    pub regulated_score: f64,
+    pub architectures_evaluated: u64,
+    pub validity: String,
+    pub nfs_bytes_read: u64,
+    pub nfs_bytes_written: u64,
+    /// Records before the trailer, per the trailer (verified against
+    /// the observed count).
+    pub records: u64,
+    pub trials: u64,
+    pub windows: u64,
+    pub score_samples: u64,
+    pub telemetry_ticks: u64,
+    pub lanes: u64,
+}
+
+fn req<'a>(v: &'a Json, key: &str, line: usize) -> Result<&'a Json, StreamError> {
+    v.get(key).ok_or_else(|| StreamError::Malformed {
+        line,
+        msg: format!("missing field `{key}`"),
+    })
+}
+
+fn req_f64(v: &Json, key: &str, line: usize) -> Result<f64, StreamError> {
+    req(v, key, line)?
+        .as_f64()
+        .ok_or_else(|| StreamError::Malformed {
+            line,
+            msg: format!("field `{key}` is not a number"),
+        })
+}
+
+fn req_u64(v: &Json, key: &str, line: usize) -> Result<u64, StreamError> {
+    req(v, key, line)?
+        .as_u64()
+        .ok_or_else(|| StreamError::Malformed {
+            line,
+            msg: format!("field `{key}` is not a non-negative integer"),
+        })
+}
+
+fn req_str(v: &Json, key: &str, line: usize) -> Result<String, StreamError> {
+    Ok(req(v, key, line)?
+        .as_str()
+        .ok_or_else(|| StreamError::Malformed {
+            line,
+            msg: format!("field `{key}` is not a string"),
+        })?
+        .to_string())
+}
+
+/// Reconstruct the run summary from an NDJSON stream, one record at a
+/// time (constant memory apart from the score series, which is re-
+/// averaged to cross-check the trailer).
+///
+/// Verifies three integrity properties and reports — never panics on —
+/// any violation: every line parses, the trailer is present and its
+/// `records` count matches the records observed, and the stable-window
+/// scores recomputed from the streamed `score` records equal the
+/// trailer's bit for bit.
+pub fn reconstruct_summary(text: &str) -> Result<StreamSummary, StreamError> {
+    let mut records_seen = 0u64;
+    let mut trials = 0u64;
+    let mut windows = 0u64;
+    let mut telemetry_ticks = 0u64;
+    let mut lanes = 0u64;
+    let mut scores: Vec<(f64, f64, f64)> = Vec::new();
+    let mut summary: Option<(usize, StreamSummary)> = None;
+
+    for item in NdjsonReader::new(text) {
+        let (line, v) = item.map_err(|e| StreamError::Parse {
+            line: e.line,
+            msg: e.msg,
+        })?;
+        if summary.is_some() {
+            return Err(StreamError::Malformed {
+                line,
+                msg: "record after the summary trailer".to_string(),
+            });
+        }
+        let kind = req_str(&v, "record", line)?;
+        match kind.as_str() {
+            "header" => {
+                let schema = req_u64(&v, "schema", line)?;
+                if schema != 1 {
+                    return Err(StreamError::Malformed {
+                        line,
+                        msg: format!("unsupported stream schema {schema}"),
+                    });
+                }
+            }
+            "trial" => {
+                req_f64(&v, "t", line)?;
+                trials += 1;
+            }
+            "window" => {
+                req_f64(&v, "t", line)?;
+                windows += 1;
+            }
+            "score" => {
+                scores.push((
+                    req_f64(&v, "t", line)?,
+                    req_f64(&v, "flops", line)?,
+                    req_f64(&v, "regulated", line)?,
+                ));
+            }
+            "telemetry" => {
+                req_f64(&v, "t", line)?;
+                telemetry_ticks += 1;
+            }
+            "telemetry_group" => {
+                req_u64(&v, "group", line)?;
+            }
+            "lane" => {
+                req_f64(&v, "busy_fraction", line)?;
+                lanes += 1;
+            }
+            "summary" => {
+                let records = req_u64(&v, "records", line)?;
+                if records != records_seen {
+                    return Err(StreamError::Malformed {
+                        line,
+                        msg: format!(
+                            "trailer claims {records} records, stream has {records_seen}"
+                        ),
+                    });
+                }
+                summary = Some((
+                    line,
+                    StreamSummary {
+                        nodes: req_u64(&v, "nodes", line)?,
+                        total_gpus: req_u64(&v, "total_gpus", line)?,
+                        duration_s: req_f64(&v, "duration_s", line)?,
+                        score_flops: req_f64(&v, "score_flops", line)?,
+                        final_error: req_f64(&v, "final_error", line)?,
+                        regulated_score: req_f64(&v, "regulated_score", line)?,
+                        architectures_evaluated: req_u64(&v, "architectures_evaluated", line)?,
+                        validity: req_str(&v, "validity", line)?,
+                        nfs_bytes_read: req_u64(&v, "nfs_bytes_read", line)?,
+                        nfs_bytes_written: req_u64(&v, "nfs_bytes_written", line)?,
+                        records,
+                        trials,
+                        windows,
+                        score_samples: scores.len() as u64,
+                        telemetry_ticks,
+                        lanes,
+                    },
+                ));
+            }
+            other => {
+                return Err(StreamError::Malformed {
+                    line,
+                    msg: format!("unknown record tag `{other}`"),
+                });
+            }
+        }
+        records_seen += 1;
+    }
+
+    let (line, out) = summary.ok_or(StreamError::Truncated { records_seen })?;
+
+    // Cross-check: the trailer's stable-window scores must equal the
+    // ones recomputed from the streamed score records, bit for bit
+    // (f64s survive the JSON round trip exactly).
+    let (t0, t1) = BenchmarkReport::stable_window(out.duration_s);
+    let in_window: Vec<&(f64, f64, f64)> =
+        scores.iter().filter(|p| p.0 >= t0 && p.0 <= t1).collect();
+    let picked: Vec<&(f64, f64, f64)> = if in_window.is_empty() {
+        scores.iter().collect()
+    } else {
+        in_window
+    };
+    let f = mean(&picked.iter().map(|p| p.1).collect::<Vec<_>>());
+    let r = mean(&picked.iter().map(|p| p.2).collect::<Vec<_>>());
+    if f.to_bits() != out.score_flops.to_bits() || r.to_bits() != out.regulated_score.to_bits() {
+        return Err(StreamError::Malformed {
+            line,
+            msg: format!(
+                "trailer scores ({}, {}) disagree with recomputed ({f}, {r})",
+                out.score_flops, out.regulated_score
+            ),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::report::{GroupBreakdown, LaneUtil};
+    use crate::metrics::score::Validity;
+    use crate::metrics::telemetry::aggregate;
+    use crate::metrics::telemetry::NodeReading;
+
+    fn tiny_report() -> BenchmarkReport {
+        let series: Vec<ScoreSample> = (1..=4)
+            .map(|h| ScoreSample::new(h as f64 * 3600.0, 1e18 * h as f64, 0.3))
+            .collect();
+        let duration_s = 4.0 * 3600.0;
+        let (score_flops, regulated_score) =
+            BenchmarkReport::stable_scores(&series, duration_s);
+        BenchmarkReport {
+            nodes: 2,
+            total_gpus: 16,
+            groups: vec![GroupBreakdown {
+                label: "v100".to_string(),
+                nodes: 2,
+                gpus_per_node: 8,
+                ops: 1e18,
+                ops_per_second: 1e18 / duration_s,
+                steals: 0,
+                oom_skips: 0,
+                migrations_in: 0,
+                migrations_out: 0,
+                migration_overhead_s: 0.0,
+                feedback_routed: 0,
+                migrant_ring_joins: 0,
+                barrier_slack_s: 0.0,
+            }],
+            lane_util: vec![LaneUtil {
+                group: "v100".to_string(),
+                node: 0,
+                lane: 0,
+                busy_fraction: 0.9,
+            }],
+            duration_s,
+            score_series: series,
+            score_flops,
+            final_error: 0.3,
+            regulated_score,
+            architectures_evaluated: 7,
+            telemetry: vec![aggregate(
+                3600.0,
+                &[NodeReading {
+                    gpu_util: 0.9,
+                    gpu_mem_util: 0.8,
+                    cpu_util: 0.05,
+                    host_mem_util: 0.2,
+                }],
+            )],
+            validity: Validity::Valid,
+            nfs_bytes_read: 1024,
+            nfs_bytes_written: 2048,
+        }
+    }
+
+    #[test]
+    fn round_trips_a_buffered_report() {
+        let report = tiny_report();
+        let mut buf = Vec::new();
+        let records = write_report(&mut buf, &report).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(records, text.lines().count() as u64);
+        let summary = reconstruct_summary(&text).unwrap();
+        assert_eq!(summary.nodes, report.nodes);
+        assert_eq!(summary.total_gpus, report.total_gpus);
+        assert_eq!(summary.score_flops.to_bits(), report.score_flops.to_bits());
+        assert_eq!(summary.final_error.to_bits(), report.final_error.to_bits());
+        assert_eq!(
+            summary.regulated_score.to_bits(),
+            report.regulated_score.to_bits()
+        );
+        assert_eq!(summary.architectures_evaluated, 7);
+        assert_eq!(summary.validity, "Valid");
+        assert_eq!(summary.score_samples, 4);
+        assert_eq!(summary.telemetry_ticks, 1);
+        assert_eq!(summary.lanes, 1);
+        assert_eq!(summary.records, records - 1);
+    }
+
+    #[test]
+    fn truncated_stream_is_detected() {
+        let report = tiny_report();
+        let mut buf = Vec::new();
+        write_report(&mut buf, &report).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        // Drop the trailer line entirely.
+        let cut = &text[..text.rfind("{\"").unwrap()];
+        match reconstruct_summary(cut) {
+            Err(StreamError::Truncated { records_seen }) => {
+                assert_eq!(records_seen, text.lines().count() as u64 - 1);
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // Cut mid-record: a parse error with the right line, not a panic.
+        let mid = &text[..text.len() - 10];
+        assert!(matches!(
+            reconstruct_summary(mid),
+            Err(StreamError::Parse { .. })
+        ));
+    }
+
+    #[test]
+    fn tampered_record_count_is_malformed() {
+        let report = tiny_report();
+        let mut buf = Vec::new();
+        write_report(&mut buf, &report).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        // Remove one non-trailer line: the trailer count no longer matches.
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.remove(0);
+        let tampered = lines.join("\n");
+        assert!(matches!(
+            reconstruct_summary(&tampered),
+            Err(StreamError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn online_scores_match_buffered_stable_scores() {
+        for duration_h in [4.0, 12.0, 24.0] {
+            let duration_s = duration_h * 3600.0;
+            let series: Vec<ScoreSample> = (1..=(duration_h as u64))
+                .map(|h| {
+                    ScoreSample::new(h as f64 * 3600.0, 3.7e17 * h as f64, 0.31 / h as f64)
+                })
+                .collect();
+            let mut online = OnlineScores::new(duration_s);
+            for p in &series {
+                online.push(p);
+            }
+            let (bf, br) = BenchmarkReport::stable_scores(&series, duration_s);
+            let (of, or) = online.stable_scores();
+            assert_eq!(bf.to_bits(), of.to_bits());
+            assert_eq!(br.to_bits(), or.to_bits());
+        }
+        // Empty series: both fall back to zeros.
+        let empty = OnlineScores::new(3600.0);
+        let (bf, br) = BenchmarkReport::stable_scores(&[], 3600.0);
+        assert_eq!(empty.stable_scores(), (bf, br));
+    }
+
+    #[test]
+    fn group_telemetry_record_serializes() {
+        let mut g = GroupTelemetry::default();
+        g.push(&NodeReading {
+            gpu_util: 0.9,
+            gpu_mem_util: 0.8,
+            cpu_util: 0.05,
+            host_mem_util: 0.2,
+        });
+        let mut stream = ReportStream::new(Vec::new());
+        stream.group_telemetry(0, "v100", &g).unwrap();
+        let mut w = stream.w;
+        w.flush().unwrap();
+        let text = String::from_utf8(w.into_inner()).unwrap();
+        let v = Json::parse(text.trim()).unwrap();
+        assert_eq!(v.get("record").and_then(Json::as_str), Some("telemetry_group"));
+        assert_eq!(v.get("gpu_util_count").and_then(Json::as_u64), Some(1));
+        assert_eq!(v.get("host_mem_last").and_then(Json::as_f64), Some(0.2));
+    }
+}

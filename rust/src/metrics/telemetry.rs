@@ -51,23 +51,13 @@ impl Telemetry {
 
     /// Aggregate one instant's per-node readings.
     pub fn record(&mut self, t: f64, readings: &[NodeReading]) {
-        assert!(!readings.is_empty());
-        let col = |f: fn(&NodeReading) -> f64| -> Vec<f64> { readings.iter().map(f).collect() };
-        let g = col(|r| r.gpu_util);
-        let gm = col(|r| r.gpu_mem_util);
-        let c = col(|r| r.cpu_util);
-        let hm = col(|r| r.host_mem_util);
-        self.samples.push(TelemetrySample {
-            t,
-            gpu_util_mean: mean(&g),
-            gpu_util_std: stddev(&g),
-            gpu_mem_mean: mean(&gm),
-            gpu_mem_std: stddev(&gm),
-            cpu_util_mean: mean(&c),
-            cpu_util_std: stddev(&c),
-            host_mem_mean: mean(&hm),
-            host_mem_std: stddev(&hm),
-        });
+        self.samples.push(aggregate(t, readings));
+    }
+
+    /// Append an already-aggregated sample (streaming callers aggregate
+    /// via [`aggregate`] themselves and may not buffer at all).
+    pub fn push_sample(&mut self, sample: TelemetrySample) {
+        self.samples.push(sample);
     }
 
     pub fn samples(&self) -> &[TelemetrySample] {
@@ -84,6 +74,89 @@ impl Telemetry {
             .map(f)
             .collect();
         mean(&v)
+    }
+}
+
+/// Aggregate one instant's per-node readings into a cross-node sample.
+///
+/// Free function (not a `Telemetry` method) so the streaming report path
+/// can compute the identical sample — same column order, same left-fold
+/// mean, bit-for-bit — without buffering it.
+pub fn aggregate(t: f64, readings: &[NodeReading]) -> TelemetrySample {
+    assert!(!readings.is_empty());
+    let col = |f: fn(&NodeReading) -> f64| -> Vec<f64> { readings.iter().map(f).collect() };
+    let g = col(|r| r.gpu_util);
+    let gm = col(|r| r.gpu_mem_util);
+    let c = col(|r| r.cpu_util);
+    let hm = col(|r| r.host_mem_util);
+    TelemetrySample {
+        t,
+        gpu_util_mean: mean(&g),
+        gpu_util_std: stddev(&g),
+        gpu_mem_mean: mean(&gm),
+        gpu_mem_std: stddev(&gm),
+        cpu_util_mean: mean(&c),
+        cpu_util_std: stddev(&c),
+        host_mem_mean: mean(&hm),
+        host_mem_std: stddev(&hm),
+    }
+}
+
+/// Running summary of one metric: count, mean (exact left-fold order),
+/// min, max, and last value — O(1) state per metric.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OnlineStat {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub last: f64,
+}
+
+impl OnlineStat {
+    pub fn push(&mut self, x: f64) {
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            if x < self.min {
+                self.min = x;
+            }
+            if x > self.max {
+                self.max = x;
+            }
+        }
+        self.sum += x;
+        self.last = x;
+        self.count += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Online per-group utilization aggregate for the streaming report path:
+/// one [`OnlineStat`] per metric, so a 100k-lane run keeps O(groups)
+/// telemetry state instead of O(ticks × lanes) buffered samples.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GroupTelemetry {
+    pub gpu_util: OnlineStat,
+    pub gpu_mem: OnlineStat,
+    pub cpu_util: OnlineStat,
+    pub host_mem: OnlineStat,
+}
+
+impl GroupTelemetry {
+    pub fn push(&mut self, r: &NodeReading) {
+        self.gpu_util.push(r.gpu_util);
+        self.gpu_mem.push(r.gpu_mem_util);
+        self.cpu_util.push(r.cpu_util);
+        self.host_mem.push(r.host_mem_util);
     }
 }
 
@@ -132,5 +205,47 @@ mod tests {
     #[should_panic]
     fn record_requires_readings() {
         Telemetry::new(60.0).record(0.0, &[]);
+    }
+
+    #[test]
+    fn aggregate_matches_record() {
+        let readings = [reading(0.9), reading(0.95), reading(1.0)];
+        let mut t = Telemetry::new(60.0);
+        t.record(7.0, &readings);
+        assert_eq!(t.samples()[0], aggregate(7.0, &readings));
+    }
+
+    #[test]
+    fn push_sample_appends_verbatim() {
+        let s = aggregate(3.0, &[reading(0.5)]);
+        let mut t = Telemetry::new(60.0);
+        t.push_sample(s);
+        assert_eq!(t.samples(), &[s]);
+    }
+
+    #[test]
+    fn online_stat_tracks_running_summary() {
+        let mut st = OnlineStat::default();
+        assert_eq!(st.mean(), 0.0);
+        for x in [3.0, -1.0, 2.0, 2.0] {
+            st.push(x);
+        }
+        assert_eq!(st.count, 4);
+        assert_eq!(st.min, -1.0);
+        assert_eq!(st.max, 3.0);
+        assert_eq!(st.last, 2.0);
+        // Exactly the left-fold sum/count of util::stats::mean.
+        assert_eq!(st.mean().to_bits(), mean(&[3.0, -1.0, 2.0, 2.0]).to_bits());
+    }
+
+    #[test]
+    fn group_telemetry_folds_all_four_metrics() {
+        let mut g = GroupTelemetry::default();
+        g.push(&reading(0.9));
+        g.push(&reading(0.7));
+        assert_eq!(g.gpu_util.count, 2);
+        assert_eq!(g.gpu_util.min, 0.7);
+        assert_eq!(g.gpu_util.last, 0.7);
+        assert_eq!(g.host_mem.mean(), 0.15);
     }
 }

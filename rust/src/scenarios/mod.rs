@@ -193,7 +193,10 @@ fn exa_100k() -> ScenarioPreset {
     // rank-softmax draw, and dynamic shard batching all earn their keep
     // here. Simulated end to end it completes in minutes on one host;
     // the truncated-duration engine-parity seed and the checked-in bench
-    // trajectory (BENCH_6.json) keep it honest.
+    // trajectory (BENCH_7.json) keep it honest. At this lane count the
+    // buffered report itself is the memory bottleneck — pair the preset
+    // with `--stream-report out.ndjson` to write every record as it
+    // occurs and keep report memory O(groups + open windows).
     let config = BenchmarkConfig {
         topology: uniform("ascend910", 12_800, GpuModel::ascend910()),
         duration_s: 12.0 * 3600.0,

@@ -3,7 +3,10 @@
 //! Covers the full JSON grammar the project touches: the artifact manifest
 //! (python/compile/aot.py output) on the read side and benchmark reports
 //! on the write side. Numbers are f64 (i64-exact integers round-trip via
-//! `as_u64`/`as_i64`). No streaming; documents here are ≤ a few MB.
+//! `as_u64`/`as_i64`). Whole documents here are ≤ a few MB; outputs that
+//! would not be (the 100k-lane streaming report) go through
+//! [`NdjsonWriter`], which serializes one small record at a time instead
+//! of building a whole tree.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -100,12 +103,18 @@ impl Json {
         out
     }
 
-    fn write(&self, out: &mut String) {
+    pub fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // JSON has no NaN/Infinity literals; Rust's `{}` would
+                // emit them and corrupt the document, so non-finite
+                // values serialize as null (the conventional lossy
+                // mapping). The finite i64-exact fast path is unchanged.
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -164,6 +173,9 @@ fn write_escaped(sv: &str, out: &mut String) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            // Remaining C0 controls have no short escape in JSON.
             c if (c as u32) < 0x20 => {
                 let _ = write!(out, "\\u{:04x}", c as u32);
             }
@@ -171,6 +183,55 @@ fn write_escaped(sv: &str, out: &mut String) {
         }
     }
     out.push('"');
+}
+
+/// Streaming newline-delimited-JSON writer: one value per line, written
+/// to the sink as it is produced. Memory is bounded by the largest
+/// single record (an internal line buffer is reused across records), so
+/// a 100k-lane benchmark can emit millions of records in constant
+/// memory — the scale-mode alternative to building the whole report
+/// tree through [`Json::to_string`].
+pub struct NdjsonWriter<W: std::io::Write> {
+    out: W,
+    buf: String,
+    records: u64,
+}
+
+impl<W: std::io::Write> NdjsonWriter<W> {
+    pub fn new(out: W) -> Self {
+        NdjsonWriter {
+            out,
+            buf: String::new(),
+            records: 0,
+        }
+    }
+
+    /// Serialize one record and write it as a single `\n`-terminated
+    /// line. Records must be objects or scalars without raw newlines by
+    /// construction (the writer escapes newlines inside strings), so the
+    /// line framing is unambiguous.
+    pub fn record(&mut self, value: &Json) -> std::io::Result<()> {
+        self.buf.clear();
+        value.write(&mut self.buf);
+        self.out.write_all(self.buf.as_bytes())?;
+        self.out.write_all(b"\n")?;
+        self.records += 1;
+        Ok(())
+    }
+
+    /// Records written so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+
+    /// Consume the writer, returning the underlying output.
+    pub fn into_inner(self) -> W {
+        self.out
+    }
 }
 
 struct Parser<'a> {
@@ -416,5 +477,52 @@ mod tests {
         let j = Json::parse("\"héllo ☃\"").unwrap();
         assert_eq!(j.as_str(), Some("héllo ☃"));
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // `{}` on f64 would print `NaN` / `inf` — not JSON. Exact bytes:
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let doc = arr(vec![num(1.0), num(f64::NAN), num(-2.5)]);
+        assert_eq!(doc.to_string(), "[1,null,-2.5]");
+        // The document stays parseable.
+        assert!(Json::parse(&doc.to_string()).is_ok());
+        // Finite values are untouched by the guard.
+        assert_eq!(num(-0.0).to_string(), "0");
+        assert_eq!(num(2.5).to_string(), "2.5");
+        // Huge magnitudes print positionally (Rust's `{}` never uses
+        // exponent form) and still round-trip exactly.
+        assert_eq!(Json::parse(&num(1e300).to_string()).unwrap(), num(1e300));
+    }
+
+    #[test]
+    fn control_characters_escape_to_exact_bytes() {
+        let j = s("a\u{0000}\u{0001}\u{0008}\u{000C}\u{001f}\n\r\t\"\\z");
+        assert_eq!(
+            j.to_string(),
+            "\"a\\u0000\\u0001\\b\\f\\u001f\\n\\r\\t\\\"\\\\z\""
+        );
+        // And every escape round-trips through the parser.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        // DEL (0x7f) needs no escape per RFC 8259.
+        assert_eq!(s("\u{007f}").to_string(), "\"\u{007f}\"");
+    }
+
+    #[test]
+    fn ndjson_writer_frames_one_record_per_line() {
+        let mut w = NdjsonWriter::new(Vec::new());
+        w.record(&obj(vec![("a", num(1.0))])).unwrap();
+        w.record(&obj(vec![("b", s("x\ny"))])).unwrap();
+        assert_eq!(w.records(), 2);
+        w.flush().unwrap();
+        let text = String::from_utf8(w.into_inner()).unwrap();
+        // Newlines inside strings are escaped, so framing stays 1/line.
+        assert_eq!(text, "{\"a\":1}\n{\"b\":\"x\\ny\"}\n");
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            assert!(Json::parse(line).is_ok());
+        }
     }
 }

@@ -2,6 +2,7 @@
 //! vendored set), so the RNG, JSON codec, and temp-dir helper live in-tree.
 
 pub mod json;
+pub mod ndjson;
 pub mod rng;
 pub mod stats;
 pub mod tmp;

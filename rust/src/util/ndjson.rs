@@ -1,0 +1,121 @@
+//! Newline-delimited JSON (NDJSON) reader.
+//!
+//! The streaming report pipeline writes one small JSON record per line
+//! ([`crate::util::json::NdjsonWriter`]); this module is the consuming
+//! side. It never builds a whole-document tree: callers either iterate
+//! [`NdjsonReader`] line by line or hand a callback to
+//! [`for_each_record`], so post-processing a multi-gigabyte stream
+//! holds one record in memory at a time.
+//!
+//! Errors are positional — [`NdjsonError`] carries the 1-based line
+//! number — and every malformed input is reported as an `Err`, never a
+//! panic (the fuzz harness in `tests/fuzz.rs` pins that contract).
+
+use crate::util::json::Json;
+
+/// A parse failure at a specific line of an NDJSON stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NdjsonError {
+    /// 1-based line number of the offending record.
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for NdjsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ndjson line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for NdjsonError {}
+
+/// Iterator over the records of an NDJSON text.
+///
+/// Yields `(line_number, record)` for every non-empty line; blank lines
+/// (including the trailing newline's empty remainder) are skipped so a
+/// well-formed writer output and a hand-edited file both read cleanly.
+pub struct NdjsonReader<'a> {
+    lines: std::iter::Enumerate<std::str::Lines<'a>>,
+}
+
+impl<'a> NdjsonReader<'a> {
+    pub fn new(text: &'a str) -> Self {
+        NdjsonReader { lines: text.lines().enumerate() }
+    }
+}
+
+impl Iterator for NdjsonReader<'_> {
+    type Item = Result<(usize, Json), NdjsonError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        for (idx, raw) in self.lines.by_ref() {
+            let line = idx + 1;
+            let trimmed = raw.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            return Some(match Json::parse(trimmed) {
+                Ok(v) => Ok((line, v)),
+                Err(e) => Err(NdjsonError { line, msg: e.to_string() }),
+            });
+        }
+        None
+    }
+}
+
+/// Run `f` over every record of `text` in order, stopping at the first
+/// malformed line. Returns the number of records visited.
+pub fn for_each_record<F>(text: &str, mut f: F) -> Result<u64, NdjsonError>
+where
+    F: FnMut(usize, &Json) -> Result<(), NdjsonError>,
+{
+    let mut n = 0u64;
+    for item in NdjsonReader::new(text) {
+        let (line, value) = item?;
+        f(line, &value)?;
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    #[test]
+    fn reads_records_with_line_numbers() {
+        let text = "{\"a\":1}\n\n{\"b\":2}\n";
+        let records: Vec<_> = NdjsonReader::new(text).collect::<Result<_, _>>().unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0], (1, obj(vec![("a", num(1.0))])));
+        assert_eq!(records[1], (3, obj(vec![("b", num(2.0))])));
+    }
+
+    #[test]
+    fn malformed_line_reports_position() {
+        let text = "{\"a\":1}\n{oops\n{\"b\":2}\n";
+        let mut reader = NdjsonReader::new(text);
+        assert!(reader.next().unwrap().is_ok());
+        let err = reader.next().unwrap().unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn for_each_record_counts_and_stops_on_error() {
+        let ok = for_each_record("1\n2\n3\n", |_, _| Ok(())).unwrap();
+        assert_eq!(ok, 3);
+        let err = for_each_record("1\n]\n3\n", |_, _| Ok(())).unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn truncated_record_is_an_error_not_a_panic() {
+        // A stream cut mid-record leaves an unterminated final line.
+        let text = "{\"a\":1}\n{\"b\":";
+        let results: Vec<_> = NdjsonReader::new(text).collect();
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Fuzz-style robustness harness for the text-facing parsers:
+//! `config::from_text`, the NDJSON reader, `Json::parse`, and the
+//! stream-summary reconstructor.
+//!
+//! proptest/cargo-fuzz are not vendored offline, so this is a seeded
+//! in-tree fuzzer: valid corpus inputs are battered with random byte
+//! flips, insertions, deletions, truncations, slice duplications, and
+//! line-level shuffles, and every parser must return `Ok`/`Err` —
+//! never panic, never hang. Truncated stream files specifically must
+//! be *detected* (an `Err`), not crashed on.
+//!
+//! Iteration count: `AIPERF_FUZZ_ITERS` (default 256; CI smoke runs
+//! more).
+
+use aiperf::config::{BenchmarkConfig, Engine};
+use aiperf::coordinator::run_benchmark_streaming;
+use aiperf::metrics::stream::reconstruct_summary;
+use aiperf::util::json::Json;
+use aiperf::util::ndjson::NdjsonReader;
+use aiperf::util::rng::{derive, Rng};
+
+fn iters() -> u64 {
+    std::env::var("AIPERF_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Apply 1–7 random byte-level edits to a copy of `input`.
+fn mutate_bytes(input: &[u8], rng: &mut Rng) -> Vec<u8> {
+    let mut out = input.to_vec();
+    for _ in 0..rng.gen_range_usize(1, 8) {
+        if out.is_empty() {
+            out.push(rng.gen_range_u64(0, 256) as u8);
+            continue;
+        }
+        match rng.gen_range_u64(0, 5) {
+            // Flip one byte.
+            0 => {
+                let i = rng.gen_range_usize(0, out.len());
+                out[i] = rng.gen_range_u64(0, 256) as u8;
+            }
+            // Insert a random byte.
+            1 => {
+                let i = rng.gen_range_usize(0, out.len() + 1);
+                out.insert(i, rng.gen_range_u64(0, 256) as u8);
+            }
+            // Delete one byte.
+            2 => {
+                let i = rng.gen_range_usize(0, out.len());
+                out.remove(i);
+            }
+            // Truncate (the mid-write crash shape).
+            3 => {
+                let i = rng.gen_range_usize(0, out.len());
+                out.truncate(i);
+            }
+            // Duplicate a short slice somewhere else.
+            _ => {
+                let a = rng.gen_range_usize(0, out.len());
+                let b = (a + rng.gen_range_usize(1, 64)).min(out.len());
+                let slice: Vec<u8> = out[a..b].to_vec();
+                let i = rng.gen_range_usize(0, out.len() + 1);
+                for (k, byte) in slice.into_iter().enumerate() {
+                    out.insert(i + k, byte);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Line-level mutation: drop, duplicate, or swap whole lines — the
+/// shapes a hand-edited or concatenated stream file takes.
+fn mutate_lines(input: &str, rng: &mut Rng) -> String {
+    let mut lines: Vec<&str> = input.lines().collect();
+    if lines.is_empty() {
+        return String::new();
+    }
+    match rng.gen_range_u64(0, 3) {
+        0 => {
+            let i = rng.gen_range_usize(0, lines.len());
+            lines.remove(i);
+        }
+        1 => {
+            let i = rng.gen_range_usize(0, lines.len());
+            lines.insert(i, lines[i]);
+        }
+        _ => {
+            let i = rng.gen_range_usize(0, lines.len());
+            let j = rng.gen_range_usize(0, lines.len());
+            lines.swap(i, j);
+        }
+    }
+    let mut out = lines.join("\n");
+    out.push('\n');
+    out
+}
+
+/// Valid config corpus: the default and a heterogeneous preset.
+fn config_corpus() -> Vec<String> {
+    vec![
+        BenchmarkConfig::default().to_text(),
+        aiperf::scenarios::get("t4v100-mixed")
+            .expect("preset exists")
+            .config
+            .to_text(),
+    ]
+}
+
+/// One small real stream (2 nodes, 1 h) as the NDJSON corpus seed.
+fn stream_corpus() -> String {
+    let mut cfg = BenchmarkConfig::homogeneous(2);
+    cfg.duration_s = 3600.0;
+    cfg.seed = 5;
+    let mut buf = Vec::new();
+    run_benchmark_streaming(&cfg, Engine::Sequential, &mut buf);
+    String::from_utf8(buf).expect("stream is UTF-8")
+}
+
+#[test]
+fn fuzz_config_from_text_never_panics() {
+    let corpus = config_corpus();
+    for seed in 0..iters() {
+        let mut rng = derive(seed, "fuzz-config", 0);
+        let base = &corpus[rng.gen_range_usize(0, corpus.len())];
+        let mutated = mutate_bytes(base.as_bytes(), &mut rng);
+        let text = String::from_utf8_lossy(&mutated);
+        // Must return, Ok or Err — a panic fails the test. A config
+        // that still parses must also re-render without panicking.
+        if let Ok(cfg) = BenchmarkConfig::from_text(&text) {
+            let _ = cfg.to_text();
+        }
+    }
+}
+
+#[test]
+fn fuzz_ndjson_reader_never_panics() {
+    let stream = stream_corpus();
+    for seed in 0..iters() {
+        let mut rng = derive(seed, "fuzz-ndjson", 0);
+        let mutated = mutate_bytes(stream.as_bytes(), &mut rng);
+        let text = String::from_utf8_lossy(&mutated);
+        // Drain the whole reader: every line yields Ok or a positional
+        // Err, never a panic, and the iterator always terminates.
+        let drained = NdjsonReader::new(&text).count();
+        assert!(drained <= text.lines().count());
+    }
+}
+
+#[test]
+fn fuzz_reconstruct_summary_never_panics() {
+    let stream = stream_corpus();
+    // The unmutated corpus is complete and must reconstruct.
+    assert!(reconstruct_summary(&stream).is_ok());
+    for seed in 0..iters() {
+        let mut rng = derive(seed, "fuzz-stream", 0);
+        // Alternate byte-level and line-level mutations.
+        let text = if seed % 2 == 0 {
+            String::from_utf8_lossy(&mutate_bytes(stream.as_bytes(), &mut rng)).into_owned()
+        } else {
+            mutate_lines(&stream, &mut rng)
+        };
+        let _ = reconstruct_summary(&text);
+    }
+}
+
+#[test]
+fn fuzz_truncated_streams_always_detected() {
+    let stream = stream_corpus();
+    // Pure truncation (no other edits): every strict prefix that loses
+    // at least the final newline's worth of trailer must be an Err —
+    // the "crashed mid-write" file is reported, not silently summed.
+    for seed in 0..iters() {
+        let mut rng = derive(seed, "fuzz-truncate", 0);
+        let mut cut = rng.gen_range_usize(0, stream.len() - 1);
+        while !stream.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        assert!(
+            reconstruct_summary(&stream[..cut]).is_err(),
+            "truncation at byte {cut} went undetected"
+        );
+    }
+}
+
+#[test]
+fn fuzz_json_parse_never_panics() {
+    let docs = [
+        BenchmarkConfig::default().to_text(),
+        "{\"a\":[1,2.5,-3e9,null,true,\"x\\n\\u0041\"],\"b\":{\"c\":{}}}".to_string(),
+    ];
+    for seed in 0..iters() {
+        let mut rng = derive(seed, "fuzz-json", 0);
+        let base = &docs[rng.gen_range_usize(0, docs.len())];
+        let mutated = mutate_bytes(base.as_bytes(), &mut rng);
+        let text = String::from_utf8_lossy(&mutated);
+        let _ = Json::parse(&text);
+    }
+}

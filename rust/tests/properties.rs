@@ -543,6 +543,51 @@ fn prop_migration_schedule_deterministic_per_seed() {
     assert!(jsons.len() > 1, "all seeds produced identical runs");
 }
 
+/// K-way merge invariant (the barrier window merge): heap-merging
+/// per-lane time-sorted deltas must equal the historic full re-sort of
+/// the lane-order concatenation — ties older lane first, FIFO within a
+/// lane — across random heterogeneous lane layouts (each node its own
+/// `subshards_per_node`-style lane count) and a collision-heavy time
+/// grid.
+#[test]
+fn prop_kway_merge_equals_stable_resort() {
+    use aiperf::coordinator::merge_by_time;
+    for seed in 0..CASES {
+        let mut rng = derive(seed, "prop-kway", 0);
+        // Heterogeneous lane layout: 1..=6 nodes, each with its own
+        // 1..=8 lane count (mirroring per-group subshards_per_node
+        // overrides), lanes of uneven length including empty ones.
+        let nodes = rng.gen_range_usize(1, 7);
+        let mut lanes: Vec<Vec<(f64, usize, usize)>> = Vec::new();
+        for _ in 0..nodes {
+            let k = rng.gen_range_usize(1, 9);
+            for _ in 0..k {
+                let lane_idx = lanes.len();
+                let len = rng.gen_range_usize(0, 30);
+                let mut t = 0.0;
+                let delta: Vec<(f64, usize, usize)> = (0..len)
+                    .map(|pos| {
+                        // Coarse integer steps (including zero) make
+                        // cross-lane timestamp collisions the common
+                        // case, so the older-lane-first tie rule is
+                        // really exercised, not just time ordering.
+                        t += rng.gen_range_u64(0, 3) as f64;
+                        (t, lane_idx, pos)
+                    })
+                    .collect();
+                lanes.push(delta);
+            }
+        }
+        // Historic path: concatenate in lane order, stable-sort by time
+        // (ties keep lane order, FIFO within a lane).
+        let mut expect: Vec<(f64, usize, usize)> =
+            lanes.iter().flatten().copied().collect();
+        expect.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let got = merge_by_time(lanes, |x| x.0);
+        assert_eq!(got, expect, "seed {seed}: merge order diverged");
+    }
+}
+
 /// Score invariants: regulated score is monotone decreasing in error and
 /// strictly linear in FLOPS, over random inputs.
 #[test]

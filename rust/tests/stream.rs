@@ -1,0 +1,145 @@
+//! End-to-end tests of the streaming NDJSON report pipeline
+//! (`--stream-report` / `metrics::stream`).
+//!
+//! The hard contract (ISSUE 7): with streaming off, nothing changes
+//! byte for byte; with it on, the summary reconstructed from the
+//! stream equals the buffered report exactly, the stream itself is a
+//! pure function of the seed (double-run and cross-engine
+//! byte-identical), and truncated streams are detected, not crashed on.
+
+use aiperf::config::{BenchmarkConfig, Engine};
+use aiperf::coordinator::{run_benchmark_streaming, run_benchmark_with};
+use aiperf::metrics::stream::{reconstruct_summary, StreamError};
+use aiperf::util::tmp::TempDir;
+
+fn small_cfg() -> BenchmarkConfig {
+    let mut cfg = BenchmarkConfig::homogeneous(2);
+    cfg.duration_s = 4.0 * 3600.0;
+    cfg.subshards_per_node = 2;
+    cfg.seed = 11;
+    cfg
+}
+
+fn stream_to_vec(cfg: &BenchmarkConfig, engine: Engine) -> (Vec<u8>, aiperf::metrics::BenchmarkReport) {
+    let mut buf = Vec::new();
+    let report = run_benchmark_streaming(cfg, engine, &mut buf);
+    (buf, report)
+}
+
+#[test]
+fn reconstructed_summary_equals_buffered_report() {
+    let cfg = small_cfg();
+    let buffered = run_benchmark_with(&cfg, Engine::Sequential);
+    let (bytes, streamed) = stream_to_vec(&cfg, Engine::Sequential);
+
+    // The streamed run's returned report: identical scalars, empty
+    // series (they live in the stream).
+    assert_eq!(streamed.score_flops.to_bits(), buffered.score_flops.to_bits());
+    assert_eq!(streamed.final_error.to_bits(), buffered.final_error.to_bits());
+    assert_eq!(
+        streamed.regulated_score.to_bits(),
+        buffered.regulated_score.to_bits()
+    );
+    assert_eq!(
+        streamed.architectures_evaluated,
+        buffered.architectures_evaluated
+    );
+    assert_eq!(streamed.validity, buffered.validity);
+    assert_eq!(streamed.nfs_bytes_read, buffered.nfs_bytes_read);
+    assert_eq!(streamed.nfs_bytes_written, buffered.nfs_bytes_written);
+    assert!(streamed.score_series.is_empty());
+    assert!(streamed.telemetry.is_empty());
+    assert!(streamed.lane_util.is_empty());
+    for (sg, bg) in streamed.groups.iter().zip(&buffered.groups) {
+        assert_eq!(sg, bg);
+    }
+
+    // The summary reconstructed from the stream: equal to the buffered
+    // report bit for bit, with the full series accounted for.
+    let text = String::from_utf8(bytes).unwrap();
+    let summary = reconstruct_summary(&text).expect("stream reconstructs");
+    assert_eq!(summary.nodes, buffered.nodes);
+    assert_eq!(summary.total_gpus, buffered.total_gpus);
+    assert_eq!(summary.duration_s.to_bits(), buffered.duration_s.to_bits());
+    assert_eq!(summary.score_flops.to_bits(), buffered.score_flops.to_bits());
+    assert_eq!(summary.final_error.to_bits(), buffered.final_error.to_bits());
+    assert_eq!(
+        summary.regulated_score.to_bits(),
+        buffered.regulated_score.to_bits()
+    );
+    assert_eq!(
+        summary.architectures_evaluated,
+        buffered.architectures_evaluated
+    );
+    assert_eq!(summary.validity, format!("{:?}", buffered.validity));
+    assert_eq!(summary.score_samples as usize, buffered.score_series.len());
+    assert_eq!(summary.telemetry_ticks as usize, buffered.telemetry.len());
+    assert_eq!(summary.lanes as usize, buffered.lane_util.len());
+    assert!(summary.trials > 0);
+    assert!(summary.windows > 0);
+}
+
+#[test]
+fn stream_is_a_pure_function_of_the_seed() {
+    let cfg = small_cfg();
+    let (a, _) = stream_to_vec(&cfg, Engine::Sequential);
+    let (b, _) = stream_to_vec(&cfg, Engine::Sequential);
+    assert_eq!(a, b, "double-run stream bytes diverged");
+    // The parallel engine must produce the identical stream: records
+    // are emitted at the single-threaded barrier merges, in node order.
+    let (par, _) = stream_to_vec(&cfg, Engine::Parallel);
+    assert_eq!(a, par, "sequential vs parallel stream bytes diverged");
+    // A different seed must not collapse onto the same stream.
+    let mut other = small_cfg();
+    other.seed = 12;
+    let (c, _) = stream_to_vec(&other, Engine::Sequential);
+    assert_ne!(a, c, "seed is not reaching the stream");
+}
+
+#[test]
+fn stream_report_config_key_writes_the_file() {
+    let dir = TempDir::new("stream").unwrap();
+    let path = dir.path().join("run.ndjson");
+    let mut cfg = small_cfg();
+    cfg.stream_report = Some(path.to_str().unwrap().to_string());
+    let via_file = run_benchmark_with(&cfg, Engine::Sequential);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let summary = reconstruct_summary(&text).expect("file stream reconstructs");
+    assert_eq!(summary.score_flops.to_bits(), via_file.score_flops.to_bits());
+    // And the file path goes through the same writer as the in-memory
+    // stream: identical bytes for the same config.
+    cfg.stream_report = None;
+    let (mem, _) = stream_to_vec(&cfg, Engine::Sequential);
+    assert_eq!(text.as_bytes(), &mem[..]);
+}
+
+#[test]
+fn truncated_streams_error_cleanly_at_any_cut() {
+    let cfg = small_cfg();
+    let (bytes, _) = stream_to_vec(&cfg, Engine::Sequential);
+    let text = String::from_utf8(bytes).unwrap();
+    assert!(reconstruct_summary(&text).is_ok());
+    // Cut the stream at a spread of byte offsets (snapped to char
+    // boundaries): every strict prefix must produce an error — Parse
+    // for mid-record cuts, Truncated for clean line-boundary cuts —
+    // and never a panic or a silently wrong Ok. (A cut at n-1 would
+    // only drop the final newline, which is legitimately complete, so
+    // the range stops short of it.)
+    let n = text.len();
+    for cut in (0..n - 1).step_by((n / 97).max(1)) {
+        let mut cut = cut;
+        while !text.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        let prefix = &text[..cut];
+        match reconstruct_summary(prefix) {
+            Err(StreamError::Parse { .. })
+            | Err(StreamError::Truncated { .. })
+            | Err(StreamError::Malformed { .. }) => {}
+            Ok(_) => panic!("prefix of {cut}/{n} bytes reconstructed as complete"),
+        }
+    }
+    // Dropping just the final newline still reconstructs (the trailer
+    // line is complete).
+    assert!(reconstruct_summary(text.trim_end()).is_ok());
+}

@@ -378,7 +378,11 @@ impl BenchmarkConfig {
         /// drift between them.
         fn parse_flag(key: &str, value: &str) -> Result<bool, String> {
             match value {
+                // detlint: allow(knob_key) — boolean value spellings, not
+                // config keys.
                 "true" | "on" | "1" => Ok(true),
+                // detlint: allow(knob_key) — boolean value spellings, not
+                // config keys.
                 "false" | "off" | "0" => Ok(false),
                 other => Err(format!(
                     "bad boolean `{other}` for {key} (expected true/false)"
@@ -399,6 +403,9 @@ impl BenchmarkConfig {
             match key {
                 "count" => g.count = parse_u64(value)?,
                 "gpus_per_node" => g.gpus_per_node = parse_u64(value)?,
+                // detlint: allow(knob_to_text) — parse-only sugar: `gpu`
+                // names a preset whose expansion to_text emits as the
+                // explicit gpu_* fields.
                 "gpu" => {
                     g.gpu = GpuModel::named(value).ok_or_else(|| {
                         format!(
@@ -408,6 +415,8 @@ impl BenchmarkConfig {
                 }
                 "gpu_sustained_flops" => g.gpu.sustained_flops = parse_f64(value)?,
                 "gpu_memory_bytes" => g.gpu.memory_bytes = parse_u64(value)?,
+                // detlint: allow(knob_to_text) — parse-only alias:
+                // to_text canonicalizes to gpu_memory_bytes.
                 "gpu_memory_gb" => {
                     g.gpu.memory_bytes = (parse_f64(value)? * (1u64 << 30) as f64) as u64
                 }
@@ -498,6 +507,8 @@ impl BenchmarkConfig {
             // (`nodes` is the flat spelling of a group's `count`; the
             // section-only `count` key stays invalid at the top level).
             let flat_key = match key {
+                // detlint: allow(knob_to_text) — parse-only alias: the
+                // flat spelling of a group's `count`, which to_text emits.
                 "nodes" => Some("count"),
                 "gpus_per_node" | "gpu" | "gpu_sustained_flops" | "gpu_memory_bytes"
                 | "gpu_memory_gb" | "gpu_util_half_batch" | "gpu_util_max"
@@ -522,6 +533,8 @@ impl BenchmarkConfig {
                 "lr_decay_per_epoch" => cfg.lr_decay_per_epoch = parse_f64(value)?,
                 "patience" => cfg.patience = parse_u64(value)?,
                 "min_delta" => cfg.min_delta = parse_f64(value)?,
+                // detlint: allow(knob_to_text) — parse-only alias:
+                // to_text canonicalizes to duration_s.
                 "duration_hours" => cfg.duration_s = parse_f64(value)? * 3600.0,
                 "duration_s" => cfg.duration_s = parse_f64(value)?,
                 "telemetry_interval_s" => cfg.telemetry_interval_s = parse_f64(value)?,

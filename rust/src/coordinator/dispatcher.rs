@@ -5,18 +5,25 @@
 //! Exactly-once bookkeeping: every trial id is assigned to exactly one
 //! node and completed exactly once — the routing invariant the proptest
 //! suite (rust/tests/proptest_coordinator.rs) exercises.
+//!
+//! All state lives in deterministic containers (a `BTreeMap` for the
+//! in-flight set, dense `Vec`s for the per-node totals): iteration order
+//! is a pure function of the contents, so nothing here can perturb a
+//! schedule even if a caller iterates.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Routing state.
 #[derive(Debug, Clone, Default)]
 pub struct Dispatcher {
     next_trial: u64,
-    /// trial id → node, for in-flight trials.
-    in_flight: HashMap<u64, usize>,
-    /// Per-node totals.
-    assigned: HashMap<usize, u64>,
-    completed: HashMap<usize, u64>,
+    /// trial id → node, for in-flight trials. Ordered so that any
+    /// iteration over the in-flight set is deterministic.
+    in_flight: BTreeMap<u64, usize>,
+    /// Per-node totals, indexed by node id (small dense indices; grown on
+    /// demand so sparse node ids still work).
+    assigned: Vec<u64>,
+    completed: Vec<u64>,
 }
 
 #[derive(Debug, PartialEq, Eq)]
@@ -42,6 +49,14 @@ impl std::fmt::Display for DispatchError {
 
 impl std::error::Error for DispatchError {}
 
+/// Grow-on-demand increment of a dense per-node counter vector.
+fn bump(counters: &mut Vec<u64>, node: usize) {
+    if counters.len() <= node {
+        counters.resize(node + 1, 0);
+    }
+    counters[node] += 1;
+}
+
 impl Dispatcher {
     pub fn new() -> Self {
         Self::default()
@@ -56,7 +71,7 @@ impl Dispatcher {
         let id = self.next_trial;
         self.next_trial += 1;
         self.in_flight.insert(id, node);
-        *self.assigned.entry(node).or_insert(0) += 1;
+        bump(&mut self.assigned, node);
         Ok(id)
     }
 
@@ -67,7 +82,7 @@ impl Dispatcher {
             Some(&owner) if owner != node => Err(DispatchError::WrongNode(trial, owner, node)),
             Some(_) => {
                 self.in_flight.remove(&trial);
-                *self.completed.entry(node).or_insert(0) += 1;
+                bump(&mut self.completed, node);
                 Ok(())
             }
         }
@@ -82,17 +97,17 @@ impl Dispatcher {
     }
 
     pub fn completed_on(&self, node: usize) -> u64 {
-        self.completed.get(&node).copied().unwrap_or(0)
+        self.completed.get(node).copied().unwrap_or(0)
     }
 
     pub fn total_completed(&self) -> u64 {
-        self.completed.values().sum()
+        self.completed.iter().sum()
     }
 
     /// Invariant check: assigned = completed + in-flight, per node and
     /// globally.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let total_done: u64 = self.completed.values().sum();
+        let total_done: u64 = self.completed.iter().sum();
         if total_done + self.in_flight.len() as u64 != self.next_trial {
             return Err(format!(
                 "assigned {} ≠ completed {} + in-flight {}",
@@ -101,11 +116,28 @@ impl Dispatcher {
                 self.in_flight.len()
             ));
         }
-        for (&node, &a) in &self.assigned {
-            let c = self.completed.get(&node).copied().unwrap_or(0);
+        let total_assigned: u64 = self.assigned.iter().sum();
+        if total_assigned != self.next_trial {
+            return Err(format!(
+                "per-node assigned sum {} ≠ issued trial ids {}",
+                total_assigned, self.next_trial
+            ));
+        }
+        let nodes = self.assigned.len().max(self.completed.len());
+        for node in 0..nodes {
+            let a = self.assigned.get(node).copied().unwrap_or(0);
+            let c = self.completed.get(node).copied().unwrap_or(0);
             let f = self.in_flight.values().filter(|&&n| n == node).count() as u64;
             if c + f != a {
                 return Err(format!("node {node}: assigned {a} ≠ {c} + {f}"));
+            }
+        }
+        if let Some((&trial, _)) = self.in_flight.last_key_value() {
+            if trial >= self.next_trial {
+                return Err(format!(
+                    "in-flight trial {trial} was never issued (next id {})",
+                    self.next_trial
+                ));
             }
         }
         Ok(())
@@ -168,6 +200,41 @@ mod tests {
         for node in 0..3 {
             assert_eq!(d.completed_on(node), 5);
         }
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sparse_node_indices() {
+        // Dense counter vectors must grow on demand: assigning to a high
+        // node id first, then a low one, keeps every invariant.
+        let mut d = Dispatcher::new();
+        let t_hi = d.assign(17).unwrap();
+        d.check_invariants().unwrap();
+        let t_lo = d.assign(2).unwrap();
+        d.check_invariants().unwrap();
+        assert_eq!(d.completed_on(17), 0);
+        assert_eq!(d.completed_on(40), 0, "never-seen node reads zero");
+        d.complete(t_hi, 17).unwrap();
+        d.complete(t_lo, 2).unwrap();
+        assert_eq!(d.completed_on(17), 1);
+        assert_eq!(d.completed_on(2), 1);
+        assert_eq!(d.total_completed(), 2);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn in_flight_iteration_is_ordered() {
+        // The in-flight map is a BTreeMap: snapshots of the in-flight set
+        // are sorted by trial id, independent of insertion pattern.
+        let mut d = Dispatcher::new();
+        let mut ids = Vec::new();
+        for node in [5usize, 1, 9, 3] {
+            ids.push(d.assign(node).unwrap());
+        }
+        let snapshot: Vec<u64> = d.in_flight.keys().copied().collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(snapshot, sorted);
         d.check_invariants().unwrap();
     }
 }

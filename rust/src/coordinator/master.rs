@@ -354,6 +354,9 @@ fn run_with_sink<W: std::io::Write>(
                 let ctx_ref = &ctx;
                 let batches_ref = &batches;
                 let next_ref = &next;
+                // detlint: allow(thread_spawn) — deterministic epoch-barrier
+                // worker pool; Sequential/Parallel bit-parity is enforced by
+                // tests/engine_parity.rs.
                 std::thread::scope(|scope| {
                     for _ in 0..workers {
                         scope.spawn(move || loop {

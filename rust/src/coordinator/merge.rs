@@ -72,6 +72,8 @@ pub fn merge_by_time<T>(mut lanes: Vec<Vec<T>>, time: impl Fn(&T) -> f64) -> Vec
             lane.sort_by(|a, b| time(a).partial_cmp(&time(b)).unwrap_or(Ordering::Equal));
         }
     }
+    // detlint: allow(float_fold) — integer length sum, not a float
+    // accumulation; order cannot change the result.
     let total: usize = lanes.iter().map(Vec::len).sum();
     let mut out = Vec::with_capacity(total);
     let mut cursors: Vec<std::vec::IntoIter<T>> =

@@ -483,8 +483,8 @@ impl SlaveShard {
         fit: &MigrantFit,
         ctx: &SimContext,
     ) -> bool {
-        debug_assert!(self.lane_parked(sub), "migrant dispatched to a busy lane");
-        debug_assert_ne!(self.group, m.from_group, "migration is inter-group");
+        assert!(self.lane_parked(sub), "migrant dispatched to a busy lane");
+        assert_ne!(self.group, m.from_group, "migration is inter-group");
         let cfg = ctx.cfg;
         let timing = ctx.timing(self.group);
         let node = &timing.node;
@@ -498,7 +498,7 @@ impl SlaveShard {
         let stage = timing
             .nfs
             .stage_in_seconds(m.checkpoint_bytes(cfg), &mut self.nfs);
-        debug_assert_eq!(stage.to_bits(), fit.stage_s.to_bits());
+        assert_eq!(stage.to_bits(), fit.stage_s.to_bits());
         let trial_id = local * ctx.total_units + self.subs[sub].unit;
         let gpus = self.subs[sub].gpus;
         // The single-sourced IB ring timing (same helper as the placement
@@ -519,7 +519,7 @@ impl SlaveShard {
         lane.migrated = true;
         lane.migrant_from = Some((m.from_node, m.from_sub, m.from_group));
         lane.migrant_epoch_overhead_s = penalty_per_epoch;
-        debug_assert!(lane.busy_since.is_none(), "adopting lane was already busy");
+        assert!(lane.busy_since.is_none(), "adopting lane was already busy");
         lane.busy_since = Some(t);
         lane.epoch_seconds = total_epoch_s;
         lane.own_epoch_s = total_epoch_s;
@@ -694,7 +694,7 @@ impl SlaveShard {
         me.busy_fraction = busy;
         me.mem_fraction = mem;
         me.setup_until = t;
-        debug_assert!(me.busy_since.is_none(), "helper lane was already busy");
+        assert!(me.busy_since.is_none(), "helper lane was already busy");
         me.busy_since = Some(t);
         true
     }
@@ -952,7 +952,7 @@ impl SlaveShard {
             (epoch.compute_s + val_s) / total_epoch_s * epoch.gpu_busy_fraction.max(0.9);
         lane.mem_fraction = mem_fraction;
         lane.setup_until = t + setup;
-        debug_assert!(lane.busy_since.is_none(), "starting lane was already busy");
+        assert!(lane.busy_since.is_none(), "starting lane was already busy");
         lane.busy_since = Some(t);
         lane.trial = Some(ActiveTrial::new(
             trial_id,

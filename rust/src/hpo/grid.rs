@@ -95,7 +95,7 @@ mod tests {
         // dropout: 5 levels; kernel (integer): 2,3,4,5 → 4 levels.
         assert_eq!(gs.lattice_size(), 20);
         let mut rng = derive(0, "grid", 0);
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for _ in 0..20 {
             let c = gs.suggest(&mut rng);
             seen.insert(format!("{c:?}"));

@@ -10,6 +10,8 @@
 //! testbed, and a PJRT runtime that executes the AOT-compiled JAX/Pallas
 //! training step for the real end-to-end path).
 
+#![forbid(unsafe_code)]
+
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

@@ -4,6 +4,8 @@
 //! CLI parsing is hand-rolled (clap is not vendored offline): flat
 //! `--key value` flags per subcommand.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Context, Result};
 
 use aiperf::config::{BenchmarkConfig, Engine};
@@ -319,6 +321,9 @@ fn cmd_cluster(flags: &Flags) -> Result<()> {
     let mut handles = Vec::new();
     for node in 0..slaves {
         let worker = aiperf::distributed::SlaveWorker::new(node, seed);
+        // detlint: allow(thread_spawn) — real multi-process-style worker
+        // threads for `aiperf cluster`; determinism is owned by the
+        // protocol layer, not this launcher.
         handles.push(std::thread::spawn(move || worker.run(addr)));
     }
     let report = master.serve()?;

@@ -10,7 +10,7 @@
 //! meaningless and renders as `—` (and as an empty CSV cell) rather than
 //! a fake 100 %.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::report::BenchmarkReport;
 
@@ -52,8 +52,8 @@ pub struct Baseline {
 }
 
 /// Baseline per accelerator mix: the fewest-device entry of each mix.
-pub fn baselines(runs: &[SweepRun]) -> HashMap<String, Baseline> {
-    let mut map: HashMap<String, Baseline> = HashMap::new();
+pub fn baselines(runs: &[SweepRun]) -> BTreeMap<String, Baseline> {
+    let mut map: BTreeMap<String, Baseline> = BTreeMap::new();
     for run in runs {
         let r = &run.report;
         let per_device = r.score_flops / r.total_gpus.max(1) as f64;
@@ -74,7 +74,7 @@ pub fn baselines(runs: &[SweepRun]) -> HashMap<String, Baseline> {
 /// Weak-scaling efficiency (% of the same-mix baseline's per-device
 /// score), or `None` when the ratio is meaningless: the mix appears only
 /// once in the sweep, or the baseline score is zero / not positive.
-pub fn efficiency_pct(run: &SweepRun, baselines: &HashMap<String, Baseline>) -> Option<f64> {
+pub fn efficiency_pct(run: &SweepRun, baselines: &BTreeMap<String, Baseline>) -> Option<f64> {
     let b = baselines.get(&accelerator_mix(&run.report))?;
     if b.entries < 2 || !b.per_device.is_finite() || b.per_device <= 0.0 {
         return None;

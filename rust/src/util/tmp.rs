@@ -13,6 +13,8 @@ pub struct TempDir {
 impl TempDir {
     pub fn new(label: &str) -> std::io::Result<Self> {
         let n = COUNTER.fetch_add(1, Ordering::SeqCst);
+        // detlint: allow(env_read) — test scaffolding: the OS temp root is
+        // the one ambient input a vendored-free TempDir needs.
         let path = std::env::temp_dir().join(format!(
             "aiperf-{label}-{}-{n}",
             std::process::id()

@@ -1,0 +1,114 @@
+//! Machine-readable report serialization (the `--json` artifact CI
+//! uploads). Hand-rolled like everything else here: the schema is flat
+//! enough that an escaper and a string builder are the whole job.
+
+use crate::Report;
+
+/// Escape one string for a JSON double-quoted context.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the full report. Schema:
+///
+/// ```json
+/// {
+///   "files_scanned": 62,
+///   "summary": {"deny": 0, "advisory": 0, "suppressed": 12},
+///   "findings": [
+///     {"rule": "wall_clock", "severity": "deny",
+///      "file": "distributed/master.rs", "line": 97,
+///      "message": "…", "suppressed": true}
+///   ]
+/// }
+/// ```
+///
+/// Findings are sorted by (file, line, rule), so the artifact is
+/// byte-stable across runs — diffable like every other output of this
+/// repository.
+pub fn render(report: &Report) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!(
+        "  \"files_scanned\": {},\n",
+        report.files_scanned
+    ));
+    out.push_str(&format!(
+        "  \"summary\": {{\"deny\": {}, \"advisory\": {}, \"suppressed\": {}}},\n",
+        report.deny_count(),
+        report.advisory_count(),
+        report.suppressed_count()
+    ));
+    out.push_str("  \"findings\": [");
+    for (i, f) in report.findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"severity\": \"{}\", \"file\": \"{}\", \
+             \"line\": {}, \"message\": \"{}\", \"suppressed\": {}}}",
+            escape(f.rule),
+            f.severity.as_str(),
+            escape(&f.file),
+            f.line,
+            escape(&f.message),
+            f.suppressed
+        ));
+    }
+    if !report.findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{Finding, Severity};
+
+    #[test]
+    fn escapes_and_shape() {
+        let mut report = Report {
+            findings: Vec::new(),
+            files_scanned: 2,
+        };
+        report.findings.push(Finding::new(
+            "wall_clock",
+            Severity::Deny,
+            "a/b.rs",
+            7,
+            "say \"now\"\nand a tab\there".to_string(),
+        ));
+        let j = render(&report);
+        assert!(j.contains("\"files_scanned\": 2"));
+        assert!(j.contains("\\\"now\\\""));
+        assert!(j.contains("\\n"));
+        assert!(j.contains("\\t"));
+        assert!(j.contains("\"line\": 7"));
+        assert!(j.contains("\"summary\": {\"deny\": 1, \"advisory\": 0, \"suppressed\": 0}"));
+    }
+
+    #[test]
+    fn empty_report_is_valid() {
+        let report = Report {
+            findings: Vec::new(),
+            files_scanned: 0,
+        };
+        let j = render(&report);
+        assert!(j.contains("\"findings\": []"));
+    }
+}

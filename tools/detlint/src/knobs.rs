@@ -1,0 +1,200 @@
+//! Knob-parity cross-reference: every config key accepted by
+//! `config::from_text` must be emitted by `to_text`, documented in
+//! `USAGE.md`, and either named by a real CLI flag or explicitly marked
+//! flagless (`—`) in the docs — the class of drift the round-trip
+//! property tests cannot see (a key parsed but never documented).
+//!
+//! Extraction is lexical, matching how the config parser is written:
+//! a string literal followed by `=>` or `|` inside the `from_text`
+//! function body is a match-arm pattern, i.e. an accepted key. Literals
+//! that are key *values* rather than keys (boolean spellings like
+//! `"on"`) are excluded with a `knob_key` pragma at their match arm.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::scan::{Scan, TokenKind};
+use crate::{FileScan, Finding, Severity};
+
+/// Token index range (inclusive braces) of `fn name`'s body.
+fn fn_extent(scan: &Scan, name: &str) -> Option<(usize, usize)> {
+    let toks = &scan.tokens;
+    for i in 0..toks.len().saturating_sub(1) {
+        if toks[i].kind == TokenKind::Ident
+            && toks[i].text == "fn"
+            && toks[i + 1].kind == TokenKind::Ident
+            && toks[i + 1].text == name
+        {
+            let mut j = i + 2;
+            while j < toks.len() && !(toks[j].kind == TokenKind::Punct && toks[j].text == "{") {
+                j += 1;
+            }
+            let start = j;
+            let mut depth = 0i64;
+            while j < toks.len() {
+                if toks[j].kind == TokenKind::Punct {
+                    match toks[j].text.as_str() {
+                        "{" => depth += 1,
+                        "}" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return Some((start, j));
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            return Some((start, toks.len().saturating_sub(1)));
+        }
+    }
+    None
+}
+
+/// Accepted config keys → line of first occurrence in `from_text`.
+/// `knob_key`-pragma'd literals are excluded (and the pragma marked
+/// used).
+fn accepted_keys(cfg: &mut FileScan) -> BTreeMap<String, usize> {
+    let Some((s, e)) = fn_extent(&cfg.scan, "from_text") else {
+        return BTreeMap::new();
+    };
+    let mut keys: BTreeMap<String, usize> = BTreeMap::new();
+    for i in s..=e.min(cfg.scan.tokens.len().saturating_sub(1)) {
+        let t = &cfg.scan.tokens[i];
+        if t.kind != TokenKind::Str {
+            continue;
+        }
+        let arm = cfg.scan.tokens.get(i + 1).is_some_and(|n| {
+            n.kind == TokenKind::Punct && (n.text == "=>" || n.text == "|")
+        });
+        if !arm {
+            continue;
+        }
+        let (line, text) = (t.line, t.text.clone());
+        if cfg.try_suppress("knob_key", line) {
+            continue;
+        }
+        keys.entry(text).or_insert(line);
+    }
+    keys
+}
+
+/// Does any `to_text` string literal emit `key =` at a word boundary?
+/// Templates carry raw (unprocessed) escapes, so `\n` is normalized
+/// first — a key right after an escaped newline is still a boundary.
+fn emitted_by_to_text(templates: &[String], key: &str) -> bool {
+    let needle = format!("{key} =");
+    templates.iter().any(|raw| {
+        let t = raw.replace("\\n", "\n").replace("\\t", "\t");
+        let bytes = t.as_bytes();
+        let mut from = 0;
+        while let Some(pos) = t[from..].find(&needle) {
+            let at = from + pos;
+            let boundary = at == 0 || {
+                let prev = bytes[at - 1] as char;
+                !(prev.is_ascii_alphanumeric() || prev == '_')
+            };
+            if boundary {
+                return true;
+            }
+            from = at + 1;
+        }
+        false
+    })
+}
+
+/// `--flag` names mentioned on one USAGE.md line.
+fn line_flags(line: &str) -> Vec<String> {
+    let mut flags = Vec::new();
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = 0;
+    while i + 1 < chars.len() {
+        if chars[i] == '-' && chars[i + 1] == '-' {
+            let mut j = i + 2;
+            let mut name = String::new();
+            while j < chars.len() && (chars[j].is_ascii_alphanumeric() || chars[j] == '-') {
+                name.push(chars[j]);
+                j += 1;
+            }
+            if !name.is_empty() {
+                flags.push(name);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+/// Run the knob-parity checks. `cfg` is the scan of `config/mod.rs`,
+/// `main_literals` the set of string literals in `main.rs` (the flag
+/// universe), `usage` the text of `USAGE.md`.
+pub fn check(
+    cfg: &mut FileScan,
+    main_literals: &BTreeSet<String>,
+    usage: &str,
+) -> Vec<Finding> {
+    let rel = cfg.rel.clone();
+    let templates: Vec<String> = fn_extent(&cfg.scan, "to_text")
+        .map(|(s, e)| {
+            cfg.scan.tokens[s..=e.min(cfg.scan.tokens.len() - 1)]
+                .iter()
+                .filter(|t| t.kind == TokenKind::Str)
+                .map(|t| t.text.clone())
+                .collect()
+        })
+        .unwrap_or_default();
+    let mut out = Vec::new();
+    for (key, line) in accepted_keys(cfg) {
+        if !emitted_by_to_text(&templates, &key) {
+            out.push(Finding::new(
+                "knob_to_text",
+                Severity::Deny,
+                &rel,
+                line,
+                format!(
+                    "config key `{key}` is parsed by from_text but never \
+                     emitted by to_text — round-tripping a config silently \
+                     drops it"
+                ),
+            ));
+        }
+        let backticked = format!("`{key}`");
+        let doc_lines: Vec<&str> =
+            usage.lines().filter(|l| l.contains(&backticked)).collect();
+        if doc_lines.is_empty() {
+            out.push(Finding::new(
+                "knob_docs",
+                Severity::Deny,
+                &rel,
+                line,
+                format!(
+                    "config key `{key}` is not documented in USAGE.md — add \
+                     it to the config-key reference table"
+                ),
+            ));
+            continue;
+        }
+        let cli_ok = doc_lines.iter().any(|l| {
+            if l.contains('\u{2014}') {
+                return true;
+            }
+            line_flags(l).iter().any(|f| main_literals.contains(f))
+        });
+        if !cli_ok {
+            out.push(Finding::new(
+                "knob_cli",
+                Severity::Deny,
+                &rel,
+                line,
+                format!(
+                    "config key `{key}`'s USAGE.md entry names no CLI flag \
+                     that exists in main.rs and no explicit `\u{2014}` \
+                     (flagless) marker"
+                ),
+            ));
+        }
+    }
+    out
+}

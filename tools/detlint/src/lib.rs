@@ -1,0 +1,294 @@
+//! detlint — in-tree determinism & knob-parity static analysis for the
+//! `aiperf` sources.
+//!
+//! The benchmark's results are only meaningful because schedules are
+//! bit-identical per seed; the dynamic gates (double-run byte diffs,
+//! engine parity) catch a violation only after it has perturbed an RNG
+//! stream. detlint catches the *class* statically: unordered-iteration
+//! containers in deterministic modules, wall-clock reads, ad-hoc
+//! threads, ambient `std::env`, float accumulation in merge/score
+//! paths, and config keys that drift out of `to_text`/`USAGE.md`/CLI
+//! parity. Exceptions exist, but each one must carry a scoped,
+//! justified pragma (see [`pragma`]), so the exception list reads as
+//! documentation.
+//!
+//! Run as `cargo run -p detlint --` (exit 1 on any unsuppressed
+//! deny-severity finding) or with `--json FILE` for the machine-
+//! readable report CI uploads.
+
+#![forbid(unsafe_code)]
+
+pub mod json;
+pub mod knobs;
+pub mod pragma;
+pub mod rules;
+pub mod scan;
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use pragma::Pragma;
+use scan::Scan;
+
+/// One input file: `rel` is the path relative to `rust/src` (always
+/// forward-slashed), the unit every rule scope is written against.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub rel: String,
+    pub text: String,
+}
+
+/// Finding severity: `Deny` affects the exit code; `Advisory` is
+/// reported (and serialized) but never fails the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Deny,
+    Advisory,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Deny => "deny",
+            Severity::Advisory => "advisory",
+        }
+    }
+}
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    /// True when a pragma covers this finding.
+    pub suppressed: bool,
+}
+
+impl Finding {
+    pub fn new(
+        rule: &'static str,
+        severity: Severity,
+        file: &str,
+        line: usize,
+        message: String,
+    ) -> Self {
+        Finding {
+            rule,
+            severity,
+            file: file.to_string(),
+            line,
+            message,
+            suppressed: false,
+        }
+    }
+}
+
+/// The analysis result.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Findings not covered by a pragma.
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.suppressed)
+    }
+
+    /// Unsuppressed deny-severity findings — what fails the run.
+    pub fn deny_count(&self) -> usize {
+        self.unsuppressed()
+            .filter(|f| f.severity == Severity::Deny)
+            .count()
+    }
+
+    pub fn advisory_count(&self) -> usize {
+        self.unsuppressed()
+            .filter(|f| f.severity == Severity::Advisory)
+            .count()
+    }
+
+    pub fn suppressed_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed).count()
+    }
+
+    /// Exit policy: non-zero exactly when a deny finding survives.
+    pub fn failed(&self) -> bool {
+        self.deny_count() > 0
+    }
+}
+
+/// One file's scan state during analysis.
+pub struct FileScan {
+    pub rel: String,
+    pub scan: Scan,
+    pub pragmas: Vec<Pragma>,
+    /// Lines that contain at least one token — pragma targeting skips
+    /// comment-only lines (wrapped justifications) to the next of these.
+    pub code_lines: BTreeSet<usize>,
+}
+
+impl FileScan {
+    fn new(rel: &str, text: &str) -> (Self, Vec<pragma::BadPragma>) {
+        let scan = scan::scan(text);
+        let (pragmas, bad) = pragma::parse(&scan.comments);
+        let code_lines = scan.tokens.iter().map(|t| t.line).collect();
+        (
+            FileScan {
+                rel: rel.to_string(),
+                scan,
+                pragmas,
+                code_lines,
+            },
+            bad,
+        )
+    }
+
+    /// The code line a line-scoped pragma applies to: its own line when
+    /// that line has code, else the next line that does.
+    fn pragma_target(&self, p: &Pragma) -> Option<usize> {
+        if self.code_lines.contains(&p.line) {
+            Some(p.line)
+        } else {
+            self.code_lines.range(p.line + 1..).next().copied()
+        }
+    }
+
+    /// If a pragma for `rule` covers `line`, mark it used and report
+    /// success. Line-scoped pragmas are tried before file-scoped ones.
+    pub fn try_suppress(&mut self, rule: &str, line: usize) -> bool {
+        let mut hit: Option<usize> = None;
+        for (i, p) in self.pragmas.iter().enumerate() {
+            if p.rule != rule {
+                continue;
+            }
+            if !p.file_scope && self.pragma_target(p) == Some(line) {
+                hit = Some(i);
+                break;
+            }
+            if p.file_scope && hit.is_none() {
+                hit = Some(i);
+            }
+        }
+        match hit {
+            Some(i) => {
+                self.pragmas[i].used = true;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Analyze a set of sources plus the USAGE.md text.
+pub fn analyze(files: &[SourceFile], usage_md: &str) -> Report {
+    let mut scans: Vec<FileScan> = Vec::with_capacity(files.len());
+    let mut findings: Vec<Finding> = Vec::new();
+
+    for f in files {
+        let (fs, bad) = FileScan::new(&f.rel, &f.text);
+        for b in bad {
+            findings.push(Finding::new(
+                "bad_pragma",
+                Severity::Deny,
+                &f.rel,
+                b.line,
+                format!("malformed detlint pragma: {}", b.why),
+            ));
+        }
+        scans.push(fs);
+    }
+
+    let mut raw: Vec<Finding> = Vec::new();
+    for fs in &scans {
+        raw.extend(rules::check(&fs.rel, &fs.scan));
+    }
+
+    // Knob parity runs when the config surface is part of the input set.
+    if let Some(cfg_idx) = scans.iter().position(|f| f.rel == "config/mod.rs") {
+        let main_literals: BTreeSet<String> = scans
+            .iter()
+            .find(|f| f.rel == "main.rs")
+            .map(|f| {
+                f.scan
+                    .tokens
+                    .iter()
+                    .filter(|t| t.kind == scan::TokenKind::Str)
+                    .map(|t| t.text.clone())
+                    .collect()
+            })
+            .unwrap_or_default();
+        raw.extend(knobs::check(&mut scans[cfg_idx], &main_literals, usage_md));
+    }
+
+    for mut f in raw {
+        if let Some(fs) = scans.iter_mut().find(|s| s.rel == f.file) {
+            f.suppressed = fs.try_suppress(f.rule, f.line);
+        }
+        findings.push(f);
+    }
+
+    for fs in &scans {
+        for p in &fs.pragmas {
+            if !p.used {
+                findings.push(Finding::new(
+                    "unused_pragma",
+                    Severity::Deny,
+                    &fs.rel,
+                    p.line,
+                    format!(
+                        "pragma allow{}({}) suppresses nothing — delete it",
+                        if p.file_scope { "-file" } else { "" },
+                        p.rule
+                    ),
+                ));
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Report {
+        findings,
+        files_scanned: files.len(),
+    }
+}
+
+/// Load the real tree: every `rust/src/**/*.rs` (sorted, deterministic)
+/// plus `USAGE.md`, from the repository root.
+pub fn load_tree(root: &Path) -> std::io::Result<(Vec<SourceFile>, String)> {
+    let base = root.join("rust").join("src");
+    let mut files = Vec::new();
+    walk(&base, &base, &mut files)?;
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    let usage = std::fs::read_to_string(root.join("USAGE.md"))?;
+    Ok((files, usage))
+}
+
+fn walk(base: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    let mut entries: Vec<std::fs::DirEntry> =
+        std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            walk(base, &path, out)?;
+        } else if path.extension().and_then(|s| s.to_str()) == Some("rs") {
+            let rel = path
+                .strip_prefix(base)
+                .expect("walk stays under base")
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(SourceFile {
+                rel,
+                text: std::fs::read_to_string(&path)?,
+            });
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! detlint CLI: `cargo run -p detlint -- [--root DIR] [--json FILE]`.
+//!
+//! Exit 0 when every deny-severity finding is pragma-suppressed; exit 1
+//! otherwise. Advisory findings print but never fail the run.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+detlint — determinism & knob-parity static analysis for the aiperf tree
+
+USAGE:
+    cargo run -p detlint -- [--root DIR] [--json FILE]
+
+OPTIONS:
+    --root DIR    Repository root (default: this workspace's root)
+    --json FILE   Also write the machine-readable report to FILE
+    --help        This text
+
+Scans rust/src/** plus USAGE.md. Rules and the pragma syntax are
+documented in USAGE.md (section \"detlint\") and tools/detlint/README.md.
+";
+
+fn main() {
+    // The workspace root relative to this crate's manifest — resolved at
+    // compile time, so the binary works from any working directory.
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("..");
+    let mut json_path: Option<PathBuf> = None;
+
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return;
+            }
+            "--root" => {
+                i += 1;
+                let Some(dir) = args.get(i) else {
+                    eprintln!("detlint: --root needs a directory");
+                    std::process::exit(2);
+                };
+                root = PathBuf::from(dir);
+            }
+            "--json" => {
+                i += 1;
+                let Some(file) = args.get(i) else {
+                    eprintln!("detlint: --json needs a file path");
+                    std::process::exit(2);
+                };
+                json_path = Some(PathBuf::from(file));
+            }
+            other => {
+                eprintln!("detlint: unknown flag `{other}`\n\n{USAGE}");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+
+    let (files, usage) = match detlint::load_tree(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("detlint: cannot load tree at {}: {e}", root.display());
+            std::process::exit(2);
+        }
+    };
+    let report = detlint::analyze(&files, &usage);
+
+    for f in report.unsuppressed() {
+        println!(
+            "{:<8} {}:{}  [{}] {}",
+            f.severity.as_str(),
+            f.file,
+            f.line,
+            f.rule,
+            f.message
+        );
+    }
+    println!(
+        "detlint: {} files scanned — {} deny, {} advisory, {} suppressed by pragma",
+        report.files_scanned,
+        report.deny_count(),
+        report.advisory_count(),
+        report.suppressed_count()
+    );
+
+    if let Some(path) = json_path {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                if let Err(e) = std::fs::create_dir_all(dir) {
+                    eprintln!("detlint: cannot create {}: {e}", dir.display());
+                    std::process::exit(2);
+                }
+            }
+        }
+        if let Err(e) = std::fs::write(&path, detlint::json::render(&report)) {
+            eprintln!("detlint: cannot write {}: {e}", path.display());
+            std::process::exit(2);
+        }
+        println!("json report written to {}", path.display());
+    }
+
+    if report.failed() {
+        std::process::exit(1);
+    }
+}

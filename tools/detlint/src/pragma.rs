@@ -1,0 +1,170 @@
+//! The `// detlint: allow(rule) — justification` pragma layer.
+//!
+//! Every suppression is scoped and self-documenting:
+//!
+//! * `// detlint: allow(RULE) — WHY` suppresses findings of `RULE` on
+//!   the pragma's own line, or — when the pragma stands alone — on the
+//!   next line that contains code (intervening comment-only lines, e.g.
+//!   a wrapped justification, are skipped).
+//! * `// detlint: allow-file(RULE) — WHY` suppresses `RULE` for the
+//!   whole file.
+//!
+//! The justification is mandatory: a pragma without one is itself a
+//! deny-severity `bad_pragma` finding, as is an unknown rule name or a
+//! malformed spelling. A pragma that suppresses nothing is an
+//! `unused_pragma` finding, so stale exceptions cannot rot in place.
+
+use crate::scan::Comment;
+
+/// Rules that may appear inside `allow(...)`.
+pub const ALLOWABLE_RULES: &[&str] = &[
+    "unordered_collections",
+    "wall_clock",
+    "thread_spawn",
+    "env_read",
+    "float_fold",
+    "knob_key",
+    "knob_to_text",
+    "knob_docs",
+    "knob_cli",
+];
+
+/// One parsed pragma.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    /// Line of the comment carrying the pragma.
+    pub line: usize,
+    pub rule: String,
+    /// `allow-file` rather than `allow`.
+    pub file_scope: bool,
+    pub justification: String,
+    /// Set during analysis when the pragma suppresses (or, for
+    /// `knob_key`, excludes) at least one thing.
+    pub used: bool,
+}
+
+/// A comment that says `detlint:` but does not parse as a pragma.
+#[derive(Debug, Clone)]
+pub struct BadPragma {
+    pub line: usize,
+    pub why: String,
+}
+
+/// Extract pragmas (and malformed attempts) from a file's comments.
+pub fn parse(comments: &[Comment]) -> (Vec<Pragma>, Vec<BadPragma>) {
+    let mut pragmas = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        let Some(pos) = c.text.find("detlint:") else {
+            continue;
+        };
+        let rest = c.text[pos + "detlint:".len()..].trim_start();
+        match parse_one(rest) {
+            Ok((rule, file_scope, justification)) => pragmas.push(Pragma {
+                line: c.line,
+                rule,
+                file_scope,
+                justification,
+                used: false,
+            }),
+            Err(why) => bad.push(BadPragma { line: c.line, why }),
+        }
+    }
+    (pragmas, bad)
+}
+
+/// Parse the text after `detlint:`; returns (rule, file_scope,
+/// justification) or a human-readable reason it is malformed.
+fn parse_one(rest: &str) -> Result<(String, bool, String), String> {
+    let (file_scope, after) = if let Some(a) = rest.strip_prefix("allow-file") {
+        (true, a)
+    } else if let Some(a) = rest.strip_prefix("allow") {
+        (false, a)
+    } else {
+        return Err(format!(
+            "expected `allow(RULE)` or `allow-file(RULE)` after `detlint:`, got `{rest}`"
+        ));
+    };
+    let after = after.trim_start();
+    let inner = after
+        .strip_prefix('(')
+        .ok_or_else(|| "missing `(` after allow".to_string())?;
+    let close = inner
+        .find(')')
+        .ok_or_else(|| "missing `)` after rule name".to_string())?;
+    let rule = inner[..close].trim();
+    if !ALLOWABLE_RULES.contains(&rule) {
+        return Err(format!(
+            "unknown rule `{rule}` (known: {})",
+            ALLOWABLE_RULES.join(", ")
+        ));
+    }
+    // Justification: everything after the `)`, minus separator dashes.
+    let justification = inner[close + 1..]
+        .trim_start()
+        .trim_start_matches(['—', '-', ':'])
+        .trim()
+        .to_string();
+    if justification.is_empty() {
+        return Err(format!(
+            "pragma for `{rule}` has no justification — write \
+             `allow({rule}) — why this exception is sound`"
+        ));
+    }
+    Ok((rule.to_string(), file_scope, justification))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan;
+
+    fn parse_src(src: &str) -> (Vec<Pragma>, Vec<BadPragma>) {
+        parse(&scan(src).comments)
+    }
+
+    #[test]
+    fn well_formed_line_and_file_pragmas() {
+        let (p, bad) = parse_src(
+            "// detlint: allow(wall_clock) — live runtime path\n\
+             // detlint: allow-file(thread_spawn) — protocol-owned ordering\n",
+        );
+        assert!(bad.is_empty());
+        assert_eq!(p.len(), 2);
+        assert!(!p[0].file_scope);
+        assert_eq!(p[0].rule, "wall_clock");
+        assert_eq!(p[0].justification, "live runtime path");
+        assert!(p[1].file_scope);
+    }
+
+    #[test]
+    fn missing_justification_is_bad() {
+        let (p, bad) = parse_src("// detlint: allow(wall_clock)\n");
+        assert!(p.is_empty());
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].why.contains("justification"), "{}", bad[0].why);
+    }
+
+    #[test]
+    fn unknown_rule_is_bad() {
+        let (p, bad) = parse_src("// detlint: allow(no_such_rule) — because\n");
+        assert!(p.is_empty());
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].why.contains("unknown rule"), "{}", bad[0].why);
+    }
+
+    #[test]
+    fn ascii_dash_separator_accepted() {
+        let (p, bad) = parse_src("// detlint: allow(env_read) -- test scaffolding\n");
+        assert!(bad.is_empty());
+        assert_eq!(p[0].justification, "test scaffolding");
+    }
+
+    #[test]
+    fn pragma_inside_string_literal_is_not_a_pragma() {
+        let (p, bad) =
+            parse_src("let s = \"// detlint: allow(wall_clock) — nope\";\n");
+        assert!(p.is_empty());
+        assert!(bad.is_empty());
+    }
+}

@@ -1,0 +1,184 @@
+//! Token-sequence rules: unordered iteration, wall clock, ambient
+//! nondeterminism. Each rule is a short pattern over the scanner's token
+//! stream plus a path scope — the scopes encode this repository's
+//! layout, which is the point: detlint is an in-tree lint, not a general
+//! one.
+
+use crate::scan::{Scan, TokenKind};
+use crate::{Finding, Severity};
+
+/// Modules whose schedules must be bit-identical per seed: unordered
+/// containers are banned here outright.
+pub const DETERMINISTIC_MODULES: &[&str] = &[
+    "coordinator/",
+    "sim/",
+    "nas/",
+    "hpo/",
+    "metrics/",
+    "cluster/",
+    "config/",
+];
+
+/// Files allowed to create OS threads: the simulator's engine owns the
+/// deterministic pool abstraction. Everything else needs a pragma.
+pub const THREAD_ALLOWED: &[&str] = &["sim/engine.rs"];
+
+/// Files allowed to read the ambient environment: the CLI entry point
+/// parses `std::env::args`. Everything else needs a pragma.
+pub const ENV_ALLOWED: &[&str] = &["main.rs"];
+
+/// Explicitly runtime-facing modules where wall-clock reads are the
+/// job; elsewhere `Instant::now`/`SystemTime` need a pragma.
+pub const WALL_CLOCK_ALLOWED: &[&str] = &["runtime/"];
+
+/// Merge/score hot paths where a float `fold`/`sum` accumulation order
+/// could silently change a score: flagged as advisory, not deny.
+pub const FLOAT_FOLD_SCOPE: &[&str] = &[
+    "coordinator/merge.rs",
+    "coordinator/history.rs",
+    "metrics/score.rs",
+    "metrics/stream.rs",
+];
+
+fn in_scope(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| {
+        if p.ends_with('/') {
+            rel.starts_with(p)
+        } else {
+            rel == *p
+        }
+    })
+}
+
+/// Run every token rule over one file's scan.
+pub fn check(rel: &str, scan: &Scan) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let toks = &scan.tokens;
+    let ident = |i: usize, s: &str| {
+        toks.get(i)
+            .is_some_and(|t| t.kind == TokenKind::Ident && t.text == s)
+    };
+    let punct = |i: usize, s: &str| {
+        toks.get(i)
+            .is_some_and(|t| t.kind == TokenKind::Punct && t.text == s)
+    };
+
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokenKind::Ident && t.kind != TokenKind::Punct {
+            continue;
+        }
+
+        // Rule: unordered_collections.
+        if in_scope(rel, DETERMINISTIC_MODULES)
+            && t.kind == TokenKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+        {
+            let fix = if t.text == "HashMap" {
+                "BTreeMap or a dense index Vec"
+            } else {
+                "BTreeSet or a sorted Vec"
+            };
+            out.push(Finding::new(
+                "unordered_collections",
+                Severity::Deny,
+                rel,
+                t.line,
+                format!(
+                    "{} in a deterministic module: iteration order varies per \
+                     process and can perturb an RNG stream — use {fix}",
+                    t.text
+                ),
+            ));
+        }
+
+        // Rule: wall_clock.
+        if !in_scope(rel, WALL_CLOCK_ALLOWED) && t.kind == TokenKind::Ident {
+            if t.text == "Instant" && punct(i + 1, "::") && ident(i + 2, "now") {
+                out.push(Finding::new(
+                    "wall_clock",
+                    Severity::Deny,
+                    rel,
+                    t.line,
+                    "Instant::now() outside a runtime-facing file: wall-clock \
+                     reads make schedules irreproducible — derive time from \
+                     the simulation clock"
+                        .to_string(),
+                ));
+            }
+            if t.text == "SystemTime" {
+                out.push(Finding::new(
+                    "wall_clock",
+                    Severity::Deny,
+                    rel,
+                    t.line,
+                    "SystemTime outside a runtime-facing file: wall-clock \
+                     reads make schedules irreproducible"
+                        .to_string(),
+                ));
+            }
+        }
+
+        // Rule: thread_spawn.
+        if !in_scope(rel, THREAD_ALLOWED)
+            && t.kind == TokenKind::Ident
+            && t.text == "thread"
+            && punct(i + 1, "::")
+            && (ident(i + 2, "spawn") || ident(i + 2, "scope"))
+        {
+            let what = &toks[i + 2].text;
+            out.push(Finding::new(
+                "thread_spawn",
+                Severity::Deny,
+                rel,
+                t.line,
+                format!(
+                    "thread::{what} outside sim/engine.rs: ad-hoc threads \
+                     introduce scheduling nondeterminism — route parallelism \
+                     through the engine"
+                ),
+            ));
+        }
+
+        // Rule: env_read.
+        if !in_scope(rel, ENV_ALLOWED)
+            && t.kind == TokenKind::Ident
+            && t.text == "env"
+            && punct(i + 1, "::")
+        {
+            out.push(Finding::new(
+                "env_read",
+                Severity::Deny,
+                rel,
+                t.line,
+                "std::env read outside main.rs/benches: ambient environment \
+                 is invisible to the (config, seed) cache key — plumb it \
+                 through BenchmarkConfig"
+                    .to_string(),
+            ));
+        }
+
+        // Rule: float_fold (advisory).
+        if in_scope(rel, FLOAT_FOLD_SCOPE)
+            && t.kind == TokenKind::Punct
+            && t.text == "."
+            && toks.get(i + 1).is_some_and(|t| {
+                t.kind == TokenKind::Ident && (t.text == "sum" || t.text == "fold")
+            })
+            && punct(i + 2, "(")
+        {
+            let what = &toks[i + 1].text;
+            out.push(Finding::new(
+                "float_fold",
+                Severity::Advisory,
+                rel,
+                toks[i + 1].line,
+                format!(
+                    ".{what}() in a merge/score path: if the element type is a \
+                     float, accumulation order changes the result — keep the \
+                     iteration order fixed or accumulate integers"
+                ),
+            ));
+        }
+    }
+    out
+}

@@ -1,0 +1,448 @@
+//! Hand-rolled comment/string/char-literal-aware Rust token scanner.
+//!
+//! The workspace builds offline, so `syn` is not an option; in the same
+//! spirit as the in-tree `util/json.rs` parser, this is a small lexer
+//! that knows exactly enough Rust to never mistake the inside of a
+//! string, comment, or char literal for code. It produces a flat token
+//! stream (identifiers, literals, punctuation) plus the comment list the
+//! pragma layer reads — no syntax tree, because every rule detlint
+//! enforces is expressible over short token sequences.
+
+/// Token classes. `Str` carries the *raw* source content between the
+/// delimiters (escapes unprocessed) — the knob-parity pass searches that
+/// text for `key =` substrings, which survive `\n\` continuations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    Ident,
+    Str,
+    Char,
+    Lifetime,
+    Number,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    /// Identifier/punct spelling, or raw literal content (no delimiters).
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+}
+
+/// One comment (line or block), anchored at its starting line.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    /// Content without the `//` / `/* */` delimiters.
+    pub text: String,
+}
+
+/// The scan of one source file.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src`. Malformed input (unterminated literals) is tolerated: the
+/// scanner consumes to end-of-file rather than panicking, because lint
+/// input is whatever is on disk.
+pub fn scan(src: &str) -> Scan {
+    Lexer {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+        out: Scan::default(),
+    }
+    .run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: usize,
+    out: Scan,
+}
+
+impl Lexer {
+    fn run(mut self) -> Scan {
+        while self.i < self.chars.len() {
+            let c = self.chars[self.i];
+            if c == '\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if c.is_whitespace() {
+                self.i += 1;
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment();
+            } else if c == '_' || c.is_alphabetic() {
+                self.ident_or_prefixed_literal();
+            } else if c == '"' {
+                self.cooked_string();
+            } else if c == '\'' {
+                self.char_or_lifetime();
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else {
+                self.punct();
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, kind: TokenKind, text: String, line: usize) {
+        self.out.tokens.push(Token { kind, text, line });
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let start = self.i + 2;
+        let mut j = start;
+        while j < self.chars.len() && self.chars[j] != '\n' {
+            j += 1;
+        }
+        let text: String = self.chars[start..j].iter().collect();
+        self.out.comments.push(Comment { line, text });
+        self.i = j;
+    }
+
+    fn block_comment(&mut self) {
+        let line = self.line;
+        let mut depth = 1usize;
+        let mut j = self.i + 2;
+        let mut text = String::new();
+        while j < self.chars.len() && depth > 0 {
+            if self.chars[j] == '/' && self.chars.get(j + 1) == Some(&'*') {
+                depth += 1;
+                text.push_str("/*");
+                j += 2;
+            } else if self.chars[j] == '*' && self.chars.get(j + 1) == Some(&'/') {
+                depth -= 1;
+                if depth > 0 {
+                    text.push_str("*/");
+                }
+                j += 2;
+            } else {
+                if self.chars[j] == '\n' {
+                    self.line += 1;
+                }
+                text.push(self.chars[j]);
+                j += 1;
+            }
+        }
+        self.out.comments.push(Comment { line, text });
+        self.i = j;
+    }
+
+    /// An identifier — or, when the identifier is a literal prefix
+    /// (`r`, `b`, `br`, `c`, `cr`) glued to a quote or `#`, the literal
+    /// it prefixes. `r#ident` raw identifiers lex as plain identifiers.
+    fn ident_or_prefixed_literal(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        let mut j = self.i;
+        while j < self.chars.len() && (self.chars[j] == '_' || self.chars[j].is_alphanumeric()) {
+            j += 1;
+        }
+        let ident: String = self.chars[start..j].iter().collect();
+        let next = self.chars.get(j).copied();
+        let raw_capable = matches!(ident.as_str(), "r" | "br" | "cr");
+        let cooked_capable = matches!(ident.as_str(), "b" | "c");
+        if raw_capable && next == Some('"') {
+            self.i = j;
+            self.raw_string(0, line);
+            return;
+        }
+        if raw_capable && next == Some('#') {
+            let mut hashes = 0usize;
+            while self.chars.get(j + hashes) == Some(&'#') {
+                hashes += 1;
+            }
+            if self.chars.get(j + hashes) == Some(&'"') {
+                self.i = j + hashes;
+                self.raw_string(hashes, line);
+                return;
+            }
+            if ident == "r" && hashes == 1 {
+                let after = self.chars.get(j + 1).copied();
+                if matches!(after, Some(a) if a == '_' || a.is_alphabetic()) {
+                    // Raw identifier r#name: lex the name itself.
+                    let mut k = j + 1;
+                    while k < self.chars.len()
+                        && (self.chars[k] == '_' || self.chars[k].is_alphanumeric())
+                    {
+                        k += 1;
+                    }
+                    let name: String = self.chars[j + 1..k].iter().collect();
+                    self.push(TokenKind::Ident, name, line);
+                    self.i = k;
+                    return;
+                }
+            }
+        }
+        if cooked_capable && next == Some('"') {
+            self.i = j;
+            self.cooked_string();
+            return;
+        }
+        if ident == "b" && next == Some('\'') {
+            self.i = j;
+            self.char_literal();
+            return;
+        }
+        self.push(TokenKind::Ident, ident, line);
+        self.i = j;
+    }
+
+    /// A `"…"` string with escape processing (`\"` does not close; a
+    /// `\` before a newline — the line-continuation form — is consumed
+    /// with correct line accounting).
+    fn cooked_string(&mut self) {
+        let line = self.line;
+        let mut j = self.i + 1;
+        let mut content = String::new();
+        while j < self.chars.len() {
+            match self.chars[j] {
+                '\\' => {
+                    content.push('\\');
+                    if let Some(&e) = self.chars.get(j + 1) {
+                        if e == '\n' {
+                            self.line += 1;
+                        }
+                        content.push(e);
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                '"' => {
+                    j += 1;
+                    break;
+                }
+                c => {
+                    if c == '\n' {
+                        self.line += 1;
+                    }
+                    content.push(c);
+                    j += 1;
+                }
+            }
+        }
+        self.push(TokenKind::Str, content, line);
+        self.i = j;
+    }
+
+    /// A raw string `r"…"` / `r#"…"#` (any hash count): no escapes; the
+    /// terminator is `"` followed by exactly `hashes` `#`s. `self.i`
+    /// points at the opening quote.
+    fn raw_string(&mut self, hashes: usize, line: usize) {
+        let mut j = self.i + 1;
+        let mut content = String::new();
+        while j < self.chars.len() {
+            if self.chars[j] == '"' {
+                let mut k = 0;
+                while k < hashes && self.chars.get(j + 1 + k) == Some(&'#') {
+                    k += 1;
+                }
+                if k == hashes {
+                    j += 1 + hashes;
+                    break;
+                }
+            }
+            if self.chars[j] == '\n' {
+                self.line += 1;
+            }
+            content.push(self.chars[j]);
+            j += 1;
+        }
+        self.push(TokenKind::Str, content, line);
+        self.i = j;
+    }
+
+    /// Disambiguate `'x'` / `'\n'` (char literals) from `'a` / `'static`
+    /// (lifetimes): an escape after the quote, or a closing quote two
+    /// characters on, means char literal.
+    fn char_or_lifetime(&mut self) {
+        if self.peek(1) == Some('\\') || self.peek(2) == Some('\'') {
+            self.char_literal();
+            return;
+        }
+        let line = self.line;
+        let mut j = self.i + 1;
+        while j < self.chars.len() && (self.chars[j] == '_' || self.chars[j].is_alphanumeric()) {
+            j += 1;
+        }
+        let text: String = self.chars[self.i + 1..j].iter().collect();
+        self.push(TokenKind::Lifetime, text, line);
+        self.i = j;
+    }
+
+    /// A char (or byte-char) literal starting at the quote: consume with
+    /// backslash-skip until the closing quote (handles `'\''`, `'\u{…}'`).
+    fn char_literal(&mut self) {
+        let line = self.line;
+        let mut j = self.i + 1;
+        let mut content = String::new();
+        while j < self.chars.len() {
+            match self.chars[j] {
+                '\\' => {
+                    content.push('\\');
+                    if let Some(&e) = self.chars.get(j + 1) {
+                        content.push(e);
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                '\'' => {
+                    j += 1;
+                    break;
+                }
+                c => {
+                    if c == '\n' {
+                        self.line += 1;
+                    }
+                    content.push(c);
+                    j += 1;
+                }
+            }
+        }
+        self.push(TokenKind::Char, content, line);
+        self.i = j;
+    }
+
+    /// A number: alphanumerics/underscores, plus a `.` only when a digit
+    /// follows — so `1.0` is one token but `s.0.iter()` never swallows
+    /// the method dot.
+    fn number(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        let mut j = self.i;
+        while j < self.chars.len() {
+            let c = self.chars[j];
+            if c == '_' || c.is_ascii_alphanumeric() {
+                j += 1;
+            } else if c == '.'
+                && matches!(self.chars.get(j + 1), Some(d) if d.is_ascii_digit())
+            {
+                j += 2;
+            } else {
+                break;
+            }
+        }
+        let text: String = self.chars[start..j].iter().collect();
+        self.push(TokenKind::Number, text, line);
+        self.i = j;
+    }
+
+    /// Punctuation: `::` and `=>` merge into one token (the rule layer
+    /// matches on them); everything else is a single character.
+    fn punct(&mut self) {
+        let line = self.line;
+        let c = self.chars[self.i];
+        if c == ':' && self.peek(1) == Some(':') {
+            self.push(TokenKind::Punct, "::".to_string(), line);
+            self.i += 2;
+        } else if c == '=' && self.peek(1) == Some('>') {
+            self.push(TokenKind::Punct, "=>".to_string(), line);
+            self.i += 2;
+        } else {
+            self.push(TokenKind::Punct, c.to_string(), line);
+            self.i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(s: &str) -> Vec<String> {
+        scan(s)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let ids = idents(r##"let x = "HashMap inside a string"; let y = HashMap::new();"##);
+        assert_eq!(ids, vec!["let", "x", "let", "y", "HashMap", "new"]);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let s = r#\"quote \" and HashMap\"#; HashSet";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "s", "HashSet"]);
+        let strs: Vec<String> = scan(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokenKind::Str)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(strs, vec!["quote \" and HashMap"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner HashMap */ still comment */ b";
+        assert_eq!(idents(src), vec!["a", "b"]);
+        let s = scan(src);
+        assert_eq!(s.comments.len(), 1);
+        assert!(s.comments[0].text.contains("inner HashMap"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let q = '\\''; let n = '\\n'; let d = 'x'; }";
+        let s = scan(src);
+        let chars: Vec<&Token> = s.tokens.iter().filter(|t| t.kind == TokenKind::Char).collect();
+        assert_eq!(chars.len(), 3);
+        let lifes: Vec<&Token> =
+            s.tokens.iter().filter(|t| t.kind == TokenKind::Lifetime).collect();
+        assert_eq!(lifes.len(), 2);
+        assert!(lifes.iter().all(|t| t.text == "a"));
+    }
+
+    #[test]
+    fn string_line_continuation_keeps_line_numbers() {
+        let src = "let s = \"one \\\n    two\";\nlet after = 1;";
+        let s = scan(src);
+        let after = s.tokens.iter().find(|t| t.text == "after").unwrap();
+        assert_eq!(after.line, 3);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_method_dots() {
+        let src = "let a = 1.5e3; s.0.iter(); let b = 0x1f_u32;";
+        let s = scan(src);
+        assert!(s.tokens.iter().any(|t| t.kind == TokenKind::Ident && t.text == "iter"));
+        assert!(s.tokens.iter().any(|t| t.kind == TokenKind::Number && t.text == "1.5e3"));
+    }
+
+    #[test]
+    fn merged_puncts_and_raw_idents() {
+        let src = "std::thread::spawn; r#fn => x; b\"bytes\"";
+        let s = scan(src);
+        let puncts: Vec<String> = s
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokenKind::Punct)
+            .map(|t| t.text.clone())
+            .collect();
+        assert!(puncts.contains(&"::".to_string()));
+        assert!(puncts.contains(&"=>".to_string()));
+        assert!(s.tokens.iter().any(|t| t.kind == TokenKind::Ident && t.text == "fn"));
+        assert!(s.tokens.iter().any(|t| t.kind == TokenKind::Str && t.text == "bytes"));
+    }
+}

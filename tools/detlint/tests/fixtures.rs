@@ -1,0 +1,336 @@
+//! Scanner + rule fixtures: each rule fires exactly where expected and
+//! nowhere else (strings, raw strings, nested comments, char literals
+//! are opaque), pragmas suppress exactly one finding, and the
+//! knob-parity cross-reference catches every drift class on a small
+//! synthetic config surface.
+
+use detlint::{analyze, Finding, Severity, SourceFile};
+
+fn file(rel: &str, text: &str) -> SourceFile {
+    SourceFile {
+        rel: rel.to_string(),
+        text: text.to_string(),
+    }
+}
+
+fn run_one(rel: &str, text: &str) -> detlint::Report {
+    analyze(&[file(rel, text)], "")
+}
+
+fn by_rule<'a>(report: &'a detlint::Report, rule: &str) -> Vec<&'a Finding> {
+    report.findings.iter().filter(|f| f.rule == rule).collect()
+}
+
+// ------------------------------------------------------------- scanner
+
+#[test]
+fn strings_comments_and_chars_are_opaque() {
+    let src = "\
+const A: &str = \"HashMap in a cooked string\";\n\
+const B: &str = r#\"HashSet \" and Instant::now() in a raw string\"#;\n\
+/* block /* nested: thread::spawn */ still comment */\n\
+const C: char = 'h';\n\
+fn f<'a>(_x: &'a str) {}\n\
+// line comment: std::env::var\n";
+    let report = run_one("coordinator/x.rs", src);
+    assert!(
+        report.findings.is_empty(),
+        "nothing should fire: {:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn raw_string_with_hashes_then_real_finding() {
+    // The raw string must not desynchronize the scanner: the real
+    // HashMap on line 2 is still found at line 2.
+    let src = "const A: &str = r##\"quote \"# trap \"## ; \n\
+               type T = std::collections::HashMap<u8, u8>;\n";
+    let report = run_one("nas/x.rs", src);
+    let hits = by_rule(&report, "unordered_collections");
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].line, 2);
+}
+
+// ------------------------------------------------------- rule triggers
+
+#[test]
+fn unordered_collections_only_in_deterministic_modules() {
+    let src = "use std::collections::HashMap;\n";
+    for module in [
+        "coordinator/a.rs",
+        "sim/a.rs",
+        "nas/a.rs",
+        "hpo/a.rs",
+        "metrics/a.rs",
+        "cluster/a.rs",
+        "config/a.rs",
+    ] {
+        let report = run_one(module, src);
+        assert_eq!(report.deny_count(), 1, "{module} must flag HashMap");
+        assert!(report.failed());
+    }
+    // Outside the deterministic core the rule stays quiet.
+    for module in ["runtime/client.rs", "distributed/a.rs", "util/a.rs"] {
+        let report = run_one(module, src);
+        assert_eq!(report.deny_count(), 0, "{module} must not flag HashMap");
+    }
+}
+
+#[test]
+fn wall_clock_flags_instant_now_and_system_time() {
+    let src = "fn f() {\n\
+               let t0 = std::time::Instant::now();\n\
+               let s = std::time::SystemTime::UNIX_EPOCH;\n\
+               let d: Instant = deadline;\n\
+               }\n";
+    let report = run_one("coordinator/a.rs", src);
+    let hits = by_rule(&report, "wall_clock");
+    // Instant::now on line 2, SystemTime on line 3 — a bare `Instant`
+    // type annotation (line 4) is not a wall-clock *read*.
+    assert_eq!(hits.len(), 2, "{hits:?}");
+    assert_eq!(hits[0].line, 2);
+    assert_eq!(hits[1].line, 3);
+    // Runtime-facing modules are structurally exempt.
+    let report = run_one("runtime/a.rs", src);
+    assert!(by_rule(&report, "wall_clock").is_empty());
+}
+
+#[test]
+fn thread_spawn_and_scope_flagged_outside_engine() {
+    let src = "fn f() {\n\
+               std::thread::spawn(|| {});\n\
+               std::thread::scope(|s| { s.spawn(|| {}); });\n\
+               }\n";
+    let report = run_one("coordinator/a.rs", src);
+    let hits = by_rule(&report, "thread_spawn");
+    // spawn (line 2) and scope (line 3); `s.spawn` is a method call on
+    // the scope handle, not a fresh ambient thread site.
+    assert_eq!(hits.len(), 2, "{hits:?}");
+    let report = run_one("sim/engine.rs", src);
+    assert!(by_rule(&report, "thread_spawn").is_empty());
+}
+
+#[test]
+fn env_read_flagged_outside_main() {
+    let src = "fn f() { let p = std::env::temp_dir(); }\n";
+    let report = run_one("util/a.rs", src);
+    assert_eq!(by_rule(&report, "env_read").len(), 1);
+    let report = run_one("main.rs", src);
+    assert!(by_rule(&report, "env_read").is_empty());
+    // `env!` (compile-time macro) is not an ambient read.
+    let report = run_one("util/a.rs", "const D: &str = env!(\"CARGO_MANIFEST_DIR\");\n");
+    assert!(by_rule(&report, "env_read").is_empty());
+}
+
+#[test]
+fn float_fold_is_advisory_and_scoped() {
+    let src = "fn f(v: &[f64]) -> f64 { v.iter().sum() }\n\
+               fn g(v: &[f64]) -> f64 { v.iter().fold(0.0, |a, b| a + b) }\n";
+    let report = run_one("metrics/score.rs", src);
+    let hits = by_rule(&report, "float_fold");
+    assert_eq!(hits.len(), 2, "{hits:?}");
+    assert!(hits.iter().all(|f| f.severity == Severity::Advisory));
+    // Advisory findings never fail the run.
+    assert!(!report.failed());
+    assert_eq!(report.advisory_count(), 2);
+    // Outside the merge/score scope the pattern is not even advisory.
+    let report = run_one("nas/search.rs", src);
+    assert!(by_rule(&report, "float_fold").is_empty());
+}
+
+// ------------------------------------------------------------- pragmas
+
+#[test]
+fn pragma_suppresses_exactly_one_finding() {
+    let src = "// detlint: allow(unordered_collections) — frozen after construction\n\
+               use std::collections::HashMap;\n\
+               type T = HashMap<u8, u8>;\n";
+    let report = run_one("coordinator/a.rs", src);
+    let hits = by_rule(&report, "unordered_collections");
+    assert_eq!(hits.len(), 2, "{hits:?}"); // the `use` line + line 3
+    let suppressed: Vec<_> = hits.iter().filter(|f| f.suppressed).collect();
+    let live: Vec<_> = hits.iter().filter(|f| !f.suppressed).collect();
+    // Line 2 (the pragma's next code line) is covered; line 3 is not.
+    assert!(suppressed.iter().all(|f| f.line == 2));
+    assert!(live.iter().all(|f| f.line == 3));
+    assert!(!live.is_empty());
+    assert!(report.failed(), "the uncovered finding still fails the run");
+}
+
+#[test]
+fn same_line_pragma_and_wrapped_justification() {
+    let src = "fn f() {\n\
+               let t = std::time::Instant::now(); // detlint: allow(wall_clock) — UI timer\n\
+               // detlint: allow(wall_clock) — a justification that wraps\n\
+               // across a second comment line before the code it covers.\n\
+               let u = std::time::Instant::now();\n\
+               }\n";
+    let report = run_one("coordinator/a.rs", src);
+    assert_eq!(report.deny_count(), 0, "{:?}", report.findings);
+    assert_eq!(report.suppressed_count(), 2);
+    assert!(!report.failed());
+}
+
+#[test]
+fn file_scope_pragma_covers_the_whole_file() {
+    let src = "// detlint: allow-file(wall_clock) — live runtime path\n\
+               fn a() { let t = std::time::Instant::now(); }\n\
+               fn b() { let t = std::time::Instant::now(); }\n";
+    let report = run_one("coordinator/live2.rs", src);
+    assert_eq!(report.deny_count(), 0);
+    assert_eq!(report.suppressed_count(), 2);
+}
+
+#[test]
+fn pragma_without_justification_is_a_deny_finding() {
+    let src = "// detlint: allow(wall_clock)\n\
+               fn a() { let t = std::time::Instant::now(); }\n";
+    let report = run_one("coordinator/a.rs", src);
+    let bad = by_rule(&report, "bad_pragma");
+    assert_eq!(bad.len(), 1, "{:?}", report.findings);
+    assert!(bad[0].message.contains("justification"));
+    // The malformed pragma suppresses nothing: the wall_clock finding
+    // stays live too.
+    assert!(report.deny_count() >= 2);
+    assert!(report.failed());
+}
+
+#[test]
+fn unknown_rule_is_a_bad_pragma() {
+    let src = "// detlint: allow(determinisim) — typo'd rule name\nfn a() {}\n";
+    let report = run_one("util/a.rs", src);
+    let bad = by_rule(&report, "bad_pragma");
+    assert_eq!(bad.len(), 1);
+    assert!(bad[0].message.contains("unknown rule"));
+    assert!(report.failed());
+}
+
+#[test]
+fn unused_pragma_is_a_deny_finding() {
+    let src = "// detlint: allow(wall_clock) — nothing here reads a clock\nfn a() {}\n";
+    let report = run_one("util/a.rs", src);
+    let unused = by_rule(&report, "unused_pragma");
+    assert_eq!(unused.len(), 1, "{:?}", report.findings);
+    assert_eq!(unused[0].line, 1);
+    assert!(report.failed());
+}
+
+// --------------------------------------------------------- knob parity
+
+/// A miniature `config/mod.rs`: four keys with distinct parity fates.
+const CONFIG_FIXTURE: &str = "\
+impl C {\n\
+    pub fn from_text(s: &str) -> Result<Self, String> {\n\
+        match key {\n\
+            \"alpha\" => cfg.alpha = v,\n\
+            \"beta\" => cfg.beta = v,\n\
+            \"delta\" => cfg.delta = v,\n\
+            \"gamma\" => cfg.gamma = v,\n\
+            // detlint: allow(knob_key) — boolean value spelling, not a key\n\
+            \"on\" | \"off\" => true,\n\
+            _ => other,\n\
+        }\n\
+    }\n\
+    pub fn to_text(&self) -> String {\n\
+        format!(\"alpha = {}\\nbeta = {}\\ndelta = {}\\n\", self.alpha, self.beta, self.delta)\n\
+    }\n\
+}\n";
+
+const USAGE_FIXTURE: &str = "\
+# Usage\n\
+| key | CLI | meaning |\n\
+| --- | --- | --- |\n\
+| `alpha` | `--alpha` | the alpha knob |\n\
+| `beta` | \u{2014} | flagless by design |\n\
+| `delta` | `--delta` | documents a flag main.rs does not have |\n";
+
+const MAIN_FIXTURE: &str = "fn main() { let _a = \"alpha\"; }\n";
+
+fn knob_report() -> detlint::Report {
+    analyze(
+        &[
+            file("config/mod.rs", CONFIG_FIXTURE),
+            file("main.rs", MAIN_FIXTURE),
+        ],
+        USAGE_FIXTURE,
+    )
+}
+
+#[test]
+fn knob_parity_catches_every_drift_class() {
+    let report = knob_report();
+    // gamma: parsed, never emitted, never documented.
+    let to_text = by_rule(&report, "knob_to_text");
+    assert_eq!(to_text.len(), 1, "{:?}", report.findings);
+    assert!(to_text[0].message.contains("`gamma`"));
+    assert_eq!(to_text[0].line, 7, "anchored at gamma's match arm");
+    let docs = by_rule(&report, "knob_docs");
+    assert_eq!(docs.len(), 1);
+    assert!(docs[0].message.contains("`gamma`"));
+    // delta: emitted + documented, but its documented flag is bogus.
+    let cli = by_rule(&report, "knob_cli");
+    assert_eq!(cli.len(), 1, "{:?}", report.findings);
+    assert!(cli[0].message.contains("`delta`"));
+    // alpha (real flag) and beta (explicit —) are clean.
+    assert!(!report.findings.iter().any(|f| f.message.contains("`alpha`")));
+    assert!(!report.findings.iter().any(|f| f.message.contains("`beta`")));
+    // Boolean value spellings were excluded by the knob_key pragma…
+    assert!(!report.findings.iter().any(|f| f.message.contains("`on`")));
+    // …which therefore counts as used.
+    assert!(by_rule(&report, "unused_pragma").is_empty());
+    assert!(report.failed());
+}
+
+#[test]
+fn clean_knob_surface_passes() {
+    // Same fixture with gamma removed and delta's flag fixed: green.
+    let config = CONFIG_FIXTURE.replace("            \"gamma\" => cfg.gamma = v,\n", "");
+    let usage = USAGE_FIXTURE.replace("`--delta`", "\u{2014}");
+    let report = analyze(
+        &[file("config/mod.rs", config.as_str()), file("main.rs", MAIN_FIXTURE)],
+        &usage,
+    );
+    assert_eq!(report.deny_count(), 0, "{:?}", report.findings);
+    assert!(!report.failed());
+}
+
+#[test]
+fn undocumented_new_key_fails_the_lint() {
+    // The acceptance-criterion drill: adding a key to from_text without
+    // to_text/USAGE.md coverage must fail.
+    let config = CONFIG_FIXTURE.replace(
+        "            \"alpha\" => cfg.alpha = v,\n",
+        "            \"alpha\" => cfg.alpha = v,\n            \"zeta\" => cfg.zeta = v,\n",
+    );
+    let report = analyze(
+        &[file("config/mod.rs", config.as_str()), file("main.rs", MAIN_FIXTURE)],
+        USAGE_FIXTURE,
+    );
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.rule == "knob_to_text" && f.message.contains("`zeta`")));
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.rule == "knob_docs" && f.message.contains("`zeta`")));
+    assert!(report.failed());
+}
+
+#[test]
+fn deleting_the_knob_key_pragma_fails() {
+    // Without the pragma the boolean spellings become "keys" that are
+    // neither emitted nor documented — deny findings, non-zero exit.
+    let config = CONFIG_FIXTURE
+        .replace("            // detlint: allow(knob_key) — boolean value spelling, not a key\n", "");
+    let report = analyze(
+        &[file("config/mod.rs", config.as_str()), file("main.rs", MAIN_FIXTURE)],
+        USAGE_FIXTURE,
+    );
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.rule == "knob_docs" && f.message.contains("`on`")));
+    assert!(report.failed());
+}

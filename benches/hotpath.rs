@@ -9,16 +9,20 @@
 //! * random-legal-morph proposal (the CPU search loop);
 //! * TPE suggest at a realistic history size (per trial, round ≥ 5);
 //! * event-queue throughput (the DES core, arena-backed);
+//! * the persistent window pool with a sparse vs. full active set —
+//!   the `window_skip` case must beat the full sweep ≥2x (the ISSUE 9
+//!   active-set claim, measured);
 //! * end-to-end simulations: the 16-node/12-h testbed, the sub-sharded
-//!   mixed preset, the full-duration `ascend-4096` system, and a
-//!   truncated `exa-100k` (102,400 lanes) run both buffered and with
+//!   mixed preset, the idle-heavy `elastic-mixed` showcase (gating
+//!   `shards_skipped > 0`), the full-duration `ascend-4096` system, and
+//!   a truncated `exa-100k` (102,400 lanes) run both buffered and with
 //!   the streaming NDJSON report (`--stream-report`). The streamed run
 //!   must reconstruct bit-identically, and a counting global allocator
 //!   gates its report-serialization peak at a small fraction of the
 //!   buffered whole-tree `to_json()` peak — the constant-memory claim
 //!   as an assertion, not prose.
 //!
-//! With `--json PATH` the results are written as a `BENCH_7.json`
+//! With `--json PATH` the results are written as a `BENCH_9.json`
 //! perf-trajectory file; with `--baseline PATH` each case's best-of-N
 //! ns/op (and each e2e's seconds) is gated against the checked-in
 //! baseline, failing on a regression beyond `AIPERF_BENCH_TOLERANCE`
@@ -40,6 +44,7 @@ use aiperf::metrics::BenchmarkReport;
 use aiperf::nas::graph::Architecture;
 use aiperf::nas::morphism::{random_legal_morph, MorphLimits};
 use aiperf::sim::engine::EventQueue;
+use aiperf::sim::pool::with_pool;
 use aiperf::util::json::{self, Json};
 use aiperf::util::rng::derive;
 
@@ -252,6 +257,41 @@ fn main() {
         while q.pop().is_some() {}
     });
 
+    // The active-set window machinery, isolated from the simulation:
+    // 100 windows over 8192 items with ~1% active vs. the same windows
+    // visiting every item (the historic full sweep). Per-window cost in
+    // the sparse case is one condvar wake plus ~82 batch-claimed items;
+    // the full sweep pays 8192 lock+run visits per window. The filter
+    // must win by at least the ISSUE 9 factor, asserted below.
+    let windows_over = |active: Vec<usize>| {
+        let items: Vec<u64> = vec![0; 8192];
+        let (items, ()) = with_pool(
+            items,
+            4,
+            |item: &mut u64, _end: f64, _j: &()| *item += 1,
+            |pool| {
+                for w in 0..100u32 {
+                    pool.run_window(f64::from(w), (), active.clone());
+                }
+            },
+        );
+        std::hint::black_box(items);
+    };
+    let sparse: Vec<usize> = (0..8192).step_by(100).collect();
+    let full: Vec<usize> = (0..8192).collect();
+    let t_window_skip = bench("sim: pool, 100 windows x 8192 (1% active)", 10, || {
+        windows_over(sparse.clone());
+    });
+    let t_window_full = bench("sim: pool, 100 windows x 8192 (full sweep)", 10, || {
+        windows_over(full.clone());
+    });
+    assert!(
+        t_window_skip.best * 2.0 < t_window_full.best,
+        "active-set windows must beat the full sweep >=2x: best {:.0} ns vs {:.0} ns",
+        t_window_skip.best * 1e9,
+        t_window_full.best * 1e9
+    );
+
     // --- End-to-end simulations.
     let mut e2e_cfg = BenchmarkConfig::homogeneous(16);
     e2e_cfg.duration_s = 12.0 * 3600.0;
@@ -263,6 +303,32 @@ fn main() {
         .expect("mixed preset")
         .config;
     let (t_steal, _) = timed_e2e("e2e: t4v100-mixed sub-sharded benchmark", &steal_cfg, "");
+
+    // The idle-heaviest preset: 120 s barriers against 600 s telemetry
+    // and hour-class modelled epochs, with the whole T4 group parked for
+    // the final stretch — most (window, shard) visits are dormant, so
+    // the active-set filter must visibly engage.
+    let elastic_cfg = aiperf::scenarios::get("elastic-mixed")
+        .expect("elastic preset")
+        .config;
+    let (t_elastic, elastic_report) =
+        timed_e2e("e2e: elastic-mixed migration showcase", &elastic_cfg, "");
+    println!(
+        "{:<44} {:>12} touched, {} skipped",
+        "      active-set window visits",
+        elastic_report.shards_touched,
+        elastic_report.shards_skipped
+    );
+    assert!(
+        elastic_report.shards_skipped > 0,
+        "elastic-mixed must skip dormant shard visits"
+    );
+    assert!(
+        elastic_report.shards_skipped > elastic_report.shards_touched,
+        "elastic-mixed should skip most window visits: {} touched vs {} skipped",
+        elastic_report.shards_touched,
+        elastic_report.shards_skipped
+    );
 
     // The paper's largest evaluated system, full modelled duration —
     // the tentpole target: single-digit seconds.
@@ -280,6 +346,13 @@ fn main() {
         .config;
     exa_cfg.duration_s = 5400.0;
     let (t_exa, exa_report) = timed_e2e("e2e: exa-100k truncated (1.5 modelled h)", &exa_cfg, "");
+    // The SLURM setup stagger spreads first events over ~4100 s, so more
+    // than half the 12,800 shards are dormant through the first 1800 s
+    // barrier window — the filter engages even at three windows.
+    assert!(
+        exa_report.shards_skipped > 0,
+        "truncated exa-100k must skip dormant shard visits"
+    );
 
     // The same truncated exascale run with the streaming NDJSON report:
     // records go to an in-memory sink as they occur, the returned report
@@ -346,6 +419,7 @@ fn main() {
     assert!(t_tpe.mean < 5e-3, "TPE suggest above 5 ms");
     assert!(t_e2e < e2e_budget, "16-node sim above {e2e_budget} s");
     assert!(t_steal < e2e_budget, "sub-sharded mixed sim above {e2e_budget} s");
+    assert!(t_elastic < e2e_budget, "elastic-mixed sim above {e2e_budget} s");
     assert!(t_ascend < e2e_budget, "ascend-4096 sim above {e2e_budget} s");
     assert!(t_exa < exa_budget, "truncated exa-100k sim above {exa_budget} s");
     assert!(
@@ -363,10 +437,13 @@ fn main() {
         ("tpe_suggest", t_tpe),
         ("event_queue_1k", t_events),
         ("event_queue_churn", t_churn),
+        ("window_skip", t_window_skip),
+        ("window_sweep_full", t_window_full),
     ];
     let e2e: Vec<(&str, f64)> = vec![
         ("v100-16x12h", t_e2e),
         ("t4v100-mixed", t_steal),
+        ("elastic-mixed", t_elastic),
         ("ascend-4096", t_ascend),
         ("exa-100k-truncated", t_exa),
         ("exa-100k-streamed", t_exa_stream),

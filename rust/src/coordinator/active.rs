@@ -1,0 +1,102 @@
+//! Dormancy index: per-shard next-event times, used to hand each window
+//! only the shards that actually have work inside it.
+//!
+//! A shard whose next event lies past `window_end` would pop nothing in
+//! `run_until` — skipping it entirely leaves bit-identical state, so the
+//! active-set filter is a pure perf optimization. The index must be
+//! refreshed after every point that can mutate a shard's queue: the
+//! window run itself, and the barrier pass (migrant adoption and
+//! `NodeReady` re-arm parked shards). The coordinator owns that
+//! discipline; this module is just the bookkeeping.
+
+/// Next-event index over a fixed set of shards.
+pub struct ActiveSet {
+    /// Next-event time per shard; `f64::INFINITY` means drained (no
+    /// pending events — never eligible again until re-armed).
+    next_event: Vec<f64>,
+    /// Scratch buffer reused across windows for the eligible indices.
+    active: Vec<usize>,
+}
+
+impl ActiveSet {
+    pub fn new(n: usize) -> Self {
+        ActiveSet {
+            next_event: vec![f64::INFINITY; n],
+            active: Vec::with_capacity(n),
+        }
+    }
+
+    /// Record shard `i`'s next-event time (`None` = queue drained).
+    pub fn record(&mut self, i: usize, next: Option<f64>) {
+        self.next_event[i] = next.unwrap_or(f64::INFINITY);
+    }
+
+    /// Indices (ascending) of shards with an event at or before
+    /// `window_end`. The returned slice borrows internal scratch and is
+    /// valid until the next `collect` call.
+    pub fn collect(&mut self, window_end: f64) -> &[usize] {
+        self.active.clear();
+        for (i, &t) in self.next_event.iter().enumerate() {
+            if t <= window_end {
+                self.active.push(i);
+            }
+        }
+        &self.active
+    }
+
+    /// Number of shards tracked.
+    pub fn len(&self) -> usize {
+        self.next_event.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.next_event.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_fully_dormant() {
+        let mut set = ActiveSet::new(4);
+        assert_eq!(set.len(), 4);
+        assert!(set.collect(1e18).is_empty());
+    }
+
+    #[test]
+    fn collect_filters_by_window_end_inclusive() {
+        let mut set = ActiveSet::new(5);
+        set.record(0, Some(10.0));
+        set.record(1, Some(600.0)); // exactly at the boundary: eligible
+        set.record(2, Some(600.000001));
+        set.record(3, None); // drained
+        set.record(4, Some(0.0));
+        assert_eq!(set.collect(600.0), &[0, 1, 4]);
+        assert_eq!(set.collect(1000.0), &[0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn record_overwrites_and_rearms() {
+        let mut set = ActiveSet::new(2);
+        set.record(0, Some(50.0));
+        set.record(1, None);
+        assert_eq!(set.collect(100.0), &[0]);
+        // Shard 0 drains; shard 1 is re-armed (e.g. migrant adoption).
+        set.record(0, None);
+        set.record(1, Some(75.0));
+        assert_eq!(set.collect(100.0), &[1]);
+    }
+
+    #[test]
+    fn scratch_is_reused_across_collects() {
+        let mut set = ActiveSet::new(3);
+        for i in 0..3 {
+            set.record(i, Some(i as f64));
+        }
+        assert_eq!(set.collect(2.0), &[0, 1, 2]);
+        assert_eq!(set.collect(0.5), &[0]);
+        assert_eq!(set.collect(-1.0), &[] as &[usize]);
+    }
+}

@@ -13,10 +13,18 @@
 //! Shards advance independently within an epoch-barrier window
 //! ([`BenchmarkConfig::sync_interval_s`]) against a frozen snapshot of
 //! the shared historical model list, and the coordinator merges their
-//! outputs in deterministic node order at every barrier. The
-//! [`Engine::Parallel`] path executes the shards of each window on a
-//! scoped thread pool; [`Engine::Sequential`] runs them in a loop. Both
-//! are bit-identical for the same seed (`rust/tests/engine_parity.rs`).
+//! outputs in deterministic node order at every barrier. Each window
+//! only visits the *active* shards — those whose next queued event lies
+//! inside the window, per the dormancy index
+//! ([`crate::coordinator::active`]); a skipped shard would pop nothing,
+//! so skipping is bit-identical by construction (the
+//! `AIPERF_FORCE_FULL_SWEEP=1` escape hatch restores the historic full
+//! sweep, and `tests/active_set.rs` pins the byte-equality). The
+//! [`Engine::Parallel`] path executes a window's active shards on a
+//! persistent worker pool ([`crate::sim::pool`]) parked between
+//! barriers; [`Engine::Sequential`] runs the same active set in a loop.
+//! Both are bit-identical for the same seed
+//! (`rust/tests/engine_parity.rs`).
 //!
 //! Simulation time is *modelled* cluster time (the 16×8-V100 testbed is a
 //! hardware gate — DESIGN.md §2); every decision the framework makes —
@@ -24,10 +32,12 @@
 
 use crate::cluster::nfs::NfsStats;
 use crate::config::{BenchmarkConfig, Engine};
+use crate::coordinator::active::ActiveSet;
 use crate::coordinator::history::{HistoryList, ModelRecord};
 use crate::coordinator::merge::merge_by_time;
 use crate::coordinator::sched::ElasticScheduler;
 use crate::coordinator::shard::{HistorySnapshot, SimContext, SlaveShard};
+use crate::sim::pool::with_pool;
 use crate::metrics::report::{BenchmarkReport, GroupBreakdown, LaneUtil};
 use crate::metrics::score::{validate_result, ScoreSample};
 use crate::metrics::stream::{OnlineScores, ReportStream};
@@ -78,9 +88,15 @@ struct GlobalState {
 
 /// Merge one window's shard outputs into the global state, in
 /// deterministic node order, then emit any score samples due.
+///
+/// Takes the coordinator's dense `&mut` reference slice (the shards
+/// live inside the worker pool's cells between barriers). The merge
+/// still iterates *all* shards — barrier slack samples every lane and
+/// the telemetry zip needs every stride — but a window-skipped shard's
+/// takes/clears here are empty and cost O(1).
 fn merge_window<W: std::io::Write>(
     global: &mut GlobalState,
-    shards: &mut [SlaveShard],
+    shards: &mut [&mut SlaveShard],
     window_idx: u64,
     window_end: f64,
     cfg: &BenchmarkConfig,
@@ -288,7 +304,7 @@ fn run_with_sink<W: std::io::Write>(
 
     // Shards in topology order: group 0's nodes first, then group 1's, …
     // — the global node numbering that fixes RNG streams and merge order.
-    let mut shards: Vec<SlaveShard> = cfg
+    let shards: Vec<SlaveShard> = cfg
         .topology
         .nodes()
         .map(|(group, node)| SlaveShard::new(node, group, cfg))
@@ -307,90 +323,116 @@ fn run_with_sink<W: std::io::Write>(
         group_slack_samples: vec![0; cfg.topology.groups.len()],
         next_score_idx: 1,
     };
-    let mut snapshot = HistorySnapshot::default();
+    // The dormancy index: per-shard next-event times, refreshed after
+    // every mutation point (window run, barrier pass). A window only
+    // visits shards with an event inside it; the rest are skipped
+    // untouched — bit-identical, since `run_until` on them would pop
+    // nothing. The counters make the active-set win observable in every
+    // report surface.
+    let n_shards = shards.len();
+    let mut active = ActiveSet::new(n_shards);
+    let mut shards_touched = 0u64;
+    let mut shards_skipped = 0u64;
+    // detlint: allow(env_read) — AIPERF_FORCE_FULL_SWEEP is the
+    // debugging escape hatch that restores the historic visit-every-
+    // shard sweep. It changes which shards are *visited*, never any
+    // outcome (tests/active_set.rs pins byte-identical reports and
+    // streams, counters included), so it is deliberately not a config
+    // knob: a config key would imply it can change results.
+    let force_full_sweep = std::env::var_os("AIPERF_FORCE_FULL_SWEEP")
+        .is_some_and(|v| v == "1");
 
-    for (window, window_end) in window_ends(cfg).into_iter().enumerate() {
-        // Refresh the frozen history view from the previous barrier's
-        // merge — O(1): the ranked list and its sort order are Arc-shared
-        // with the history, which extends both incrementally. (Lazy here
-        // so the final merge skips even that.)
-        if window > 0 {
-            snapshot = HistorySnapshot {
-                ranked: global.history.ranked_shared(),
-                sorted: global.history.sorted_shared(),
-                records: global.history.len() as u64,
-                penalties: global.history.penalty_count(),
-            };
-        }
-        match engine {
-            Engine::Sequential => {
-                for s in shards.iter_mut() {
-                    s.run_until(window_end, &snapshot, &ctx);
+    // One persistent worker pool for the whole run ([`crate::sim::pool`]):
+    // workers park on a condvar between windows — no per-window
+    // spawn/join, no per-window batch/Mutex scaffolding rebuild. With
+    // `Engine::Sequential` the pool has zero workers and `run_window`
+    // executes the same active set inline, so both engines share one
+    // filter path. Batch claiming inside the pool only decides *which
+    // thread* runs a shard; a shard's evolution depends solely on (its
+    // own state, the frozen snapshot, the window end), and merging stays
+    // in node order — determinism is untouched.
+    let workers = match engine {
+        Engine::Sequential => 0,
+        Engine::Parallel => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(shards.len())
+            .max(1),
+    };
+    let (shards, ()) = with_pool(
+        shards,
+        workers,
+        |s: &mut SlaveShard, window_end, snapshot: &HistorySnapshot| {
+            s.run_until(window_end, snapshot, &ctx)
+        },
+        |pool| {
+            // Seed the dormancy index from the initial queues (every
+            // shard schedules its staggered first event at build time).
+            pool.with_items(|all| {
+                for (i, s) in all.iter().enumerate() {
+                    active.record(i, s.next_event_time());
                 }
-            }
-            Engine::Parallel => {
-                let workers = std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(1)
-                    .min(shards.len())
-                    .max(1);
-                // Small batches behind a shared claim counter rather than
-                // one static chunk per worker: a static split serializes
-                // each window on its slowest chunk, which at 10k+ shards
-                // of uneven cost forfeits most of the pool. ~4 batches
-                // per worker keeps everyone busy; the per-batch Mutex is
-                // uncontended (each batch is claimed exactly once) and
-                // only exists to hand `&mut` chunks across threads
-                // safely. Determinism is untouched: a shard's evolution
-                // depends only on (its own state, the frozen snapshot,
-                // the window end), and merging stays in node order.
-                let batch = (shards.len() / (workers * 4)).max(1);
-                let batches: Vec<std::sync::Mutex<&mut [SlaveShard]>> = shards
-                    .chunks_mut(batch)
-                    .map(std::sync::Mutex::new)
-                    .collect();
-                let next = std::sync::atomic::AtomicUsize::new(0);
-                let snap = &snapshot;
-                let ctx_ref = &ctx;
-                let batches_ref = &batches;
-                let next_ref = &next;
-                // detlint: allow(thread_spawn) — deterministic epoch-barrier
-                // worker pool; Sequential/Parallel bit-parity is enforced by
-                // tests/engine_parity.rs.
-                std::thread::scope(|scope| {
-                    for _ in 0..workers {
-                        scope.spawn(move || loop {
-                            let i = next_ref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            let Some(cell) = batches_ref.get(i) else {
-                                break;
-                            };
-                            let mut guard = cell.lock().expect("shard batch lock poisoned");
-                            for s in guard.iter_mut() {
-                                s.run_until(window_end, snap, ctx_ref);
-                            }
-                        });
+            });
+            for (window, window_end) in window_ends(cfg).into_iter().enumerate() {
+                let eligible = active.collect(window_end);
+                shards_touched += eligible.len() as u64;
+                shards_skipped += (n_shards - eligible.len()) as u64;
+                // The escape hatch visits everything but reports the
+                // *filtered* counters, so a force-full run is byte-
+                // identical to a normal one on every surface.
+                let to_run: Vec<usize> = if force_full_sweep {
+                    (0..n_shards).collect()
+                } else {
+                    eligible.to_vec()
+                };
+                // Refresh the frozen history view from the previous
+                // barrier's merge — O(1): the ranked list and its sort
+                // order are Arc-shared with the history, which extends
+                // both incrementally.
+                let snapshot = if window > 0 {
+                    HistorySnapshot {
+                        ranked: global.history.ranked_shared(),
+                        sorted: global.history.sorted_shared(),
+                        records: global.history.len() as u64,
+                        penalties: global.history.penalty_count(),
+                    }
+                } else {
+                    HistorySnapshot::default()
+                };
+                pool.run_window(window_end, snapshot, to_run.clone());
+                // `run_window` releases the frozen view before returning:
+                // with no snapshot outstanding the history is the ranked
+                // list's sole owner, so this window's completions append
+                // in place instead of forcing a copy-on-write of the
+                // whole list. The barrier phase below holds every shard
+                // lock with no window in flight.
+                pool.with_items(|all| {
+                    // Shards that ran may have drained or advanced their
+                    // queues; re-index them before anything else.
+                    for &i in &to_run {
+                        active.record(i, all[i].next_event_time());
+                    }
+                    merge_window(&mut global, all, window as u64, window_end, cfg, &mut sink);
+                    // Inter-group migration: place staged candidates onto
+                    // idle lanes of other groups. Runs single-threaded at
+                    // the barrier in both engines, so the placements are
+                    // engine-independent.
+                    sched.barrier_pass(window_end, all, &ctx);
+                    // Barrier-time wakeups (migrant adoption, NodeReady)
+                    // re-arm shard queues, so the index refreshes across
+                    // the whole fleet — but only when the pass can
+                    // actually mutate anything (it early-returns with the
+                    // migration knob off, and merge_window never touches
+                    // a queue).
+                    if sched.is_enabled() {
+                        for (i, s) in all.iter().enumerate() {
+                            active.record(i, s.next_event_time());
+                        }
                     }
                 });
             }
-        }
-        // Release the frozen view before merging: with no snapshot
-        // outstanding the history is the ranked list's sole owner, so
-        // this window's completions append in place instead of forcing a
-        // copy-on-write of the whole list.
-        snapshot = HistorySnapshot::default();
-        merge_window(
-            &mut global,
-            &mut shards,
-            window as u64,
-            window_end,
-            cfg,
-            &mut sink,
-        );
-        // Inter-group migration: place staged candidates onto idle lanes
-        // of other groups. Runs single-threaded at the barrier in both
-        // engines, so the placements are engine-independent.
-        sched.barrier_pass(window_end, &mut shards, &ctx);
-    }
+        },
+    );
 
     let mut nfs_stats = NfsStats::default();
     let mut architectures_evaluated = 0;
@@ -488,6 +530,8 @@ fn run_with_sink<W: std::io::Write>(
         ),
         nfs_bytes_read: nfs_stats.bytes_read,
         nfs_bytes_written: nfs_stats.bytes_written,
+        shards_touched,
+        shards_skipped,
     };
     if let ReportSink::Streaming(mut st) = sink {
         for (i, g) in cfg.topology.groups.iter().enumerate() {

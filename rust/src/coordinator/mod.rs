@@ -18,6 +18,9 @@
 //! * [`merge`] — the k-way heap merge of per-lane time-sorted event
 //!   deltas used at every epoch barrier (O(n log k), order-identical
 //!   to the historic full re-sort);
+//! * [`active`] — the dormancy index over per-shard next-event times;
+//!   each window only touches shards with an event inside it (skipped
+//!   shards are bit-identical by construction);
 //! * [`master`] — the simulated end-to-end benchmark run (sharded
 //!   discrete-event loops with deterministic epoch-barrier merges)
 //!   producing a [`crate::metrics::BenchmarkReport`];
@@ -25,6 +28,7 @@
 //!   grid (PJRT execution; wall-clock timed; requires the `pjrt`
 //!   feature).
 
+pub mod active;
 pub mod buffer;
 pub mod dispatcher;
 pub mod history;
@@ -36,6 +40,7 @@ pub mod sched;
 pub mod shard;
 pub mod trial;
 
+pub use active::ActiveSet;
 pub use buffer::ArchBuffer;
 pub use dispatcher::Dispatcher;
 pub use history::{HistoryList, ModelRecord};

@@ -145,12 +145,22 @@ impl ElasticScheduler {
         self.pending.len()
     }
 
+    /// Whether the migration pass runs at all (`migration` knob). The
+    /// coordinator's dormancy index uses this to decide whether a
+    /// barrier pass could have re-armed shard queues (migrant adoption,
+    /// `NodeReady`) and therefore needs a full index refresh.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
     /// The inter-group migration pass, run at every epoch barrier (time
     /// `t`, single-threaded in both engines): route finished migrated
     /// trials' observations back to their source lanes, drain every
     /// shard's migrant outbox in shard order, then try to place each
-    /// pending migrant.
-    pub fn barrier_pass(&mut self, t: f64, shards: &mut [SlaveShard], ctx: &SimContext) {
+    /// pending migrant. Takes the coordinator's dense `&mut` reference
+    /// slice (shards live inside the worker pool's cells between
+    /// barriers), indexed by global node like the registry.
+    pub fn barrier_pass(&mut self, t: f64, shards: &mut [&mut SlaveShard], ctx: &SimContext) {
         if !self.enabled {
             return;
         }
@@ -179,7 +189,7 @@ impl ElasticScheduler {
         &self,
         t: f64,
         m: &MigrantCandidate,
-        shards: &mut [SlaveShard],
+        shards: &mut [&mut SlaveShard],
         ctx: &SimContext,
     ) -> bool {
         let cfg = ctx.cfg;
@@ -316,7 +326,9 @@ mod tests {
             .nodes()
             .map(|(group, node)| SlaveShard::new(node, group, &cfg))
             .collect();
-        sched.barrier_pass(600.0, &mut shards, &ctx);
+        let mut refs: Vec<&mut SlaveShard> = shards.iter_mut().collect();
+        sched.barrier_pass(600.0, &mut refs, &ctx);
+        assert!(!sched.is_enabled());
         assert_eq!(sched.pending_migrants(), 0);
         assert!(shards.iter().all(|s| s.migrations_in == 0 && s.migrations_out == 0));
     }

@@ -75,8 +75,10 @@ impl FeedbackRouter {
     /// both engines): drain every shard's feedback outbox in shard order
     /// — the registry's flat node order — then deliver each observation
     /// to its source lane in posting order. Returns the number of
-    /// observations delivered.
-    pub fn barrier_pass(&self, shards: &mut [SlaveShard]) -> u64 {
+    /// observations delivered. Like the elastic pass, takes the
+    /// coordinator's dense `&mut` reference slice indexed by global
+    /// node.
+    pub fn barrier_pass(&self, shards: &mut [&mut SlaveShard]) -> u64 {
         if !self.enabled {
             debug_assert!(
                 shards.iter().all(|s| s.feedback_outbox.is_empty()),
@@ -123,6 +125,13 @@ mod tests {
         shards
     }
 
+    /// Adapt an owned shard vector to the router's reference-slice
+    /// signature, the way the coordinator's barrier phase does.
+    fn pass(router: &FeedbackRouter, sh: &mut [SlaveShard]) -> u64 {
+        let mut refs: Vec<&mut SlaveShard> = sh.iter_mut().collect();
+        router.barrier_pass(&mut refs)
+    }
+
     #[test]
     fn routes_posted_observations_to_the_source_lane() {
         let cfg = mixed_cfg(true);
@@ -140,12 +149,12 @@ mod tests {
                 loss,
             });
         }
-        assert_eq!(router.barrier_pass(&mut sh), 2);
+        assert_eq!(pass(&router, &mut sh), 2);
         assert_eq!(sh[0].feedback_routed, 2, "source shard counts the landings");
         assert_eq!(sh[1].feedback_routed, 0);
         assert!(sh[1].feedback_outbox.is_empty(), "outbox drained");
         // A second pass with nothing posted delivers nothing.
-        assert_eq!(router.barrier_pass(&mut sh), 0);
+        assert_eq!(pass(&router, &mut sh), 0);
         assert_eq!(sh[0].feedback_routed, 2);
     }
 
@@ -156,7 +165,7 @@ mod tests {
         let router = FeedbackRouter::new(&cfg);
         assert!(!router.enabled());
         let mut sh = shards(&cfg);
-        assert_eq!(router.barrier_pass(&mut sh), 0);
+        assert_eq!(pass(&router, &mut sh), 0);
         assert!(sh.iter().all(|s| s.feedback_routed == 0));
     }
 }

@@ -557,6 +557,17 @@ impl SlaveShard {
         true
     }
 
+    /// Timestamp of this shard's next pending event, if any — the
+    /// coordinator's dormancy index ([`crate::coordinator::active`])
+    /// reads this after every mutation point (window run, barrier pass)
+    /// to decide whether the shard needs to be handed to a worker for a
+    /// given window at all. A shard whose next event lies past the
+    /// window boundary would pop nothing in `run_until`, so skipping it
+    /// leaves bit-identical state.
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.queue.peek_time()
+    }
+
     /// Advance this shard's local event loop up to (and including)
     /// `window_end`. Events past the benchmark duration stay unpopped.
     pub fn run_until(&mut self, window_end: f64, snapshot: &HistorySnapshot, ctx: &SimContext) {

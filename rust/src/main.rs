@@ -92,6 +92,12 @@ USAGE:
         requires building with `--features pjrt`).
     aiperf cluster [--slaves N] [--trials T] [--seed S]
         Distributed master-slave run over real TCP (localhost workers).
+    aiperf report FILE.ndjson
+        Validate a streamed NDJSON report (truncation detection plus a
+        bit-exact stable-score cross-check, the same integrity pass as
+        `reconstruct_summary`) and pretty-print its summary: score,
+        error, validity, the active-set shard counters, and the per-
+        record-type counts.
     aiperf flops
         Analytical ResNet-50 op breakdown (paper Table 4).
     aiperf config
@@ -447,6 +453,54 @@ fn cmd_live(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// `aiperf report FILE.ndjson`: validate a streamed NDJSON report and
+/// pretty-print its summary. The validation is `reconstruct_summary`'s
+/// full integrity pass — every line parses, the trailer's record count
+/// matches the records observed, and the stable-window scores recomputed
+/// from the streamed score records equal the trailer's bit for bit — so
+/// a truncated or tampered stream fails loudly instead of summarizing
+/// garbage.
+fn cmd_report(rest: &[String]) -> Result<()> {
+    let (path, extra) = match rest.split_first() {
+        Some((p, extra)) if !p.starts_with("--") => (p.as_str(), extra),
+        _ => bail!("usage: aiperf report FILE.ndjson"),
+    };
+    if let Some(unexpected) = extra.first() {
+        bail!("unexpected argument `{unexpected}` (usage: aiperf report FILE.ndjson)");
+    }
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let s = aiperf::metrics::reconstruct_summary(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!(
+        "stream OK: {} records + summary trailer (scores cross-checked bit-exact)",
+        s.records
+    );
+    println!(
+        "  nodes={} gpus={} duration={:.1}h validity={}",
+        s.nodes,
+        s.total_gpus,
+        s.duration_s / 3600.0,
+        s.validity
+    );
+    println!(
+        "  score={:.3} PFLOPS  error={:.1}%  regulated={:.3} PFLOPS  archs={}",
+        s.score_flops / 1e15,
+        s.final_error * 100.0,
+        s.regulated_score / 1e15,
+        s.architectures_evaluated
+    );
+    println!(
+        "  shards_touched={}  shards_skipped={}  nfs_bytes_read={}  nfs_bytes_written={}",
+        s.shards_touched, s.shards_skipped, s.nfs_bytes_read, s.nfs_bytes_written
+    );
+    println!(
+        "  records: trials={} windows={} scores={} telemetry={} lanes={}",
+        s.trials, s.windows, s.score_samples, s.telemetry_ticks, s.lanes
+    );
+    Ok(())
+}
+
 fn cmd_flops() {
     let w = OpWeights::default();
     let net = resnet50_imagenet();
@@ -506,6 +560,8 @@ fn main() -> Result<()> {
         }
         "live" => cmd_live(&Flags::parse(rest)?),
         "cluster" => cmd_cluster(&Flags::parse(rest)?),
+        // Takes a positional file path, not `--key value` flags.
+        "report" => cmd_report(rest),
         "flops" => {
             cmd_flops();
             Ok(())

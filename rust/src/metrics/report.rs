@@ -103,6 +103,13 @@ pub struct BenchmarkReport {
     /// NFS aggregate I/O.
     pub nfs_bytes_read: u64,
     pub nfs_bytes_written: u64,
+    /// Active-set window scheduling counters: shard visits executed vs
+    /// skipped across all epoch-barrier windows. `shards_touched +
+    /// shards_skipped == shards × windows`; a skipped visit is a shard
+    /// whose next event lay past the window end, left untouched
+    /// (bit-identical by construction — see `coordinator::active`).
+    pub shards_touched: u64,
+    pub shards_skipped: u64,
 }
 
 impl BenchmarkReport {
@@ -190,6 +197,8 @@ impl BenchmarkReport {
             ("validity", s(format!("{:?}", self.validity))),
             ("nfs_bytes_read", num(self.nfs_bytes_read as f64)),
             ("nfs_bytes_written", num(self.nfs_bytes_written as f64)),
+            ("shards_touched", num(self.shards_touched as f64)),
+            ("shards_skipped", num(self.shards_skipped as f64)),
             (
                 "score_series",
                 arr(self
@@ -231,7 +240,7 @@ impl BenchmarkReport {
     /// Human-readable single-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "nodes={} gpus={} score={:.3} PFLOPS error={:.1}% regulated={:.3} PFLOPS archs={} validity={:?}",
+            "nodes={} gpus={} score={:.3} PFLOPS error={:.1}% regulated={:.3} PFLOPS archs={} validity={:?} shards_touched={} shards_skipped={}",
             self.nodes,
             self.total_gpus,
             self.score_flops / 1e15,
@@ -239,6 +248,8 @@ impl BenchmarkReport {
             self.regulated_score / 1e15,
             self.architectures_evaluated,
             self.validity,
+            self.shards_touched,
+            self.shards_skipped,
         )
     }
 

@@ -197,6 +197,8 @@ impl<W: io::Write> ReportStream<W> {
             ("validity", s(format!("{:?}", report.validity))),
             ("nfs_bytes_read", num(report.nfs_bytes_read as f64)),
             ("nfs_bytes_written", num(report.nfs_bytes_written as f64)),
+            ("shards_touched", num(report.shards_touched as f64)),
+            ("shards_skipped", num(report.shards_skipped as f64)),
             (
                 "groups",
                 arr(report
@@ -355,6 +357,10 @@ pub struct StreamSummary {
     pub validity: String,
     pub nfs_bytes_read: u64,
     pub nfs_bytes_written: u64,
+    /// Active-set window scheduling counters (see
+    /// [`BenchmarkReport::shards_touched`]).
+    pub shards_touched: u64,
+    pub shards_skipped: u64,
     /// Records before the trailer, per the trailer (verified against
     /// the observed count).
     pub records: u64,
@@ -489,6 +495,8 @@ pub fn reconstruct_summary(text: &str) -> Result<StreamSummary, StreamError> {
                         validity: req_str(&v, "validity", line)?,
                         nfs_bytes_read: req_u64(&v, "nfs_bytes_read", line)?,
                         nfs_bytes_written: req_u64(&v, "nfs_bytes_written", line)?,
+                        shards_touched: req_u64(&v, "shards_touched", line)?,
+                        shards_skipped: req_u64(&v, "shards_skipped", line)?,
                         records,
                         trials,
                         windows,
@@ -592,6 +600,8 @@ mod tests {
             validity: Validity::Valid,
             nfs_bytes_read: 1024,
             nfs_bytes_written: 2048,
+            shards_touched: 6,
+            shards_skipped: 2,
         }
     }
 

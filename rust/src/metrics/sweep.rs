@@ -245,6 +245,8 @@ mod tests {
             validity: Validity::Valid,
             nfs_bytes_read: 0,
             nfs_bytes_written: 0,
+            shards_touched: 0,
+            shards_skipped: 0,
         }
     }
 

@@ -7,11 +7,16 @@
 //! * [`accuracy`] — the learning-curve surrogate standing in for real
 //!   ImageNet validation accuracy (DESIGN.md §2 substitution; the *real*
 //!   accuracy path is `examples/train_e2e.rs` at toy scale).
+//! * [`pool`] — the persistent deterministic worker pool the coordinator
+//!   parks between epoch-barrier windows (active-set execution; workers
+//!   live for the whole run instead of one `thread::scope` per window).
 
 pub mod accuracy;
 pub mod engine;
+pub mod pool;
 pub mod timing;
 
 pub use accuracy::AccuracySurrogate;
 pub use engine::EventQueue;
+pub use pool::{with_pool, WindowPool};
 pub use timing::TimingModel;

@@ -1,0 +1,332 @@
+//! Persistent deterministic worker pool for epoch-barrier window
+//! execution.
+//!
+//! The coordinator's window loop used to spawn a fresh
+//! `std::thread::scope` per window and rebuild its batch/Mutex
+//! scaffolding each time — O(windows) thread churn on top of the
+//! O(lanes × windows) sweep cost. This module keeps one set of workers
+//! alive for the whole run, parked on a condvar between windows, and
+//! hands them only the *active* item indices for each window.
+//!
+//! Determinism is preserved by construction: each item is advanced
+//! independently under its own lock (a worker never observes another
+//! item's state), batch claiming through the atomic counter only
+//! affects *which thread* runs an item, never the item's inputs, and
+//! the caller merges results in index order afterwards via
+//! [`WindowPool::with_items`]. With `workers == 0` the same entry
+//! points run inline on the calling thread, so the sequential engine
+//! exercises the identical active-set code path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// The work closure: advance one item up to `window_end` under the
+/// frozen per-window payload (e.g. a history snapshot + sim context).
+type RunFn<'p, T, J> = &'p (dyn Fn(&mut T, f64, &J) + Sync);
+
+/// One window's worth of work, shared read-only with every worker.
+struct WindowJob<J> {
+    window_end: f64,
+    payload: J,
+    /// Active item indices for this window, in ascending order. Items
+    /// not listed here are not touched at all.
+    active: Vec<usize>,
+    /// Contiguous range size each `fetch_add` claim takes.
+    batch: usize,
+    next: AtomicUsize,
+}
+
+struct Slot<J> {
+    /// Bumped once per published job; workers compare against their
+    /// last-seen generation to detect fresh work.
+    gen: u64,
+    job: Option<Arc<WindowJob<J>>>,
+    shutdown: bool,
+}
+
+struct Shared<J> {
+    slot: Mutex<Slot<J>>,
+    work_cv: Condvar,
+    /// Count of workers that have finished the current job.
+    done: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+/// Increments the done counter when dropped — on the normal path and
+/// during unwinding alike, so a panicking worker can never leave the
+/// master parked on `done_cv` forever.
+struct DoneGuard<'a, J> {
+    shared: &'a Shared<J>,
+}
+
+impl<J> Drop for DoneGuard<'_, J> {
+    fn drop(&mut self) {
+        let mut done = match self.shared.done.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *done += 1;
+        self.shared.done_cv.notify_all();
+    }
+}
+
+/// Sets the shutdown flag when dropped, so workers exit and the scope
+/// can join even if the master's body panics mid-run.
+struct ShutdownGuard<'a, J> {
+    shared: &'a Shared<J>,
+}
+
+impl<J> Drop for ShutdownGuard<'_, J> {
+    fn drop(&mut self) {
+        let mut slot = match self.shared.slot.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        slot.shutdown = true;
+        self.shared.work_cv.notify_all();
+    }
+}
+
+fn worker_loop<T, J>(cells: &[Mutex<T>], run: RunFn<'_, T, J>, shared: &Shared<J>) {
+    let mut last_gen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().expect("pool slot poisoned");
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.gen != last_gen {
+                    if let Some(job) = slot.job.as_ref() {
+                        last_gen = slot.gen;
+                        break Arc::clone(job);
+                    }
+                }
+                slot = shared.work_cv.wait(slot).expect("pool slot poisoned");
+            }
+        };
+        let done = DoneGuard { shared };
+        loop {
+            let start = job.next.fetch_add(job.batch, Ordering::Relaxed);
+            if start >= job.active.len() {
+                break;
+            }
+            let end = (start + job.batch).min(job.active.len());
+            for &idx in &job.active[start..end] {
+                let mut item = cells[idx].lock().expect("pool item poisoned");
+                run(&mut item, job.window_end, &job.payload);
+            }
+        }
+        // Release this worker's handle on the job (and its payload —
+        // typically an Arc-shared snapshot) *before* signalling done,
+        // so the master sees the payload fully released when it starts
+        // merging.
+        drop(job);
+        drop(done);
+    }
+}
+
+/// Handle the master uses inside [`with_pool`]'s body to drive windows.
+pub struct WindowPool<'p, T, J> {
+    cells: &'p [Mutex<T>],
+    run: RunFn<'p, T, J>,
+    shared: &'p Shared<J>,
+    workers: usize,
+}
+
+impl<T, J> WindowPool<'_, T, J> {
+    /// Number of worker threads (0 means windows run inline on the
+    /// calling thread).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run one window: every index in `active` (ascending) has its item
+    /// advanced to `window_end` via the pool's run closure; all other
+    /// items are untouched. Blocks until the window is fully executed.
+    pub fn run_window(&mut self, window_end: f64, payload: J, active: Vec<usize>) {
+        if active.is_empty() {
+            return;
+        }
+        if self.workers == 0 {
+            // Sequential engine: identical filter, no threads.
+            for &idx in &active {
+                let mut item = self.cells[idx].lock().expect("pool item poisoned");
+                (self.run)(&mut item, window_end, &payload);
+            }
+            return;
+        }
+        let batch = (active.len() / (self.workers * 4)).max(1);
+        let job = Arc::new(WindowJob {
+            window_end,
+            payload,
+            active,
+            batch,
+            next: AtomicUsize::new(0),
+        });
+        {
+            let mut slot = self.shared.slot.lock().expect("pool slot poisoned");
+            slot.gen += 1;
+            slot.job = Some(job);
+            self.shared.work_cv.notify_all();
+        }
+        let mut done = self.shared.done.lock().expect("pool done poisoned");
+        while *done < self.workers {
+            done = self.shared.done_cv.wait(done).expect("pool done poisoned");
+        }
+        *done = 0;
+        drop(done);
+        // Drop the master-side job handle so the payload is gone before
+        // the caller's merge phase mutates shared state.
+        self.shared.slot.lock().expect("pool slot poisoned").job = None;
+    }
+
+    /// Lock every item and hand them to `f` as a dense `&mut` slice in
+    /// index order — the master's barrier phase (merge, scheduler pass,
+    /// dormancy-index refresh) runs here, with no window in flight.
+    pub fn with_items<R>(&mut self, f: impl FnOnce(&mut [&mut T]) -> R) -> R {
+        let mut guards: Vec<MutexGuard<'_, T>> = self
+            .cells
+            .iter()
+            .map(|m| m.lock().expect("pool item poisoned"))
+            .collect();
+        let mut refs: Vec<&mut T> = guards.iter_mut().map(|g| &mut **g).collect();
+        f(&mut refs)
+    }
+}
+
+/// Wrap `items` in a persistent worker pool for the duration of `body`.
+///
+/// Spawns `workers` long-lived threads (none if `workers == 0`), runs
+/// `body` with a [`WindowPool`] handle, then shuts the workers down and
+/// returns the items (moved back out of their locks) together with the
+/// body's result. The one `std::thread::scope` spans the entire run —
+/// no per-window spawn/join.
+pub fn with_pool<T, J, R>(
+    items: Vec<T>,
+    workers: usize,
+    run: impl Fn(&mut T, f64, &J) + Sync,
+    body: impl FnOnce(&mut WindowPool<'_, T, J>) -> R,
+) -> (Vec<T>, R)
+where
+    T: Send,
+    J: Send + Sync,
+{
+    let cells: Vec<Mutex<T>> = items.into_iter().map(Mutex::new).collect();
+    let shared = Shared {
+        slot: Mutex::new(Slot {
+            gen: 0,
+            job: None,
+            shutdown: false,
+        }),
+        work_cv: Condvar::new(),
+        done: Mutex::new(0),
+        done_cv: Condvar::new(),
+    };
+    let run_ref: RunFn<'_, T, J> = &run;
+    let result = std::thread::scope(|scope| {
+        let guard = ShutdownGuard { shared: &shared };
+        for _ in 0..workers {
+            scope.spawn(|| worker_loop(&cells, run_ref, &shared));
+        }
+        let mut pool = WindowPool {
+            cells: &cells,
+            run: run_ref,
+            shared: &shared,
+            workers,
+        };
+        let r = body(&mut pool);
+        drop(guard);
+        r
+    });
+    let items = cells
+        .into_iter()
+        .map(|m| m.into_inner().expect("worker panicked while holding an item"))
+        .collect();
+    (items, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Advance = record (window_end, payload) on the touched item.
+    fn run_rec(item: &mut Vec<(f64, u32)>, window_end: f64, payload: &u32) {
+        item.push((window_end, *payload));
+    }
+
+    fn drive(workers: usize) -> Vec<Vec<(f64, u32)>> {
+        let items: Vec<Vec<(f64, u32)>> = vec![Vec::new(); 8];
+        let (items, ()) = with_pool(items, workers, run_rec, |pool| {
+            pool.run_window(10.0, 1, vec![0, 2, 4, 6]);
+            pool.run_window(20.0, 2, (0..8).collect());
+            pool.run_window(30.0, 3, vec![7]);
+            pool.run_window(40.0, 4, Vec::new()); // empty active set: no-op
+        });
+        items
+    }
+
+    #[test]
+    fn sequential_and_parallel_touch_identical_items() {
+        let seq = drive(0);
+        for workers in [1, 3, 8] {
+            assert_eq!(drive(workers), seq, "workers={workers}");
+        }
+        // Skipped items saw nothing in the windows that excluded them.
+        assert_eq!(seq[1], vec![(20.0, 2)]);
+        assert_eq!(seq[0], vec![(10.0, 1), (20.0, 2)]);
+        assert_eq!(seq[7], vec![(20.0, 2), (30.0, 3)]);
+    }
+
+    #[test]
+    fn with_items_sees_all_items_in_index_order() {
+        let items: Vec<usize> = vec![0; 5];
+        let (items, sum) = with_pool(
+            items,
+            2,
+            |item: &mut usize, _end, add: &usize| *item += add,
+            |pool| {
+                pool.run_window(1.0, 10, vec![1, 3]);
+                pool.with_items(|all| {
+                    for (i, item) in all.iter_mut().enumerate() {
+                        **item += i;
+                    }
+                    all.iter().map(|v| **v).sum::<usize>()
+                })
+            },
+        );
+        assert_eq!(items, vec![0, 11, 2, 13, 4]);
+        assert_eq!(sum, 30);
+    }
+
+    #[test]
+    fn workers_persist_across_many_windows() {
+        let items: Vec<u64> = vec![0; 16];
+        let (items, ()) = with_pool(
+            items,
+            4,
+            |item: &mut u64, _end, _j: &()| *item += 1,
+            |pool| {
+                for _ in 0..100 {
+                    pool.run_window(1.0, (), (0..16).collect());
+                }
+            },
+        );
+        assert!(items.iter().all(|&v| v == 100));
+    }
+
+    #[test]
+    fn items_return_in_original_order() {
+        let items: Vec<String> = (0..6).map(|i| format!("item-{i}")).collect();
+        let (items, ()) = with_pool(
+            items,
+            3,
+            |_item: &mut String, _end, _j: &()| {},
+            |pool| {
+                pool.run_window(1.0, (), vec![5, 0, 3]);
+            },
+        );
+        let expect: Vec<String> = (0..6).map(|i| format!("item-{i}")).collect();
+        assert_eq!(items, expect);
+    }
+}

@@ -1,0 +1,128 @@
+//! Active-set window scheduling vs. the historic full sweep.
+//!
+//! ISSUE 9's tentpole makes per-window work proportional to *active*
+//! shards: a shard whose next event lies beyond the window end is never
+//! handed to a worker. `AIPERF_FORCE_FULL_SWEEP=1` is the debugging
+//! escape hatch that restores the visit-every-shard sweep; because a
+//! dormant shard executes zero events either way, the two modes must be
+//! byte-identical on every output surface — buffered JSON report and
+//! NDJSON stream alike, counters included (both modes report the
+//! *eligible* set, by design, so even `shards_skipped` matches).
+//!
+//! These tests live in their own binary because the escape hatch is a
+//! process-global environment variable: everything here serializes on
+//! one lock so a force-full run can never bleed into a filtered one.
+
+use std::sync::{Mutex, MutexGuard};
+
+use aiperf::config::{BenchmarkConfig, Engine};
+use aiperf::coordinator::{run_benchmark_streaming, run_benchmark_with};
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Run `f` with the full-sweep escape hatch set, then clear it. Callers
+/// must hold [`lock`] — the variable is process-global.
+fn force_full<R>(f: impl FnOnce() -> R) -> R {
+    std::env::set_var("AIPERF_FORCE_FULL_SWEEP", "1");
+    let out = f();
+    std::env::remove_var("AIPERF_FORCE_FULL_SWEEP");
+    out
+}
+
+fn elastic_cfg(seed: u64) -> BenchmarkConfig {
+    let mut cfg = aiperf::scenarios::get("elastic-mixed")
+        .expect("elastic preset")
+        .config;
+    cfg.seed = seed;
+    cfg
+}
+
+/// The exascale preset truncated to three barrier windows — the same
+/// seed `engine_parity` pins across engines.
+fn exa_cfg() -> BenchmarkConfig {
+    let mut cfg = aiperf::scenarios::get("exa-100k").expect("exa preset").config;
+    cfg.duration_s = 5400.0;
+    cfg.seed = 42;
+    cfg
+}
+
+#[test]
+fn elastic_mixed_skips_most_window_visits() {
+    let _g = lock();
+    // The migration showcase is idle-heavy by construction: barriers
+    // every 120 s but telemetry only every 600 s, epochs thousands of
+    // modelled seconds long, and the whole T4 group parked from
+    // t ≈ 9100 s — so most (window, shard) visits must be skipped.
+    let report = run_benchmark_with(&elastic_cfg(5), Engine::Sequential);
+    let total = report.shards_touched + report.shards_skipped;
+    assert!(total > 0, "counters must be populated");
+    assert!(
+        report.shards_skipped > 0,
+        "elastic-mixed must skip dormant shards"
+    );
+    assert!(
+        2 * report.shards_skipped > total,
+        "expected >50% of window-shard visits skipped, got {} of {}",
+        report.shards_skipped,
+        total
+    );
+}
+
+#[test]
+fn force_full_sweep_is_byte_identical_on_elastic_mixed() {
+    let _g = lock();
+    for seed in [0u64, 5] {
+        let cfg = elastic_cfg(seed);
+        for engine in [Engine::Sequential, Engine::Parallel] {
+            let filtered = run_benchmark_with(&cfg, engine);
+            let full = force_full(|| run_benchmark_with(&cfg, engine));
+            assert_eq!(
+                filtered.to_json().to_string(),
+                full.to_json().to_string(),
+                "elastic-mixed seed {seed} {engine:?}: full sweep diverged"
+            );
+            assert!(
+                filtered.shards_skipped > 0,
+                "elastic-mixed seed {seed} {engine:?}: filter never engaged"
+            );
+        }
+    }
+}
+
+#[test]
+fn force_full_sweep_streams_identical_bytes() {
+    let _g = lock();
+    let cfg = elastic_cfg(0);
+    let mut filtered = Vec::new();
+    run_benchmark_streaming(&cfg, Engine::Sequential, &mut filtered);
+    let mut full = Vec::new();
+    force_full(|| run_benchmark_streaming(&cfg, Engine::Sequential, &mut full));
+    assert_eq!(
+        filtered, full,
+        "NDJSON stream bytes diverged under the full sweep"
+    );
+}
+
+#[test]
+fn force_full_sweep_is_byte_identical_on_exa_100k_truncated() {
+    let _g = lock();
+    let cfg = exa_cfg();
+    let filtered = run_benchmark_with(&cfg, Engine::Parallel);
+    let full = force_full(|| run_benchmark_with(&cfg, Engine::Parallel));
+    assert_eq!(
+        filtered.to_json().to_string(),
+        full.to_json().to_string(),
+        "exa-100k truncated: full sweep diverged"
+    );
+    // Window 1 is sparse by construction: the SLURM setup stagger leaves
+    // more than half the 12,800 shards with no event before the first
+    // 1800 s barrier.
+    assert!(
+        filtered.shards_skipped > 0,
+        "truncated exa run must skip dormant shards"
+    );
+}

@@ -106,6 +106,16 @@ fn assert_bit_identical(a: &BenchmarkReport, b: &BenchmarkReport, label: &str) {
         a.nfs_bytes_written, b.nfs_bytes_written,
         "{label}: NFS writes"
     );
+    // The active-set filter is engine-independent: both engines must
+    // see the identical eligible set every window.
+    assert_eq!(
+        a.shards_touched, b.shards_touched,
+        "{label}: shards touched"
+    );
+    assert_eq!(
+        a.shards_skipped, b.shards_skipped,
+        "{label}: shards skipped"
+    );
 
     assert_eq!(
         a.score_series.len(),

@@ -47,6 +47,8 @@ fn reconstructed_summary_equals_buffered_report() {
     assert_eq!(streamed.validity, buffered.validity);
     assert_eq!(streamed.nfs_bytes_read, buffered.nfs_bytes_read);
     assert_eq!(streamed.nfs_bytes_written, buffered.nfs_bytes_written);
+    assert_eq!(streamed.shards_touched, buffered.shards_touched);
+    assert_eq!(streamed.shards_skipped, buffered.shards_skipped);
     assert!(streamed.score_series.is_empty());
     assert!(streamed.telemetry.is_empty());
     assert!(streamed.lane_util.is_empty());
@@ -72,6 +74,8 @@ fn reconstructed_summary_equals_buffered_report() {
         buffered.architectures_evaluated
     );
     assert_eq!(summary.validity, format!("{:?}", buffered.validity));
+    assert_eq!(summary.shards_touched, buffered.shards_touched);
+    assert_eq!(summary.shards_skipped, buffered.shards_skipped);
     assert_eq!(summary.score_samples as usize, buffered.score_series.len());
     assert_eq!(summary.telemetry_ticks as usize, buffered.telemetry.len());
     assert_eq!(summary.lanes as usize, buffered.lane_util.len());

@@ -19,9 +19,12 @@ pub const DETERMINISTIC_MODULES: &[&str] = &[
     "config/",
 ];
 
-/// Files allowed to create OS threads: the simulator's engine owns the
-/// deterministic pool abstraction. Everything else needs a pragma.
-pub const THREAD_ALLOWED: &[&str] = &["sim/engine.rs"];
+/// Files allowed to create OS threads: the simulator owns the two
+/// deterministic parallelism abstractions — the event engine and the
+/// persistent epoch-barrier worker pool. Everything else (including the
+/// coordinator) needs a pragma, so ad-hoc `thread::scope` cannot creep
+/// back into `master.rs`.
+pub const THREAD_ALLOWED: &[&str] = &["sim/engine.rs", "sim/pool.rs"];
 
 /// Files allowed to read the ambient environment: the CLI entry point
 /// parses `std::env::args`. Everything else needs a pragma.
@@ -132,9 +135,9 @@ pub fn check(rel: &str, scan: &Scan) -> Vec<Finding> {
                 rel,
                 t.line,
                 format!(
-                    "thread::{what} outside sim/engine.rs: ad-hoc threads \
-                     introduce scheduling nondeterminism — route parallelism \
-                     through the engine"
+                    "thread::{what} outside sim/{{engine,pool}}.rs: ad-hoc \
+                     threads introduce scheduling nondeterminism — route \
+                     parallelism through the engine or the window pool"
                 ),
             ));
         }

@@ -100,6 +100,39 @@ fn deleting_any_single_pragma_surfaces_its_findings() {
 }
 
 #[test]
+fn reintroducing_thread_scope_in_master_fails() {
+    // The active-set refactor moved the coordinator's only thread use
+    // into sim/pool.rs and widened THREAD_ALLOWED there instead of
+    // leaving a pragma behind in master.rs — so any ad-hoc
+    // `thread::scope` creeping back into the coordinator must be an
+    // unsuppressed deny finding, not silently covered by a stale
+    // exception.
+    let (mut files, usage) = tree();
+    // The pool is the rule-level exemption; it really does spawn.
+    let pool = files
+        .iter()
+        .find(|f| f.rel == "sim/pool.rs")
+        .expect("worker pool source");
+    assert!(pool.text.contains("scope.spawn"), "pool spawns workers");
+    let f = files
+        .iter_mut()
+        .find(|f| f.rel == "coordinator/master.rs")
+        .expect("master source");
+    assert!(
+        !f.text.contains("detlint: allow(thread_spawn)"),
+        "master.rs must not carry a thread_spawn pragma anymore"
+    );
+    f.text.push_str(
+        "\nfn _detlint_drill() {\n    std::thread::scope(|_s| {});\n}\n",
+    );
+    let report = analyze(&files, &usage);
+    assert!(report.failed());
+    assert!(report
+        .unsuppressed()
+        .any(|f| f.rule == "thread_spawn" && f.file == "coordinator/master.rs"));
+}
+
+#[test]
 fn adding_an_undocumented_config_key_fails() {
     let (mut files, usage) = tree();
     let f = files

@@ -9,7 +9,7 @@
 //!     paper reports TPE "results in slightly better accuracy".
 
 use aiperf::cluster::GpuModel;
-use aiperf::hpo::{aiperf_space, Evolutionary, GridSearch, Optimizer, RandomSearch, Tpe};
+use aiperf::hpo::{aiperf_space, build, Backend};
 use aiperf::sim::accuracy::{AccuracySurrogate, HpPoint};
 use aiperf::util::rng::derive;
 
@@ -74,15 +74,18 @@ fn fig7b() {
         )
     };
     let mut results = Vec::new();
-    for name in ["TPE", "evolutionary", "grid", "random"] {
+    for (name, kind) in [
+        ("TPE", Backend::Tpe),
+        ("evolutionary", Backend::Evolutionary),
+        ("grid", Backend::Grid),
+        ("random", Backend::Random),
+    ] {
         let mut accs = Vec::new();
         for seed in 0..8u64 {
-            let mut opt: Box<dyn Optimizer> = match name {
-                "TPE" => Box::new(Tpe::new(aiperf_space())),
-                "evolutionary" => Box::new(Evolutionary::new(aiperf_space())),
-                "grid" => Box::new(GridSearch::new(aiperf_space(), 6)),
-                _ => Box::new(RandomSearch::new(aiperf_space())),
-            };
+            // The engine's factory: the bench reruns the paper's
+            // selection study through the exact objects a real run uses
+            // (grid at the factory's 5-level lattice, seed-offset walk).
+            let mut opt = build(kind, aiperf_space(), seed);
             let mut rng = derive(seed, name, 0);
             for _ in 0..32 {
                 let cfg = opt.suggest(&mut rng);

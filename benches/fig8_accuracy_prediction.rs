@@ -6,7 +6,7 @@
 //! (≤ fitted value) yet lands within a few points of the actually
 //! converged accuracy, across architectures and seeds.
 
-use aiperf::predict::logfit::LogFit;
+use aiperf::predict::{LearningCurve, CONVERGENCE_EPOCH};
 use aiperf::sim::accuracy::{AccuracySurrogate, HpPoint};
 
 fn main() {
@@ -33,19 +33,25 @@ fn main() {
         // Fit from epoch 5: the first epochs sit on the steep ramp where
         // the curve is not yet in its logarithmic regime (the paper's
         // example fit in Fig 8 likewise starts after the initial epochs).
-        let epochs: Vec<f64> = (5..=trained).map(|e| e as f64).collect();
-        let accs: Vec<f64> = (5..=trained)
-            .map(|e| sur.accuracy(seed, params, &hp, e))
-            .collect();
-        let fit = LogFit::fit(&epochs, &accs);
-        let pred = fit.conservative(60.0);
+        // The curve is accumulated through `predict::LearningCurve` — the
+        // same type the engine's early-stop rule fits — in its error
+        // domain (the bench converts back to accuracy for display).
+        let mut lc = LearningCurve::new();
+        for e in 5..=trained {
+            lc.observe(e, 1.0 - sur.accuracy(seed, params, &hp, e));
+        }
+        assert!(lc.can_fit());
+        let fit = lc.fit();
+        let pred = lc.conservative_accuracy();
         let truth = sur.accuracy(seed, params, &hp, 60);
         println!(
             "{:>10} {:>8} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8.4}",
             params, trained, fit.a, fit.b, fit.rmse, pred, truth
         );
-        // Conservative: prediction never exceeds the raw fitted value.
-        assert!(pred <= fit.at(60.0) + 1e-12);
+        // Conservative: prediction never exceeds the raw fitted value,
+        // and the termination-side floor mirrors it in the error domain.
+        assert!(pred <= fit.at(CONVERGENCE_EPOCH) + 1e-12);
+        assert!(lc.converged_floor() <= 1.0 - pred + 1e-12);
         worst_abs_err = worst_abs_err.max((pred - truth).abs());
     }
     println!("\nworst |prediction − truth| at 60 epochs: {worst_abs_err:.4}");

@@ -6,9 +6,7 @@
 //! trial budget; the best validation accuracy per method is reported. The
 //! paper finds "the TPE method results in slightly better accuracy".
 
-use aiperf::hpo::{
-    aiperf_space, Evolutionary, GridSearch, Optimizer, RandomSearch, Tpe,
-};
+use aiperf::hpo::{aiperf_space, build, Backend, Optimizer};
 use aiperf::sim::accuracy::{AccuracySurrogate, HpPoint};
 use aiperf::util::rng::derive;
 
@@ -44,15 +42,17 @@ fn main() {
     println!("HPO method comparison (Fig 7b): {trials} trials × {repeats} seeds\n");
 
     let mut means = Vec::new();
-    for name in ["TPE", "random", "grid", "evolutionary"] {
+    for (name, kind) in [
+        ("TPE", Backend::Tpe),
+        ("random", Backend::Random),
+        ("grid", Backend::Grid),
+        ("evolutionary", Backend::Evolutionary),
+    ] {
         let mut accs = Vec::new();
         for seed in 0..repeats {
-            let mut opt: Box<dyn Optimizer> = match name {
-                "TPE" => Box::new(Tpe::new(aiperf_space())),
-                "random" => Box::new(RandomSearch::new(aiperf_space())),
-                "grid" => Box::new(GridSearch::new(aiperf_space(), 6)),
-                _ => Box::new(Evolutionary::new(aiperf_space())),
-            };
+            // Built through the engine's own `hpo::build` factory, so the
+            // study compares exactly what an `hpo = ...` run would use.
+            let mut opt = build(kind, aiperf_space(), seed);
             accs.push(run(name, opt.as_mut(), trials, seed));
         }
         let mean = accs.iter().sum::<f64>() / accs.len() as f64;

@@ -42,6 +42,11 @@ pub struct NodeGroup {
     /// group can opt out (e.g. a production partition that must not run
     /// foreign checkpoints) without disabling migration cluster-wide.
     pub accepts_migrants: bool,
+    /// Per-group HPO backend override (`[group.NAME] hpo`). `None` falls
+    /// back to the global `BenchmarkConfig::hpo`, so a mixed cluster can
+    /// e.g. run grid search on a small partition while the bulk of the
+    /// fleet runs TPE.
+    pub hpo: Option<crate::hpo::Backend>,
 }
 
 impl NodeGroup {
@@ -54,6 +59,7 @@ impl NodeGroup {
             batch_per_gpu: None,
             subshards_per_node: None,
             accepts_migrants: true,
+            hpo: None,
         }
     }
 

@@ -72,6 +72,7 @@
 
 use crate::cluster::{ClusterTopology, GpuModel, HostModel, NodeGroup};
 use crate::data::DatasetDescriptor;
+use crate::hpo::Backend;
 use crate::nas::morphism::MorphLimits;
 
 /// Simulation execution engine.
@@ -226,6 +227,27 @@ pub struct BenchmarkConfig {
     /// `metrics::stream`). `None` (the default) is the classic buffered
     /// report, byte-identical to before this knob existed.
     pub stream_report: Option<String>,
+    /// The HPO backend every lane's optimizer is built from (`hpo =
+    /// tpe|evolutionary|random|grid`, `--hpo`). Per-`[group.NAME]`
+    /// sections may override it, so a heterogeneous site can run the
+    /// paper's TPE on one group and a comparison baseline on another.
+    /// Default TPE — the paper's fixed method — reproduces the historic
+    /// schedules exactly.
+    pub hpo: Backend,
+    /// LogFit-based early stopping (`early_stop`, `--early-stop`): after
+    /// each validation epoch, extrapolate the trial's learning curve to
+    /// the convergence horizon and terminate it when even the optimistic
+    /// error floor cannot beat the cluster's best known error by
+    /// `early_stop_margin`. The freed lane immediately becomes a steal
+    /// victim / migrant-adoption opportunity. Off by default; with it
+    /// off the schedules are byte-identical to before the knob existed.
+    pub early_stop: bool,
+    /// Epochs a trial must complete before it can be early-stopped (the
+    /// log fit is meaningless on the first point or two).
+    pub early_stop_min_epochs: u64,
+    /// Error margin the extrapolated floor must fail to close before a
+    /// trial is terminated: larger margins kill fewer trials.
+    pub early_stop_margin: f64,
 }
 
 impl Default for BenchmarkConfig {
@@ -254,6 +276,10 @@ impl Default for BenchmarkConfig {
             migration_nfs_bytes_per_param: 8,
             feedback_routing: true,
             stream_report: None,
+            hpo: Backend::Tpe,
+            early_stop: false,
+            early_stop_min_epochs: 3,
+            early_stop_margin: 0.02,
         }
     }
 }
@@ -291,6 +317,12 @@ impl BenchmarkConfig {
         self.topology.groups[group]
             .subshards_per_node
             .unwrap_or(self.subshards_per_node)
+    }
+
+    /// Effective HPO backend of a topology group: the group override
+    /// when set, the global `hpo` key otherwise.
+    pub fn group_hpo(&self, group: usize) -> Backend {
+        self.topology.groups[group].hpo.unwrap_or(self.hpo)
     }
 
     /// Total sub-shard lanes across the cluster (the execution-unit count
@@ -345,6 +377,12 @@ impl BenchmarkConfig {
         }
         if self.subshards_per_node == 0 {
             return Err("subshards_per_node must be at least 1".into());
+        }
+        if self.early_stop_min_epochs == 0 {
+            return Err("early_stop_min_epochs must be at least 1".into());
+        }
+        if !(0.0..1.0).contains(&self.early_stop_margin) {
+            return Err("early_stop_margin must be in [0,1)".into());
         }
         for (i, g) in self.topology.groups.iter().enumerate() {
             let k = self.group_subshards(i);
@@ -429,6 +467,7 @@ impl BenchmarkConfig {
                 "batch_per_gpu" => g.batch_per_gpu = Some(parse_u64(value)?),
                 "subshards_per_node" => g.subshards_per_node = Some(parse_u64(value)?),
                 "accepts_migrants" => g.accepts_migrants = parse_flag(key, value)?,
+                "hpo" => g.hpo = Some(crate::hpo::Backend::parse(value)?),
                 _ => return Ok(false),
             }
             Ok(true)
@@ -552,6 +591,10 @@ impl BenchmarkConfig {
                 "feedback_routing" => {
                     cfg.feedback_routing = parse_flag(key, value).map_err(&err)?
                 }
+                "hpo" => cfg.hpo = Backend::parse(value).map_err(&err)?,
+                "early_stop" => cfg.early_stop = parse_flag(key, value).map_err(&err)?,
+                "early_stop_min_epochs" => cfg.early_stop_min_epochs = parse_u64(value)?,
+                "early_stop_margin" => cfg.early_stop_margin = parse_f64(value)?,
                 "stream_report" => {
                     if value.is_empty() {
                         return Err(err("stream_report needs a file path".into()));
@@ -633,7 +676,11 @@ impl BenchmarkConfig {
              work_stealing = {}\n\
              migration = {}\n\
              migration_nfs_bytes_per_param = {}\n\
-             feedback_routing = {}\n",
+             feedback_routing = {}\n\
+             hpo = {}\n\
+             early_stop = {}\n\
+             early_stop_min_epochs = {}\n\
+             early_stop_margin = {}\n",
             self.batch_per_gpu,
             self.learning_rate,
             self.lr_decay_per_epoch,
@@ -662,6 +709,10 @@ impl BenchmarkConfig {
             self.migration,
             self.migration_nfs_bytes_per_param,
             self.feedback_routing,
+            self.hpo.as_str(),
+            self.early_stop,
+            self.early_stop_min_epochs,
+            self.early_stop_margin,
         );
         // Emitted only when set, so configs from before the knob existed
         // round-trip byte-identically.
@@ -694,6 +745,11 @@ impl BenchmarkConfig {
             }
             if let Some(k) = g.subshards_per_node {
                 out.push_str(&format!("subshards_per_node = {k}\n"));
+            }
+            // Per-group HPO override: emitted only when set, like the
+            // other optional overrides.
+            if let Some(b) = g.hpo {
+                out.push_str(&format!("hpo = {}\n", b.as_str()));
             }
             // `accepts_migrants` defaults to true; emitting it only when
             // false keeps old configs byte-stable and still round-trips.
@@ -951,6 +1007,60 @@ mod tests {
         // An empty path is a config error, not a silent no-op.
         assert!(BenchmarkConfig::from_text("stream_report =\n").is_err());
         assert!(BenchmarkConfig::from_text("stream_report = \n").is_err());
+    }
+
+    #[test]
+    fn hpo_key_parses_and_roundtrips() {
+        // Default TPE; every spelling parses; per-group overrides win
+        // and survive the round trip.
+        let d = BenchmarkConfig::from_text("seed = 1\n").unwrap();
+        assert_eq!(d.hpo, Backend::Tpe);
+        let text = "hpo = evolutionary\n\
+                    [group.t4]\ncount = 2\ngpus_per_node = 8\ngpu = t4\nhpo = grid\n\
+                    [group.v100]\ncount = 2\ngpus_per_node = 8\ngpu = v100\n";
+        let c = BenchmarkConfig::from_text(text).unwrap();
+        assert_eq!(c.hpo, Backend::Evolutionary);
+        assert_eq!(c.topology.groups[0].hpo, Some(Backend::Grid));
+        assert_eq!(c.topology.groups[1].hpo, None);
+        assert_eq!(c.group_hpo(0), Backend::Grid);
+        assert_eq!(c.group_hpo(1), Backend::Evolutionary);
+        c.validate().unwrap();
+        let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
+        assert_eq!(c2, c);
+        // Bad values error, globally and per group.
+        assert!(BenchmarkConfig::from_text("hpo = bayes\n").is_err());
+        assert!(BenchmarkConfig::from_text("[group.x]\ncount = 1\nhpo = bayes\n").is_err());
+    }
+
+    #[test]
+    fn early_stop_keys_parse_and_roundtrip() {
+        let d = BenchmarkConfig::from_text("seed = 1\n").unwrap();
+        assert!(!d.early_stop);
+        assert_eq!(d.early_stop_min_epochs, 3);
+        assert_eq!(d.early_stop_margin, 0.02);
+        let c = BenchmarkConfig::from_text(
+            "early_stop = on\nearly_stop_min_epochs = 5\nearly_stop_margin = 0.05\n",
+        )
+        .unwrap();
+        assert!(c.early_stop);
+        assert_eq!(c.early_stop_min_epochs, 5);
+        assert_eq!(c.early_stop_margin, 0.05);
+        c.validate().unwrap();
+        let c2 = BenchmarkConfig::from_text(&c.to_text()).unwrap();
+        assert_eq!(c2, c);
+        assert!(BenchmarkConfig::from_text("early_stop = maybe\n").is_err());
+        assert!(BenchmarkConfig::from_text("early_stop_min_epochs = few\n").is_err());
+        assert!(BenchmarkConfig::from_text("early_stop_margin = wide\n").is_err());
+        // Validation bounds: min_epochs >= 1, margin in [0,1), NaN fails.
+        let mut bad = BenchmarkConfig::default();
+        bad.early_stop_min_epochs = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = BenchmarkConfig::default();
+        bad.early_stop_margin = 1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = BenchmarkConfig::default();
+        bad.early_stop_margin = f64::NAN;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

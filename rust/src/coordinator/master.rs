@@ -6,7 +6,10 @@
 //! history into the buffer; the node's GPUs drain the buffer and train it
 //! with synchronous data parallelism, epoch by epoch, with early
 //! stopping; warm-up rounds use the Appendix-C predicted accuracy; HPO
-//! (TPE) activates at round 5; the run terminates at the user-defined
+//! (the pluggable `hpo` backend — TPE by default, per-group
+//! overridable) activates at round 5; with `early_stop` on, lanes also
+//! terminate doomed trials by LogFit curve extrapolation; the run
+//! terminates at the user-defined
 //! wall-clock budget and the analysis toolkit computes score, achieved
 //! error, regulated score, and telemetry (Figs 4–6, 9–12).
 //!
@@ -443,6 +446,8 @@ fn run_with_sink<W: std::io::Write>(
     let mut group_migration_overhead = vec![0.0f64; cfg.topology.groups.len()];
     let mut group_feedback_routed = vec![0u64; cfg.topology.groups.len()];
     let mut group_ring_joins = vec![0u64; cfg.topology.groups.len()];
+    let mut group_early_stops = vec![0u64; cfg.topology.groups.len()];
+    let mut group_epochs_saved = vec![0u64; cfg.topology.groups.len()];
     let mut lane_util: Vec<LaneUtil> = Vec::new();
     for s in &shards {
         nfs_stats.reads += s.nfs.reads;
@@ -457,6 +462,8 @@ fn run_with_sink<W: std::io::Write>(
         group_migration_overhead[s.group] += s.migration_overhead_s;
         group_feedback_routed[s.group] += s.feedback_routed;
         group_ring_joins[s.group] += s.migrant_ring_joins;
+        group_early_stops[s.group] += s.early_stops;
+        group_epochs_saved[s.group] += s.epochs_saved;
         for (lane, busy) in s.lane_busy_fractions(cfg.duration_s).into_iter().enumerate() {
             match &mut sink {
                 ReportSink::Buffered => lane_util.push(LaneUtil {
@@ -503,6 +510,8 @@ fn run_with_sink<W: std::io::Write>(
             migration_overhead_s: group_migration_overhead[i],
             feedback_routed: group_feedback_routed[i],
             migrant_ring_joins: group_ring_joins[i],
+            early_stops: group_early_stops[i],
+            epochs_saved: group_epochs_saved[i],
             barrier_slack_s: if global.group_slack_samples[i] > 0 {
                 global.group_slack_sum[i] / global.group_slack_samples[i] as f64
             } else {

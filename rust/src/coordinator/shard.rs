@@ -6,7 +6,10 @@
 //! bookkeeping, and splits the node's GPUs into one or more *sub-shard
 //! lanes* (`BenchmarkConfig::subshards_per_node`, per-group overridable).
 //! Every lane is an independent trial trainer with its own CPU search
-//! loop, TPE optimizer, RNG streams, and dispatcher lane — a node with
+//! loop, HPO optimizer (a [`crate::hpo::Optimizer`] trait object built
+//! by [`crate::hpo::build`] from the `hpo` config key, per-group
+//! overridable — TPE by default), RNG streams, and dispatcher lane — a
+//! node with
 //! `k` lanes trains `k` candidates concurrently, each with synchronous
 //! data parallelism across `gpus_per_node / k` devices. With one lane
 //! per node this reduces exactly to the classic layout (same RNG
@@ -49,6 +52,19 @@
 //!   destination group's device model with its gradient ring over
 //!   InfiniBand. A parked lane idles (visible in the per-lane busy
 //!   fractions) until it adopts a migrant itself.
+//! * **LogFit early stopping** (`BenchmarkConfig::early_stop`): after
+//!   each validation epoch past `early_stop_min_epochs` the lane fits
+//!   the trial's partial learning curve
+//!   ([`crate::predict::LearningCurve`], the paper's Appendix-C log
+//!   fit) and extrapolates it to the convergence horizon. When even the
+//!   optimistic error floor cannot beat the best model known to this
+//!   shard by `early_stop_margin`, the trial is doomed: a deterministic
+//!   [`ShardEvent::EarlyStopped`] finalizes it early, and the freed
+//!   lane re-enters the search loop immediately — where it is a fresh
+//!   steal victim or migrant-adoption opportunity for the elastic
+//!   passes above. With the knob off (the default) no curve is ever
+//!   fitted and schedules are byte-identical to a build without the
+//!   feature.
 //!
 //! Shards advance independently inside an epoch-barrier window
 //! (`BenchmarkConfig::sync_interval_s`) against a frozen
@@ -72,11 +88,12 @@ use crate::coordinator::sched::{
 };
 use crate::coordinator::trial::{ActiveTrial, TrialStatus};
 use crate::flops::OpWeights;
-use crate::hpo::{aiperf_space, Optimizer, Tpe};
+use crate::hpo::{aiperf_space, Optimizer};
 use crate::metrics::telemetry::NodeReading;
 use crate::nas::graph::Architecture;
 use crate::nas::search::{RankedModel, SearchPolicy};
 use crate::predict::logfit::LogFit;
+use crate::predict::LearningCurve;
 use crate::sim::accuracy::{arch_id, AccuracySurrogate, HpPoint};
 use crate::sim::engine::EventQueue;
 use crate::sim::timing::TimingModel;
@@ -94,6 +111,13 @@ pub enum ShardEvent {
     /// bumping the generation and scheduling a replacement, so a stale
     /// event is recognizable and dropped on pop.
     EpochDone { sub: usize, gen: u64 },
+    /// The lane's learning-curve extrapolation declared the in-flight
+    /// trial doomed (`BenchmarkConfig::early_stop`): finalize it now
+    /// instead of training out its epoch budget. Carries the same epoch
+    /// generation as `EpochDone` so a steal re-timing that lands in
+    /// between supersedes the termination (the widened ring changes the
+    /// trial's economics, so the doomed verdict is stale with it).
+    EarlyStopped { sub: usize, gen: u64 },
     /// Telemetry sampling tick for one lane.
     Telemetry { sub: usize },
 }
@@ -184,7 +208,12 @@ struct SubShard {
     /// Devices this lane trains on when running solo.
     gpus: u64,
     round: u64,
-    tpe: Tpe,
+    /// The lane's hyperparameter optimizer — a trait object from
+    /// [`crate::hpo::build`], selected by the `hpo` config key (with the
+    /// lane's group override). TPE by default; every backend draws from
+    /// the lane's RNG stream at `suggest` time, so the default draws
+    /// exactly the stream the old concrete `Tpe` field drew.
+    opt: Box<dyn Optimizer>,
     rng: Rng,
     tele_rng: Rng,
     dispatcher: Dispatcher,
@@ -286,6 +315,16 @@ pub struct SlaveShard {
     /// Steal events whose victim was an adopted migrant (steal-into-
     /// migrant ring joins; subset of `steals`).
     pub migrant_ring_joins: u64,
+    /// Trials terminated by the learning-curve rule (report counter;
+    /// zero unless `BenchmarkConfig::early_stop`).
+    pub early_stops: u64,
+    /// Budgeted epochs the early-stopped trials never trained — the
+    /// device time the rule handed back to the search (report counter).
+    pub epochs_saved: u64,
+    /// Error of the best model this shard knows of: the top of the last
+    /// barrier snapshot merged with its own window completions. Only
+    /// the early-stop rule reads it.
+    best_error: Option<f64>,
     subs: Vec<SubShard>,
     /// Window outputs, drained by the coordinator at each barrier.
     pub completed: Vec<ModelRecord>,
@@ -323,7 +362,10 @@ impl SlaveShard {
                 unit,
                 gpus: lane_gpus,
                 round: 0,
-                tpe: Tpe::new(aiperf_space()),
+                // `seed ^ unit` only de-phases deterministic backends
+                // (grid's lattice cursor); the stochastic ones draw from
+                // the lane RNG below and ignore it.
+                opt: crate::hpo::build(cfg.group_hpo(group), aiperf_space(), cfg.seed ^ unit),
                 rng: derive(cfg.seed, "slave", unit),
                 tele_rng: derive(cfg.seed, "telemetry", unit),
                 dispatcher: Dispatcher::new(),
@@ -376,6 +418,9 @@ impl SlaveShard {
             feedback_outbox: Vec::new(),
             feedback_routed: 0,
             migrant_ring_joins: 0,
+            early_stops: 0,
+            epochs_saved: 0,
+            best_error: None,
             subs,
             completed: Vec::new(),
             epoch_ops: Vec::new(),
@@ -435,12 +480,12 @@ impl SlaveShard {
     }
 
     /// Deliver a migrated trial's observation back into the source
-    /// lane's TPE (feedback-router dispatch at an epoch barrier): the
-    /// lane's optimizer sees the result of its own suggestion exactly as
-    /// if the trial had trained locally.
+    /// lane's optimizer (feedback-router dispatch at an epoch barrier):
+    /// the lane's optimizer sees the result of its own suggestion
+    /// exactly as if the trial had trained locally.
     pub fn inject_feedback(&mut self, obs: &RoutedObservation) {
         let lane = &mut self.subs[obs.to_sub];
-        lane.tpe.observe(vec![obs.hp.dropout, obs.hp.kernel], obs.loss);
+        lane.opt.observe(vec![obs.hp.dropout, obs.hp.kernel], obs.loss);
         self.feedback_routed += 1;
     }
 
@@ -571,6 +616,16 @@ impl SlaveShard {
     /// Advance this shard's local event loop up to (and including)
     /// `window_end`. Events past the benchmark duration stay unpopped.
     pub fn run_until(&mut self, window_end: f64, snapshot: &HistorySnapshot, ctx: &SimContext) {
+        // The incumbent the early-stop rule competes against: the top of
+        // the frozen snapshot, folded into whatever this shard already
+        // knew (its own window completions keep updating it below).
+        if let Some(&i) = snapshot.sorted.last() {
+            let r = &snapshot.ranked[i as usize];
+            if !r.penalty {
+                let e = 1.0 - r.accuracy;
+                self.best_error = Some(self.best_error.map_or(e, |b| b.min(e)));
+            }
+        }
         while let Some(t) = self.queue.peek_time() {
             if t > window_end {
                 break;
@@ -579,6 +634,7 @@ impl SlaveShard {
             match ev {
                 ShardEvent::NodeReady { sub } => self.on_node_ready(t, sub, snapshot, ctx),
                 ShardEvent::EpochDone { sub, gen } => self.on_epoch_done(t, sub, gen, ctx),
+                ShardEvent::EarlyStopped { sub, gen } => self.on_early_stopped(t, sub, gen, ctx),
                 ShardEvent::Telemetry { sub } => self.on_telemetry(t, sub, ctx),
             }
         }
@@ -777,15 +833,16 @@ impl SlaveShard {
         setup += timing.nfs.write_seconds(2048, &mut self.nfs);
         setup += timing.nfs.read_seconds(2048, &mut self.nfs);
 
-        let hp = if cfg.warmup.hpo_active(round) {
-            let lane = &mut self.subs[sub];
-            let c = lane.tpe.suggest(&mut lane.rng);
-            HpPoint {
+        let lane = &mut self.subs[sub];
+        let hp = match ctx
+            .policy
+            .suggest_hp(lane.opt.as_mut(), cfg.warmup.hpo_active(round), &mut lane.rng)
+        {
+            Some(c) => HpPoint {
                 dropout: c[0],
                 kernel: c[1],
-            }
-        } else {
-            HpPoint::default()
+            },
+            None => HpPoint::default(),
         };
         (cand, setup, hp, round)
     }
@@ -926,7 +983,7 @@ impl SlaveShard {
             self.oom_skips += 1;
             if cfg.warmup.hpo_active(round) {
                 let lane = &mut self.subs[sub];
-                lane.tpe.observe(vec![hp.dropout, hp.kernel], 1.0);
+                lane.opt.observe(vec![hp.dropout, hp.kernel], 1.0);
             }
             self.push_oom_penalty(t, cand, params, hp, round, ctx);
             self.subs[sub].round -= 1; // the skipped proposal is not a round
@@ -1014,99 +1071,168 @@ impl SlaveShard {
         let next_epoch_end = t + self.subs[sub].epoch_seconds;
 
         if status == TrialStatus::Continue && next_epoch_end <= cfg.duration_s {
+            if self.curve_says_doomed(sub, ctx) {
+                // The verdict fires as its own deterministic event, at
+                // this same timestamp and generation: a steal re-timing
+                // that lands in between bumps the generation and
+                // supersedes it (the widened ring changes the trial's
+                // economics).
+                self.queue.schedule(t, ShardEvent::EarlyStopped { sub, gen });
+                return;
+            }
             self.subs[sub].epoch_end_t = next_epoch_end;
             self.queue
                 .schedule(next_epoch_end, ShardEvent::EpochDone { sub, gen });
         } else {
-            // --- Trial complete: record into the window output.
-            let trial = self.subs[sub].trial.take().unwrap();
-            let migrant_from = self.subs[sub].migrant_from.take();
-            let warmup_round = !cfg.warmup.hpo_active(trial.round);
-            let (accuracy, predicted) = if warmup_round
-                && trial.epoch < cfg.warmup.max_epochs
-                && trial.accs.len() >= 2
-            {
-                // Appendix C: conservative log-fit prediction.
-                let (es, accs) = trial.curve();
-                (LogFit::fit(&es, &accs).conservative(60.0), true)
-            } else {
-                (trial.best_accuracy(), false)
-            };
-            let ops_spent = (trial.ops.train_per_image() as f64
-                * cfg.dataset.train_images as f64
-                + trial.ops.val_per_image() as f64 * cfg.dataset.val_images as f64)
-                * trial.epoch as f64;
-            // An adopted trial's hyperparameters came from the source
-            // lane's TPE; feeding them into this lane's model would
-            // corrupt its stream, so only native trials observe locally.
-            // With feedback routing on, the observation instead travels
-            // back to the source lane at the next barrier — exactly when
-            // a native trial of that round would have observed.
-            if cfg.warmup.hpo_active(trial.round) && !migrated {
-                let lane = &mut self.subs[sub];
-                lane.tpe.observe(
-                    vec![trial.hp.dropout, trial.hp.kernel],
-                    1.0 - trial.best_accuracy(),
-                );
-            } else if migrated && cfg.feedback_routing && cfg.warmup.hpo_active(trial.round) {
-                let (to_node, to_sub, _) =
-                    migrant_from.expect("migrated trial lost its source coordinates");
-                self.feedback_outbox.push(RoutedObservation {
-                    to_node,
-                    to_sub,
-                    hp: trial.hp,
-                    loss: 1.0 - trial.best_accuracy(),
-                });
-            }
-            // Record provenance: with the loop closed, a migrated trial
-            // belongs to the search that proposed it — the source lane's
-            // node and group — not to the hardware that executed it.
-            let (rec_node, rec_group) = match migrant_from {
-                Some((n, _, g)) if cfg.feedback_routing => (n, g),
-                _ => (self.node, self.group),
-            };
-            self.completed.push(ModelRecord {
-                id: trial.trial_id,
-                signature: trial.arch.signature(),
-                params: trial.params,
-                measured_accuracy: trial.best_accuracy(),
-                arch: Arc::new(trial.arch),
-                accuracy,
-                predicted,
-                penalty: false,
-                node: rec_node,
-                group: rec_group,
-                round: trial.round,
-                epochs_trained: trial.epoch,
-                ops: ops_spent,
-                dropout: trial.hp.dropout,
-                kernel: trial.hp.kernel,
-                completed_at: t,
-            });
-            let local = self.subs[sub].current_local;
-            let _ = self.subs[sub].dispatcher.complete(local, self.node);
-            debug_assert!(self.subs[sub].dispatcher.check_invariants().is_ok());
-            // Close the lane's busy interval and clear any migration
-            // markers before it reschedules itself.
-            let lane = &mut self.subs[sub];
-            lane.migrated = false;
-            lane.migrant_epoch_overhead_s = 0.0;
-            lane.parked = false;
-            if let Some(b) = lane.busy_since.take() {
-                lane.busy_s += t - b;
-            }
-            // Release any helper lanes back to their own search loops
-            // before this lane reschedules itself.
-            let helpers: Vec<usize> = std::mem::take(&mut self.subs[sub].helpers);
-            for h in helpers {
-                self.subs[h].assisting = None;
-                if let Some(b) = self.subs[h].busy_since.take() {
-                    self.subs[h].busy_s += t - b;
-                }
-                self.queue.schedule(t, ShardEvent::NodeReady { sub: h });
-            }
-            self.queue.schedule(t, ShardEvent::NodeReady { sub });
+            self.finalize_trial(t, sub, ctx);
         }
+    }
+
+    /// The LogFit early-stop rule (`BenchmarkConfig::early_stop`): fit
+    /// the lane's partial learning curve and declare the trial doomed
+    /// when even the optimistic error floor at the convergence horizon
+    /// ([`LearningCurve::converged_floor`]) cannot beat the best model
+    /// this shard knows of by `early_stop_margin`. Consumes no RNG, so
+    /// the knob is provably inert when off.
+    fn curve_says_doomed(&self, sub: usize, ctx: &SimContext) -> bool {
+        let cfg = ctx.cfg;
+        if !cfg.early_stop {
+            return false;
+        }
+        let Some(best) = self.best_error else {
+            return false; // no incumbent yet: nothing to compete against
+        };
+        let Some(trial) = self.subs[sub].trial.as_ref() else {
+            return false;
+        };
+        if trial.epoch < cfg.early_stop_min_epochs || trial.accs.len() < 2 {
+            return false;
+        }
+        let mut lc = LearningCurve::new();
+        for (i, &a) in trial.accs.iter().enumerate() {
+            lc.observe(i as u64 + 1, 1.0 - a);
+        }
+        lc.converged_floor() > best + cfg.early_stop_margin
+    }
+
+    /// An early-stop verdict arrived for lane `sub`'s in-flight trial:
+    /// count it, credit the epochs its budget would still have trained,
+    /// and finalize it now — the freed lane's `NodeReady` makes it an
+    /// immediate steal victim / migrant-adoption opportunity.
+    fn on_early_stopped(&mut self, t: f64, sub: usize, gen: u64, ctx: &SimContext) {
+        if gen != self.subs[sub].epoch_gen {
+            return; // superseded by a steal re-timing
+        }
+        let Some(trial) = self.subs[sub].trial.as_ref() else {
+            return; // defensive: verdict outlived its trial
+        };
+        self.early_stops += 1;
+        self.epochs_saved += trial.epoch_budget.saturating_sub(trial.epoch);
+        self.finalize_trial(t, sub, ctx);
+    }
+
+    /// Finalize the lane's in-flight trial into the window output —
+    /// shared by budget/patience completion (`on_epoch_done`) and the
+    /// early-stop verdict (`on_early_stopped`), so the two paths cannot
+    /// drift: Appendix-C accuracy prediction for short warm-up trials,
+    /// the optimizer observation (local, or routed back to a migrant's
+    /// source lane), the history record, helper-lane release, and the
+    /// lane's next `NodeReady`.
+    fn finalize_trial(&mut self, t: f64, sub: usize, ctx: &SimContext) {
+        let cfg = ctx.cfg;
+        let migrated = self.subs[sub].migrated;
+        // --- Trial complete: record into the window output.
+        let trial = self.subs[sub].trial.take().unwrap();
+        let migrant_from = self.subs[sub].migrant_from.take();
+        let warmup_round = !cfg.warmup.hpo_active(trial.round);
+        let (accuracy, predicted) = if warmup_round
+            && trial.epoch < cfg.warmup.max_epochs
+            && trial.accs.len() >= 2
+        {
+            // Appendix C: conservative log-fit prediction.
+            let (es, accs) = trial.curve();
+            (LogFit::fit(&es, &accs).conservative(60.0), true)
+        } else {
+            (trial.best_accuracy(), false)
+        };
+        let ops_spent = (trial.ops.train_per_image() as f64
+            * cfg.dataset.train_images as f64
+            + trial.ops.val_per_image() as f64 * cfg.dataset.val_images as f64)
+            * trial.epoch as f64;
+        // An adopted trial's hyperparameters came from the source
+        // lane's optimizer; feeding them into this lane's model would
+        // corrupt its stream, so only native trials observe locally.
+        // With feedback routing on, the observation instead travels
+        // back to the source lane at the next barrier — exactly when
+        // a native trial of that round would have observed.
+        if cfg.warmup.hpo_active(trial.round) && !migrated {
+            let lane = &mut self.subs[sub];
+            lane.opt.observe(
+                vec![trial.hp.dropout, trial.hp.kernel],
+                1.0 - trial.best_accuracy(),
+            );
+        } else if migrated && cfg.feedback_routing && cfg.warmup.hpo_active(trial.round) {
+            let (to_node, to_sub, _) =
+                migrant_from.expect("migrated trial lost its source coordinates");
+            self.feedback_outbox.push(RoutedObservation {
+                to_node,
+                to_sub,
+                hp: trial.hp,
+                loss: 1.0 - trial.best_accuracy(),
+            });
+        }
+        // Record provenance: with the loop closed, a migrated trial
+        // belongs to the search that proposed it — the source lane's
+        // node and group — not to the hardware that executed it.
+        let (rec_node, rec_group) = match migrant_from {
+            Some((n, _, g)) if cfg.feedback_routing => (n, g),
+            _ => (self.node, self.group),
+        };
+        self.completed.push(ModelRecord {
+            id: trial.trial_id,
+            signature: trial.arch.signature(),
+            params: trial.params,
+            measured_accuracy: trial.best_accuracy(),
+            arch: Arc::new(trial.arch),
+            accuracy,
+            predicted,
+            penalty: false,
+            node: rec_node,
+            group: rec_group,
+            round: trial.round,
+            epochs_trained: trial.epoch,
+            ops: ops_spent,
+            dropout: trial.hp.dropout,
+            kernel: trial.hp.kernel,
+            completed_at: t,
+        });
+        // Fold the fresh result into the shard's incumbent (the
+        // early-stop rule's competitor) without waiting for a barrier.
+        let e = 1.0 - accuracy;
+        self.best_error = Some(self.best_error.map_or(e, |b| b.min(e)));
+        let local = self.subs[sub].current_local;
+        let _ = self.subs[sub].dispatcher.complete(local, self.node);
+        debug_assert!(self.subs[sub].dispatcher.check_invariants().is_ok());
+        // Close the lane's busy interval and clear any migration
+        // markers before it reschedules itself.
+        let lane = &mut self.subs[sub];
+        lane.migrated = false;
+        lane.migrant_epoch_overhead_s = 0.0;
+        lane.parked = false;
+        if let Some(b) = lane.busy_since.take() {
+            lane.busy_s += t - b;
+        }
+        // Release any helper lanes back to their own search loops
+        // before this lane reschedules itself.
+        let helpers: Vec<usize> = std::mem::take(&mut self.subs[sub].helpers);
+        for h in helpers {
+            self.subs[h].assisting = None;
+            if let Some(b) = self.subs[h].busy_since.take() {
+                self.subs[h].busy_s += t - b;
+            }
+            self.queue.schedule(t, ShardEvent::NodeReady { sub: h });
+        }
+        self.queue.schedule(t, ShardEvent::NodeReady { sub });
     }
 
     /// One telemetry tick: sample this lane's utilization (per-lane jitter

@@ -21,7 +21,7 @@ pub struct Evolutionary {
 }
 
 impl Evolutionary {
-    pub fn new(space: SearchSpace) -> Self {
+    pub(crate) fn new(space: SearchSpace) -> Self {
         Evolutionary {
             space,
             history: Vec::new(),

@@ -21,7 +21,7 @@ pub struct GridSearch {
 }
 
 impl GridSearch {
-    pub fn new(space: SearchSpace, points_per_dim: usize) -> Self {
+    pub(crate) fn new(space: SearchSpace, points_per_dim: usize) -> Self {
         assert!(points_per_dim >= 2);
         let levels: Vec<Vec<f64>> = space
             .params
@@ -53,6 +53,14 @@ impl GridSearch {
     /// Number of lattice points.
     pub fn lattice_size(&self) -> usize {
         self.total
+    }
+
+    /// Start the lattice walk at `i` instead of the origin (suggestions
+    /// already wrap modulo the lattice size). `hpo::build` uses this to
+    /// de-phase seed-differentiated grid walkers.
+    pub(crate) fn with_cursor(mut self, i: usize) -> Self {
+        self.cursor = i;
+        self
     }
 
     fn point(&self, mut idx: usize) -> Config {

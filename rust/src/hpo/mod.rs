@@ -10,6 +10,13 @@
 //! The benchmark's search space (Appendix A): dropout rate ∈ [0.2, 0.8]
 //! and kernel size ∈ [2, 5]; batch size is fixed at the suggested 448
 //! after the separate Fig 7a study.
+//!
+//! The one public construction path is [`build`]: a [`Backend`] kind
+//! (the `hpo = tpe|evolutionary|random|grid` config knob) plus the
+//! search space and the seed yield a boxed [`Optimizer`]. The concrete
+//! constructors are `pub(crate)` so the trait object is the only way
+//! out of this module — benches, examples, and the engine all go
+//! through the same factory.
 
 pub mod evolutionary;
 pub mod grid;
@@ -34,6 +41,70 @@ pub trait Optimizer {
     fn observe(&mut self, config: Config, loss: f64);
     /// Best (config, loss) seen so far.
     fn best(&self) -> Option<&Observation>;
+}
+
+/// The selectable HPO backend — the value space of the `hpo` config key
+/// (global or per-`[group.NAME]`) and the `--hpo` CLI flag. The paper
+/// fixes TPE (Fig 7b); the others are the comparison baselines promoted
+/// to first-class citizens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    #[default]
+    Tpe,
+    Evolutionary,
+    Random,
+    Grid,
+}
+
+impl Backend {
+    /// Parse the config/CLI spelling.
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s {
+            "tpe" => Ok(Backend::Tpe),
+            "evolutionary" => Ok(Backend::Evolutionary),
+            "random" => Ok(Backend::Random),
+            "grid" => Ok(Backend::Grid),
+            other => Err(format!(
+                "unknown hpo backend `{other}` (expected tpe|evolutionary|random|grid)"
+            )),
+        }
+    }
+
+    /// The canonical spelling (what `to_text` emits).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::Tpe => "tpe",
+            Backend::Evolutionary => "evolutionary",
+            Backend::Random => "random",
+            Backend::Grid => "grid",
+        }
+    }
+}
+
+/// Grid resolution used by [`build`] for continuous dimensions: 5
+/// levels per parameter (integer parameters enumerate every integral
+/// level regardless).
+pub const GRID_POINTS_PER_DIM: usize = 5;
+
+/// The factory: the only public construction path for an optimizer.
+///
+/// TPE, evolutionary, and random draw every random number from the
+/// caller's RNG stream at `suggest` time, so they carry no seed of
+/// their own — `seed` only de-phases deterministic backends. Grid
+/// search starts its lattice walk at `seed % lattice_size`, so lanes
+/// with different seeds cover different lattice prefixes instead of
+/// all re-evaluating the same corner.
+pub fn build(kind: Backend, space: SearchSpace, seed: u64) -> Box<dyn Optimizer> {
+    match kind {
+        Backend::Tpe => Box::new(Tpe::new(space)),
+        Backend::Evolutionary => Box::new(Evolutionary::new(space)),
+        Backend::Random => Box::new(RandomSearch::new(space)),
+        Backend::Grid => {
+            let g = GridSearch::new(space, GRID_POINTS_PER_DIM);
+            let offset = (seed % g.lattice_size() as u64) as usize;
+            Box::new(g.with_cursor(offset))
+        }
+    }
 }
 
 /// AIPerf's fixed HPO space: dropout ∈ [0.2,0.8], kernel ∈ {2..5}.
@@ -66,5 +137,82 @@ mod tests {
         assert_eq!(s.params.len(), 2);
         assert_eq!(s.params[0].name, "dropout");
         assert!(s.params[1].integer);
+    }
+
+    #[test]
+    fn backend_spellings_round_trip() {
+        for b in [
+            Backend::Tpe,
+            Backend::Evolutionary,
+            Backend::Random,
+            Backend::Grid,
+        ] {
+            assert_eq!(Backend::parse(b.as_str()), Ok(b));
+        }
+        assert_eq!(Backend::default(), Backend::Tpe);
+        assert!(Backend::parse("bayes").is_err());
+        assert!(Backend::parse("TPE").is_err(), "spellings are lowercase");
+    }
+
+    #[test]
+    fn built_tpe_draws_the_same_stream_as_a_direct_tpe() {
+        // The factory must be a pure repackaging: a boxed TPE from
+        // `build` and a directly-constructed `Tpe` consume identical
+        // RNG streams and emit identical suggestions — the regression
+        // guarantee behind swapping `SubShard`'s concrete field for the
+        // trait object.
+        use crate::util::rng::derive;
+        let mut boxed = build(Backend::Tpe, aiperf_space(), 12345);
+        let mut direct = Tpe::new(aiperf_space());
+        let mut r1 = derive(9, "factory", 0);
+        let mut r2 = derive(9, "factory", 0);
+        for i in 0..20 {
+            let a = boxed.suggest(&mut r1);
+            let b = direct.suggest(&mut r2);
+            assert_eq!(a, b, "suggestion {i} diverged");
+            let loss = 0.5 + (i as f64) * 0.01;
+            boxed.observe(a, loss);
+            direct.observe(b, loss);
+        }
+        assert_eq!(
+            r1.gen_f64().to_bits(),
+            r2.gen_f64().to_bits(),
+            "RNG streams diverged"
+        );
+    }
+
+    #[test]
+    fn built_grid_offsets_its_cursor_by_seed() {
+        use crate::util::rng::derive;
+        let mut rng = derive(0, "grid-seeded", 0);
+        let mut zero = build(Backend::Grid, aiperf_space(), 0);
+        let mut shifted = build(Backend::Grid, aiperf_space(), 3);
+        let first_zero = zero.suggest(&mut rng);
+        let first_shifted = shifted.suggest(&mut rng);
+        assert_ne!(first_zero, first_shifted, "seed must de-phase the walk");
+        // 20-point lattice: seed 20 wraps back to the seed-0 start.
+        let mut wrapped = build(Backend::Grid, aiperf_space(), 20);
+        assert_eq!(wrapped.suggest(&mut rng), first_zero);
+    }
+
+    #[test]
+    fn every_backend_builds_and_respects_the_space() {
+        use crate::util::rng::derive;
+        let space = aiperf_space();
+        for kind in [
+            Backend::Tpe,
+            Backend::Evolutionary,
+            Backend::Random,
+            Backend::Grid,
+        ] {
+            let mut opt = build(kind, space.clone(), 7);
+            let mut rng = derive(3, "all-backends", 0);
+            for i in 0..30 {
+                let c = opt.suggest(&mut rng);
+                assert!(space.contains(&c), "{kind:?} iter {i}: {c:?}");
+                opt.observe(c, 1.0 - 0.001 * i as f64);
+            }
+            assert!(opt.best().is_some());
+        }
     }
 }

@@ -12,7 +12,7 @@ pub struct RandomSearch {
 }
 
 impl RandomSearch {
-    pub fn new(space: SearchSpace) -> Self {
+    pub(crate) fn new(space: SearchSpace) -> Self {
         RandomSearch {
             space,
             history: Vec::new(),

@@ -27,7 +27,7 @@ pub struct Tpe {
 }
 
 impl Tpe {
-    pub fn new(space: SearchSpace) -> Self {
+    pub(crate) fn new(space: SearchSpace) -> Self {
         Tpe {
             space,
             history: Vec::new(),

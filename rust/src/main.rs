@@ -24,6 +24,7 @@ USAGE:
                  [--engine sequential|parallel] [--config FILE]
                  [--subshards K] [--work-stealing [on|off]]
                  [--migration [on|off]] [--feedback-routing [on|off]]
+                 [--hpo tpe|evolutionary|random|grid] [--early-stop [on|off]]
                  [--stream-report OUT.ndjson]
                  [--json OUT] [--csv OUT] [--chart] [--list-scenarios]
         Simulated benchmark on the modelled cluster (Figs 4-6, 9-12).
@@ -63,6 +64,20 @@ USAGE:
         accelerator refused the candidate, and a stranded sibling lane
         may steal into an adopted migrant's InfiniBand gradient ring.
         Turning it off reproduces the pre-feedback schedules exactly.
+        `--hpo` (config key `hpo`, default `tpe`) selects the search
+        backend every lane proposes candidates with — the paper's TPE
+        or one of its Fig-7b baselines (`evolutionary`, `random`,
+        `grid`); `[group.NAME]` sections may override it per group.
+        `--early-stop` (config key `early_stop`, OFF by default) turns
+        on LogFit learning-curve early stopping: after each validation
+        epoch past `early_stop_min_epochs` the lane extrapolates the
+        trial's curve to the convergence horizon and terminates it when
+        even the optimistic error floor cannot beat the incumbent best
+        by `early_stop_margin` — the freed lane immediately becomes a
+        steal victim or migrant-adoption opportunity, and per-group
+        `early_stops` / `epochs_saved` counters appear on every report
+        surface. With the flag off, schedules are byte-identical to a
+        build without the feature.
         Per-group migrations in/out, overhead seconds, routed-feedback
         and ring-join counters appear in the summary and JSON, and the
         JSON report adds per-lane busy fractions (rendered as ASCII bars
@@ -114,8 +129,14 @@ struct Flags {
 /// Flags that take no value (or an optional on/off); every other flag
 /// still requires one, so a forgotten value fails up front instead of
 /// mid-run.
-const BOOLEAN_FLAGS: &[&str] =
-    &["chart", "list-scenarios", "work-stealing", "migration", "feedback-routing"];
+const BOOLEAN_FLAGS: &[&str] = &[
+    "chart",
+    "list-scenarios",
+    "work-stealing",
+    "migration",
+    "feedback-routing",
+    "early-stop",
+];
 
 /// Parse an on/off flag value (`--work-stealing`, `--work-stealing on`).
 fn parse_onoff(flag: &str, v: &str) -> Result<bool> {
@@ -195,7 +216,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     flags.reject_unknown(&[
         "scenario", "nodes", "hours", "seed", "engine", "config", "json", "csv", "chart",
         "list-scenarios", "subshards", "work-stealing", "migration", "feedback-routing",
-        "stream-report",
+        "hpo", "early-stop", "stream-report",
     ])?;
     if flags.get("list-scenarios").is_some() {
         cmd_scenarios();
@@ -241,6 +262,14 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     }
     if let Some(v) = flags.get("feedback-routing") {
         cfg.feedback_routing = parse_onoff("feedback-routing", v)?;
+    }
+    if let Some(v) = flags.get("hpo") {
+        // Sets the all-groups default; per-group `[group.NAME]` overrides
+        // from a --config file keep precedence.
+        cfg.hpo = aiperf::hpo::Backend::parse(v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(v) = flags.get("early-stop") {
+        cfg.early_stop = parse_onoff("early-stop", v)?;
     }
     if let Some(path) = flags.get("stream-report") {
         if path.is_empty() {

@@ -48,6 +48,14 @@ pub struct GroupBreakdown {
     /// epoch overshoots an epoch barrier, averaged over lanes × windows
     /// — the utilization headroom work stealing recovers.
     pub barrier_slack_s: f64,
+    /// Trials this group's lanes terminated early because the LogFit
+    /// learning-curve extrapolation declared them doomed
+    /// (`BenchmarkConfig::early_stop`). Zero when the knob is off.
+    pub early_stops: u64,
+    /// Training epochs those early stops skipped (budgeted minus
+    /// trained, summed over the group's early-stopped trials) — the
+    /// search-time the predictor bought back for fresh candidates.
+    pub epochs_saved: u64,
 }
 
 impl GroupBreakdown {
@@ -167,6 +175,8 @@ impl BenchmarkReport {
                             ("feedback_routed", num(g.feedback_routed as f64)),
                             ("migrant_ring_joins", num(g.migrant_ring_joins as f64)),
                             ("barrier_slack_s", num(g.barrier_slack_s)),
+                            ("early_stops", num(g.early_stops as f64)),
+                            ("epochs_saved", num(g.epochs_saved as f64)),
                         ])
                     })
                     .collect()),
@@ -262,6 +272,7 @@ impl BenchmarkReport {
         let migrated = self.groups.iter().any(|g| {
             g.migrations_in > 0 || g.migrations_out > 0 || g.migration_overhead_s > 0.0
         });
+        let early_stopped = self.groups.iter().any(|g| g.early_stops > 0);
         let mut out = String::new();
         for g in &self.groups {
             out.push_str(&format!(
@@ -288,6 +299,12 @@ impl BenchmarkReport {
                     g.migration_overhead_s,
                     g.feedback_routed,
                     g.migrant_ring_joins,
+                ));
+            }
+            if early_stopped {
+                out.push_str(&format!(
+                    " early_stops={} epochs_saved={}",
+                    g.early_stops, g.epochs_saved,
                 ));
             }
             out.push('\n');

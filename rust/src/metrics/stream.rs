@@ -219,6 +219,8 @@ impl<W: io::Write> ReportStream<W> {
                             ("feedback_routed", num(g.feedback_routed as f64)),
                             ("migrant_ring_joins", num(g.migrant_ring_joins as f64)),
                             ("barrier_slack_s", num(g.barrier_slack_s)),
+                            ("early_stops", num(g.early_stops as f64)),
+                            ("epochs_saved", num(g.epochs_saved as f64)),
                         ])
                     })
                     .collect()),
@@ -575,6 +577,8 @@ mod tests {
                 feedback_routed: 0,
                 migrant_ring_joins: 0,
                 barrier_slack_s: 0.0,
+                early_stops: 0,
+                epochs_saved: 0,
             }],
             lane_util: vec![LaneUtil {
                 group: "v100".to_string(),

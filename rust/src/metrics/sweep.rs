@@ -165,12 +165,15 @@ pub fn render_table(runs: &[SweepRun]) -> String {
 /// efficiency cell is empty exactly when the table renders `—`. The
 /// migration columns carry the elastic scheduler's per-group counters
 /// (summed over groups on the total row): adopted trials, dispatched
-/// trials, and the staging + IB-sync overhead seconds they paid.
+/// trials, and the staging + IB-sync overhead seconds they paid. The
+/// trailing early-stop columns carry the LogFit predictor's counters
+/// (`early_stops` terminations, `epochs_saved` skipped epochs) with the
+/// same totals-row summation.
 pub fn render_csv(runs: &[SweepRun]) -> String {
     let base = baselines(runs);
     let mut out = String::from(
         "scenario,group,nodes,devices,score_ops,ops_per_device,efficiency_pct,\
-         migrations_in,migrations_out,migration_overhead_s\n",
+         migrations_in,migrations_out,migration_overhead_s,early_stops,epochs_saved\n",
     );
     for run in runs {
         let r = &run.report;
@@ -181,14 +184,16 @@ pub fn render_csv(runs: &[SweepRun]) -> String {
         let mig_in: u64 = r.groups.iter().map(|g| g.migrations_in).sum();
         let mig_out: u64 = r.groups.iter().map(|g| g.migrations_out).sum();
         let overhead: f64 = r.groups.iter().map(|g| g.migration_overhead_s).sum();
+        let stops: u64 = r.groups.iter().map(|g| g.early_stops).sum();
+        let saved: u64 = r.groups.iter().map(|g| g.epochs_saved).sum();
         out.push_str(&format!(
-            "{},,{},{},{},{},{},{},{},{}\n",
+            "{},,{},{},{},{},{},{},{},{},{},{}\n",
             run.scenario, r.nodes, r.total_gpus, r.score_flops, per_device, eff, mig_in, mig_out,
-            overhead,
+            overhead, stops, saved,
         ));
         for (g, b) in group_rows(r).iter().zip(&r.groups) {
             out.push_str(&format!(
-                "{},{},{},{},{},{},,{},{},{}\n",
+                "{},{},{},{},{},{},,{},{},{},{},{}\n",
                 run.scenario,
                 g.label,
                 g.nodes,
@@ -198,6 +203,8 @@ pub fn render_csv(runs: &[SweepRun]) -> String {
                 b.migrations_in,
                 b.migrations_out,
                 b.migration_overhead_s,
+                b.early_stops,
+                b.epochs_saved,
             ));
         }
     }
@@ -232,6 +239,8 @@ mod tests {
                     feedback_routed: 0,
                     migrant_ring_joins: 0,
                     barrier_slack_s: 0.0,
+                    early_stops: 0,
+                    epochs_saved: 0,
                 })
                 .collect(),
             lane_util: Vec::new(),
@@ -323,7 +332,7 @@ mod tests {
         assert_eq!(
             lines[0],
             "scenario,group,nodes,devices,score_ops,ops_per_device,efficiency_pct,\
-             migrations_in,migrations_out,migration_overhead_s"
+             migrations_in,migrations_out,migration_overhead_s,early_stops,epochs_saved"
         );
         // 3 totals + 2 group rows under the heterogeneous entry.
         assert_eq!(lines.len(), 6);
@@ -333,11 +342,14 @@ mod tests {
         assert!(lines[4].starts_with("mixed,v100,2,16,"));
         // The unique mix's efficiency cell is empty (`,,` before the
         // migration columns); same-mix entries get a number.
-        assert!(lines[2].contains(",,0,0,0"), "unique mix keeps the cell empty");
+        assert!(
+            lines[2].contains(",,0,0,0,0,0"),
+            "unique mix keeps the cell empty"
+        );
         assert!(lines[1].contains(",100,"), "baseline row reads 100");
         // Every row has the same column count.
         for l in &lines[1..] {
-            assert_eq!(l.matches(',').count(), 9, "row {l}");
+            assert_eq!(l.matches(',').count(), 11, "row {l}");
         }
     }
 
@@ -354,10 +366,30 @@ mod tests {
         let csv = render_csv(&runs);
         let lines: Vec<&str> = csv.lines().collect();
         // Totals row sums the group counters.
-        assert!(lines[1].ends_with(",2,3,4.5"), "totals row: {}", lines[1]);
+        assert!(lines[1].ends_with(",2,3,4.5,0,0"), "totals row: {}", lines[1]);
         // Group rows carry their own counters after the empty efficiency
         // cell.
-        assert!(lines[2].ends_with(",,0,3,0"), "t4 row: {}", lines[2]);
-        assert!(lines[3].ends_with(",,2,0,4.5"), "v100 row: {}", lines[3]);
+        assert!(lines[2].ends_with(",,0,3,0,0,0"), "t4 row: {}", lines[2]);
+        assert!(lines[3].ends_with(",,2,0,4.5,0,0"), "v100 row: {}", lines[3]);
+    }
+
+    #[test]
+    fn csv_early_stop_columns_carry_group_counters() {
+        let mut r = report(&[("t4", 2, 8), ("v100", 2, 8)], 10.0e12);
+        r.groups[0].early_stops = 4;
+        r.groups[0].epochs_saved = 31;
+        r.groups[1].early_stops = 1;
+        r.groups[1].epochs_saved = 6;
+        let runs = vec![SweepRun {
+            scenario: "predict".to_string(),
+            report: r,
+        }];
+        let csv = render_csv(&runs);
+        let lines: Vec<&str> = csv.lines().collect();
+        // Totals row sums the predictor's counters across groups.
+        assert!(lines[1].ends_with(",0,0,0,5,37"), "totals row: {}", lines[1]);
+        // Group rows carry their own counters in the trailing columns.
+        assert!(lines[2].ends_with(",4,31"), "t4 row: {}", lines[2]);
+        assert!(lines[3].ends_with(",1,6"), "v100 row: {}", lines[3]);
     }
 }

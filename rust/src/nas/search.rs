@@ -25,6 +25,7 @@
 
 use std::sync::Arc;
 
+use crate::hpo::{Config, Optimizer};
 use crate::util::rng::Rng;
 
 use super::graph::Architecture;
@@ -326,6 +327,26 @@ impl SearchPolicy {
         r
     }
 
+    /// Draw the next hyperparameter configuration for a trial from the
+    /// lane's optimizer — any [`crate::hpo::Backend`] behind the
+    /// [`Optimizer`] trait object. `None` during warm-up rounds
+    /// (`active` false): defaults apply and neither the optimizer nor
+    /// the RNG stream is touched. This is the single path between the
+    /// engine and an HPO backend, so every backend sees the identical
+    /// call order regardless of which one the `hpo` knob selected —
+    /// what keeps Sequential/Parallel bit-identical per backend.
+    pub fn suggest_hp(
+        &self,
+        opt: &mut dyn Optimizer,
+        active: bool,
+        rng: &mut Rng,
+    ) -> Option<Config> {
+        if !active {
+            return None;
+        }
+        Some(opt.suggest(rng))
+    }
+
     /// Generate one child architecture from the history (the unit of work a
     /// slave-node CPU performs before pushing into the buffer).
     pub fn propose(
@@ -440,6 +461,32 @@ mod tests {
                 group: 0,
             })
             .collect()
+    }
+
+    #[test]
+    fn suggest_hp_is_a_transparent_shim_over_the_optimizer() {
+        // The policy hop must not perturb the stream: active suggestions
+        // equal a direct `suggest` on the same optimizer state draw for
+        // draw, and warm-up rounds consume nothing — the regression
+        // guarantee that routing TPE through the trait object keeps the
+        // engine's historic RNG stream.
+        use crate::hpo::{aiperf_space, build, Backend};
+        let policy = SearchPolicy::default();
+        let mut through = build(Backend::Tpe, aiperf_space(), 0);
+        let mut direct = build(Backend::Tpe, aiperf_space(), 0);
+        let mut r1 = derive(5, "suggest-hp", 0);
+        let mut r2 = derive(5, "suggest-hp", 0);
+        assert!(policy.suggest_hp(through.as_mut(), false, &mut r1).is_none());
+        for i in 0..12 {
+            let a = policy
+                .suggest_hp(through.as_mut(), true, &mut r1)
+                .expect("active round must suggest");
+            let b = direct.suggest(&mut r2);
+            assert_eq!(a, b, "draw {i} diverged");
+            through.observe(a, 0.4);
+            direct.observe(b, 0.4);
+        }
+        assert_eq!(r1.gen_f64().to_bits(), r2.gen_f64().to_bits());
     }
 
     #[test]

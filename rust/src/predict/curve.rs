@@ -1,0 +1,162 @@
+//! A trial's learning curve in the error domain — the one shared
+//! implementation behind the engine's early-stop decision and the Fig 8
+//! accuracy-prediction bench.
+//!
+//! [`LearningCurve`] accumulates `(epoch, validation error)` points and
+//! answers extrapolation questions through the paper's logarithmic OLS
+//! fit ([`LogFit`], Appendix C). Keeping both consumers on this type
+//! means the early-stop rule and the fig8 reproduction can never drift
+//! apart on how a partial curve is turned into a convergence estimate.
+
+use super::logfit::LogFit;
+
+/// The epoch the paper treats as "converged" for ImageNet-class models
+/// (Appendix C predicts achievable accuracy at epoch 60).
+pub const CONVERGENCE_EPOCH: f64 = 60.0;
+
+/// Observed partial learning curve of one trial, in validation-error
+/// terms (lower is better — the optimizer-facing convention).
+#[derive(Debug, Clone, Default)]
+pub struct LearningCurve {
+    epochs: Vec<f64>,
+    errors: Vec<f64>,
+}
+
+impl LearningCurve {
+    pub fn new() -> Self {
+        LearningCurve::default()
+    }
+
+    /// Record one validation epoch's error. Epochs are 1-based (the log
+    /// fit is undefined at 0) and must arrive in increasing order.
+    pub fn observe(&mut self, epoch: u64, error: f64) {
+        assert!(epoch >= 1, "epochs are 1-based");
+        if let Some(&last) = self.epochs.last() {
+            assert!((epoch as f64) > last, "epochs must increase");
+        }
+        self.epochs.push(epoch as f64);
+        self.errors.push(error);
+    }
+
+    /// Points observed so far.
+    pub fn len(&self) -> usize {
+        self.epochs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.epochs.is_empty()
+    }
+
+    /// Whether enough of the curve exists to fit (the OLS needs ≥ 2
+    /// points).
+    pub fn can_fit(&self) -> bool {
+        self.epochs.len() >= 2
+    }
+
+    /// The paper's logarithmic fit over the observed curve, in the
+    /// *accuracy* domain (`acc(e) = a + b·ln(e)`): the fig8 bench reads
+    /// `a`/`b`/`rmse` straight off it. Requires [`Self::can_fit`].
+    pub fn fit(&self) -> LogFit {
+        let accs: Vec<f64> = self.errors.iter().map(|e| 1.0 - e).collect();
+        LogFit::fit(&self.epochs, &accs)
+    }
+
+    /// Fitted validation error at a future epoch, clamped to [0, 1].
+    pub fn extrapolate(&self, to_epoch: f64) -> f64 {
+        (1.0 - self.fit().at(to_epoch)).clamp(0.0, 1.0)
+    }
+
+    /// Optimistic error floor at the convergence horizon: the fitted
+    /// error at [`CONVERGENCE_EPOCH`] *minus* two RMSE of accuracy
+    /// headroom. This is the mirror image of the paper's conservative
+    /// accuracy prediction — where ranking wants a floor on accuracy,
+    /// termination wants a floor on error: a trial is only declared
+    /// doomed when even this best plausible outcome cannot reach the
+    /// incumbent.
+    pub fn converged_floor(&self) -> f64 {
+        let fit = self.fit();
+        (1.0 - (fit.at(CONVERGENCE_EPOCH) + 2.0 * fit.rmse)).clamp(0.0, 1.0)
+    }
+
+    /// Conservative *accuracy* prediction at the convergence horizon
+    /// (the paper's exact Appendix-C rule, `−2·RMSE`).
+    pub fn conservative_accuracy(&self) -> f64 {
+        self.fit().conservative(CONVERGENCE_EPOCH)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A noiseless logarithmic curve in error terms.
+    fn curve(a: f64, b: f64, n: u64) -> LearningCurve {
+        let mut lc = LearningCurve::new();
+        for e in 1..=n {
+            lc.observe(e, 1.0 - (a + b * (e as f64).ln()));
+        }
+        lc
+    }
+
+    #[test]
+    fn extrapolation_matches_the_underlying_fit() {
+        let lc = curve(0.3, 0.08, 20);
+        assert!(lc.can_fit());
+        let fit = lc.fit();
+        assert!((fit.a - 0.3).abs() < 1e-10);
+        assert!((fit.b - 0.08).abs() < 1e-10);
+        let want = 1.0 - (0.3 + 0.08 * 60f64.ln());
+        assert!((lc.extrapolate(60.0) - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn floor_is_optimistic_under_noise() {
+        // With RMSE > 0 the floor sits below the raw extrapolation: the
+        // trial gets the benefit of the doubt before termination.
+        let mut lc = LearningCurve::new();
+        let mut rng = crate::util::rng::derive(0, "curve", 0);
+        for e in 1..=30u64 {
+            let acc = 0.3 + 0.08 * (e as f64).ln() + rng.gen_range_f64(-0.02, 0.02);
+            lc.observe(e, 1.0 - acc);
+        }
+        assert!(lc.fit().rmse > 0.0);
+        assert!(lc.converged_floor() < lc.extrapolate(CONVERGENCE_EPOCH));
+    }
+
+    #[test]
+    fn floor_and_conservative_accuracy_are_mirror_bounds() {
+        let lc = curve(0.25, 0.06, 15);
+        // Noiseless curve: both collapse onto the raw fit.
+        let at60 = lc.fit().at(CONVERGENCE_EPOCH);
+        assert!((lc.converged_floor() - (1.0 - at60)).abs() < 1e-9);
+        assert!((lc.conservative_accuracy() - at60).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_curve_floor_stays_put() {
+        // A trial that stopped improving: b ≈ 0, so the floor equals
+        // today's error — it can never look better than it is.
+        let mut lc = LearningCurve::new();
+        for e in 1..=10u64 {
+            lc.observe(e, 0.7);
+        }
+        assert!((lc.converged_floor() - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn single_point_cannot_fit() {
+        let mut lc = LearningCurve::new();
+        lc.observe(1, 0.5);
+        assert!(!lc.can_fit());
+        let _ = lc.fit();
+    }
+
+    #[test]
+    #[should_panic]
+    fn epochs_must_increase() {
+        let mut lc = LearningCurve::new();
+        lc.observe(3, 0.5);
+        lc.observe(3, 0.4);
+    }
+}

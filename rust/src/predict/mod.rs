@@ -1,5 +1,7 @@
 //! Accuracy prediction for insufficiently trained models (Appendix C).
 
+pub mod curve;
 pub mod logfit;
 
+pub use curve::{LearningCurve, CONVERGENCE_EPOCH};
 pub use logfit::{predict_accuracy, LogFit};

@@ -8,6 +8,7 @@
 
 use aiperf::config::{BenchmarkConfig, Engine};
 use aiperf::coordinator::run_benchmark_with;
+use aiperf::hpo::Backend;
 use aiperf::metrics::report::BenchmarkReport;
 
 fn assert_bit_identical(a: &BenchmarkReport, b: &BenchmarkReport, label: &str) {
@@ -60,6 +61,11 @@ fn assert_bit_identical(a: &BenchmarkReport, b: &BenchmarkReport, label: &str) {
             x.barrier_slack_s.to_bits(),
             y.barrier_slack_s.to_bits(),
             "{label}: group {i} barrier slack"
+        );
+        assert_eq!(x.early_stops, y.early_stops, "{label}: group {i} early stops");
+        assert_eq!(
+            x.epochs_saved, y.epochs_saved,
+            "{label}: group {i} epochs saved"
         );
     }
     assert_eq!(
@@ -321,4 +327,101 @@ fn parity_on_exa_100k_truncated() {
         seq.architectures_evaluated > 0,
         "truncated exa run must complete trials"
     );
+}
+
+#[test]
+fn hpo_and_early_stop_knobs_off_are_byte_inert() {
+    // The redesigned search API must be invisible until asked for:
+    // spelling out the defaults (`hpo = tpe`, `early_stop` off — even
+    // with per-group overrides naming tpe explicitly and the inert
+    // early-stop tuning knobs perturbed) reproduces the pre-knob
+    // schedule byte for byte on the full machine-readable report.
+    let baseline = aiperf::scenarios::get("elastic-mixed")
+        .expect("elastic preset")
+        .config;
+    let mut spelled = baseline.clone();
+    spelled.hpo = Backend::Tpe;
+    spelled.early_stop = false;
+    // Tuning knobs of a disabled feature must not leak into the run.
+    spelled.early_stop_min_epochs = 7;
+    spelled.early_stop_margin = 0.5;
+    for g in &mut spelled.topology.groups {
+        g.hpo = Some(Backend::Tpe);
+    }
+    let a = run_benchmark_with(&baseline, Engine::Sequential);
+    let b = run_benchmark_with(&spelled, Engine::Sequential);
+    assert_eq!(
+        a.to_json().to_string(),
+        b.to_json().to_string(),
+        "explicit default knobs must reproduce the implicit-default run"
+    );
+    assert!(
+        a.groups.iter().all(|g| g.early_stops == 0 && g.epochs_saved == 0),
+        "early-stop counters must read zero with the knob off"
+    );
+}
+
+#[test]
+fn parity_holds_for_every_hpo_backend() {
+    // Each pluggable backend draws its suggestions from the lane RNG (or
+    // a deterministic cursor) inside the shard's own event loop, so the
+    // engine choice must stay invisible no matter which optimizer runs.
+    for backend in [
+        Backend::Tpe,
+        Backend::Evolutionary,
+        Backend::Random,
+        Backend::Grid,
+    ] {
+        let mut cfg = aiperf::scenarios::get("t4v100-mixed")
+            .expect("mixed preset")
+            .config;
+        cfg.duration_s = 3.0 * 3600.0;
+        cfg.seed = 2;
+        cfg.hpo = backend;
+        let seq = run_benchmark_with(&cfg, Engine::Sequential);
+        let par = run_benchmark_with(&cfg, Engine::Parallel);
+        assert_bit_identical(&seq, &par, &format!("hpo backend {}", backend.as_str()));
+    }
+}
+
+#[test]
+fn early_stop_terminates_trials_and_frees_lanes() {
+    // With the LogFit predictor armed on the elastic preset, some seed in
+    // a small scan must actually terminate doomed trials — and the freed
+    // lanes must show up as scheduler opportunities (steals and adopted
+    // migrants stay nonzero alongside them). Parity is pinned on the
+    // first seed so the EarlyStopped event's re-timing rules get engine
+    // coverage too.
+    let mut any_early = false;
+    let mut any_steals = false;
+    let mut any_migrations = false;
+    for seed in 0..8u64 {
+        let mut cfg = aiperf::scenarios::get("elastic-mixed")
+            .expect("elastic preset")
+            .config;
+        cfg.seed = seed;
+        cfg.early_stop = true;
+        let seq = run_benchmark_with(&cfg, Engine::Sequential);
+        if seed == 0 {
+            let par = run_benchmark_with(&cfg, Engine::Parallel);
+            assert_bit_identical(&seq, &par, "elastic-mixed early-stop seed 0");
+        }
+        for g in &seq.groups {
+            if g.early_stops > 0 {
+                any_early = true;
+                assert!(
+                    g.epochs_saved > 0,
+                    "seed {seed}: an early stop must save at least one epoch"
+                );
+            }
+            any_steals |= g.steals > 0;
+            any_migrations |= g.migrations_in > 0;
+        }
+        if any_early && any_steals && any_migrations {
+            break;
+        }
+    }
+    assert!(any_early, "no seed in the scan early-stopped a trial");
+    assert!(any_steals, "freed lanes never joined a sibling trial");
+    assert!(any_migrations, "freed lanes never adopted a migrant");
 }

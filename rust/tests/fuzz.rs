@@ -97,14 +97,26 @@ fn mutate_lines(input: &str, rng: &mut Rng) -> String {
     out
 }
 
-/// Valid config corpus: the default and a heterogeneous preset.
+/// Valid config corpus: the default, a heterogeneous preset, and a
+/// config exercising the search-API knobs (non-default `hpo` backend,
+/// early stopping armed, a per-group backend override) so the fuzzer
+/// batters those key spellings too.
 fn config_corpus() -> Vec<String> {
+    let mut search = aiperf::scenarios::get("t4v100-mixed")
+        .expect("preset exists")
+        .config;
+    search.hpo = aiperf::hpo::Backend::Grid;
+    search.early_stop = true;
+    search.early_stop_min_epochs = 5;
+    search.early_stop_margin = 0.05;
+    search.topology.groups[0].hpo = Some(aiperf::hpo::Backend::Evolutionary);
     vec![
         BenchmarkConfig::default().to_text(),
         aiperf::scenarios::get("t4v100-mixed")
             .expect("preset exists")
             .config
             .to_text(),
+        search.to_text(),
     ]
 }
 

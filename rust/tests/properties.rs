@@ -11,7 +11,7 @@ use aiperf::coordinator::buffer::{ArchBuffer, Candidate};
 use aiperf::coordinator::dispatcher::Dispatcher;
 use aiperf::coordinator::trial::{ActiveTrial, TrialStatus};
 use aiperf::flops::{graph_ops_per_image, OpWeights};
-use aiperf::hpo::{aiperf_space, Evolutionary, GridSearch, Optimizer, RandomSearch, Tpe};
+use aiperf::hpo::{aiperf_space, build, Backend, Optimizer};
 use aiperf::nas::graph::Architecture;
 use aiperf::nas::morphism::{morph, random_legal_morph, random_morph, MorphLimits};
 use aiperf::sim::accuracy::HpPoint;
@@ -264,16 +264,17 @@ fn prop_event_queue_fifo_tie_breaking() {
 }
 
 /// HPO invariant: every optimizer only ever suggests points inside the
-/// search space, for arbitrary observation feedback.
+/// search space, for arbitrary observation feedback. Built through the
+/// one public factory ([`build`]) — the same path the engine uses.
 #[test]
 fn prop_optimizers_respect_domain() {
     let space = aiperf_space();
     for seed in 0..16 {
         let opts: Vec<Box<dyn Optimizer>> = vec![
-            Box::new(Tpe::new(space.clone())),
-            Box::new(RandomSearch::new(space.clone())),
-            Box::new(GridSearch::new(space.clone(), 5)),
-            Box::new(Evolutionary::new(space.clone())),
+            build(Backend::Tpe, space.clone(), seed),
+            build(Backend::Random, space.clone(), seed),
+            build(Backend::Grid, space.clone(), seed),
+            build(Backend::Evolutionary, space.clone(), seed),
         ];
         for (k, mut opt) in opts.into_iter().enumerate() {
             let mut rng = derive(seed, "prop-hpo", k as u64);
@@ -386,6 +387,14 @@ fn prop_config_text_roundtrip_identity() {
                         g.subshards_per_node = Some(rng.gen_range_u64(1, 9));
                     }
                     g.accepts_migrants = rng.gen_bool(0.5);
+                    if rng.gen_bool(0.5) {
+                        g.hpo = Some(match rng.gen_range_u64(0, 4) {
+                            0 => Backend::Tpe,
+                            1 => Backend::Evolutionary,
+                            2 => Backend::Random,
+                            _ => Backend::Grid,
+                        });
+                    }
                     g
                 })
                 .collect(),
@@ -413,6 +422,15 @@ fn prop_config_text_roundtrip_identity() {
             migration: rng.gen_bool(0.5),
             migration_nfs_bytes_per_param: rng.gen_range_u64(1, 64),
             feedback_routing: rng.gen_bool(0.5),
+            hpo: match rng.gen_range_u64(0, 4) {
+                0 => Backend::Tpe,
+                1 => Backend::Evolutionary,
+                2 => Backend::Random,
+                _ => Backend::Grid,
+            },
+            early_stop: rng.gen_bool(0.5),
+            early_stop_min_epochs: rng.gen_range_u64(1, 20),
+            early_stop_margin: rng.gen_range_f64(0.0, 0.2),
             ..BenchmarkConfig::default()
         };
         let text = cfg.to_text();
